@@ -1,0 +1,82 @@
+//! END-TO-END driver (deliverable (b) / system-prompt requirement): run the
+//! complete ReLeQ system on a real small workload and report the paper's
+//! headline metrics.
+//!
+//!     cargo run --release --example e2e_releq [-- --net lenet --episodes 300]
+//!
+//! Pipeline exercised, proving all three layers compose:
+//!   1. synthetic dataset generation (data substrate)
+//!   2. full-precision pretraining through the AOT train artifact
+//!      (Layer-2 JAX model wrapping the Layer-1 Pallas fused qmatmul kernel)
+//!   3. the ReLeQ search: LSTM-PPO agent (AOT HLO) + quantization environment
+//!      + asymmetric reward (Layer-3 coordinator)
+//!   4. final long retrain of the converged bitwidths
+//!   5. hardware projection on the Stripes + bit-serial CPU simulators
+//!
+//! The reward/accuracy learning curves are logged per episode to
+//! results/e2e_<net>.csv and summarized here — EXPERIMENTS.md records a run.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use releq::config;
+use releq::coordinator::Searcher;
+use releq::metrics::{sparkline, SearchLog};
+use releq::runtime::{Engine, Manifest};
+use releq::sim::{Stripes, StripesConfig, TvmCpu, TvmCpuConfig};
+use releq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args());
+    let net_name = args.str_of("net", "lenet");
+    let dir = releq::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Rc::new(Engine::new(dir)?);
+    let net = manifest.network(&net_name)?;
+
+    let mut cfg = config::resolve(&net_name, &args)?;
+    if let Some(e) = args.opt_str("episodes") {
+        cfg.episodes = e.parse()?;
+    }
+
+    println!("=== ReLeQ end-to-end: {} (L={}, P={}, dataset {}) ===",
+             net.name, net.l, net.p, net.dataset);
+    let t0 = std::time::Instant::now();
+    let mut searcher = Searcher::new(engine.clone(), &manifest, net, cfg)?;
+    let t_pre = t0.elapsed().as_secs_f64();
+    println!("[1] pretrained: Acc_FullP = {:.4} ({t_pre:.1}s)", searcher.env.acc_fullp);
+
+    let result = searcher.run()?;
+    let t_search = t0.elapsed().as_secs_f64() - t_pre;
+    println!("[2] search done: {} episodes in {:.1}s", result.episodes_run, t_search);
+    let ma = |s: &[f64]| SearchLog::moving_average(s, 20);
+    println!("    reward   : {}", sparkline(&ma(&result.log.rewards()), 64));
+    println!("    state_acc: {}", sparkline(&ma(&result.log.state_accs()), 64));
+    println!("    state_q  : {}", sparkline(&ma(&result.log.state_qs()), 64));
+
+    println!("[3] solution: bits {:?} (avg {:.2})", result.bits, result.avg_bits);
+    println!(
+        "    accuracy: fp {:.4} -> quantized {:.4} (loss {:.2}%, paper target < 0.3%)",
+        result.acc_fullp, result.acc_final, result.acc_loss_pct
+    );
+
+    let stripes = Stripes::new(StripesConfig::default());
+    let (sp, en) = stripes.speedup_energy(net, &result.bits);
+    let tvm = TvmCpu::new(TvmCpuConfig::default());
+    let cpu = tvm.speedup(net, &result.bits);
+    println!("[4] hardware projection vs 8-bit: Stripes {sp:.2}x speedup / {en:.2}x energy; CPU {cpu:.2}x");
+
+    std::fs::create_dir_all("results")?;
+    result
+        .log
+        .write_csv(std::path::Path::new(&format!("results/e2e_{net_name}.csv")))?;
+    println!(
+        "[5] env: {} evals ({} cache hits), {} train + {} eval PJRT execs; log -> results/e2e_{net_name}.csv",
+        searcher.env.stats.evals,
+        searcher.env.stats.cache_hits,
+        searcher.env.stats.train_execs,
+        searcher.env.stats.eval_execs
+    );
+    println!("total wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Project ReLeQ solutions onto the two hardware substrates (Fig 8 / Fig 9):
+//! the Stripes bit-serial accelerator and the TVM-style bit-serial CPU.
+//! Uses the paper's published bitwidths (no search run required).
+//!
+//!     cargo run --release --example hardware_eval
+
+use anyhow::Result;
+use releq::baselines::paper_releq_solution;
+use releq::runtime::Manifest;
+use releq::sim::{gmean, Stripes, StripesConfig, TvmCpu, TvmCpuConfig};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(&releq::artifacts_dir())?;
+    let stripes = Stripes::new(StripesConfig::default());
+    let tvm = TvmCpu::new(TvmCpuConfig::default());
+
+    println!(
+        "{:<11} {:>8} {:>14} {:>14} {:>12}",
+        "network", "avg bits", "CPU speedup", "Stripes speed", "Stripes energy"
+    );
+    let (mut cpus, mut sps, mut ens) = (vec![], vec![], vec![]);
+    for net in &manifest.networks {
+        let Some(bits) = paper_releq_solution(&net.name) else { continue };
+        if bits.len() != net.l {
+            continue;
+        }
+        let avg = bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
+        let cpu = tvm.speedup(net, &bits);
+        let (sp, en) = stripes.speedup_energy(net, &bits);
+        println!("{:<11} {:>8.2} {:>13.2}x {:>13.2}x {:>11.2}x", net.name, avg, cpu, sp, en);
+        cpus.push(cpu);
+        sps.push(sp);
+        ens.push(en);
+    }
+    println!(
+        "{:<11} {:>8} {:>13.2}x {:>13.2}x {:>11.2}x",
+        "gmean", "", gmean(&cpus), gmean(&sps), gmean(&ens)
+    );
+    println!("\npaper: 2.2x CPU (Fig 8); 2.0x speedup / 2.7x energy on Stripes (Fig 9)");
+
+    // per-layer breakdown for one network, showing where the cycles go
+    let net = manifest.network("lenet")?;
+    let bits = paper_releq_solution("lenet").unwrap();
+    let report = stripes.simulate(net, &bits);
+    println!("\nlenet per-layer Stripes breakdown at {bits:?}:");
+    println!("{:<8} {:>5} {:>12} {:>12}", "layer", "bits", "cycles", "energy(pJ)");
+    for l in &report.layers {
+        println!("{:<8} {:>5} {:>12.0} {:>12.0}", l.name, l.bits, l.cycles, l.energy_pj);
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Enumerate LeNet's quantization design space (7^4 = 2401 assignments, as in
+//! the paper's Fig 6) and print the Pareto frontier, marking where ReLeQ's
+//! published solution {2,2,3,2} lands.
+//!
+//!     cargo run --release --example pareto_frontier [-- --net lenet --samples 2500]
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use releq::baselines::paper_releq_solution;
+use releq::coordinator::{EnvConfig, QuantEnv};
+use releq::pareto;
+use releq::runtime::{Engine, Manifest};
+use releq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args());
+    let net_name = args.str_of("net", "lenet");
+    let dir = releq::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Rc::new(Engine::new(dir)?);
+    let net = manifest.network(&net_name)?;
+
+    let mut env_cfg = EnvConfig::default();
+    env_cfg.pretrain_steps = releq::config::preset(&net_name).env.pretrain_steps;
+    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
+    println!("{net_name}: Acc_FullP {:.4}", env.acc_fullp);
+
+    let mut cfg = pareto::EnumConfig::default();
+    cfg.max_points = args.usize_of("samples", 2500);
+    let space = pareto::space_size(&cfg, net.l);
+    println!("design space: {space} assignments (bits {}..{})", cfg.min_bits, cfg.max_bits);
+
+    let t0 = std::time::Instant::now();
+    let (points, exhaustive) = pareto::enumerate(&mut env, &cfg)?;
+    println!(
+        "evaluated {} points ({}) in {:.1}s",
+        points.len(),
+        if exhaustive { "exhaustive" } else { "sampled" },
+        t0.elapsed().as_secs_f64()
+    );
+
+    let frontier = pareto::pareto_frontier(&points);
+    println!("\nPareto frontier ({} points):", frontier.len());
+    println!("{:>8} {:>9}  bits", "state_q", "state_acc");
+    for &i in &frontier {
+        println!("{:>8.3} {:>9.3}  {:?}", points[i].state_q, points[i].state_acc, points[i].bits);
+    }
+
+    if let Some(bits) = paper_releq_solution(&net_name) {
+        if bits.len() == net.l {
+            let sa = env.state_acc(&bits)?;
+            let sq = env.state_q(&bits);
+            println!("\npaper's ReLeQ solution {bits:?}: state_q {sq:.3}, state_acc {sa:.3}");
+        }
+    }
+    Ok(())
+}

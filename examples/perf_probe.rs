@@ -1,0 +1,23 @@
+use std::rc::Rc;
+use releq::coordinator::{EnvConfig, QuantEnv};
+use releq::runtime::{Engine, Manifest};
+fn main() {
+    let manifest = Manifest::load(&releq::artifacts_dir()).unwrap();
+    let engine = Rc::new(Engine::new(releq::artifacts_dir()).unwrap());
+    let net = manifest.network("resnet20").unwrap();
+    let mut cfg = EnvConfig::default();
+    cfg.pretrain_steps = 60;
+    cfg.retrain_steps = 10;
+    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
+    for (name, fused) in [("unfused", false), ("fused", true)] {
+        let t0 = std::time::Instant::now();
+        let n = 5;
+        for i in 0..n {
+            let mut bits = vec![8u32; net.l];
+            bits[i % net.l] = 3 + (i as u32 % 4);
+            bits[(i + 3) % net.l] = 2 + (i as u32 % 5);
+            let _ = if fused { env.accuracy(&bits).unwrap() } else { env.accuracy_unfused(&bits).unwrap() };
+        }
+        println!("resnet20 accuracy query {name}: {:.0} ms/query", t0.elapsed().as_secs_f64() * 1000.0 / n as f64);
+    }
+}

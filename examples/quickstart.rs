@@ -1,0 +1,54 @@
+//! Quickstart: load the AOT artifacts, pretrain LeNet on synthetic MNIST,
+//! and run a short ReLeQ search that proposes per-layer bitwidths.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This exercises the full three-layer stack: the Pallas fused
+//! quantize+matmul kernel (Layer 1) inside the lowered train/eval HLO
+//! (Layer 2), driven by the Rust coordinator (Layer 3).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use releq::coordinator::{SearchConfig, Searcher};
+use releq::metrics::sparkline;
+use releq::runtime::{Engine, Manifest};
+
+fn main() -> Result<()> {
+    let dir = releq::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Rc::new(Engine::new(dir)?);
+    let net = manifest.network("lenet")?;
+
+    println!("== ReLeQ quickstart: {} (L={} layers, P={} params) ==", net.name, net.l, net.p);
+
+    let mut cfg = SearchConfig::default();
+    cfg.episodes = 120;
+    cfg.env.pretrain_steps = 200;
+    cfg.env.retrain_steps = 3;
+    cfg.seed = 11;
+
+    let mut searcher = Searcher::new(engine.clone(), &manifest, net, cfg)?;
+    println!(
+        "pretrained full-precision accuracy: {:.3}",
+        searcher.env.acc_fullp
+    );
+
+    let result = searcher.run()?;
+    println!("episodes run        : {}", result.episodes_run);
+    println!("reward curve        : {}", sparkline(&result.log.rewards(), 60));
+    println!("state-of-acc curve  : {}", sparkline(&result.log.state_accs(), 60));
+    println!("state-of-quant curve: {}", sparkline(&result.log.state_qs(), 60));
+    println!("chosen bitwidths    : {:?}", result.bits);
+    println!("average bitwidth    : {:.2}", result.avg_bits);
+    println!(
+        "accuracy: full-precision {:.3} -> quantized {:.3} (loss {:.2}%)",
+        result.acc_fullp, result.acc_final, result.acc_loss_pct
+    );
+    println!(
+        "env stats: {:?} (cache {} entries)",
+        searcher.env.stats,
+        searcher.env.cache_len()
+    );
+    Ok(())
+}

@@ -1,0 +1,216 @@
+"""Layer-2 PPO agent (paper §2.7, §4.7) lowered to AOT artifacts.
+
+Architecture — exactly the paper's:
+
+* shared LSTM first hidden layer over the state embedding (H = 64 here,
+  width-scaled with the rest of the testbed),
+* policy head: FC 128 -> FC 128 -> |bitwidth set| softmax,
+* value head:  FC 128 -> FC 64 -> 1.
+
+Two entry points:
+
+* ``act(params, s[D], h, c)`` -> (probs[A], value, h', c')
+  called once per layer-step on the Rust hot path; the Rust coordinator
+  carries (h, c) across the layers of an episode so bitwidth choices are
+  conditioned on previous layers' context (paper §1, LSTM motivation).
+
+* ``update(params, m, v, t, states[B,L,D], actions[B,L], old_logp[B,L],
+  adv[B,L], ret[B,L], clip_eps, ent_coef, lr)``
+  -> (params', m', v', pi_loss, v_loss, entropy, approx_kl)
+  one PPO epoch over a batch of B whole episodes: re-runs the LSTM over each
+  episode with ``lax.scan``, computes the clipped surrogate
+  (min(r A, clip(r, 1±eps) A)), value loss and entropy bonus, and applies one
+  Adam step (lr 1e-4, the paper's Table 3).  The Rust driver calls it
+  3x per update (paper: 3 epochs) and owns GAE / advantage normalization.
+
+An FC-only agent variant (the paper's §2.7 "x1.33 faster with LSTM" ablation)
+replaces the LSTM cell with a dense layer but keeps the same interface (h, c
+pass through untouched).
+
+All parameters live in one flat f32 vector (offsets below) so the Rust side
+handles the agent exactly like the model networks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+STATE_DIM = 8     # D — must match rust/src/coordinator/embedding.rs
+N_ACTIONS = 8     # A — bitwidths {1..8} (paper Fig 2a)
+HIDDEN = 64       # LSTM hidden size
+PH1, PH2 = 128, 128   # policy head widths (paper: 128, 128)
+VH1, VH2 = 128, 64    # value head widths (paper: 128, 64)
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+@dataclasses.dataclass
+class Slot:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def _layout(recurrent: bool) -> List[Slot]:
+    slots: List[Slot] = []
+    off = 0
+
+    def add(name, shape):
+        nonlocal off
+        s = Slot(name, shape, off)
+        slots.append(s)
+        off += s.size
+        return s
+
+    if recurrent:
+        add("lstm_wx", (STATE_DIM, 4 * HIDDEN))
+        add("lstm_wh", (HIDDEN, 4 * HIDDEN))
+        add("lstm_b", (4 * HIDDEN,))
+    else:
+        add("enc_w", (STATE_DIM, HIDDEN))
+        add("enc_b", (HIDDEN,))
+    add("pi_w1", (HIDDEN, PH1))
+    add("pi_b1", (PH1,))
+    add("pi_w2", (PH1, PH2))
+    add("pi_b2", (PH2,))
+    add("pi_w3", (PH2, N_ACTIONS))
+    add("pi_b3", (N_ACTIONS,))
+    add("v_w1", (HIDDEN, VH1))
+    add("v_b1", (VH1,))
+    add("v_w2", (VH1, VH2))
+    add("v_b2", (VH2,))
+    add("v_w3", (VH2, 1))
+    add("v_b3", (1,))
+    return slots
+
+
+LSTM_SLOTS = _layout(recurrent=True)
+FC_SLOTS = _layout(recurrent=False)
+
+
+def param_count(recurrent: bool) -> int:
+    slots = LSTM_SLOTS if recurrent else FC_SLOTS
+    return slots[-1].offset + slots[-1].size
+
+
+def _unpack(params, recurrent: bool) -> Dict[str, jnp.ndarray]:
+    slots = LSTM_SLOTS if recurrent else FC_SLOTS
+    return {s.name: params[s.offset:s.offset + s.size].reshape(s.shape)
+            for s in slots}
+
+
+def init_params(seed: int, recurrent: bool) -> jnp.ndarray:
+    """Orthogonal-ish (scaled normal) init; small final policy layer so the
+    initial policy is near-uniform (standard PPO practice)."""
+    slots = LSTM_SLOTS if recurrent else FC_SLOTS
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for s in slots:
+        key, sub = jax.random.split(key)
+        if len(s.shape) == 1:
+            chunks.append(jnp.zeros(s.shape, jnp.float32))
+        else:
+            std = (1.0 / s.shape[0]) ** 0.5
+            if s.name == "pi_w3":
+                std *= 0.01  # near-uniform initial policy
+            chunks.append(jax.random.normal(sub, s.shape, jnp.float32).reshape(-1) * std)
+    return jnp.concatenate(chunks)
+
+
+def init_params_traced(seed_f32, recurrent: bool) -> jnp.ndarray:
+    """Same init with a traced f32 seed operand (the AOT artifact entry)."""
+    return init_params(seed_f32.astype(jnp.int32), recurrent)
+
+
+def _lstm_cell(p, s, h, c):
+    gates = s @ p["lstm_wx"] + h @ p["lstm_wh"] + p["lstm_b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def _encode(p, s, h, c, recurrent: bool):
+    if recurrent:
+        h, c = _lstm_cell(p, s, h, c)
+        return h, h, c
+    e = jax.nn.relu(s @ p["enc_w"] + p["enc_b"])
+    return e, h, c
+
+
+def _heads(p, e):
+    x = jax.nn.relu(e @ p["pi_w1"] + p["pi_b1"])
+    x = jax.nn.relu(x @ p["pi_w2"] + p["pi_b2"])
+    logits = x @ p["pi_w3"] + p["pi_b3"]
+    y = jax.nn.relu(e @ p["v_w1"] + p["v_b1"])
+    y = jax.nn.relu(y @ p["v_w2"] + p["v_b2"])
+    value = (y @ p["v_w3"] + p["v_b3"])[..., 0]
+    return logits, value
+
+
+def make_act(recurrent: bool):
+    def act(params, s, h, c):
+        p = _unpack(params, recurrent)
+        e, h2, c2 = _encode(p, s, h, c, recurrent)
+        logits, value = _heads(p, e)
+        return (jax.nn.softmax(logits), value, h2, c2)
+
+    return act
+
+
+def _episode_logits(p, states, recurrent: bool):
+    """Run the encoder over one episode's L states -> (logits[L,A], values[L])."""
+    if recurrent:
+        def step(carry, s):
+            h, c = carry
+            h, c = _lstm_cell(p, s, h, c)
+            return (h, c), h
+
+        h0 = jnp.zeros((HIDDEN,), jnp.float32)
+        (_, _), enc = jax.lax.scan(step, (h0, h0), states)
+    else:
+        enc = jax.nn.relu(states @ p["enc_w"] + p["enc_b"])
+    return _heads(p, enc)
+
+
+def make_update(recurrent: bool):
+    def ppo_loss(params, states, actions, old_logp, adv, ret, clip_eps, ent_coef):
+        p = _unpack(params, recurrent)
+        logits, values = jax.vmap(
+            lambda s: _episode_logits(p, s, recurrent))(states)  # [B,L,A],[B,L]
+        logp_all = jax.nn.log_softmax(logits)
+        a = actions.astype(jnp.int32)
+        logp = jnp.take_along_axis(logp_all, a[..., None], axis=-1)[..., 0]
+        ratio = jnp.exp(logp - old_logp)
+        clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+        pi_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+        v_loss = 0.5 * jnp.mean((values - ret) ** 2)
+        entropy = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+        approx_kl = jnp.mean(old_logp - logp)
+        total = pi_loss + 0.5 * v_loss - ent_coef * entropy
+        return total, (pi_loss, v_loss, entropy, approx_kl)
+
+    def update(params, m, v, t, states, actions, old_logp, adv, ret,
+               clip_eps, ent_coef, lr):
+        grads, aux = jax.grad(ppo_loss, has_aux=True)(
+            params, states, actions, old_logp, adv, ret, clip_eps, ent_coef)
+        pi_loss, v_loss, entropy, approx_kl = aux
+        t = t + 1.0
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+        mhat = m / (1.0 - ADAM_B1 ** t)
+        vhat = v / (1.0 - ADAM_B2 ** t)
+        params = params - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        return (params, m, v, t, pi_loss, v_loss, entropy, approx_kl)
+
+    return update

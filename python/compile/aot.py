@@ -1,0 +1,201 @@
+"""AOT compiler: lowers every Layer-2 computation to HLO-text artifacts.
+
+Runs ONCE at build time (`make artifacts`); the Rust coordinator is fully
+self-contained afterwards.  Outputs, under ``artifacts/``:
+
+* ``<net>_init.hlo.txt``    (seed)                          -> (params, mom)
+* ``<net>_train.hlo.txt``   (params, mom, x, y, bits, lr)   -> (params, mom, loss, acc)
+* ``<net>_eval.hlo.txt``    (params, x, y, bits)            -> (loss, n_correct)
+* ``<net>_retrain_eval.hlo.txt`` — fused k-step quantized retrain + eval with
+  a device-resident training set (the coordinator's accuracy-query hot path;
+  see EXPERIMENTS.md §Perf)
+* ``agent_{lstm,fc}_init.hlo.txt``   (seed)                 -> params
+* ``agent_{lstm,fc}_act.hlo.txt``    (params, s, h, c)      -> (probs, value, h', c')
+* ``agent_lstm_update_l<L>.hlo.txt`` (11 operands)          -> (params', m', v', t', stats...)
+  for every network episode length L (+ the FC ablation update for LeNet)
+* ``manifest.json`` — shapes, flat-param layouts, per-layer metadata (weight
+  offsets, MACs, fan-in/out) consumed by the Rust runtime and cost models.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--only lenet,agent]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import agent as agent_mod
+from . import models, train
+from .hlo import lower_to_file
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 512
+TRAIN_SIZE = 2048  # resident training set for the fused retrain_eval artifact
+EPISODES_PER_UPDATE = 8  # B: whole episodes per PPO minibatch
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# fused retrain+eval steps per network (matches rust config presets).
+# 0 = no fused artifact: the unrolled form wins ~4-34% at small k but its
+# compile time explodes with k * graph size, and the scan form is 1.5-2.5x
+# SLOWER at run time than per-step execution on the CPU backend — so only
+# the shallow networks get the fused artifact (EXPERIMENTS.md §Perf).
+FUSED_K = {
+    "lenet": 4, "simplenet": 4, "alexnet": 3, "vgg11": 3, "svhn10": 3,
+    "resnet20": 0, "mobilenet": 0,
+}
+
+
+def lower_network(name: str, out_dir: str, manifest: dict) -> None:
+    apply_fn, init_fn, builder = models.build(name)
+    init, train_step, evaluate = train.make_fns(apply_fn, init_fn)
+    P = builder.param_count
+    H, W, C = builder.input_shape
+    L = len(builder.layers)
+    fused_k = FUSED_K.get(name, 4)
+
+    t0 = time.time()
+    lower_to_file(init, (f32(),), os.path.join(out_dir, f"{name}_init.hlo.txt"))
+    lower_to_file(
+        train_step,
+        (f32(P), f32(P), f32(TRAIN_BATCH, H, W, C), f32(TRAIN_BATCH), f32(L), f32()),
+        os.path.join(out_dir, f"{name}_train.hlo.txt"))
+    lower_to_file(
+        evaluate,
+        (f32(P), f32(EVAL_BATCH, H, W, C), f32(EVAL_BATCH), f32(L)),
+        os.path.join(out_dir, f"{name}_eval.hlo.txt"))
+    if fused_k > 0:
+        fused = train.make_fused_retrain_eval(
+            apply_fn, init_fn, fused_k, TRAIN_BATCH, unroll=True)
+        lower_to_file(
+            fused,
+            (f32(P), f32(P), f32(TRAIN_SIZE, H, W, C), f32(TRAIN_SIZE), f32(),
+             f32(L), f32(), f32(EVAL_BATCH, H, W, C), f32(EVAL_BATCH)),
+            os.path.join(out_dir, f"{name}_retrain_eval.hlo.txt"))
+    dt = time.time() - t0
+
+    manifest["networks"][name] = {
+        "l": L,
+        "p": P,
+        "fused_k": fused_k,
+        "train_size": TRAIN_SIZE,
+        "input": [H, W, C],
+        "classes": builder.num_classes,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "dataset": models.DATASETS[name],
+        "layers": [
+            {
+                "name": lm.name,
+                "kind": lm.kind,
+                "w_shape": list(lm.w_shape),
+                "w_offset": lm.w_offset,
+                "w_len": lm.w_len,
+                "b_offset": lm.b_offset,
+                "b_len": lm.b_len,
+                "n_macs": lm.n_macs,
+                "in_dim": lm.in_dim,
+                "out_dim": lm.out_dim,
+            }
+            for lm in builder.layers
+        ],
+    }
+    print(f"[aot] {name}: L={L} P={P} ({dt:.1f}s)", flush=True)
+
+
+def lower_agent(out_dir: str, manifest: dict, episode_lengths) -> None:
+    D, A, B = agent_mod.STATE_DIM, agent_mod.N_ACTIONS, EPISODES_PER_UPDATE
+    for recurrent, tag in ((True, "lstm"), (False, "fc")):
+        P = agent_mod.param_count(recurrent)
+        act = agent_mod.make_act(recurrent)
+
+        def agent_init(seed, _rec=recurrent):
+            return agent_mod.init_params_traced(seed, _rec)
+
+        lower_to_file(agent_init, (f32(),),
+                      os.path.join(out_dir, f"agent_{tag}_init.hlo.txt"))
+        lower_to_file(
+            act, (f32(P), f32(D), f32(agent_mod.HIDDEN), f32(agent_mod.HIDDEN)),
+            os.path.join(out_dir, f"agent_{tag}_act.hlo.txt"))
+        manifest["agent"][tag] = {"p": P}
+        print(f"[aot] agent_{tag}: P={P}", flush=True)
+
+    update = agent_mod.make_update(True)
+    for L in sorted(set(episode_lengths)):
+        P = agent_mod.param_count(True)
+        lower_to_file(
+            update,
+            (f32(P), f32(P), f32(P), f32(),
+             f32(B, L, D), f32(B, L), f32(B, L), f32(B, L), f32(B, L),
+             f32(), f32(), f32()),
+            os.path.join(out_dir, f"agent_lstm_update_l{L}.hlo.txt"))
+        print(f"[aot] agent_lstm_update L={L}", flush=True)
+    # FC-ablation update: only for the LeNet episode length (ablation A2).
+    update_fc = agent_mod.make_update(False)
+    L = min(episode_lengths)
+    P = agent_mod.param_count(False)
+    lower_to_file(
+        update_fc,
+        (f32(P), f32(P), f32(P), f32(),
+         f32(B, L, D), f32(B, L), f32(B, L), f32(B, L), f32(B, L),
+         f32(), f32(), f32()),
+        os.path.join(out_dir, f"agent_fc_update_l{L}.hlo.txt"))
+    print(f"[aot] agent_fc_update L={L}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: network names and/or 'agent'")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(filter(None, args.only.split(",")))
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {
+        "fp_bits": 9.0,
+        "bits_max": 8,
+        "state_dim": agent_mod.STATE_DIM,
+        "n_actions": agent_mod.N_ACTIONS,
+        "hidden": agent_mod.HIDDEN,
+        "episodes_per_update": EPISODES_PER_UPDATE,
+        "networks": {},
+        "agent": {},
+    }
+    if only and os.path.exists(manifest_path):
+        # incremental: keep previously lowered entries
+        with open(manifest_path) as f:
+            old = json.load(f)
+        manifest["networks"].update(old.get("networks", {}))
+        manifest["agent"].update(old.get("agent", {}))
+
+    t0 = time.time()
+    for name in models.REGISTRY:
+        if only and name not in only:
+            continue
+        lower_network(name, args.out_dir, manifest)
+
+    lengths = [net["l"] for net in manifest["networks"].values()]
+    if not only or "agent" in only:
+        if not lengths:
+            print("[aot] no networks in manifest; skipping agent", file=sys.stderr)
+        else:
+            lower_agent(args.out_dir, manifest, lengths)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {args.out_dir}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

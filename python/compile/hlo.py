@@ -1,0 +1,30 @@
+"""HLO-text lowering helper (the AOT interchange format).
+
+HLO *text*, NOT serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids which the rust `xla` crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly.  Lower with ``return_tuple=True`` and unwrap with
+``to_tuple*`` on the rust side.  (See /opt/xla-example/README.md.)
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, out_path: str) -> int:
+    """jit-lower ``fn`` at the given abstract args and write HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)

@@ -1,0 +1,207 @@
+"""Layer-1 Pallas kernels: fused fake-quantize + matmul (the training hot-spot).
+
+The paper's quantized-training substrate (WRPN, eq. 1) fake-quantizes every
+weight matrix on every forward pass.  Done naively this materializes a
+dequantized copy of the weights in HBM each step.  The fused kernel here
+quantizes each weight *tile* in VMEM right before it enters the matmul, so the
+dequantized tensor never round-trips to HBM:
+
+    grid = (M/bm, N/bn, K/bk)            # K innermost: accumulate in-place
+    x tile   (bm, bk)  <- VMEM
+    w tile   (bk, bn)  <- VMEM, quantized in-register
+    out tile (bm, bn)  accumulated across the K steps
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): block sizes default to the
+MXU-native 128x128x128; the bitwidth scalar lives in a (1,1) block that every
+grid step maps to, standing in for SMEM scalar storage.  ``interpret=True``
+always — the CPU PJRT plugin cannot execute Mosaic custom-calls, and the AOT
+HLO artifacts must run on the rust CPU client.
+
+The backward pass is exposed as two more Pallas kernels (plain tiled matmuls)
+composed with the straight-through-estimator mask; ``qmatmul`` wraps the lot
+in a ``jax.custom_vjp`` so Layer-2 models call one differentiable primitive.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FP_BITS = 9.0
+
+# MXU-native tile edge. On real TPU hardware this is the systolic array width;
+# under interpret=True it just sets the BlockSpec schedule we are validating.
+MXU_TILE = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _block(dim: int, target: int = MXU_TILE) -> int:
+    """Pick a block edge: full MXU tile when the dim allows, else the padded dim."""
+    if dim >= target:
+        return target
+    return _round_up(dim, 8)
+
+
+def _quantize_tile(w, k):
+    """In-register mid-tread quantization of one VMEM tile (identity at k>=FP_BITS)."""
+    levels = jnp.exp2(k - 1.0) - 1.0
+    wc = jnp.clip(w, -1.0, 1.0)
+    wq = jnp.round(levels * wc) / levels
+    return jnp.where(k >= FP_BITS, w, wq)
+
+
+def _qmatmul_kernel(x_ref, w_ref, k_ref, o_ref):
+    """One (bm, bn) output tile; K-step `pl.program_id(2)` accumulates in place."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    k = k_ref[0, 0]
+    wq = _quantize_tile(w_ref[...], k)
+    o_ref[...] += jnp.dot(x_ref[...], wq, preferred_element_type=o_ref.dtype)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Plain tiled matmul (used by the backward pass)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _quantize_kernel(w_ref, k_ref, o_ref):
+    """Standalone elementwise quantizer kernel (tile-parallel)."""
+    o_ref[...] = _quantize_tile(w_ref[...], k_ref[0, 0])
+
+
+def _pad2(a, m, n):
+    pm, pn = m - a.shape[0], n - a.shape[1]
+    if pm == 0 and pn == 0:
+        return a
+    return jnp.pad(a, ((0, pm), (0, pn)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def qmatmul_fwd_pallas(x, w, k, *, bm=None, bk=None, bn=None):
+    """Fused ``x @ quantize(w, k)`` via the Pallas kernel (forward only)."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm = bm or _block(M)
+    bk = bk or _block(K)
+    bn = bn or _block(N)
+    Mp, Kp, Np = _round_up(M, bm), _round_up(K, bk), _round_up(N, bn)
+    xp = _pad2(x, Mp, Kp)
+    wp = _pad2(w, Kp, Np)
+    kk = jnp.asarray(k, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _qmatmul_kernel,
+        grid=(Mp // bm, Np // bn, Kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, 1), lambda i, j, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        interpret=True,
+    )(xp, wp, kk)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul_pallas(a, b, *, bm=None, bk=None, bn=None):
+    """Plain tiled Pallas matmul ``a @ b`` (backward-pass building block)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm = bm or _block(M)
+    bk = bk or _block(K)
+    bn = bn or _block(N)
+    Mp, Kp, Np = _round_up(M, bm), _round_up(K, bk), _round_up(N, bn)
+    ap = _pad2(a, Mp, Kp)
+    bp = _pad2(b, Kp, Np)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(Mp // bm, Np // bn, Kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:M, :N]
+
+
+@jax.jit
+def quantize_pallas(w, k):
+    """Elementwise Pallas fake-quantizer over a 2-D weight matrix."""
+    M, N = w.shape
+    bm, bn = _block(M), _block(N)
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    wp = _pad2(w, Mp, Np)
+    kk = jnp.asarray(k, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _quantize_kernel,
+        grid=(Mp // bm, Np // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), w.dtype),
+        interpret=True,
+    )(wp, kk)
+    return out[:M, :N]
+
+
+@jax.custom_vjp
+def qmatmul(x, w, k):
+    """Differentiable fused quantize+matmul: ``x @ quantize(w, k)``.
+
+    Forward and both backward matmuls run as Pallas kernels; the quantizer
+    gradient is the straight-through estimator (identity inside the clip
+    range).  ``k`` is a runtime f32 scalar; ``k >= FP_BITS`` disables
+    quantization (full-precision path).
+    """
+    return qmatmul_fwd_pallas(x, w, k)
+
+
+def _qmatmul_vjp_fwd(x, w, k):
+    return qmatmul_fwd_pallas(x, w, k), (x, w, k)
+
+
+def _qmatmul_vjp_bwd(res, gy):
+    x, w, k = res
+    # Rematerialize the quantized weights (cheaper than saving them: one
+    # elementwise pass vs an extra (K, N) residual held across the step).
+    wq = quantize_pallas(w, k)
+    dx = matmul_pallas(gy, wq.T)
+    ste = (jnp.abs(w) <= 1.0).astype(w.dtype)
+    ste = jnp.where(k >= FP_BITS, jnp.ones_like(ste), ste)
+    dw = matmul_pallas(x.T, gy) * ste
+    return dx, dw, None
+
+
+qmatmul.defvjp(_qmatmul_vjp_fwd, _qmatmul_vjp_bwd)
+
+
+def vmem_footprint_bytes(bm: int = MXU_TILE, bk: int = MXU_TILE, bn: int = MXU_TILE,
+                         dtype_bytes: int = 4, double_buffered: bool = True) -> int:
+    """VMEM footprint estimate for the fused kernel's BlockSpec schedule.
+
+    Used by DESIGN.md §Perf / EXPERIMENTS.md §Perf: x-tile + w-tile + out-tile,
+    times two when the HBM->VMEM pipeline double-buffers the input tiles.
+    """
+    tiles = bm * bk + bk * bn + bm * bn
+    mult = 2 if double_buffered else 1
+    return tiles * dtype_bytes * mult

@@ -1,0 +1,43 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here, and
+``python/tests/test_kernel.py`` sweeps shapes/dtypes (hypothesis) asserting
+allclose between the kernel (interpret mode) and these oracles.  This is the
+CORE correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+FP_BITS = 9.0
+
+
+def quantize_ref(w, k):
+    """Mid-tread WRPN quantizer, identity at k >= FP_BITS (paper eq. 1)."""
+    levels = jnp.exp2(k - 1.0) - 1.0
+    wc = jnp.clip(w, -1.0, 1.0)
+    wq = jnp.round(levels * wc) / levels
+    return jnp.where(k >= FP_BITS, w, wq)
+
+
+def qmatmul_ref(x, w, k):
+    """Fused quantize+matmul oracle: x @ quantize(w, k)."""
+    return jnp.dot(x, quantize_ref(w, k))
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b)
+
+
+def ste_mask_ref(w, k):
+    in_range = (jnp.abs(w) <= 1.0).astype(w.dtype)
+    return jnp.where(k >= FP_BITS, jnp.ones_like(in_range), in_range)
+
+
+def qmatmul_grads_ref(x, w, k, gy):
+    """Reference VJP of qmatmul wrt (x, w) with the STE through the quantizer."""
+    wq = quantize_ref(w, k)
+    dx = jnp.dot(gy, wq.T)
+    dw = jnp.dot(x.T, gy) * ste_mask_ref(w, k)
+    return dx, dw

@@ -1,0 +1,312 @@
+"""Layer-2 building blocks: quantized layers over the L1 Pallas kernel.
+
+Every *quantizable* layer (the units the RL agent assigns a bitwidth to) is
+one of:
+
+* ``dense``     — fully-connected; routed through the fused Pallas
+                  ``qmatmul`` kernel (quantize-in-VMEM + MXU matmul).
+* ``conv1x1``   — pointwise convolution (MobileNet); reshaped to a matmul and
+                  routed through the same Pallas kernel (on TPU a 1x1 conv IS
+                  an MXU matmul).
+* ``conv``      — spatial convolution; weights go through ``fake_quant`` (same
+                  math, same STE) and the conv itself through XLA's native
+                  convolution. DESIGN.md §Hardware-Adaptation: on TPU, spatial
+                  convs lower to the MXU via XLA's own im2col-free path, so the
+                  Pallas fusion is applied where it pays (matmul-shaped ops).
+* ``dwconv``    — depthwise spatial convolution (MobileNet), same treatment.
+
+Biases are kept in full precision and excluded from the quantization cost
+model, matching the paper's weight-only quantization (§2.4: "ReLeQ only
+quantizes weights").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .quant import fake_quant
+from .kernels.qmatmul import qmatmul
+
+
+@dataclasses.dataclass
+class LayerMeta:
+    """Metadata for one quantizable layer — mirrored into the manifest and the
+    Rust cost model (State_of_Quantization, simulators, embeddings)."""
+
+    name: str
+    kind: str                 # dense | conv | conv1x1 | dwconv
+    w_shape: Tuple[int, ...]  # weight tensor shape
+    w_offset: int             # offset of the weight in the flat param vector
+    w_len: int
+    b_offset: int
+    b_len: int
+    n_macs: int               # MACs per example
+    in_dim: int               # fan-in  (for the state embedding)
+    out_dim: int              # fan-out
+
+
+class ModelBuilder:
+    """Builds a model as (flat-param layout, apply_fn, layer metadata).
+
+    The parameter vector is a single flat f32 array so the Rust runtime can
+    treat every network uniformly (one Literal in, one out); layers address it
+    by static offsets recorded here and in the manifest.
+    """
+
+    def __init__(self, name: str, input_shape: Tuple[int, int, int], num_classes: int):
+        self.name = name
+        self.input_shape = input_shape  # (H, W, C)
+        self.num_classes = num_classes
+        self.layers: List[LayerMeta] = []
+        self._applies: List[Callable] = []
+        self._inits: List[Callable] = []
+        self._offset = 0
+        self._cur = input_shape  # tracks (H, W, C) through the graph
+
+    # ---- parameter allocation -------------------------------------------------
+
+    def _alloc(self, n: int) -> int:
+        off = self._offset
+        self._offset += n
+        return off
+
+    @property
+    def param_count(self) -> int:
+        return self._offset
+
+    # ---- layer constructors ---------------------------------------------------
+
+    def conv(self, out_ch: int, ksize: int = 3, stride: int = 1,
+             pool: Optional[int] = None, act: bool = True) -> "ModelBuilder":
+        """Spatial conv (SAME padding) + optional max-pool + optional ReLU."""
+        h, w, cin = self._cur
+        wshape = (ksize, ksize, cin, out_ch)
+        wlen = ksize * ksize * cin * out_ch
+        woff = self._alloc(wlen)
+        boff = self._alloc(out_ch)
+        ho, wo = -(-h // stride), -(-w // stride)
+        macs = ho * wo * ksize * ksize * cin * out_ch
+        idx = len(self.layers)
+        self.layers.append(LayerMeta(
+            name=f"conv{idx}", kind="conv", w_shape=wshape, w_offset=woff,
+            w_len=wlen, b_offset=boff, b_len=out_ch, n_macs=macs,
+            in_dim=ksize * ksize * cin, out_dim=out_ch))
+
+        def apply(params, x, k, _w=(woff, wlen, wshape), _b=(boff, out_ch),
+                  _s=stride, _pool=pool, _act=act):
+            wt = params[_w[0]:_w[0] + _w[1]].reshape(_w[2])
+            bt = params[_b[0]:_b[0] + _b[1]]
+            wq = fake_quant(wt, k)
+            y = lax.conv_general_dilated(
+                x, wq, window_strides=(_s, _s), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            y = y + bt
+            if _act:
+                y = jax.nn.relu(y)
+            if _pool:
+                y = lax.reduce_window(y, -jnp.inf, lax.max,
+                                      (1, _pool, _pool, 1), (1, _pool, _pool, 1),
+                                      "VALID")
+            return y
+
+        def init(key, _w=wshape):
+            fan_in = _w[0] * _w[1] * _w[2]
+            std = (2.0 / fan_in) ** 0.5
+            kw, _ = jax.random.split(key)
+            return [jax.random.normal(kw, _w, jnp.float32).reshape(-1) * std,
+                    jnp.zeros((_w[3],), jnp.float32)]
+
+        self._applies.append(apply)
+        self._inits.append(init)
+        self._cur = (ho // (pool or 1), wo // (pool or 1), out_ch)
+        return self
+
+    def dwconv(self, ksize: int = 3, stride: int = 1) -> "ModelBuilder":
+        """Depthwise spatial conv (SAME) + ReLU (MobileNet block, first half)."""
+        h, w, cin = self._cur
+        wshape = (ksize, ksize, 1, cin)
+        wlen = ksize * ksize * cin
+        woff = self._alloc(wlen)
+        boff = self._alloc(cin)
+        ho, wo = -(-h // stride), -(-w // stride)
+        macs = ho * wo * ksize * ksize * cin
+        idx = len(self.layers)
+        self.layers.append(LayerMeta(
+            name=f"dw{idx}", kind="dwconv", w_shape=wshape, w_offset=woff,
+            w_len=wlen, b_offset=boff, b_len=cin, n_macs=macs,
+            in_dim=ksize * ksize, out_dim=cin))
+
+        def apply(params, x, k, _w=(woff, wlen, wshape), _b=(boff, cin), _s=stride,
+                  _c=cin):
+            wt = params[_w[0]:_w[0] + _w[1]].reshape(_w[2])
+            bt = params[_b[0]:_b[0] + _b[1]]
+            wq = fake_quant(wt, k)
+            y = lax.conv_general_dilated(
+                x, wq, window_strides=(_s, _s), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=_c)
+            return jax.nn.relu(y + bt)
+
+        def init(key, _w=wshape):
+            fan_in = _w[0] * _w[1]
+            std = (2.0 / fan_in) ** 0.5
+            return [jax.random.normal(key, _w, jnp.float32).reshape(-1) * std,
+                    jnp.zeros((_w[3],), jnp.float32)]
+
+        self._applies.append(apply)
+        self._inits.append(init)
+        self._cur = (ho, wo, cin)
+        return self
+
+    def conv1x1(self, out_ch: int, act: bool = True) -> "ModelBuilder":
+        """Pointwise conv — reshaped to (B*H*W, Cin) @ (Cin, Cout) through the
+        fused Pallas qmatmul kernel."""
+        h, w, cin = self._cur
+        wshape = (cin, out_ch)
+        wlen = cin * out_ch
+        woff = self._alloc(wlen)
+        boff = self._alloc(out_ch)
+        macs = h * w * cin * out_ch
+        idx = len(self.layers)
+        self.layers.append(LayerMeta(
+            name=f"pw{idx}", kind="conv1x1", w_shape=wshape, w_offset=woff,
+            w_len=wlen, b_offset=boff, b_len=out_ch, n_macs=macs,
+            in_dim=cin, out_dim=out_ch))
+
+        def apply(params, x, k, _w=(woff, wlen, wshape), _b=(boff, out_ch), _act=act):
+            wt = params[_w[0]:_w[0] + _w[1]].reshape(_w[2])
+            bt = params[_b[0]:_b[0] + _b[1]]
+            b, hh, ww, c = x.shape
+            y = qmatmul(x.reshape(b * hh * ww, c), wt, k) + bt
+            if _act:
+                y = jax.nn.relu(y)
+            return y.reshape(b, hh, ww, -1)
+
+        def init(key, _w=wshape):
+            std = (2.0 / _w[0]) ** 0.5
+            return [jax.random.normal(key, _w, jnp.float32).reshape(-1) * std,
+                    jnp.zeros((_w[1],), jnp.float32)]
+
+        self._applies.append(apply)
+        self._inits.append(init)
+        self._cur = (h, w, out_ch)
+        return self
+
+    def dense(self, out_dim: int, act: bool = True) -> "ModelBuilder":
+        """Fully-connected layer through the fused Pallas qmatmul kernel.
+        Flattens spatial input if necessary."""
+        if len(self._cur) == 3:
+            in_dim = self._cur[0] * self._cur[1] * self._cur[2]
+        else:
+            in_dim = self._cur[0]
+        wshape = (in_dim, out_dim)
+        wlen = in_dim * out_dim
+        woff = self._alloc(wlen)
+        boff = self._alloc(out_dim)
+        idx = len(self.layers)
+        self.layers.append(LayerMeta(
+            name=f"fc{idx}", kind="dense", w_shape=wshape, w_offset=woff,
+            w_len=wlen, b_offset=boff, b_len=out_dim, n_macs=wlen,
+            in_dim=in_dim, out_dim=out_dim))
+
+        def apply(params, x, k, _w=(woff, wlen, wshape), _b=(boff, out_dim), _act=act):
+            wt = params[_w[0]:_w[0] + _w[1]].reshape(_w[2])
+            bt = params[_b[0]:_b[0] + _b[1]]
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            y = qmatmul(x, wt, k) + bt
+            if _act:
+                y = jax.nn.relu(y)
+            return y
+
+        def init(key, _w=wshape):
+            std = (1.0 / _w[0]) ** 0.5
+            return [jax.random.normal(key, _w, jnp.float32).reshape(-1) * std,
+                    jnp.zeros((_w[1],), jnp.float32)]
+
+        self._applies.append(apply)
+        self._inits.append(init)
+        self._cur = (out_dim,)
+        return self
+
+    # ---- non-parametric graph ops ----------------------------------------------
+
+    def global_avg_pool(self) -> "ModelBuilder":
+        h, w, c = self._cur
+
+        def apply_nop(params, x, k):
+            return jnp.mean(x, axis=(1, 2))
+
+        # Non-quantizable op: fold into the previous layer's apply chain by
+        # registering a passthrough (consumes no bits entry).
+        self._applies.append(("nop", apply_nop))
+        self._cur = (c,)
+        return self
+
+    def begin_residual(self) -> "ModelBuilder":
+        """Push the current activation onto the residual stack (ResNet block)."""
+        self._applies.append(("res_begin",))
+        return self
+
+    def end_residual(self, stride: int = 1) -> "ModelBuilder":
+        """Pop the residual, align it (option-A shortcut: strided average pool +
+        zero channel padding — paramless, so it adds no quantizable layer), add
+        and ReLU.  The preceding conv should use ``act=False``."""
+        self._applies.append(("res_end", stride))
+        return self
+
+    # ---- assembled model --------------------------------------------------------
+
+    def finalize(self):
+        """Returns (apply_fn, init_fn, self).
+
+        apply_fn(params_flat, x_nhwc, bits[L]) -> logits
+        init_fn(seed_scalar)                   -> params_flat
+        """
+        applies = list(self._applies)
+        inits = list(self._inits)
+        n_layers = len(self.layers)
+
+        def apply_fn(params, x, bits):
+            li = 0
+            res_stack = []
+            for entry in applies:
+                if isinstance(entry, tuple):
+                    tag = entry[0]
+                    if tag == "nop":
+                        x = entry[1](params, x, None)
+                    elif tag == "res_begin":
+                        res_stack.append(x)
+                    elif tag == "res_end":
+                        stride = entry[1]
+                        sc = res_stack.pop()
+                        if stride > 1:
+                            sc = lax.reduce_window(
+                                sc, 0.0, lax.add,
+                                (1, stride, stride, 1), (1, stride, stride, 1),
+                                "VALID") / float(stride * stride)
+                        cdiff = x.shape[-1] - sc.shape[-1]
+                        if cdiff > 0:
+                            sc = jnp.pad(sc, ((0, 0), (0, 0), (0, 0), (0, cdiff)))
+                        x = jax.nn.relu(x + sc)
+                    else:  # pragma: no cover - defensive
+                        raise ValueError(f"unknown marker {tag}")
+                else:
+                    x = entry(params, x, bits[li])
+                    li += 1
+            return x
+
+        def init_fn(seed):
+            key = jax.random.PRNGKey(seed)
+            keys = jax.random.split(key, max(n_layers, 2))
+            chunks = []
+            for i, init in enumerate(inits):
+                chunks.extend(init(keys[i]))
+            return jnp.concatenate(chunks)
+
+        return apply_fn, init_fn, self

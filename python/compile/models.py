@@ -1,0 +1,152 @@
+"""The seven benchmark DNNs (paper §4.1), width-scaled for the 1-core CPU-PJRT
+testbed.
+
+Substitution (DESIGN.md §7): each network keeps the paper network's **layer
+count, layer-type sequence and relative layer-size profile** but is width-
+scaled and fed 16x16 synthetic images.  The RL search space dimension
+(L layers x 8 bitwidths) and the cost-model weighting across layers — the
+things that shape ReLeQ's search — are preserved exactly.
+
+Quantizable-layer counts (the RL episode length L):
+
+    lenet      4   (2 conv + 2 fc)                 — paper Table 2: 4
+    simplenet  5   (4 conv + 1 fc)                 — paper Table 2: 5
+    alexnet    8   (5 conv + 3 fc)                 — paper Table 2: 8
+    vgg11      9   (8 conv + 1 fc)                 — paper Table 2: 9
+    svhn10    10   (8 conv + 2 fc)                 — paper Table 2: 10
+    resnet20  20   (stem + 9 blocks x 2 + fc)      — paper §1: l = 20
+                   (paper's Table 2 row lists 23 entries, likely counting
+                   shortcut projections; we use paramless option-A shortcuts)
+    mobilenet 28   (conv + 13 x (dw + pw) + fc)    — paper Table 2 row lists 30
+                   entries; standard MobileNet-V1 has 28 weight layers.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from .layers import ModelBuilder
+
+INPUT_HW = 16
+NUM_CLASSES = 10
+
+
+def lenet() -> ModelBuilder:
+    b = ModelBuilder("lenet", (INPUT_HW, INPUT_HW, 1), NUM_CLASSES)
+    b.conv(8, ksize=5, pool=2)
+    b.conv(16, ksize=5, pool=2)
+    b.dense(64)
+    b.dense(NUM_CLASSES, act=False)
+    return b
+
+
+def simplenet() -> ModelBuilder:
+    b = ModelBuilder("simplenet", (INPUT_HW, INPUT_HW, 3), NUM_CLASSES)
+    b.conv(16, pool=2)
+    b.conv(16)
+    b.conv(32, pool=2)
+    b.conv(32, pool=2)
+    b.dense(NUM_CLASSES, act=False)
+    return b
+
+
+def alexnet() -> ModelBuilder:
+    b = ModelBuilder("alexnet", (INPUT_HW, INPUT_HW, 3), NUM_CLASSES)
+    b.conv(12, ksize=5, pool=2)
+    b.conv(24, pool=2)
+    b.conv(32)
+    b.conv(32)
+    b.conv(24, pool=2)
+    b.dense(96)
+    b.dense(96)
+    b.dense(NUM_CLASSES, act=False)
+    return b
+
+
+def vgg11() -> ModelBuilder:
+    b = ModelBuilder("vgg11", (INPUT_HW, INPUT_HW, 3), NUM_CLASSES)
+    b.conv(16, pool=2)
+    b.conv(32, pool=2)
+    b.conv(48)
+    b.conv(48, pool=2)
+    b.conv(64)
+    b.conv(64)
+    b.conv(64)
+    b.conv(64, pool=2)
+    b.dense(NUM_CLASSES, act=False)
+    return b
+
+
+def svhn10() -> ModelBuilder:
+    b = ModelBuilder("svhn10", (INPUT_HW, INPUT_HW, 3), NUM_CLASSES)
+    b.conv(16)
+    b.conv(16, pool=2)
+    b.conv(24)
+    b.conv(24, pool=2)
+    b.conv(32)
+    b.conv(32, pool=2)
+    b.conv(48)
+    b.conv(48, pool=2)
+    b.dense(64)
+    b.dense(NUM_CLASSES, act=False)
+    return b
+
+
+def resnet20() -> ModelBuilder:
+    b = ModelBuilder("resnet20", (INPUT_HW, INPUT_HW, 3), NUM_CLASSES)
+    b.conv(8)  # stem
+    widths = [8, 8, 8, 16, 16, 16, 32, 32, 32]
+    strides = [1, 1, 1, 2, 1, 1, 2, 1, 1]
+    for w, s in zip(widths, strides):
+        b.begin_residual()
+        b.conv(w, stride=s)
+        b.conv(w, act=False)
+        b.end_residual(stride=s)
+    b.global_avg_pool()
+    b.dense(NUM_CLASSES, act=False)
+    return b
+
+
+def mobilenet() -> ModelBuilder:
+    """MobileNet-V1 profile: full conv stem, 13 depthwise-separable blocks
+    (dw3x3 + pw1x1), global-avg-pool, classifier."""
+    b = ModelBuilder("mobilenet", (INPUT_HW, INPUT_HW, 3), NUM_CLASSES)
+    b.conv(8, stride=2)  # stem
+    # (out_ch, dw_stride) per block, scaled from the 32..1024 original profile
+    blocks = [(16, 1), (32, 2), (32, 1), (64, 2), (64, 1),
+              (64, 1), (64, 1), (64, 1), (64, 1), (64, 1),
+              (96, 1), (128, 2), (128, 1)]
+    for ch, s in blocks:
+        b.dwconv(stride=s)
+        b.conv1x1(ch)
+    b.global_avg_pool()
+    b.dense(NUM_CLASSES, act=False)
+    return b
+
+
+# Registry: name -> builder. Order matters (stable manifest / experiment order).
+REGISTRY: Dict[str, Callable[[], ModelBuilder]] = {
+    "lenet": lenet,
+    "simplenet": simplenet,
+    "alexnet": alexnet,
+    "vgg11": vgg11,
+    "svhn10": svhn10,
+    "resnet20": resnet20,
+    "mobilenet": mobilenet,
+}
+
+# Which synthetic dataset stands in for the paper's dataset (DESIGN.md §7).
+DATASETS: Dict[str, str] = {
+    "lenet": "mnist_syn",
+    "simplenet": "cifar_syn",
+    "alexnet": "imagenet_syn",
+    "vgg11": "cifar_syn",
+    "svhn10": "svhn_syn",
+    "resnet20": "cifar_syn",
+    "mobilenet": "imagenet_syn",
+}
+
+
+def build(name: str):
+    """Returns (apply_fn, init_fn, builder) for a registered network."""
+    return REGISTRY[name]().finalize()

@@ -1,0 +1,83 @@
+"""WRPN-style weight fake-quantization with straight-through-estimator gradients.
+
+This is the quantized-training substrate the paper builds on (section 4.2,
+eq. 1): weights are clipped to (-1, 1) and quantized mid-tread with ``k`` bits,
+of which one bit is the sign:
+
+    w_q = round((2^(k-1) - 1) * clip(w, -1, 1)) / (2^(k-1) - 1)
+
+``k`` is a *runtime* operand (f32 scalar per layer) so a single AOT-lowered
+HLO artifact serves every bitwidth pattern the RL agent explores.  A bitwidth
+``k >= FP_BITS`` selects the identity (full-precision) path, used for
+pretraining and for the Acc_FullP baseline.
+
+The backward pass is the straight-through estimator: the quantizer behaves as
+identity inside the clip range and kills the gradient outside it, matching
+WRPN / DoReFa practice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Bitwidths >= FP_BITS mean "do not quantize" (full-precision path).
+FP_BITS = 9.0
+
+
+def quant_levels(k):
+    """Number of positive quantization levels for bitwidth ``k`` (mid-tread).
+
+    One of the ``k`` bits is the sign bit, leaving ``2^(k-1) - 1`` positive
+    levels (zero is a level).  ``k`` may be a traced f32 scalar.
+    """
+    return jnp.exp2(k - 1.0) - 1.0
+
+
+def quantize_mid_tread(w, k):
+    """Mid-tread fake-quantization (zero IS a representable level)."""
+    levels = quant_levels(k)
+    wc = jnp.clip(w, -1.0, 1.0)
+    return jnp.round(levels * wc) / levels
+
+
+def quantize_mid_rise(w, k):
+    """Mid-rise fake-quantization (levels shifted half a step; zero excluded).
+
+    Provided for completeness — the paper (following WRPN) uses mid-tread.
+    """
+    levels = quant_levels(k)
+    wc = jnp.clip(w, -1.0, 1.0)
+    return (jnp.floor(levels * wc) + 0.5) / levels
+
+
+@jax.custom_vjp
+def fake_quant(w, k):
+    """Fake-quantize ``w`` to ``k`` bits (mid-tread) with an STE gradient.
+
+    ``k >= FP_BITS`` selects the identity path (full precision).
+    """
+    return jnp.where(k >= FP_BITS, w, quantize_mid_tread(w, k))
+
+
+def _fake_quant_fwd(w, k):
+    return fake_quant(w, k), (w, k)
+
+
+def _fake_quant_bwd(res, g):
+    w, k = res
+    # STE: identity inside the clip range, zero outside; identity when the
+    # full-precision path was taken.
+    in_range = (jnp.abs(w) <= 1.0).astype(g.dtype)
+    mask = jnp.where(k >= FP_BITS, jnp.ones_like(in_range), in_range)
+    return g * mask, None
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def ste_mask(w, k):
+    """The STE gradient mask used by ``fake_quant``'s VJP (exposed for the
+    Pallas backward kernels and for the test oracle)."""
+    in_range = (jnp.abs(w) <= 1.0).astype(w.dtype)
+    return jnp.where(k >= FP_BITS, jnp.ones_like(in_range), in_range)

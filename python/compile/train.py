@@ -1,0 +1,111 @@
+"""Layer-2 training/eval computations lowered to AOT artifacts.
+
+Three jitted entry points per network, all operating on a single flat f32
+parameter vector so the Rust runtime is network-agnostic:
+
+* ``init(seed)``                               -> params
+* ``train_step(params, mom, x, y, bits, lr)``  -> params', mom', loss, acc
+* ``evaluate(params, x, y, bits)``             -> loss, n_correct
+
+``bits`` is the per-layer bitwidth vector the RL agent proposes (f32, length
+L); entries >= FP_BITS select the full-precision path (pretraining and the
+Acc_FullP baseline).  The optimizer is SGD with momentum 0.9 — the quantized
+*short-retrain* the paper uses between agent steps (§3: "retraining for a
+shortened amount of epochs").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MOMENTUM = 0.9
+
+
+def cross_entropy(logits, labels_i32):
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels_i32, logits.shape[-1], dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def make_fns(apply_fn, init_fn):
+    """Builds the three jittable closures for one network."""
+
+    def init(seed_f32):
+        params = init_fn(seed_f32.astype(jnp.int32))
+        return (params, jnp.zeros_like(params))
+
+    def loss_fn(params, x, y, bits):
+        logits = apply_fn(params, x, bits)
+        loss = cross_entropy(logits, y.astype(jnp.int32))
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == y.astype(jnp.int32))
+                       .astype(jnp.float32))
+        return loss, acc
+
+    def train_step(params, mom, x, y, bits, lr):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, x, y, bits)
+        mom = MOMENTUM * mom + grads
+        params = params - lr * mom
+        return (params, mom, loss, acc)
+
+    def evaluate(params, x, y, bits):
+        logits = apply_fn(params, x, bits)
+        loss = cross_entropy(logits, y.astype(jnp.int32))
+        ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y.astype(jnp.int32))
+                           .astype(jnp.float32))
+        return (loss, ncorrect)
+
+    return init, train_step, evaluate
+
+
+def make_fused_retrain_eval(apply_fn, init_fn, k_steps: int, batch: int,
+                            unroll: bool = True):
+    """The environment's whole accuracy query as ONE executable (perf pass,
+    EXPERIMENTS.md §Perf): `k_steps` quantized SGD steps from the snapshot
+    (batches sliced on-device from the resident training set by a cursor) and
+    the validation evaluation — so the Rust hot path transfers only the bits
+    vector, the cursor and the learning rate per query instead of streaming
+    parameters and batches back and forth on every step.
+
+    (params, mom, train_x[N,...], train_y[N], cursor, bits, lr, val_x, val_y)
+      -> (loss, n_correct)
+
+    N must be a multiple of `batch`; batch b_i starts at
+    ((cursor + i) mod (N/batch)) * batch, matching Split::fill_batch's
+    wrapping semantics on the Rust side.
+    """
+    init, train_step, evaluate = make_fns(apply_fn, init_fn)
+
+    def retrain_eval(params, mom, train_x, train_y, cursor, bits, lr, val_x, val_y):
+        n_batches = train_x.shape[0] // batch
+        cursor = cursor.astype(jnp.int32)
+
+        def one_step(p, m, i):
+            start = ((cursor + i) % n_batches) * batch
+            x = jax.lax.dynamic_slice_in_dim(train_x, start, batch, axis=0)
+            y = jax.lax.dynamic_slice_in_dim(train_y, start, batch, axis=0)
+            p, m, _, _ = train_step(p, m, x, y, bits, lr)
+            return p, m
+
+        if unroll:
+            # unrolled (k_steps is static): straight-line HLO lets XLA fuse
+            # the quantize/matmul chain across steps — ~2.3x faster at run
+            # time than the scan form on the CPU backend, but compile time
+            # grows with k * graph size (EXPERIMENTS.md §Perf). Used for the
+            # shallow networks.
+            for i in range(k_steps):
+                params, mom = one_step(params, mom, i)
+        else:
+            # scan form: the loop body compiles once — deep networks at
+            # k = 10 would take minutes to compile unrolled (measured >13 min
+            # for ResNet-20), so they trade ~1.5x runtime for a fast compile.
+            def body(carry, i):
+                p, m = one_step(carry[0], carry[1], i)
+                return (p, m), 0.0
+
+            (params, mom), _ = jax.lax.scan(
+                body, (params, mom), jnp.arange(k_steps, dtype=jnp.int32))
+        return evaluate(params, val_x, val_y, bits)
+
+    return retrain_eval

@@ -1,0 +1,146 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes/bitwidths; assert_allclose against ref — the
+core correctness signal for the fused quantize+matmul kernel.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import qmatmul as qk
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernel", max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernel")
+
+
+def rand(shape, seed, scale=1.0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# quantize kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    k=st.sampled_from([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 16.0]),
+    seed=st.integers(0, 10_000),
+)
+def test_quantize_pallas_matches_ref(m, n, k, seed):
+    w = rand((m, n), seed, scale=0.8)
+    got = qk.quantize_pallas(w, k)
+    want = ref.quantize_ref(w, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+def test_quantize_identity_above_fp_bits():
+    w = rand((8, 8), 0, scale=3.0)  # includes values outside (-1, 1)
+    got = qk.quantize_pallas(w, 9.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
+
+
+def test_quantize_values_on_grid():
+    w = rand((16, 16), 1)
+    for k in [2.0, 3.0, 5.0, 8.0]:
+        q = np.asarray(qk.quantize_pallas(w, k))
+        levels = 2 ** (k - 1) - 1
+        steps = q * levels
+        np.testing.assert_allclose(steps, np.round(steps), atol=1e-4)
+        assert np.abs(q).max() <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# fused qmatmul forward
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 48),
+    kk=st.integers(1, 48),
+    n=st.integers(1, 48),
+    bits=st.sampled_from([2.0, 3.0, 4.0, 6.0, 8.0, 9.0]),
+    seed=st.integers(0, 10_000),
+)
+def test_qmatmul_matches_ref(m, kk, n, bits, seed):
+    x = rand((m, kk), seed)
+    w = rand((kk, n), seed + 1, scale=0.7)
+    got = qk.qmatmul(x, w, bits)
+    want = ref.qmatmul_ref(x, w, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_qmatmul_blockspec_tiling_exercised():
+    # shapes larger than one block in every grid dimension
+    m, kk, n = 40, 72, 56
+    x = rand((m, kk), 3)
+    w = rand((kk, n), 4, scale=0.6)
+    got = qk.qmatmul_fwd_pallas(x, w, 4.0, bm=16, bk=32, bn=16)
+    want = ref.qmatmul_ref(x, w, 4.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_pallas_plain():
+    a = rand((17, 23), 5)
+    b = rand((23, 9), 6)
+    np.testing.assert_allclose(
+        np.asarray(qk.matmul_pallas(a, b)), np.asarray(a @ b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# backward (custom VJP with STE)
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(2, 24),
+    kk=st.integers(2, 24),
+    n=st.integers(2, 24),
+    bits=st.sampled_from([2.0, 4.0, 8.0, 9.0]),
+    seed=st.integers(0, 10_000),
+)
+def test_qmatmul_grads_match_ref(m, kk, n, bits, seed):
+    x = rand((m, kk), seed)
+    w = rand((kk, n), seed + 1, scale=0.9)
+    gy = rand((m, n), seed + 2)
+
+    def loss(x, w):
+        return jnp.sum(qk.qmatmul(x, w, bits) * gy)
+
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    rx, rw = ref.qmatmul_grads_ref(x, w, bits, gy)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-5, atol=1e-5)
+
+
+def test_ste_kills_gradient_outside_clip_range():
+    x = rand((4, 6), 7)
+    w = jnp.asarray(np.linspace(-2.0, 2.0, 6 * 5).reshape(6, 5), jnp.float32)
+
+    def loss(w):
+        return jnp.sum(qk.qmatmul(x, w, 3.0))
+
+    gw = np.asarray(jax.grad(loss)(w))
+    outside = np.abs(np.asarray(w)) > 1.0
+    assert np.all(gw[outside] == 0.0)
+    assert np.any(gw[~outside] != 0.0)
+
+
+def test_vmem_footprint_estimate():
+    # default MXU blocks must fit VMEM with double buffering (~16 MiB budget)
+    assert qk.vmem_footprint_bytes() == 2 * 3 * 128 * 128 * 4
+    assert qk.vmem_footprint_bytes() < 16 * 1024 * 1024
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_qmatmul_dtype_preserved(dtype):
+    x = rand((8, 8), 0).astype(dtype)
+    w = rand((8, 8), 1).astype(dtype)
+    assert qk.qmatmul(x, w, 4.0).dtype == dtype

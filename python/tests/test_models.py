@@ -1,0 +1,140 @@
+"""Layer-2 model-zoo tests: shapes, parameter layout, MAC accounting,
+quantized-training behaviour, and episode-length contracts with the paper."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, train
+
+# (name, expected quantizable-layer count) — paper Table 2 / §1
+EXPECTED_L = {
+    "lenet": 4,
+    "simplenet": 5,
+    "alexnet": 8,
+    "vgg11": 9,
+    "svhn10": 10,
+    "resnet20": 20,
+    "mobilenet": 28,
+}
+
+
+@pytest.mark.parametrize("name", list(models.REGISTRY))
+def test_layer_counts_match_paper(name):
+    _, _, b = models.build(name)
+    assert len(b.layers) == EXPECTED_L[name]
+
+
+@pytest.mark.parametrize("name", list(models.REGISTRY))
+def test_param_layout_contiguous(name):
+    _, _, b = models.build(name)
+    off = 0
+    for lm in b.layers:
+        assert lm.w_offset == off
+        off = lm.w_offset + lm.w_len
+        assert lm.b_offset == off
+        off = lm.b_offset + lm.b_len
+    assert off == b.param_count
+
+
+@pytest.mark.parametrize("name", list(models.REGISTRY))
+def test_forward_shapes_and_init(name):
+    apply_fn, init_fn, b = models.build(name)
+    params = init_fn(0)
+    assert params.shape == (b.param_count,)
+    assert bool(jnp.all(jnp.isfinite(params)))
+    h, w, c = b.input_shape
+    x = jnp.ones((2, h, w, c), jnp.float32)
+    bits = jnp.full((len(b.layers),), 8.0, jnp.float32)
+    logits = apply_fn(params, x, bits)
+    assert logits.shape == (2, b.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", list(models.REGISTRY))
+def test_macs_positive_and_dominated_by_convs(name):
+    _, _, b = models.build(name)
+    assert all(lm.n_macs > 0 for lm in b.layers)
+    assert all(lm.w_len == int(np.prod(lm.w_shape)) for lm in b.layers)
+
+
+def test_mobilenet_alternates_dw_pw():
+    _, _, b = models.build("mobilenet")
+    kinds = [lm.kind for lm in b.layers]
+    assert kinds[0] == "conv"
+    assert kinds[-1] == "dense"
+    body = kinds[1:-1]
+    assert body[0::2] == ["dwconv"] * 13
+    assert body[1::2] == ["conv1x1"] * 13
+
+
+def test_quantization_changes_output_but_fp_does_not():
+    apply_fn, init_fn, b = models.build("lenet")
+    params = init_fn(0)
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 16, 16, 1), jnp.float32)
+    l = len(b.layers)
+    y_fp = apply_fn(params, x, jnp.full((l,), 9.0))
+    y_fp2 = apply_fn(params, x, jnp.full((l,), 16.0))
+    y_q2 = apply_fn(params, x, jnp.full((l,), 2.0))
+    np.testing.assert_allclose(np.asarray(y_fp), np.asarray(y_fp2), rtol=1e-6)
+    assert not np.allclose(np.asarray(y_fp), np.asarray(y_q2))
+
+
+def test_per_layer_bits_are_independent():
+    apply_fn, init_fn, b = models.build("lenet")
+    params = init_fn(1)
+    x = jnp.asarray(np.random.RandomState(1).randn(4, 16, 16, 1), jnp.float32)
+    l = len(b.layers)
+    base = np.asarray(apply_fn(params, x, jnp.full((l,), 8.0)))
+    for i in range(l):
+        bits = np.full((l,), 8.0, np.float32)
+        bits[i] = 2.0
+        out = np.asarray(apply_fn(params, x, jnp.asarray(bits)))
+        assert not np.allclose(base, out), f"layer {i} bits had no effect"
+
+
+def test_train_step_reduces_loss():
+    apply_fn, init_fn, b = models.build("simplenet")
+    init, step, evaluate = train.make_fns(apply_fn, init_fn)
+    params, mom = jax.jit(init)(jnp.float32(3))
+    rs = np.random.RandomState(0)
+    x = jnp.asarray(rs.randn(32, 16, 16, 3), jnp.float32)
+    y = jnp.asarray(rs.randint(0, 10, 32), jnp.float32)
+    bits = jnp.full((len(b.layers),), 9.0)
+    js = jax.jit(step)
+    first = None
+    for i in range(30):
+        params, mom, loss, acc = js(params, mom, x, y, bits, jnp.float32(0.01))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.7, (first, float(loss))
+
+
+def test_evaluate_counts_correct():
+    apply_fn, init_fn, b = models.build("lenet")
+    init, step, evaluate = train.make_fns(apply_fn, init_fn)
+    params, _ = jax.jit(init)(jnp.float32(0))
+    x = jnp.zeros((8, 16, 16, 1), jnp.float32)
+    bits = jnp.full((4,), 9.0)
+    logits = apply_fn(params, x, bits)
+    pred = int(jnp.argmax(logits[0]))
+    y_right = jnp.full((8,), float(pred))
+    _, ncorrect = evaluate(params, x, y_right, bits)
+    assert int(ncorrect) == 8
+    y_wrong = jnp.full((8,), float((pred + 1) % 10))
+    _, ncorrect = evaluate(params, x, y_wrong, bits)
+    assert int(ncorrect) == 0
+
+
+def test_resnet_residual_shapes():
+    apply_fn, init_fn, b = models.build("resnet20")
+    params = init_fn(0)
+    x = jnp.ones((1, 16, 16, 3), jnp.float32)
+    logits = apply_fn(params, x, jnp.full((20,), 8.0))
+    assert logits.shape == (1, 10)
+
+
+def test_dataset_mapping_complete():
+    for name in models.REGISTRY:
+        assert name in models.DATASETS

@@ -1,0 +1,74 @@
+"""Quantizer (WRPN eq. 1) unit tests + STE gradient semantics."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import quant
+
+
+@given(k=st.sampled_from([2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]),
+       seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_mid_tread_on_grid_and_clipped(k, seed):
+    w = jnp.asarray(np.random.RandomState(seed).randn(64) * 1.5, jnp.float32)
+    q = np.asarray(quant.quantize_mid_tread(w, k))
+    levels = 2 ** (k - 1) - 1
+    np.testing.assert_allclose(q * levels, np.round(q * levels), atol=1e-4)
+    assert np.abs(q).max() <= 1.0 + 1e-6
+
+
+def test_mid_tread_includes_zero_mid_rise_excludes():
+    w = jnp.zeros((4,), jnp.float32)
+    assert np.all(np.asarray(quant.quantize_mid_tread(w, 3.0)) == 0.0)
+    assert np.all(np.asarray(quant.quantize_mid_rise(w, 3.0)) != 0.0)
+
+
+def test_fp_sentinel_is_identity():
+    w = jnp.asarray([-2.0, -0.5, 0.0, 0.7, 3.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(quant.fake_quant(w, 9.0)), np.asarray(w))
+
+
+def test_binary_k2_levels():
+    w = jnp.asarray([-0.9, -0.2, 0.2, 0.9], jnp.float32)
+    q = np.asarray(quant.fake_quant(w, 2.0))
+    np.testing.assert_array_equal(q, [-1.0, 0.0, 0.0, 1.0])
+
+
+def test_ste_gradient_inside_and_outside():
+    w = jnp.asarray([-1.5, -0.5, 0.5, 1.5], jnp.float32)
+
+    def f(w):
+        return jnp.sum(quant.fake_quant(w, 4.0))
+
+    g = np.asarray(jax.grad(f)(w))
+    np.testing.assert_array_equal(g, [0.0, 1.0, 1.0, 0.0])
+
+
+def test_ste_gradient_identity_at_fp():
+    w = jnp.asarray([-1.5, 0.5, 2.0], jnp.float32)
+
+    def f(w):
+        return jnp.sum(quant.fake_quant(w, 9.0))
+
+    g = np.asarray(jax.grad(f)(w))
+    np.testing.assert_array_equal(g, [1.0, 1.0, 1.0])
+
+
+def test_error_monotone_in_bits():
+    w = jnp.asarray(np.random.RandomState(0).randn(512) * 0.5, jnp.float32)
+    errs = []
+    for k in [2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]:
+        q = quant.quantize_mid_tread(w, k)
+        errs.append(float(jnp.sum((q - jnp.clip(w, -1, 1)) ** 2)))
+    assert all(a > b for a, b in zip(errs, errs[1:])), errs
+
+
+def test_quant_levels_count():
+    # k bits -> 2^(k-1)-1 positive levels, symmetric, plus zero
+    for k in [2, 3, 4, 8]:
+        w = jnp.asarray(np.linspace(-1, 1, 4001), jnp.float32)
+        q = np.unique(np.asarray(quant.quantize_mid_tread(w, float(k))))
+        assert len(q) == 2 * (2 ** (k - 1) - 1) + 1

@@ -1,0 +1,39 @@
+//! PPO agent benchmarks: the act hot path (called L times per episode) and
+//! the 3-epoch update through the AOT artifact.
+
+use std::rc::Rc;
+
+use releq::coordinator::{AgentKind, PpoAgent, PpoConfig, StepRecord, STATE_DIM};
+use releq::runtime::{Engine, Manifest};
+use releq::util::benchkit::Bench;
+
+fn main() {
+    let manifest = Manifest::load(&releq::artifacts_dir()).expect("make artifacts first");
+    let engine = Rc::new(Engine::new(releq::artifacts_dir()).unwrap());
+    let mut b = Bench::new("agent");
+    for (kind, tag) in [(AgentKind::Lstm, "lstm"), (AgentKind::Fc, "fc")] {
+        let mut agent =
+            PpoAgent::new(engine.clone(), &manifest, kind, 4, 1, PpoConfig::default()).unwrap();
+        let (h, c) = agent.initial_hidden();
+        let s = [0.5f32; STATE_DIM];
+        b.case(&format!("act/{tag}"), || {
+            let _ = agent.act(&s, &h, &c).unwrap();
+        });
+        let episode: Vec<Vec<StepRecord>> = (0..8)
+            .map(|_| {
+                (0..4)
+                    .map(|_| StepRecord {
+                        state: s,
+                        action: 3,
+                        logp: (0.125f32).ln(),
+                        value: 0.2,
+                        reward: 0.5,
+                    })
+                    .collect()
+            })
+            .collect();
+        b.case(&format!("update_3epoch/{tag}"), || {
+            let _ = agent.update(&episode).unwrap();
+        });
+    }
+}

@@ -1,0 +1,44 @@
+//! Environment hot-path benchmarks: the quantized short-retrain + eval that
+//! dominates search wall-time, and the memo-cache hit path.
+
+use std::rc::Rc;
+
+use releq::coordinator::{EnvConfig, QuantEnv};
+use releq::runtime::{Engine, Manifest};
+use releq::util::benchkit::Bench;
+
+fn main() {
+    let manifest = Manifest::load(&releq::artifacts_dir()).expect("make artifacts first");
+    let engine = Rc::new(Engine::new(releq::artifacts_dir()).unwrap());
+    let net = manifest.network("lenet").unwrap();
+    let mut cfg = EnvConfig::default();
+    cfg.pretrain_steps = 60; // enough for the bench; accuracy itself irrelevant
+    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
+
+    let mut b = Bench::new("env");
+    // §Perf before/after: the same accuracy query through the unfused
+    // (per-step literals) path vs the fused single-execution path
+    let mut k = 0u32;
+    b.case("accuracy/unfused(4x train + eval, literals)", || {
+        k += 1;
+        let bits = vec![2 + (k % 7), 2 + ((k / 7) % 7), 8, 8];
+        let _ = env.accuracy_unfused(&bits).unwrap();
+    });
+    b.case("accuracy/fused(1 exec, resident operands)", || {
+        // vary bits so the memo cache never hits
+        k += 1;
+        let bits = vec![2 + (k % 7), 2 + ((k / 7) % 7), 8, 8];
+        let _ = env.accuracy(&bits).unwrap();
+    });
+    let hot = vec![4, 4, 4, 4];
+    let _ = env.accuracy(&hot).unwrap();
+    b.case("accuracy/cache_hit", || {
+        let _ = env.accuracy(&hot).unwrap();
+    });
+    b.case("state_q", || {
+        let _ = env.state_q(&hot);
+    });
+    b.case("retrain_and_eval/long(120 steps)", || {
+        let _ = env.retrain_and_eval(&hot, 120).unwrap();
+    });
+}

@@ -1,0 +1,28 @@
+//! Pareto machinery benchmarks: assignment generation and frontier
+//! extraction at Fig-6 scale (the env evals are measured in bench_env).
+
+use releq::pareto::{assignments, pareto_frontier, EnumConfig, Point};
+use releq::util::benchkit::Bench;
+use releq::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("pareto");
+    let cfg = EnumConfig::default();
+    b.case("assignments/exhaustive_7^4", || {
+        let _ = assignments(&cfg, 4);
+    });
+    b.case("assignments/sampled_2500_of_7^20", || {
+        let _ = assignments(&cfg, 20);
+    });
+    let mut rng = Pcg32::new(1);
+    let points: Vec<Point> = (0..2401)
+        .map(|_| Point {
+            bits: vec![],
+            state_q: rng.next_f64(),
+            state_acc: rng.next_f64(),
+        })
+        .collect();
+    b.case("frontier/2401_points", || {
+        let _ = pareto_frontier(&points);
+    });
+}

@@ -1,0 +1,48 @@
+//! PJRT runtime micro-benchmarks: artifact execution latency per network
+//! (train step, eval) — the raw floor everything else sits on.
+
+use std::rc::Rc;
+
+use releq::coordinator::EnvConfig;
+use releq::data;
+use releq::runtime::{lit_f32, lit_scalar, Engine, Manifest};
+use releq::util::benchkit::Bench;
+
+fn main() {
+    let manifest = Manifest::load(&releq::artifacts_dir()).expect("make artifacts first");
+    let engine = Rc::new(Engine::new(releq::artifacts_dir()).unwrap());
+    let mut b = Bench::new("runtime");
+    let cfg = EnvConfig::default();
+
+    for net_name in ["lenet", "simplenet", "resnet20", "mobilenet"] {
+        let net = manifest.network(net_name).unwrap().clone();
+        let [h, w, c] = net.input;
+        let (train, _) = data::train_val(&net.dataset, cfg.seed, 256, net.eval_batch, h, net.classes);
+        let train_exe = engine.exe(&format!("{net_name}_train")).unwrap();
+        let init_exe = engine.exe(&format!("{net_name}_init")).unwrap();
+        let out = init_exe.run(&[lit_scalar(1.0)]).unwrap();
+        let params = out[0].to_vec::<f32>().unwrap();
+        let mom = vec![0.0f32; net.p];
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        train.fill_batch(0, net.train_batch, &mut xs, &mut ys);
+        let bits: Vec<f32> = vec![8.0; net.l];
+        let args = [
+            lit_f32(&params, &[net.p as i64]).unwrap(),
+            lit_f32(&mom, &[net.p as i64]).unwrap(),
+            lit_f32(&xs, &[net.train_batch as i64, h as i64, w as i64, c as i64]).unwrap(),
+            lit_f32(&ys, &[net.train_batch as i64]).unwrap(),
+            lit_f32(&bits, &[net.l as i64]).unwrap(),
+            lit_scalar(0.01),
+        ];
+        b.case(&format!("train_step/{net_name}"), || {
+            let _ = train_exe.run(&args).unwrap();
+        });
+    }
+
+    // literal construction overhead (host->literal for a lenet-sized param vec)
+    let v = vec![0.5f32; 20522];
+    b.case("literal/from_vec_20k", || {
+        let _ = lit_f32(&v, &[20522]).unwrap();
+    });
+}

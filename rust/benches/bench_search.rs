@@ -1,0 +1,26 @@
+//! End-to-end search benchmarks: one full episode (embed -> act -> env eval
+//! -> reward, for every layer) on LeNet — the paper-system hot loop.
+
+use std::rc::Rc;
+
+use releq::config;
+use releq::coordinator::Searcher;
+use releq::runtime::{Engine, Manifest};
+use releq::util::benchkit::Bench;
+
+fn main() {
+    let manifest = Manifest::load(&releq::artifacts_dir()).expect("make artifacts first");
+    let engine = Rc::new(Engine::new(releq::artifacts_dir()).unwrap());
+    let net = manifest.network("lenet").unwrap();
+    let mut cfg = config::preset("lenet");
+    cfg.env.pretrain_steps = 60;
+    cfg.episodes = 8; // one PPO update per measured iteration
+    cfg.patience = 0;
+    let mut searcher = Searcher::new(engine, &manifest, net, cfg).unwrap();
+    let mut b = Bench::new("search");
+    b.min_iters = 3;
+    b.max_iters = 12;
+    b.case("8_episodes_plus_update/lenet", || {
+        let _ = searcher.run().unwrap();
+    });
+}

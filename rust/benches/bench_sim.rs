@@ -1,0 +1,23 @@
+//! Hardware-simulator throughput: full-network Stripes + TVM-CPU evaluations
+//! (these run inside Pareto scans and hw experiments thousands of times).
+
+use releq::runtime::Manifest;
+use releq::sim::{Stripes, StripesConfig, TvmCpu, TvmCpuConfig};
+use releq::util::benchkit::Bench;
+
+fn main() {
+    let manifest = Manifest::load(&releq::artifacts_dir()).expect("make artifacts first");
+    let stripes = Stripes::new(StripesConfig::default());
+    let tvm = TvmCpu::new(TvmCpuConfig::default());
+    let mut b = Bench::new("sim");
+    for net_name in ["lenet", "mobilenet"] {
+        let net = manifest.network(net_name).unwrap();
+        let bits = vec![4u32; net.l];
+        b.case(&format!("stripes/{net_name}"), || {
+            let _ = stripes.simulate(net, &bits);
+        });
+        b.case(&format!("tvm_cpu/{net_name}"), || {
+            let _ = tvm.latency(net, &bits);
+        });
+    }
+}

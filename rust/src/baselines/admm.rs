@@ -1,0 +1,210 @@
+//! ADMM-style bitwidth selection baseline (paper §4.6, comparing against
+//! Ye et al. [46] "A unified framework of DNN weight pruning and weight
+//! clustering/quantization using ADMM").
+//!
+//! [46] decides per-layer bitwidths by a binary search that minimizes the
+//! total square quantization error, then fine-tunes iteratively. We implement
+//! that selection faithfully on our substrate:
+//!
+//! * per layer l and bitwidth k: `err_l(k) = Σ (Q_k(w) - w)²` over the
+//!   pretrained weights (WRPN mid-tread quantizer, same as the training path);
+//! * a Lagrangian knob λ trades error against cost: each layer picks
+//!   `argmin_k err_l(k) + λ · cost_l · k` where `cost_l` is the same
+//!   memory+compute cost weight used by State_Q;
+//! * binary search on λ hits a target average bitwidth (the paper's ADMM
+//!   solutions average 5.25 bits on AlexNet, 3.25 on LeNet).
+//!
+//! The published ADMM bitwidth vectors for AlexNet/LeNet are also provided
+//! verbatim so Table 4 can be regenerated against the paper's own numbers.
+
+use crate::quant::sq_error;
+use crate::runtime::NetworkMeta;
+
+/// Published ADMM solutions from the paper (Table 4).
+pub fn paper_solution(net: &str) -> Option<Vec<u32>> {
+    match net {
+        "alexnet" => Some(vec![8, 5, 5, 5, 5, 3, 3, 8]),
+        "lenet" => Some(vec![5, 3, 2, 3]),
+        _ => None,
+    }
+}
+
+/// Published ReLeQ solutions from the paper (Table 2/4), for comparison runs.
+/// resnet20/mobilenet are adapted to this repo's layer counts (20/28 vs the
+/// paper's 23/30 rows — see models.py docstring): the leading/trailing 8-bit
+/// layers and the low-bit interior pattern are preserved.
+pub fn paper_releq_solution(net: &str) -> Option<Vec<u32>> {
+    match net {
+        "alexnet" => Some(vec![8, 4, 4, 4, 4, 4, 4, 8]),
+        "lenet" => Some(vec![2, 2, 3, 2]),
+        "simplenet" => Some(vec![5, 5, 5, 5, 5]),
+        "mobilenet" => Some(vec![
+            8, 5, 6, 6, 4, 4, 7, 8, 4, 6, 8, 5, 5, 8, 6, 7, 7, 7, 6, 8, 6, 8, 8, 6, 7, 5, 5, 7,
+        ]),
+        "resnet20" => Some(vec![8, 2, 2, 3, 2, 2, 2, 3, 2, 3, 3, 3, 2, 2, 2, 2, 3, 2, 2, 8]),
+        "svhn10" => Some(vec![8, 4, 4, 4, 4, 4, 4, 4, 4, 8]),
+        "vgg11" => Some(vec![8, 5, 8, 5, 6, 6, 6, 6, 8]),
+        _ => None,
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AdmmConfig {
+    pub min_bits: u32,
+    pub max_bits: u32,
+    /// λ binary-search iterations
+    pub iters: usize,
+}
+
+impl Default for AdmmConfig {
+    fn default() -> Self {
+        AdmmConfig { min_bits: 2, max_bits: 8, iters: 40 }
+    }
+}
+
+pub struct AdmmSelector {
+    pub cfg: AdmmConfig,
+}
+
+impl AdmmSelector {
+    pub fn new(cfg: AdmmConfig) -> AdmmSelector {
+        AdmmSelector { cfg }
+    }
+
+    /// Per-layer square quantization error at each candidate bitwidth.
+    fn error_table(&self, net: &NetworkMeta, weights: &[f32]) -> Vec<Vec<f64>> {
+        net.layers
+            .iter()
+            .map(|lm| {
+                let w = &weights[lm.w_offset..lm.w_offset + lm.w_len];
+                (self.cfg.min_bits..=self.cfg.max_bits)
+                    .map(|k| sq_error(w, k as f32))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Bitwidths minimizing Σ err_l(k_l) + λ Σ cost_l·k_l for a fixed λ.
+    fn select_lambda(&self, errs: &[Vec<f64>], costs: &[f64], lambda: f64) -> Vec<u32> {
+        errs.iter()
+            .zip(costs)
+            .map(|(e, &c)| {
+                let mut best = (f64::INFINITY, self.cfg.max_bits);
+                for (i, &err) in e.iter().enumerate() {
+                    let k = self.cfg.min_bits + i as u32;
+                    let obj = err + lambda * c * k as f64;
+                    if obj < best.0 {
+                        best = (obj, k);
+                    }
+                }
+                best.1
+            })
+            .collect()
+    }
+
+    /// Binary-search λ to meet `target_avg_bits` (plain mean over layers).
+    pub fn select(&self, net: &NetworkMeta, weights: &[f32], target_avg_bits: f64)
+                  -> Vec<u32> {
+        let errs = self.error_table(net, weights);
+        // normalize layer cost so λ has a stable scale across networks
+        let total: f64 = net
+            .layers
+            .iter()
+            .map(|l| l.w_len as f64 * crate::quant::E_MEM_OVER_E_MAC + l.n_macs as f64)
+            .sum();
+        let costs: Vec<f64> = net
+            .layers
+            .iter()
+            .map(|l| (l.w_len as f64 * crate::quant::E_MEM_OVER_E_MAC + l.n_macs as f64) / total)
+            .collect();
+        let avg = |bits: &[u32]| {
+            bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64
+        };
+        // λ = 0 -> max bits everywhere; large λ -> min bits everywhere
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        // grow hi until it forces below-target average
+        for _ in 0..60 {
+            if avg(&self.select_lambda(&errs, &costs, hi)) <= target_avg_bits {
+                break;
+            }
+            hi *= 4.0;
+        }
+        let mut best = self.select_lambda(&errs, &costs, hi);
+        for _ in 0..self.cfg.iters {
+            let mid = 0.5 * (lo + hi);
+            let bits = self.select_lambda(&errs, &costs, mid);
+            if avg(&bits) <= target_avg_bits {
+                best = bits;
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::cost::tests_support::toy_net;
+    use crate::util::rng::Pcg32;
+
+    fn weights(n: usize, std: f32, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::new(seed);
+        (0..n).map(|_| r.gaussian() * std).collect()
+    }
+
+    #[test]
+    fn paper_vectors_present() {
+        assert_eq!(paper_solution("lenet").unwrap(), vec![5, 3, 2, 3]);
+        assert_eq!(paper_solution("alexnet").unwrap().len(), 8);
+        assert!(paper_solution("vgg11").is_none());
+        assert_eq!(paper_releq_solution("lenet").unwrap(), vec![2, 2, 3, 2]);
+        assert_eq!(paper_releq_solution("mobilenet").unwrap().len(), 28);
+        assert_eq!(paper_releq_solution("resnet20").unwrap().len(), 20);
+    }
+
+    #[test]
+    fn meets_target_average() {
+        let net = toy_net(&[(2000, 100_000), (4000, 400_000), (500, 20_000)]);
+        let mut w = weights(2000, 0.3, 1);
+        w.extend(weights(4000, 0.2, 2));
+        w.extend(weights(500, 0.5, 3));
+        // toy_net has w_offset 0 everywhere; patch offsets
+        let mut net = net;
+        net.layers[0].w_offset = 0;
+        net.layers[1].w_offset = 2000;
+        net.layers[2].w_offset = 6000;
+        let sel = AdmmSelector::new(AdmmConfig::default());
+        let bits = sel.select(&net, &w, 4.0);
+        let avg: f64 = bits.iter().map(|&b| b as f64).sum::<f64>() / 3.0;
+        assert!(avg <= 4.0 + 1e-9, "avg {avg} bits {bits:?}");
+        assert!(bits.iter().all(|&b| (2..=8).contains(&b)));
+    }
+
+    #[test]
+    fn wide_distribution_gets_more_bits() {
+        // a layer with wider weight distribution quantizes worse -> ADMM
+        // should give it more bits than an equally-sized narrow layer
+        let net = toy_net(&[(4000, 100_000), (4000, 100_000)]);
+        let mut net = net;
+        net.layers[0].w_offset = 0;
+        net.layers[1].w_offset = 4000;
+        let mut w = weights(4000, 0.9, 1); // wide
+        w.extend(weights(4000, 0.05, 2)); // narrow
+        let sel = AdmmSelector::new(AdmmConfig::default());
+        let bits = sel.select(&net, &w, 5.0);
+        assert!(bits[0] >= bits[1], "{bits:?}");
+    }
+
+    #[test]
+    fn lambda_zero_gives_max_bits() {
+        let net = toy_net(&[(100, 1000)]);
+        let w = weights(100, 0.3, 9);
+        let sel = AdmmSelector::new(AdmmConfig::default());
+        let errs = sel.error_table(&net, &w);
+        let bits = sel.select_lambda(&errs, &[1.0], 0.0);
+        assert_eq!(bits, vec![8]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Baseline bitwidth-selection methods the paper compares against (§4.6):
+//! the ADMM-style selector of Ye et al. [46] and homogeneous baselines.
+
+pub mod admm;
+pub mod uniform;
+
+pub use admm::{paper_releq_solution, paper_solution, AdmmConfig, AdmmSelector};

@@ -1,0 +1,45 @@
+//! Homogeneous-bitwidth baselines.
+//!
+//! The paper's §2.1 argues heterogeneity beats any uniform assignment; these
+//! helpers provide the uniform comparators: the fixed 8-bit baseline all
+//! hardware numbers normalize against, and a "smallest uniform bitwidth that
+//! stays within an accuracy budget" search (the strongest homogeneous rival,
+//! used by the Pareto and ablation experiments).
+
+use anyhow::Result;
+
+use crate::coordinator::QuantEnv;
+
+/// The uniform assignment `[bits; L]`.
+pub fn uniform(bits: u32, l: usize) -> Vec<u32> {
+    vec![bits; l]
+}
+
+/// Smallest uniform bitwidth whose (short-retrain) relative accuracy stays
+/// above `min_state_acc`. Scans downward from `from_bits`; returns the last
+/// bitwidth that met the budget (falling back to `from_bits`).
+pub fn best_uniform(env: &mut QuantEnv, from_bits: u32, min_bits: u32,
+                    min_state_acc: f64) -> Result<(u32, f64)> {
+    let l = env.net.l;
+    let mut best = (from_bits, env.state_acc(&uniform(from_bits, l))?);
+    for b in (min_bits..=from_bits).rev() {
+        let sa = env.state_acc(&uniform(b, l))?;
+        if sa >= min_state_acc {
+            best = (b, sa);
+        } else {
+            break;
+        }
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_shape() {
+        assert_eq!(uniform(4, 3), vec![4, 4, 4]);
+        assert_eq!(uniform(8, 0), Vec::<u32>::new());
+    }
+}

@@ -1,0 +1,184 @@
+//! Experiment configuration: a TOML-subset file format + per-network presets
+//! + CLI override plumbing, feeding [`crate::coordinator::SearchConfig`].
+//!
+//! Precedence (lowest to highest): built-in defaults -> network preset ->
+//! `--config file.toml` -> individual CLI flags.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{ActionSpace, AgentKind, RewardKind, SearchConfig};
+use crate::util::cli::Args;
+
+pub mod toml_lite;
+
+pub use toml_lite::TomlValue;
+
+/// Per-network search presets, tuned for the 1-core CPU-PJRT testbed.
+/// Deeper networks get terminal-only accuracy evaluation (paper §3) and
+/// fewer episodes; small ones evaluate every step.
+pub fn preset(net: &str) -> SearchConfig {
+    let mut cfg = SearchConfig::default();
+    match net {
+        "lenet" => {
+            cfg.episodes = 400;
+            cfg.env.pretrain_steps = 300;
+        }
+        "simplenet" => {
+            cfg.episodes = 350;
+            cfg.env.pretrain_steps = 350;
+        }
+        "alexnet" | "vgg11" | "svhn10" => {
+            // L >= 8: evaluate at episode end (paper §3: "for deeper networks
+            // ... we perform this phase after all the bitwidths are selected")
+            cfg.episodes = 300;
+            cfg.env.pretrain_steps = 400;
+            cfg.env.retrain_steps = 3;
+            cfg.eval_every_step = false;
+        }
+        "resnet20" | "mobilenet" => {
+            cfg.episodes = 240;
+            cfg.env.pretrain_steps = 450;
+            // more retrain steps than the shallow nets: deep nets'
+            // short-retrain accuracy is noisy and the reward's acc^5 term
+            // amplifies that noise (5 is the wall-clock compromise; see
+            // EXPERIMENTS.md §Perf on why these nets run the per-step path)
+            cfg.env.retrain_steps = 5;
+            cfg.eval_every_step = false;
+        }
+        _ => {}
+    }
+    cfg
+}
+
+/// Apply a parsed TOML-lite table to a SearchConfig.
+pub fn apply_toml(cfg: &mut SearchConfig, tbl: &BTreeMap<String, TomlValue>) {
+    let f = |v: &TomlValue| v.as_f64().unwrap_or_else(|| panic!("number expected"));
+    for (k, v) in tbl {
+        match k.as_str() {
+            "episodes" => cfg.episodes = f(v) as usize,
+            "pretrain_steps" => cfg.env.pretrain_steps = f(v) as usize,
+            "retrain_steps" => cfg.env.retrain_steps = f(v) as usize,
+            "long_retrain_steps" => cfg.env.long_retrain_steps = f(v) as usize,
+            "lr" => cfg.env.lr = f(v) as f32,
+            "train_size" => cfg.env.train_size = f(v) as usize,
+            "seed" => cfg.seed = f(v) as u64,
+            "clip_eps" => cfg.ppo.clip_eps = f(v) as f32,
+            "ent_coef" => cfg.ppo.ent_coef = f(v) as f32,
+            "agent_lr" => cfg.ppo.lr = f(v) as f32,
+            "epochs" => cfg.ppo.epochs = f(v) as usize,
+            "gamma" => cfg.ppo.gamma = f(v),
+            "lam" => cfg.ppo.lam = f(v),
+            "reward" => cfg.reward.kind = RewardKind::parse(v.as_str().unwrap()),
+            "reward_a" => cfg.reward.a = f(v),
+            "reward_b" => cfg.reward.b = f(v),
+            "reward_th" => cfg.reward.th = f(v),
+            "agent" => cfg.agent_kind = AgentKind::parse(v.as_str().unwrap()),
+            "action_space" => cfg.action_space = ActionSpace::parse(v.as_str().unwrap()),
+            "eval_every_step" => cfg.eval_every_step = v.as_bool().unwrap(),
+            "min_bits" => cfg.min_bits = f(v) as u32,
+            "patience" => cfg.patience = f(v) as usize,
+            other => panic!("unknown config key `{other}`"),
+        }
+    }
+}
+
+/// Apply individual CLI flags (highest precedence).
+pub fn apply_cli(cfg: &mut SearchConfig, args: &Args) {
+    if let Some(v) = args.opt_str("episodes") {
+        cfg.episodes = v.parse().expect("--episodes");
+    }
+    if let Some(v) = args.opt_str("seed") {
+        cfg.seed = v.parse().expect("--seed");
+    }
+    if let Some(v) = args.opt_str("reward") {
+        cfg.reward.kind = RewardKind::parse(&v);
+    }
+    if let Some(v) = args.opt_str("agent") {
+        cfg.agent_kind = AgentKind::parse(&v);
+    }
+    if let Some(v) = args.opt_str("action-space") {
+        cfg.action_space = ActionSpace::parse(&v);
+    }
+    if let Some(v) = args.opt_str("agent-lr") {
+        cfg.ppo.lr = v.parse().expect("--agent-lr");
+    }
+    if let Some(v) = args.opt_str("ent-coef") {
+        cfg.ppo.ent_coef = v.parse().expect("--ent-coef");
+    }
+    if let Some(v) = args.opt_str("clip-eps") {
+        cfg.ppo.clip_eps = v.parse().expect("--clip-eps");
+    }
+    if let Some(v) = args.opt_str("retrain-steps") {
+        cfg.env.retrain_steps = v.parse().expect("--retrain-steps");
+    }
+    if let Some(v) = args.opt_str("pretrain-steps") {
+        cfg.env.pretrain_steps = v.parse().expect("--pretrain-steps");
+    }
+    if let Some(v) = args.opt_str("lr") {
+        cfg.env.lr = v.parse().expect("--lr");
+    }
+    if let Some(v) = args.opt_str("patience") {
+        cfg.patience = v.parse().expect("--patience");
+    }
+    if args.has("eval-at-end") {
+        cfg.eval_every_step = false;
+    }
+}
+
+/// Resolve the full precedence chain for a network.
+pub fn resolve(net: &str, args: &Args) -> Result<SearchConfig> {
+    let mut cfg = preset(net);
+    if let Some(path) = args.opt_str("config") {
+        let text = std::fs::read_to_string(Path::new(&path))
+            .with_context(|| format!("reading config {path}"))?;
+        let doc = toml_lite::parse(&text).with_context(|| format!("parsing {path}"))?;
+        // global [search] section, then per-network [search.<net>]
+        if let Some(tbl) = doc.get("search") {
+            apply_toml(&mut cfg, tbl);
+        }
+        if let Some(tbl) = doc.get(&format!("search.{net}")) {
+            apply_toml(&mut cfg, tbl);
+        }
+    }
+    apply_cli(&mut cfg, args);
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(std::iter::once("releq".into()).chain(s.split_whitespace().map(String::from)))
+    }
+
+    #[test]
+    fn presets_differ_by_depth() {
+        assert!(preset("lenet").eval_every_step);
+        assert!(!preset("mobilenet").eval_every_step);
+        assert!(preset("lenet").episodes > preset("mobilenet").episodes);
+    }
+
+    #[test]
+    fn cli_overrides_preset() {
+        let cfg = resolve("lenet", &args("search --net lenet --episodes 7 --reward diff")).unwrap();
+        assert_eq!(cfg.episodes, 7);
+        assert_eq!(cfg.reward.kind, RewardKind::Diff);
+    }
+
+    #[test]
+    fn toml_then_cli_precedence() {
+        let dir = std::env::temp_dir().join("releq_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.toml");
+        std::fs::write(&p, "[search]\nepisodes = 50\nseed = 3\n[search.lenet]\nepisodes = 60\n")
+            .unwrap();
+        let a = args(&format!("search --config {} --seed 9", p.display()));
+        let cfg = resolve("lenet", &a).unwrap();
+        assert_eq!(cfg.episodes, 60); // per-net toml beats global toml
+        assert_eq!(cfg.seed, 9); // cli beats toml
+    }
+}

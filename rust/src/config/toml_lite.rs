@@ -1,0 +1,144 @@
+//! Minimal TOML-subset parser for experiment config files (the real `toml`
+//! crate is unavailable offline — DESIGN.md §9).
+//!
+//! Supported grammar: `[section]` / `[section.sub]` headers, `key = value`
+//! lines, `#` comments, and scalar values (integer, float, bool, "string")
+//! plus flat arrays of scalars. That covers every config this repo ships.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Num(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+pub type Doc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+fn parse_scalar(s: &str) -> Result<TomlValue> {
+    let s = s.trim();
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_scalar(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match s.parse::<f64>() {
+        Ok(n) => Ok(TomlValue::Num(n)),
+        Err(_) => bail!("cannot parse value `{s}`"),
+    }
+}
+
+/// Parse a TOML-lite document into section -> key -> value.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            // don't strip '#' inside quoted strings
+            Some(i) if !raw[..i].contains('"') || raw[..i].matches('"').count() % 2 == 0 => {
+                &raw[..i]
+            }
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got `{line}`", lineno + 1);
+        };
+        let value = parse_scalar(v)
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.entry(section.clone())
+            .or_default()
+            .insert(k.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            "# comment\ntop = 1\n[search]\nepisodes = 500 # inline\nlr = 0.05\n\
+             reward = \"proposed\"\nflag = true\n[search.lenet]\nepisodes = 300\n",
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Num(1.0));
+        assert_eq!(doc["search"]["episodes"], TomlValue::Num(500.0));
+        assert_eq!(doc["search"]["lr"], TomlValue::Num(0.05));
+        assert_eq!(doc["search"]["reward"], TomlValue::Str("proposed".into()));
+        assert_eq!(doc["search"]["flag"], TomlValue::Bool(true));
+        assert_eq!(doc["search.lenet"]["episodes"], TomlValue::Num(300.0));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse("bits = [2, 3, 4]\nnames = [\"a\", \"b\"]\n").unwrap();
+        match &doc[""]["bits"] {
+            TomlValue::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("key value\n").is_err());
+        assert!(parse("k = @bad\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc[""]["s"], TomlValue::Str("a#b".into()));
+    }
+}

@@ -1,0 +1,123 @@
+//! State-space embedding (paper §2.4, Table 1).
+//!
+//! Per agent step the environment emits an 8-dim vector combining
+//! layer-specific static features (index, size, weight statistics),
+//! layer-specific dynamic features (current bitwidth) and network-specific
+//! dynamic features (State-of-Quantization, State-of-Relative-Accuracy).
+//! `STATE_DIM` must equal `compile.agent.STATE_DIM` on the Python side —
+//! checked against the manifest at load time.
+
+use crate::runtime::NetworkMeta;
+
+pub const STATE_DIM: usize = 8;
+
+/// Static per-layer features, precomputed once per search from the manifest
+/// and the pretrained weights.
+#[derive(Debug, Clone)]
+pub struct StaticFeatures {
+    /// layer index normalized to [0, 1]
+    pub idx_norm: Vec<f32>,
+    /// log10 weight count, normalized
+    pub logw: Vec<f32>,
+    /// log10 MAC count, normalized
+    pub logm: Vec<f32>,
+    /// weight standard deviation of the pretrained layer (Table 1:
+    /// "Weight Statistics (standard deviation)")
+    pub wstd: Vec<f32>,
+}
+
+impl StaticFeatures {
+    pub fn new(net: &NetworkMeta, pretrained: &[f32]) -> StaticFeatures {
+        let l = net.l.max(2);
+        let idx_norm = (0..net.l).map(|i| i as f32 / (l - 1) as f32).collect();
+        let logw = net
+            .layers
+            .iter()
+            .map(|m| ((m.w_len as f32 + 1.0).log10() / 6.0).min(1.0))
+            .collect();
+        let logm = net
+            .layers
+            .iter()
+            .map(|m| ((m.n_macs as f32 + 1.0).log10() / 8.0).min(1.0))
+            .collect();
+        let wstd = net
+            .layers
+            .iter()
+            .map(|m| {
+                let w = &pretrained[m.w_offset..m.w_offset + m.w_len];
+                let mean = w.iter().sum::<f32>() / w.len() as f32;
+                let var =
+                    w.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / w.len() as f32;
+                (var.sqrt() / 2.0).min(1.0)
+            })
+            .collect();
+        StaticFeatures { idx_norm, logw, logm, wstd }
+    }
+}
+
+/// Assemble the embedding for the step that will choose layer `l`'s bitwidth.
+pub fn embed(
+    st: &StaticFeatures,
+    l: usize,
+    bits: &[u32],
+    bits_max: u32,
+    state_acc: f64,
+    state_q: f64,
+    out: &mut [f32; STATE_DIM],
+) {
+    let n = bits.len() as f32;
+    out[0] = st.idx_norm[l];
+    out[1] = st.logw[l];
+    out[2] = st.logm[l];
+    out[3] = st.wstd[l];
+    out[4] = bits[l] as f32 / bits_max as f32;
+    out[5] = (state_acc as f32).clamp(0.0, 1.25) / 1.25;
+    out[6] = (state_q as f32).clamp(0.0, 1.0);
+    out[7] = l as f32 / n;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::cost::tests_support::toy_net;
+
+    #[test]
+    fn features_in_unit_range() {
+        let net = toy_net(&[(1000, 50_000), (250_000, 2_000_000), (10, 100)]);
+        let params = vec![0.1f32; 250_010 + 10];
+        let st = StaticFeatures::new(&net, &params);
+        let mut s = [0f32; STATE_DIM];
+        for l in 0..3 {
+            embed(&st, l, &[8, 8, 8], 8, 1.0, 1.0, &mut s);
+            for (i, v) in s.iter().enumerate() {
+                assert!((0.0..=1.0).contains(v), "feat {i} = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn distinguishes_layers() {
+        let net = toy_net(&[(1000, 50_000), (250_000, 2_000_000)]);
+        let params = vec![0.05f32; 251_000];
+        let st = StaticFeatures::new(&net, &params);
+        let mut s0 = [0f32; STATE_DIM];
+        let mut s1 = [0f32; STATE_DIM];
+        embed(&st, 0, &[8, 8], 8, 1.0, 1.0, &mut s0);
+        embed(&st, 1, &[8, 8], 8, 1.0, 1.0, &mut s1);
+        assert_ne!(s0, s1);
+        assert!(s1[1] > s0[1], "bigger layer has bigger logw");
+    }
+
+    #[test]
+    fn reflects_dynamic_state() {
+        let net = toy_net(&[(1000, 50_000)]);
+        let st = StaticFeatures::new(&net, &vec![0.0f32; 1000]);
+        let mut a = [0f32; STATE_DIM];
+        let mut b = [0f32; STATE_DIM];
+        embed(&st, 0, &[8], 8, 1.0, 1.0, &mut a);
+        embed(&st, 0, &[2], 8, 0.5, 0.25, &mut b);
+        assert!(b[4] < a[4]); // bits feature
+        assert!(b[5] < a[5]); // acc feature
+        assert!(b[6] < a[6]); // quant feature
+    }
+}

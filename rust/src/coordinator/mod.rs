@@ -1,0 +1,20 @@
+//! The ReLeQ coordinator — the paper's contribution, Layer 3.
+//!
+//! * [`embedding`] — state-space embedding (paper §2.4, Table 1)
+//! * [`env`] — the quantization environment: quantized short-retrain +
+//!   accuracy evaluation through the AOT artifacts
+//! * [`reward`] — asymmetric reward shaping + the two ablation forms (§2.6)
+//! * [`ppo`] — PPO driver: trajectories, GAE, updates through HLO (§2.7)
+//! * [`search`] — the episode loop, convergence detection, final solution
+
+pub mod embedding;
+pub mod env;
+pub mod ppo;
+pub mod reward;
+pub mod search;
+
+pub use embedding::{embed, StaticFeatures, STATE_DIM};
+pub use env::{EnvConfig, EnvStats, QuantEnv};
+pub use ppo::{AgentKind, PpoAgent, PpoConfig, StepRecord, UpdateStats};
+pub use reward::{RewardKind, RewardParams};
+pub use search::{ActionSpace, SearchConfig, SearchResult, Searcher};

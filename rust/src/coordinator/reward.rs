@@ -1,0 +1,158 @@
+//! Reward shaping (paper §2.6, Fig 3).
+//!
+//! Three formulations, compared in the paper's Fig 10 ablation:
+//!
+//! * **Proposed** (Fig 3a) — asymmetric, accuracy-dominant, with a hard
+//!   threshold below which quantization states are unacceptable. The paper
+//!   gives the parameters (a = 0.2, b = 0.4, th = 0.4) and the qualitative
+//!   shape but not the closed form; DESIGN.md §7 documents the
+//!   reconstruction used here:
+//!
+//!   ```text
+//!   State_A < th :  R = -1
+//!   otherwise    :  R = State_A^(1/a) * (b + (1-b) * (1 - State_Q))
+//!   ```
+//!
+//!   `State_A^(1/a) = State_A^5` makes the reward steeply sensitive to
+//!   accuracy near 1.0 (the 2-D gradient of Fig 3a), while `b` guarantees a
+//!   floor of reward for accuracy alone so the agent never profits from
+//!   trashing accuracy to gain quantization.
+//!
+//! * **Ratio** (Fig 3b) — `R = State_A / State_Q`.
+//! * **Diff**  (Fig 3c) — `R = State_A - State_Q`.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RewardKind {
+    Proposed,
+    Ratio,
+    Diff,
+}
+
+impl RewardKind {
+    pub fn parse(s: &str) -> RewardKind {
+        match s {
+            "proposed" => RewardKind::Proposed,
+            "ratio" => RewardKind::Ratio,
+            "diff" => RewardKind::Diff,
+            other => panic!("unknown reward kind `{other}` (proposed|ratio|diff)"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct RewardParams {
+    pub kind: RewardKind,
+    /// accuracy-emphasis exponent parameter (paper: a = 0.2 -> exponent 1/a = 5)
+    pub a: f64,
+    /// accuracy floor weight (paper: b = 0.4)
+    pub b: f64,
+    /// relative-accuracy threshold below which solutions are unacceptable
+    /// (paper: th = 0.4)
+    pub th: f64,
+}
+
+impl Default for RewardParams {
+    fn default() -> Self {
+        RewardParams { kind: RewardKind::Proposed, a: 0.2, b: 0.4, th: 0.4 }
+    }
+}
+
+impl RewardParams {
+    pub fn with_kind(kind: RewardKind) -> Self {
+        RewardParams { kind, ..Default::default() }
+    }
+
+    /// Reward for a (State_of_Relative_Accuracy, State_of_Quantization) pair.
+    pub fn reward(&self, state_acc: f64, state_q: f64) -> f64 {
+        match self.kind {
+            RewardKind::Proposed => {
+                if state_acc < self.th {
+                    return -1.0;
+                }
+                let acc_term = state_acc.min(1.0).powf(1.0 / self.a);
+                let quality = 1.0 - state_q.clamp(0.0, 1.0);
+                acc_term * (self.b + (1.0 - self.b) * quality)
+            }
+            RewardKind::Ratio => state_acc / state_q.max(1e-6),
+            RewardKind::Diff => state_acc - state_q,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EPS: f64 = 1e-12;
+
+    #[test]
+    fn threshold_cliff() {
+        let r = RewardParams::default();
+        assert_eq!(r.reward(0.39, 0.3), -1.0);
+        assert!(r.reward(0.41, 0.3) > -1.0);
+    }
+
+    #[test]
+    fn monotone_in_accuracy() {
+        let r = RewardParams::default();
+        let mut last = -1.0;
+        for i in 0..=20 {
+            let acc = 0.4 + 0.6 * i as f64 / 20.0;
+            let rew = r.reward(acc, 0.5);
+            assert!(rew >= last - EPS, "acc {acc}: {rew} < {last}");
+            last = rew;
+        }
+    }
+
+    #[test]
+    fn monotone_in_quantization_benefit() {
+        let r = RewardParams::default();
+        // lower State_Q (more quantized) must never decrease reward
+        let mut last = -1.0;
+        for i in (0..=10).rev() {
+            let q = i as f64 / 10.0;
+            let rew = r.reward(0.95, q);
+            assert!(rew >= last - EPS);
+            last = rew;
+        }
+    }
+
+    #[test]
+    fn asymmetry_accuracy_dominates() {
+        let r = RewardParams::default();
+        // losing 30% accuracy hurts far more than gaining 30% quantization helps
+        let base = r.reward(1.0, 0.5);
+        let acc_loss = base - r.reward(0.7, 0.5);
+        let quant_gain = r.reward(1.0, 0.2) - base;
+        assert!(
+            acc_loss > 2.0 * quant_gain,
+            "acc_loss {acc_loss} quant_gain {quant_gain}"
+        );
+    }
+
+    #[test]
+    fn accuracy_floor_b() {
+        // even at State_Q = 1 (no quantization benefit) full accuracy earns b
+        let r = RewardParams::default();
+        assert!((r.reward(1.0, 1.0) - r.b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ratio_and_diff_forms() {
+        let rr = RewardParams::with_kind(RewardKind::Ratio);
+        assert!((rr.reward(0.9, 0.45) - 2.0).abs() < 1e-9);
+        let rd = RewardParams::with_kind(RewardKind::Diff);
+        assert!((rd.reward(0.9, 0.45) - 0.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn proposed_bounded() {
+        let r = RewardParams::default();
+        for ai in 0..=20 {
+            for qi in 0..=20 {
+                let rew = r.reward(ai as f64 / 20.0, qi as f64 / 20.0);
+                assert!((-1.0..=1.0).contains(&rew));
+            }
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! The ReLeQ search loop (paper §3, Fig 4): episodes over layers, stochastic
+//! bitwidth actions, reward at each step, PPO updates every B episodes, and
+//! convergence detection — then a greedy rollout + long retrain produces the
+//! final Table-2-style solution.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::metrics::{EpisodeLog, SearchLog};
+use crate::runtime::{Engine, Manifest, NetworkMeta};
+use crate::util::rng::Pcg32;
+
+use super::embedding::{embed, StaticFeatures, STATE_DIM};
+use super::env::{EnvConfig, QuantEnv};
+use super::ppo::{AgentKind, PpoAgent, PpoConfig, StepRecord};
+use super::reward::RewardParams;
+
+/// Action space style (paper §2.5, Fig 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActionSpace {
+    /// Fig 2a: any bitwidth -> any bitwidth (the one ReLeQ uses)
+    Flexible,
+    /// Fig 2b ablation: moves restricted to {-1, 0, +1} of the current bits;
+    /// sampled targets outside that window are clamped to the nearest edge.
+    Restricted,
+}
+
+impl ActionSpace {
+    pub fn parse(s: &str) -> ActionSpace {
+        match s {
+            "flexible" => ActionSpace::Flexible,
+            "restricted" => ActionSpace::Restricted,
+            other => panic!("unknown action space `{other}` (flexible|restricted)"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub episodes: usize,
+    pub env: EnvConfig,
+    pub ppo: PpoConfig,
+    pub reward: RewardParams,
+    pub agent_kind: AgentKind,
+    pub action_space: ActionSpace,
+    /// evaluate accuracy (and reward) at every layer step; when false, only
+    /// the terminal step is evaluated (paper §3: "for deeper networks ... we
+    /// perform this phase after all the bitwidths are selected")
+    pub eval_every_step: bool,
+    /// minimum bitwidth the agent may choose (2 keeps sign+1 level; the paper
+    /// explores {1..8} in Fig 2 but Table 2 solutions never go below 2)
+    pub min_bits: u32,
+    pub seed: u64,
+    /// stop early when the greedy policy is stable this many updates in a row
+    /// (0 disables early stopping)
+    pub patience: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            episodes: 400,
+            env: EnvConfig::default(),
+            ppo: PpoConfig::default(),
+            reward: RewardParams::default(),
+            agent_kind: AgentKind::Lstm,
+            action_space: ActionSpace::Flexible,
+            eval_every_step: true,
+            min_bits: 2,
+            seed: 23,
+            patience: 12,
+        }
+    }
+}
+
+/// Search outcome: the quantization solution and the full learning history.
+pub struct SearchResult {
+    pub net: String,
+    /// converged per-layer bitwidths (greedy rollout of the final policy)
+    pub bits: Vec<u32>,
+    /// plain mean of bits (Table 2 "Average Bitwidth")
+    pub avg_bits: f64,
+    /// full-precision reference accuracy
+    pub acc_fullp: f64,
+    /// accuracy after the final long retrain at `bits`
+    pub acc_final: f64,
+    /// Acc loss (%) as Table 2 reports it
+    pub acc_loss_pct: f64,
+    pub state_q: f64,
+    pub log: SearchLog,
+    /// episodes actually run (early stopping may cut `episodes`)
+    pub episodes_run: usize,
+    /// greedy (argmax) per-layer probabilities at convergence
+    pub final_probs: Vec<Vec<f32>>,
+}
+
+pub struct Searcher {
+    pub env: QuantEnv,
+    pub agent: PpoAgent,
+    pub cfg: SearchConfig,
+    statics: StaticFeatures,
+    rng: Pcg32,
+    bits_max: u32,
+}
+
+impl Searcher {
+    pub fn new(engine: Rc<Engine>, manifest: &Manifest, net: &NetworkMeta,
+               cfg: SearchConfig) -> Result<Searcher> {
+        let env = QuantEnv::new(
+            engine.clone(),
+            net,
+            manifest.bits_max,
+            manifest.fp_bits,
+            cfg.env.clone(),
+        )?;
+        let agent = PpoAgent::new(
+            engine,
+            manifest,
+            cfg.agent_kind,
+            net.l,
+            cfg.seed ^ 0xa9e27,
+            cfg.ppo.clone(),
+        )?;
+        let statics = StaticFeatures::new(net, &env.pretrained);
+        let rng = Pcg32::new(cfg.seed);
+        let bits_max = manifest.bits_max;
+        Ok(Searcher { env, agent, cfg, statics, rng, bits_max })
+    }
+
+    /// Map a sampled action index to a bitwidth, honoring the action space.
+    fn action_to_bits(&self, action: usize, current: u32) -> u32 {
+        let target = (action as u32 + 1).clamp(self.cfg.min_bits, self.bits_max);
+        match self.cfg.action_space {
+            ActionSpace::Flexible => target,
+            ActionSpace::Restricted => {
+                target.clamp(current.saturating_sub(1).max(self.cfg.min_bits),
+                             (current + 1).min(self.bits_max))
+            }
+        }
+    }
+
+    /// Run one episode. `greedy` takes argmax actions and skips recording.
+    /// Returns (bits, per-step probs, episode records).
+    fn rollout(&mut self, greedy: bool)
+               -> Result<(Vec<u32>, Vec<Vec<f32>>, Vec<StepRecord>)> {
+        let l_total = self.env.net.l;
+        // onset of exploration: all layers start at bits_max (paper §5.1)
+        let mut bits = vec![self.bits_max; l_total];
+        let (mut h, mut c) = self.agent.initial_hidden();
+        let mut state_acc = 1.0f64;
+        let mut state_q = self.env.state_q(&bits);
+        let mut probs_hist = Vec::with_capacity(l_total);
+        let mut records = Vec::with_capacity(l_total);
+        let mut s = [0.0f32; STATE_DIM];
+
+        for l in 0..l_total {
+            embed(&self.statics, l, &bits, self.bits_max, state_acc, state_q, &mut s);
+            let (probs, value, h2, c2) = self.agent.act(&s, &h, &c)?;
+            h = h2;
+            c = c2;
+            let action = if greedy {
+                probs
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            } else {
+                PpoAgent::sample(&probs, &mut self.rng)
+            };
+            bits[l] = self.action_to_bits(action, bits[l]);
+            state_q = self.env.state_q(&bits);
+
+            let last = l + 1 == l_total;
+            let reward = if self.cfg.eval_every_step || last {
+                state_acc = self.env.state_acc(&bits)?;
+                self.cfg.reward.reward(state_acc, state_q) as f32
+            } else {
+                0.0
+            };
+            probs_hist.push(probs.clone());
+            if !greedy {
+                records.push(StepRecord {
+                    state: s,
+                    action,
+                    logp: probs[action].max(1e-8).ln(),
+                    value,
+                    reward,
+                });
+            }
+        }
+        Ok((bits, probs_hist, records))
+    }
+
+    /// Full search: episodes + PPO updates + convergence detection, then the
+    /// greedy rollout and final long retrain.
+    pub fn run(&mut self) -> Result<SearchResult> {
+        let mut log = SearchLog::default();
+        let mut stable_updates = 0usize;
+        let mut last_greedy: Option<Vec<u32>> = None;
+        let mut episodes_run = 0usize;
+
+        for ep in 0..self.cfg.episodes {
+            let (bits, probs, records) = self.rollout(false)?;
+            episodes_run = ep + 1;
+            let reward_sum: f64 = records.iter().map(|r| r.reward as f64).sum();
+            let state_acc = self.env.state_acc(&bits)?;
+            let state_q = self.env.state_q(&bits);
+            log.push(EpisodeLog {
+                episode: ep,
+                reward: reward_sum,
+                state_acc,
+                state_q,
+                bits: bits.clone(),
+                probs,
+            });
+            let updated = self.agent.finish_episode(records)?.is_some();
+
+            // convergence check after each PPO update: greedy policy stability
+            if updated && self.cfg.patience > 0 {
+                let (gbits, _, _) = self.rollout(true)?;
+                if last_greedy.as_ref() == Some(&gbits) {
+                    stable_updates += 1;
+                    if stable_updates >= self.cfg.patience {
+                        break;
+                    }
+                } else {
+                    stable_updates = 0;
+                    last_greedy = Some(gbits);
+                }
+            }
+        }
+
+        // final solution: greedy rollout of the converged policy
+        let (bits, final_probs, _) = self.rollout(true)?;
+        let state_q = self.env.state_q(&bits);
+        let acc_final = self
+            .env
+            .retrain_and_eval(&bits, self.cfg.env.long_retrain_steps)?;
+        let acc_fullp = self.env.acc_fullp;
+        let acc_loss_pct = ((acc_fullp - acc_final) * 100.0).max(0.0);
+        Ok(SearchResult {
+            net: self.env.net.name.clone(),
+            avg_bits: bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64,
+            bits,
+            acc_fullp,
+            acc_final,
+            acc_loss_pct,
+            state_q,
+            log,
+            episodes_run,
+            final_probs,
+        })
+    }
+}

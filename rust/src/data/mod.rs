@@ -1,0 +1,277 @@
+//! Synthetic dataset substrate (DESIGN.md §7).
+//!
+//! The paper evaluates on MNIST/CIFAR-10/SVHN/ImageNet, none of which exist in
+//! this offline environment. ReLeQ's search only needs a task on which (a) the
+//! network trains to a stable reference accuracy and (b) accuracy degrades
+//! with aggressive quantization — the search loop (quantized-retrain → eval →
+//! reward → PPO) is identical. Each paper dataset is replaced by a
+//! deterministic, seeded generator of class-conditional images:
+//!
+//! * class identity is carried by a mixture of 2-D sinusoid gratings whose
+//!   frequencies/phases are class-specific,
+//! * per-sample nuisance: random phase jitter, amplitude scaling, Gaussian
+//!   pixel noise, and a random spatial shift,
+//! * channel count / size / noise level vary per stand-in ("mnist_syn" is
+//!   1-channel and easy; "imagenet_syn" is 3-channel, noisier, with more
+//!   distractor gratings — so AlexNet/MobileNet face a harder task, as in
+//!   the paper).
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetSpec {
+    pub channels: usize,
+    /// base noise std added to every pixel
+    pub noise: f32,
+    /// number of class-carrying gratings
+    pub gratings: usize,
+    /// number of class-independent distractor gratings
+    pub distractors: usize,
+    /// phase jitter amplitude (radians)
+    pub jitter: f32,
+}
+
+/// Resolve a dataset stand-in by name (the manifest's `dataset` field).
+pub fn spec(name: &str) -> DatasetSpec {
+    match name {
+        "mnist_syn" => DatasetSpec { channels: 1, noise: 0.10, gratings: 3, distractors: 1, jitter: 0.3 },
+        "cifar_syn" => DatasetSpec { channels: 3, noise: 0.18, gratings: 3, distractors: 2, jitter: 0.5 },
+        "svhn_syn" => DatasetSpec { channels: 3, noise: 0.15, gratings: 3, distractors: 2, jitter: 0.4 },
+        "imagenet_syn" => DatasetSpec { channels: 3, noise: 0.25, gratings: 4, distractors: 3, jitter: 0.7 },
+        other => panic!("unknown dataset `{other}`"),
+    }
+}
+
+/// A materialized split: images NHWC flattened, labels as f32 class ids
+/// (f32 because the AOT artifacts take labels as f32 operands).
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub images: Vec<f32>,
+    pub labels: Vec<f32>,
+}
+
+impl Split {
+    pub fn image_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Copy batch `idx` (wrapping) into caller-provided buffers.
+    pub fn fill_batch(&self, idx: usize, batch: usize, xs: &mut Vec<f32>, ys: &mut Vec<f32>) {
+        xs.clear();
+        ys.clear();
+        let il = self.image_len();
+        for i in 0..batch {
+            let s = (idx * batch + i) % self.n;
+            xs.extend_from_slice(&self.images[s * il..(s + 1) * il]);
+            ys.push(self.labels[s]);
+        }
+    }
+}
+
+/// Deterministic generator.
+///
+/// `template_seed` defines the *classes* (the grating mixtures) and MUST be
+/// shared between the train and validation splits of one task — otherwise the
+/// two splits describe different classification problems. `sample_seed`
+/// drives the per-sample nuisance (jitter, shifts, noise) and must differ
+/// between splits so validation measures generalization.
+pub fn generate(name: &str, template_seed: u64, sample_seed: u64, n: usize, hw: usize,
+                classes: usize) -> Split {
+    let sp = spec(name);
+    let mut trng = Pcg32::new(template_seed ^ 0x7e3a_91a7);
+    let mut rng = Pcg32::new(sample_seed ^ 0xda7a_5e7);
+    // class templates: per class, `gratings` (fx, fy, phase, amp, channel)
+    let mut templates = Vec::with_capacity(classes);
+    for _ in 0..classes {
+        let mut gs = Vec::with_capacity(sp.gratings);
+        for _ in 0..sp.gratings {
+            gs.push((
+                0.5 + 2.5 * trng.next_f32(),         // fx (cycles over image)
+                0.5 + 2.5 * trng.next_f32(),         // fy
+                std::f32::consts::TAU * trng.next_f32(), // phase
+                0.6 + 0.6 * trng.next_f32(),         // amplitude
+                trng.below(sp.channels),             // carrier channel
+            ));
+        }
+        templates.push(gs);
+    }
+
+    let il = hw * hw * sp.channels;
+    let mut images = vec![0.0f32; n * il];
+    let mut labels = vec![0.0f32; n];
+    let tau = std::f32::consts::TAU;
+    for i in 0..n {
+        let class = i % classes; // balanced
+        labels[i] = class as f32;
+        let img = &mut images[i * il..(i + 1) * il];
+        let dx = rng.next_f32() * 0.2 - 0.1; // spatial shift (fraction of image)
+        let dy = rng.next_f32() * 0.2 - 0.1;
+        let gain = 0.8 + 0.4 * rng.next_f32();
+        // class-carrying gratings
+        for &(fx, fy, ph, amp, ch) in &templates[class] {
+            let jit = (rng.next_f32() - 0.5) * 2.0 * sp.jitter;
+            for y in 0..hw {
+                for x in 0..hw {
+                    let u = (x as f32 / hw as f32 + dx) * fx;
+                    let v = (y as f32 / hw as f32 + dy) * fy;
+                    let val = amp * gain * (tau * (u + v) + ph + jit).sin();
+                    img[(y * hw + x) * sp.channels + ch] += val;
+                }
+            }
+        }
+        // distractors: class-independent structured noise
+        for _ in 0..sp.distractors {
+            let fx = 0.5 + 3.0 * rng.next_f32();
+            let fy = 0.5 + 3.0 * rng.next_f32();
+            let ph = tau * rng.next_f32();
+            let amp = 0.3 * rng.next_f32();
+            let ch = rng.below(sp.channels);
+            for y in 0..hw {
+                for x in 0..hw {
+                    let u = x as f32 / hw as f32 * fx;
+                    let v = y as f32 / hw as f32 * fy;
+                    img[(y * hw + x) * sp.channels + ch] += amp * (tau * (u + v) + ph).sin();
+                }
+            }
+        }
+        // pixel noise
+        for p in img.iter_mut() {
+            *p += sp.noise * rng.gaussian();
+        }
+    }
+    Split { n, h: hw, w: hw, c: sp.channels, images, labels }
+}
+
+/// Train + validation splits: SAME class templates, disjoint sample seeds.
+pub fn train_val(name: &str, seed: u64, n_train: usize, n_val: usize, hw: usize,
+                 classes: usize) -> (Split, Split) {
+    (
+        generate(name, seed, seed.wrapping_mul(2).wrapping_add(1), n_train, hw, classes),
+        generate(name, seed, seed.wrapping_mul(2).wrapping_add(2), n_val, hw, classes),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate("cifar_syn", 7, 3, 64, 16, 10);
+        let b = generate("cifar_syn", 7, 3, 64, 16, 10);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = generate("cifar_syn", 1, 1, 16, 16, 10);
+        let b = generate("cifar_syn", 1, 2, 16, 16, 10);
+        assert_ne!(a.images, b.images);
+    }
+
+    #[test]
+    fn balanced_labels() {
+        let a = generate("mnist_syn", 3, 4, 100, 16, 10);
+        for c in 0..10 {
+            let n = a.labels.iter().filter(|&&l| l == c as f32).count();
+            assert_eq!(n, 10);
+        }
+    }
+
+    #[test]
+    fn shapes() {
+        let a = generate("mnist_syn", 3, 4, 10, 16, 10);
+        assert_eq!(a.c, 1);
+        assert_eq!(a.images.len(), 10 * 16 * 16);
+        let b = generate("imagenet_syn", 3, 4, 10, 16, 10);
+        assert_eq!(b.c, 3);
+        assert_eq!(b.images.len(), 10 * 16 * 16 * 3);
+    }
+
+    #[test]
+    fn class_signal_exceeds_noise() {
+        // images of the same class (ignoring per-sample jitter) correlate more
+        // than images of different classes
+        let a = generate("mnist_syn", 11, 5, 40, 16, 10);
+        let il = a.image_len();
+        let img = |i: usize| &a.images[i * il..(i + 1) * il];
+        let corr = |x: &[f32], y: &[f32]| {
+            let n = x.len() as f32;
+            let mx = x.iter().sum::<f32>() / n;
+            let my = y.iter().sum::<f32>() / n;
+            let mut num = 0.0;
+            let mut dx = 0.0;
+            let mut dy = 0.0;
+            for (a, b) in x.iter().zip(y) {
+                num += (a - mx) * (b - my);
+                dx += (a - mx) * (a - mx);
+                dy += (b - my) * (b - my);
+            }
+            num / (dx.sqrt() * dy.sqrt() + 1e-9)
+        };
+        // samples 0,10,20,30 are class 0; 1,11 are class 1
+        let same = corr(img(0), img(10)) + corr(img(10), img(20));
+        let diff = corr(img(0), img(1)) + corr(img(10), img(11));
+        assert!(same > diff, "same {same} diff {diff}");
+    }
+
+    #[test]
+    fn batch_fill_wraps() {
+        let a = generate("mnist_syn", 3, 4, 10, 16, 10);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        a.fill_batch(3, 4, &mut xs, &mut ys); // samples 12..16 -> wraps to 2..6
+        assert_eq!(xs.len(), 4 * a.image_len());
+        assert_eq!(ys, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+}
+
+#[cfg(test)]
+mod split_tests {
+    use super::*;
+
+    #[test]
+    fn splits_share_templates_but_differ_in_samples() {
+        let (tr, va) = train_val("mnist_syn", 9, 40, 40, 16, 10);
+        assert_ne!(tr.images, va.images, "splits must not be identical");
+        // same class templates: class-0 means across splits correlate strongly
+        let il = tr.image_len();
+        let mean_img = |s: &Split, class: f32| {
+            let mut acc = vec![0.0f32; il];
+            let mut n = 0;
+            for i in 0..s.n {
+                if s.labels[i] == class {
+                    for (a, b) in acc.iter_mut().zip(&s.images[i * il..(i + 1) * il]) {
+                        *a += b;
+                    }
+                    n += 1;
+                }
+            }
+            for a in acc.iter_mut() {
+                *a /= n as f32;
+            }
+            acc
+        };
+        let corr = |x: &[f32], y: &[f32]| {
+            let n = x.len() as f32;
+            let mx = x.iter().sum::<f32>() / n;
+            let my = y.iter().sum::<f32>() / n;
+            let (mut num, mut dx, mut dy) = (0.0, 0.0, 0.0);
+            for (a, b) in x.iter().zip(y) {
+                num += (a - mx) * (b - my);
+                dx += (a - mx) * (a - mx);
+                dy += (b - my) * (b - my);
+            }
+            num / (dx.sqrt() * dy.sqrt() + 1e-9)
+        };
+        let c_same = corr(&mean_img(&tr, 0.0), &mean_img(&va, 0.0));
+        let c_cross = corr(&mean_img(&tr, 0.0), &mean_img(&va, 1.0));
+        assert!(c_same > 0.5, "class templates not shared: corr {c_same}");
+        assert!(c_same > c_cross + 0.2, "{c_same} vs {c_cross}");
+    }
+}

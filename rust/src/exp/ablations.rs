@@ -1,0 +1,102 @@
+//! Design-decision ablations the paper reports in prose:
+//! §2.5 — flexible vs restricted action space (Fig 2): flexible converges faster.
+//! §2.7 — LSTM vs FC-only agent: LSTM converges ~1.33x faster.
+//!
+//! Convergence here = episodes until the moving-average reward first reaches
+//! 95% of its final plateau (and stays there), a standard convergence proxy.
+
+use anyhow::Result;
+
+use crate::coordinator::{ActionSpace, AgentKind};
+use crate::metrics::SearchLog;
+
+use super::Ctx;
+
+/// Episodes until the 20-episode moving average of reward reaches 95% of the
+/// mean of its final quarter.
+pub fn convergence_episode(rewards: &[f64]) -> usize {
+    if rewards.is_empty() {
+        return 0;
+    }
+    let ma = SearchLog::moving_average(rewards, 20);
+    let n = ma.len();
+    let tail = &ma[n - (n / 4).max(1)..];
+    let plateau = tail.iter().sum::<f64>() / tail.len() as f64;
+    let lo = ma.iter().cloned().fold(f64::INFINITY, f64::min);
+    let threshold = lo + 0.95 * (plateau - lo);
+    ma.iter().position(|&x| x >= threshold).unwrap_or(n - 1)
+}
+
+pub fn action_space(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Ablation (paper §2.5): flexible vs restricted action space, LeNet ===");
+    let mut rows = Vec::new();
+    for space in [ActionSpace::Flexible, ActionSpace::Restricted] {
+        let mut cfg = ctx.search_cfg("lenet");
+        cfg.action_space = space;
+        cfg.patience = 0;
+        let r = ctx.search_with("lenet", cfg)?;
+        let conv = convergence_episode(&r.log.rewards());
+        let final_reward = {
+            let rw = r.log.rewards();
+            let n = rw.len();
+            rw[n - (n / 4).max(1)..].iter().sum::<f64>() / (n / 4).max(1) as f64
+        };
+        println!(
+            "{space:?}: converged at episode ~{conv}, final reward {final_reward:.3}, bits {:?}",
+            r.bits
+        );
+        rows.push((format!("{space:?}"), conv, final_reward));
+    }
+    let mut csv = String::from("action_space,convergence_episode,final_reward\n");
+    for (s, c, f) in &rows {
+        csv.push_str(&format!("{s},{c},{f:.4}\n"));
+    }
+    std::fs::write(ctx.out.join("ablation_action.csv"), csv)?;
+    println!(
+        "(paper: restricted movement converges much slower; flexible is used in ReLeQ)"
+    );
+    Ok(())
+}
+
+pub fn lstm_vs_fc(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Ablation (paper §2.7): LSTM vs FC-only agent, LeNet ===");
+    let mut convs = Vec::new();
+    for kind in [AgentKind::Lstm, AgentKind::Fc] {
+        let mut cfg = ctx.search_cfg("lenet");
+        cfg.agent_kind = kind;
+        cfg.patience = 0;
+        let r = ctx.search_with("lenet", cfg)?;
+        let conv = convergence_episode(&r.log.rewards()).max(1);
+        println!("{kind:?}: converged at episode ~{conv}, bits {:?}", r.bits);
+        convs.push(conv);
+    }
+    let ratio = convs[1] as f64 / convs[0] as f64;
+    println!(
+        "FC/LSTM convergence ratio: {ratio:.2} (paper: LSTM converges ~1.33x faster)"
+    );
+    std::fs::write(
+        ctx.out.join("ablation_lstm.csv"),
+        format!("agent,convergence_episode\nlstm,{}\nfc,{}\nratio,{ratio:.3}\n", convs[0], convs[1]),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn convergence_detects_rise_point() {
+        // flat low, then jump to plateau at index 100
+        let mut r = vec![0.0; 100];
+        r.extend(vec![1.0; 100]);
+        let c = convergence_episode(&r);
+        assert!((100..=125).contains(&c), "c = {c}");
+    }
+
+    #[test]
+    fn convergence_zero_for_flat() {
+        let r = vec![0.5; 50];
+        assert_eq!(convergence_episode(&r), 0);
+    }
+}

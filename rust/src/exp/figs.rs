@@ -1,0 +1,185 @@
+//! Fig 5 (action-probability evolution), Fig 6 (Pareto fronts), Fig 7
+//! (learning curves), Fig 10 (reward-formulation ablation).
+
+use anyhow::Result;
+
+use crate::coordinator::{EnvConfig, QuantEnv, RewardKind};
+use crate::metrics::{sparkline, SearchLog};
+use crate::pareto;
+
+use super::Ctx;
+
+/// Fig 5: evolution of the per-layer bitwidth-selection probabilities over
+/// training episodes for LeNet.
+pub fn fig5(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig 5: action-probability evolution (LeNet) ===");
+    let r = ctx.search("lenet")?;
+    let n_layers = r.bits.len();
+    let n_actions = r.final_probs[0].len();
+    // per layer: probability of the finally-chosen bitwidth across episodes
+    for l in 0..n_layers {
+        let series: Vec<f64> = r
+            .log
+            .episodes
+            .iter()
+            .map(|e| e.probs[l][(r.bits[l] - 1) as usize] as f64)
+            .collect();
+        println!(
+            "layer {l}: P(bits={}) over episodes: {}  (final {:.2})",
+            r.bits[l],
+            sparkline(&series, 50),
+            series.last().copied().unwrap_or(0.0)
+        );
+    }
+    // full probability matrix -> CSV (episode x (layer, action))
+    let mut csv = String::from("episode");
+    for l in 0..n_layers {
+        for a in 0..n_actions {
+            csv.push_str(&format!(",l{l}_b{}", a + 1));
+        }
+    }
+    csv.push('\n');
+    for e in &r.log.episodes {
+        csv.push_str(&e.episode.to_string());
+        for l in 0..n_layers {
+            for a in 0..n_actions {
+                csv.push_str(&format!(",{:.4}", e.probs[l][a]));
+            }
+        }
+        csv.push('\n');
+    }
+    std::fs::write(ctx.out.join("fig5.csv"), csv)?;
+    println!("final policy bits: {:?} -> {}", r.bits, ctx.out.join("fig5.csv").display());
+    Ok(())
+}
+
+/// Fig 6: quantization space + Pareto frontier for the four moderate nets.
+pub fn fig6(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig 6: quantization space + Pareto frontier ===");
+    for net in ctx.selected(&["simplenet", "lenet", "svhn10", "vgg11"]) {
+        let meta = ctx.manifest.network(&net)?;
+        let mut env_cfg = EnvConfig::default();
+        env_cfg.pretrain_steps = crate::config::preset(&net).env.pretrain_steps;
+        env_cfg.seed = ctx.seed;
+        let mut env = QuantEnv::new(
+            ctx.engine.clone(),
+            meta,
+            ctx.manifest.bits_max,
+            ctx.manifest.fp_bits,
+            env_cfg,
+        )?;
+        let mut ecfg = pareto::EnumConfig::default();
+        // keep the evaluation budget proportional to the ctx scale
+        ecfg.max_points = ((1200.0 * ctx.episodes_scale) as usize).max(150);
+        ecfg.seed = ctx.seed;
+        let (points, exhaustive) = pareto::enumerate(&mut env, &ecfg)?;
+        let frontier = pareto::pareto_frontier(&points);
+        // where does the (stored) ReLeQ solution sit relative to the frontier?
+        let releq = super::table2::stored_solution(ctx, &net);
+        let mut csv = String::from("state_q,state_acc,on_frontier,is_releq,bits\n");
+        for (i, p) in points.iter().enumerate() {
+            csv.push_str(&format!(
+                "{:.6},{:.6},{},{},{}\n",
+                p.state_q,
+                p.state_acc,
+                frontier.contains(&i) as u8,
+                (releq.as_ref() == Some(&p.bits)) as u8,
+                p.bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(" ")
+            ));
+        }
+        std::fs::write(ctx.out.join(format!("fig6_{net}.csv")), csv)?;
+        let f_accs: Vec<f64> = frontier.iter().map(|&i| points[i].state_acc).collect();
+        println!(
+            "{net}: {} points ({}), frontier {} points, acc range {:.2}..{:.2} -> fig6_{net}.csv",
+            points.len(),
+            if exhaustive { "exhaustive" } else { "sampled" },
+            frontier.len(),
+            f_accs.first().copied().unwrap_or(0.0),
+            f_accs.last().copied().unwrap_or(0.0),
+        );
+        if let Some(rb) = &releq {
+            if rb.len() == meta.l {
+                let sq = env.state_q(rb);
+                let sa = env.state_acc(rb)?;
+                // distance to the frontier in state_q at comparable accuracy
+                let frontier_q_at_acc = frontier
+                    .iter()
+                    .map(|&i| &points[i])
+                    .filter(|p| p.state_acc >= sa - 0.02)
+                    .map(|p| p.state_q)
+                    .fold(f64::INFINITY, f64::min);
+                println!(
+                    "  ReLeQ point: state_q {sq:.3}, state_acc {sa:.3} \
+                     (best frontier state_q at >= this accuracy: {frontier_q_at_acc:.3})"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fig 7: evolution of State-of-Relative-Accuracy / State-of-Quantization /
+/// reward as the agent learns.
+pub fn fig7(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig 7: learning-curve evolution ===");
+    for net in ctx.selected(&["simplenet", "svhn10", "mobilenet"]) {
+        let r = ctx.search(&net)?;
+        let ma = |s: &[f64]| SearchLog::moving_average(s, 20);
+        println!("{net} ({} episodes):", r.episodes_run);
+        println!("  state_acc: {}", sparkline(&ma(&r.log.state_accs()), 60));
+        println!("  state_q  : {}", sparkline(&ma(&r.log.state_qs()), 60));
+        println!("  reward   : {}", sparkline(&ma(&r.log.rewards()), 60));
+        r.log.write_csv(&ctx.out.join(format!("fig7_{net}.csv")))?;
+        // the paper's claim: the moving averages trend up (acc, reward) and
+        // down (state_q) from the first quarter to the last quarter
+        let quarter = |s: &[f64], last: bool| {
+            let n = s.len().max(4);
+            let q = n / 4;
+            let slice = if last { &s[n - q..] } else { &s[..q] };
+            slice.iter().sum::<f64>() / slice.len() as f64
+        };
+        let acc = r.log.state_accs();
+        let qs = r.log.state_qs();
+        let rw = r.log.rewards();
+        println!(
+            "  trend: acc {:.3}->{:.3}, state_q {:.3}->{:.3}, reward {:.3}->{:.3}",
+            quarter(&acc, false),
+            quarter(&acc, true),
+            quarter(&qs, false),
+            quarter(&qs, true),
+            quarter(&rw, false),
+            quarter(&rw, true)
+        );
+    }
+    Ok(())
+}
+
+/// Fig 10: three reward formulations vs State-of-Relative-Accuracy evolution.
+pub fn fig10(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig 10: reward-formulation ablation ===");
+    for net in ctx.selected(&["simplenet", "lenet", "svhn10"]) {
+        println!("{net}:");
+        let mut csv = String::from("episode,proposed,ratio,diff\n");
+        let mut series = Vec::new();
+        for kind in [RewardKind::Proposed, RewardKind::Ratio, RewardKind::Diff] {
+            let mut cfg = ctx.search_cfg(&net);
+            cfg.reward.kind = kind;
+            cfg.patience = 0; // run all episodes so the curves are comparable
+            let r = ctx.search_with(&net, cfg)?;
+            let ma = SearchLog::moving_average(&r.log.state_accs(), 20);
+            println!("  {kind:?}: {}  (final MA {:.3})", sparkline(&ma, 56),
+                     ma.last().copied().unwrap_or(0.0));
+            series.push(ma);
+        }
+        let n = series.iter().map(|s| s.len()).min().unwrap_or(0);
+        for i in 0..n {
+            csv.push_str(&format!(
+                "{i},{:.4},{:.4},{:.4}\n",
+                series[0][i], series[1][i], series[2][i]
+            ));
+        }
+        std::fs::write(ctx.out.join(format!("fig10_{net}.csv")), csv)?;
+    }
+    println!("(paper: the proposed shaping keeps State_Accuracy consistently higher)");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Fig 8 (bit-serial CPU speedup over 8-bit, per network + gmean) and
+//! Fig 9 (Stripes speedup + energy reduction over 8-bit).
+//!
+//! Uses the Table-2 solutions stored by `exp table2` when available, else the
+//! paper's published bitwidths — so these figures can be regenerated without
+//! re-running the search.
+
+use anyhow::Result;
+
+use crate::sim::{gmean, Stripes, StripesConfig, TvmCpu, TvmCpuConfig};
+
+use super::table2::stored_solution;
+use super::{Ctx, ALL_NETS};
+
+/// Paper Fig 9 reference points (speedup) quoted in §5.4.
+fn paper_fig9(net: &str) -> Option<f64> {
+    match net {
+        "mobilenet" => Some(1.2),
+        "resnet20" => Some(3.0),
+        "lenet" => Some(4.0),
+        _ => None,
+    }
+}
+
+pub fn fig8(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig 8: bit-serial CPU (TVM-style) speedup over 8-bit ===");
+    let tvm = TvmCpu::new(TvmCpuConfig::default());
+    let mut speedups = Vec::new();
+    let mut csv = String::from("network,speedup\n");
+    println!("{:<10} {:>9}  bits", "network", "speedup");
+    for net in ctx.selected(&ALL_NETS) {
+        let meta = ctx.manifest.network(&net)?;
+        let Some(bits) = stored_solution(ctx, &net) else { continue };
+        if bits.len() != meta.l {
+            continue;
+        }
+        let sp = tvm.speedup(meta, &bits);
+        println!("{:<10} {:>8.2}x  {:?}", net, sp, bits);
+        csv.push_str(&format!("{net},{sp:.4}\n"));
+        speedups.push(sp);
+    }
+    let g = gmean(&speedups);
+    println!("{:<10} {:>8.2}x  (paper reports 2.2x average)", "gmean", g);
+    csv.push_str(&format!("gmean,{g:.4}\n"));
+    std::fs::write(ctx.out.join("fig8.csv"), csv)?;
+    println!("-> {}", ctx.out.join("fig8.csv").display());
+    Ok(())
+}
+
+pub fn fig9(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig 9: Stripes accelerator speedup + energy reduction over 8-bit ===");
+    let stripes = Stripes::new(StripesConfig::default());
+    let mut sps = Vec::new();
+    let mut ens = Vec::new();
+    let mut csv = String::from("network,speedup,energy_reduction,paper_speedup\n");
+    println!("{:<10} {:>9} {:>9} {:>13}", "network", "speedup", "energy", "paper speedup");
+    for net in ctx.selected(&ALL_NETS) {
+        let meta = ctx.manifest.network(&net)?;
+        let Some(bits) = stored_solution(ctx, &net) else { continue };
+        if bits.len() != meta.l {
+            continue;
+        }
+        let (sp, en) = stripes.speedup_energy(meta, &bits);
+        let pref = paper_fig9(&net)
+            .map(|p| format!("{p:.1}x"))
+            .unwrap_or_else(|| "-".into());
+        println!("{:<10} {:>8.2}x {:>8.2}x {:>13}", net, sp, en, pref);
+        csv.push_str(&format!(
+            "{net},{sp:.4},{en:.4},{}\n",
+            paper_fig9(&net).map(|p| p.to_string()).unwrap_or_default()
+        ));
+        sps.push(sp);
+        ens.push(en);
+    }
+    println!(
+        "{:<10} {:>8.2}x {:>8.2}x  (paper reports 2.0x speedup, 2.7x energy)",
+        "gmean",
+        gmean(&sps),
+        gmean(&ens)
+    );
+    csv.push_str(&format!("gmean,{:.4},{:.4},\n", gmean(&sps), gmean(&ens)));
+    std::fs::write(ctx.out.join("fig9.csv"), csv)?;
+    println!("-> {}", ctx.out.join("fig9.csv").display());
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §5).
+//!
+//! Every experiment prints the same rows/series the paper reports and writes
+//! machine-readable results under `results/`. Shape-level agreement (who
+//! wins, by roughly what factor) is the reproduction target — the substrate
+//! is a simulator, not the authors' testbed (DESIGN.md §6).
+
+pub mod ablations;
+pub mod figs;
+pub mod hw;
+pub mod table2;
+pub mod table45;
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config;
+use crate::coordinator::{SearchConfig, SearchResult, Searcher};
+use crate::runtime::{Engine, Manifest};
+use crate::util::cli::Args;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub manifest: Manifest,
+    pub engine: Rc<Engine>,
+    pub out: PathBuf,
+    /// scale factor on episode counts (`--fast` = 0.25, `--episodes-scale X`)
+    pub episodes_scale: f64,
+    /// network filter (`--nets a,b,c`)
+    pub nets: Option<Vec<String>>,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(args: &Args) -> Result<Ctx> {
+        let (manifest, engine) = crate::launcher::bringup()?;
+        let out = PathBuf::from(args.str_of("out", "results"));
+        std::fs::create_dir_all(&out)?;
+        let mut episodes_scale = args.f64_of("episodes-scale", 1.0);
+        if args.has("fast") {
+            episodes_scale *= 0.25;
+        }
+        let nets = args
+            .opt_str("nets")
+            .map(|s| s.split(',').map(|t| t.trim().to_string()).collect());
+        Ok(Ctx { manifest, engine, out, episodes_scale, nets, seed: args.u64_of("seed", 23) })
+    }
+
+    pub fn selected(&self, all: &[&str]) -> Vec<String> {
+        match &self.nets {
+            Some(list) => all
+                .iter()
+                .filter(|n| list.iter().any(|x| x == *n))
+                .map(|s| s.to_string())
+                .collect(),
+            None => all.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Preset config for a network with the ctx's scaling + seed applied.
+    pub fn search_cfg(&self, net: &str) -> SearchConfig {
+        let mut cfg = config::preset(net);
+        cfg.episodes = ((cfg.episodes as f64 * self.episodes_scale).round() as usize).max(16);
+        cfg.seed = self.seed;
+        cfg
+    }
+
+    /// Run one search with an explicit config.
+    pub fn search_with(&self, net: &str, cfg: SearchConfig) -> Result<SearchResult> {
+        let meta = self.manifest.network(net)?;
+        let mut searcher = Searcher::new(self.engine.clone(), &self.manifest, meta, cfg)?;
+        searcher.run()
+    }
+
+    /// Run one search with the preset config.
+    pub fn search(&self, net: &str) -> Result<SearchResult> {
+        self.search_with(net, self.search_cfg(net))
+    }
+}
+
+/// Dispatch `releq exp <id>`.
+pub fn run(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let ctx = Ctx::new(args)?;
+    let t0 = std::time::Instant::now();
+    match which {
+        "table2" => table2::run(&ctx)?,
+        "table4" => table45::table4(&ctx)?,
+        "table5" => table45::table5(&ctx)?,
+        "fig5" => figs::fig5(&ctx)?,
+        "fig6" => figs::fig6(&ctx)?,
+        "fig7" => figs::fig7(&ctx)?,
+        "fig8" => hw::fig8(&ctx)?,
+        "fig9" => hw::fig9(&ctx)?,
+        "fig10" => figs::fig10(&ctx)?,
+        "ablation-action" => ablations::action_space(&ctx)?,
+        "ablation-lstm" => ablations::lstm_vs_fc(&ctx)?,
+        "all" => {
+            table2::run(&ctx)?;
+            table45::table4(&ctx)?;
+            table45::table5(&ctx)?;
+            figs::fig5(&ctx)?;
+            figs::fig6(&ctx)?;
+            figs::fig7(&ctx)?;
+            hw::fig8(&ctx)?;
+            hw::fig9(&ctx)?;
+            figs::fig10(&ctx)?;
+            ablations::action_space(&ctx)?;
+            ablations::lstm_vs_fc(&ctx)?;
+        }
+        other => anyhow::bail!(
+            "unknown experiment `{other}` \
+             (table2|table4|table5|fig5|fig6|fig7|fig8|fig9|fig10|ablation-action|ablation-lstm|all)"
+        ),
+    }
+    eprintln!("[exp {which}] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// All seven benchmark networks, in Table 2 order.
+pub const ALL_NETS: [&str; 7] =
+    ["alexnet", "simplenet", "lenet", "mobilenet", "resnet20", "svhn10", "vgg11"];

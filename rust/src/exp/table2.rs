@@ -1,0 +1,78 @@
+//! Table 2: per-network quantization bitwidths found by ReLeQ, average
+//! bitwidth, and accuracy loss after the final long retrain.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use super::{Ctx, ALL_NETS};
+
+/// Paper's Table 2 rows for side-by-side comparison (avg bitwidth, acc loss %).
+fn paper_row(net: &str) -> (f64, f64) {
+    match net {
+        "alexnet" => (5.0, 0.08),
+        "simplenet" => (5.0, 0.30),
+        "lenet" => (2.25, 0.00),
+        "mobilenet" => (6.43, 0.26),
+        "resnet20" => (2.81, 0.12),
+        "svhn10" => (4.80, 0.00),
+        "vgg11" => (6.44, 0.17),
+        _ => (f64::NAN, f64::NAN),
+    }
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Table 2: ReLeQ deep-quantization solutions ===");
+    println!(
+        "{:<10} {:>8} {:>12} {:>12} {:>10} {:>12}  bitwidths",
+        "network", "episodes", "avg bits", "paper avg", "acc loss%", "paper loss%"
+    );
+    let mut csv = String::from("network,episodes,avg_bits,paper_avg_bits,acc_loss_pct,paper_loss_pct,bits\n");
+    for net in ctx.selected(&ALL_NETS) {
+        let r = ctx.search(&net)?;
+        let (pavg, ploss) = paper_row(&net);
+        println!(
+            "{:<10} {:>8} {:>12.2} {:>12.2} {:>10.2} {:>12.2}  {:?}",
+            net, r.episodes_run, r.avg_bits, pavg, r.acc_loss_pct, ploss, r.bits
+        );
+        csv.push_str(&format!(
+            "{},{},{:.3},{:.3},{:.3},{:.3},{}\n",
+            net,
+            r.episodes_run,
+            r.avg_bits,
+            pavg,
+            r.acc_loss_pct,
+            ploss,
+            r.bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(" ")
+        ));
+        // persist the solution for the hardware experiments (fig8/fig9/table4)
+        let sol = ctx.out.join(format!("solution_{net}.txt"));
+        let mut f = std::fs::File::create(sol)?;
+        writeln!(
+            f,
+            "{}",
+            r.bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",")
+        )?;
+        r.log.write_csv(&ctx.out.join(format!("search_{net}.csv")))?;
+        r.log.write_json(&ctx.out.join(format!("search_{net}.json")))?;
+    }
+    std::fs::write(ctx.out.join("table2.csv"), csv)?;
+    println!("-> {}", ctx.out.join("table2.csv").display());
+    Ok(())
+}
+
+/// Load a previously saved Table-2 solution, falling back to the paper's.
+pub fn stored_solution(ctx: &Ctx, net: &str) -> Option<Vec<u32>> {
+    let path = ctx.out.join(format!("solution_{net}.txt"));
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        let bits: Vec<u32> = text
+            .trim()
+            .split(',')
+            .filter_map(|t| t.parse().ok())
+            .collect();
+        if !bits.is_empty() {
+            return Some(bits);
+        }
+    }
+    crate::baselines::paper_releq_solution(net)
+}

@@ -1,0 +1,121 @@
+//! Table 4 (ReLeQ vs ADMM on TVM-CPU and Stripes) and Table 5 (PPO clipping
+//! parameter sensitivity).
+
+use anyhow::Result;
+
+use crate::baselines::{paper_solution, AdmmConfig, AdmmSelector};
+use crate::coordinator::{EnvConfig, QuantEnv};
+use crate::sim::{Stripes, StripesConfig, TvmCpu, TvmCpuConfig};
+
+use super::table2::stored_solution;
+use super::Ctx;
+
+pub fn table4(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Table 4: ReLeQ vs ADMM (speedup / energy on simulators) ===");
+    println!(
+        "{:<9} {:<22} {:<22} {:>9} {:>11} {:>11}",
+        "network", "releq bits", "admm bits", "tvm", "stripes", "energy"
+    );
+    let stripes = Stripes::new(StripesConfig::default());
+    let tvm = TvmCpu::new(TvmCpuConfig::default());
+    let mut csv =
+        String::from("network,releq_bits,admm_bits,tvm_speedup,stripes_speedup,energy_improvement,paper_tvm,paper_stripes,paper_energy\n");
+    // the paper's ADMM comparison exists for AlexNet and LeNet only
+    for (net, paper_tvm, paper_str, paper_en) in
+        [("alexnet", 1.20, 1.22, 1.25), ("lenet", 1.42, 1.86, 1.87)]
+    {
+        if !ctx.selected(&[net]).contains(&net.to_string()) {
+            continue;
+        }
+        let meta = ctx.manifest.network(net)?;
+        let releq_bits = stored_solution(ctx, net).unwrap();
+        // prefer the paper's published ADMM vector; our own selector is used
+        // when it is missing (and validated against it in tests)
+        let admm_bits = match paper_solution(net) {
+            Some(b) => b,
+            None => {
+                let mut env_cfg = EnvConfig::default();
+                env_cfg.pretrain_steps = crate::config::preset(net).env.pretrain_steps;
+                let env = QuantEnv::new(
+                    ctx.engine.clone(),
+                    meta,
+                    ctx.manifest.bits_max,
+                    ctx.manifest.fp_bits,
+                    env_cfg,
+                )?;
+                AdmmSelector::new(AdmmConfig::default()).select(meta, &env.pretrained, 5.0)
+            }
+        };
+        let (sp_r, en_r) = stripes.speedup_energy(meta, &releq_bits);
+        let (sp_a, en_a) = stripes.speedup_energy(meta, &admm_bits);
+        let tvm_ratio = tvm.speedup(meta, &releq_bits) / tvm.speedup(meta, &admm_bits);
+        let stripes_ratio = sp_r / sp_a;
+        let energy_ratio = en_r / en_a;
+        println!(
+            "{:<9} {:<22} {:<22} {:>8.2}x {:>10.2}x {:>10.2}x",
+            net,
+            format!("{releq_bits:?}"),
+            format!("{admm_bits:?}"),
+            tvm_ratio,
+            stripes_ratio,
+            energy_ratio
+        );
+        println!(
+            "{:<9} {:<22} {:<22} {:>8.2}x {:>10.2}x {:>10.2}x   (paper)",
+            "", "", "", paper_tvm, paper_str, paper_en
+        );
+        csv.push_str(&format!(
+            "{net},{},{},{tvm_ratio:.4},{stripes_ratio:.4},{energy_ratio:.4},{paper_tvm},{paper_str},{paper_en}\n",
+            releq_bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(" "),
+            admm_bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(" "),
+        ));
+    }
+    std::fs::write(ctx.out.join("table4.csv"), csv)?;
+    println!("-> {}", ctx.out.join("table4.csv").display());
+    Ok(())
+}
+
+pub fn table5(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Table 5: PPO clipping-parameter sensitivity (avg normalized reward) ===");
+    let nets = ctx.selected(&["lenet", "simplenet", "svhn10"]);
+    let epsilons = [0.1f32, 0.2, 0.3];
+    let mut rows: Vec<(f32, Vec<f64>)> = Vec::new();
+    for &eps in &epsilons {
+        let mut vals = Vec::new();
+        for net in &nets {
+            let mut cfg = ctx.search_cfg(net);
+            cfg.ppo.clip_eps = eps;
+            // Table 5 measures reward during learning, not the final solution:
+            // average the per-episode reward over the whole run, normalized by
+            // episode length.
+            let r = ctx.search_with(net, cfg)?;
+            let meta = ctx.manifest.network(net)?;
+            let avg_norm_reward = r.log.rewards().iter().sum::<f64>()
+                / (r.log.episodes.len().max(1) as f64)
+                / meta.l as f64;
+            vals.push(avg_norm_reward);
+        }
+        rows.push((eps, vals));
+    }
+    print!("{:<8}", "eps");
+    for net in &nets {
+        print!(" {net:>10}");
+    }
+    println!();
+    let mut csv = format!("eps,{}\n", nets.join(","));
+    for (eps, vals) in &rows {
+        print!("{eps:<8}");
+        let mut line = format!("{eps}");
+        for v in vals {
+            print!(" {v:>10.3}");
+            line.push_str(&format!(",{v:.4}"));
+        }
+        println!();
+        csv.push_str(&line);
+        csv.push('\n');
+    }
+    println!("(paper: eps=0.1 gives the highest average reward on all three)");
+    std::fs::write(ctx.out.join("table5.csv"), csv)?;
+    println!("-> {}", ctx.out.join("table5.csv").display());
+    Ok(())
+}

@@ -1,0 +1,214 @@
+//! CLI subcommand implementations (the "launcher" in the system prompt's
+//! sense: config resolution -> engine bring-up -> run -> report).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::baselines::{paper_solution, AdmmConfig, AdmmSelector};
+use crate::config;
+use crate::coordinator::{EnvConfig, QuantEnv, SearchResult, Searcher};
+use crate::metrics::sparkline;
+use crate::pareto;
+use crate::runtime::{Engine, Manifest};
+use crate::sim::{Stripes, StripesConfig, TvmCpu, TvmCpuConfig};
+use crate::util::cli::Args;
+
+/// Shared bring-up: manifest + engine.
+pub fn bringup() -> Result<(Manifest, Rc<Engine>)> {
+    let dir = crate::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Rc::new(Engine::new(dir)?);
+    Ok((manifest, engine))
+}
+
+fn out_dir(args: &Args) -> Result<PathBuf> {
+    let dir = PathBuf::from(args.str_of("out", "results"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+fn parse_bits(s: &str) -> Vec<u32> {
+    s.split(',')
+        .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("bad bits `{t}`")))
+        .collect()
+}
+
+pub fn cmd_stats(_args: &Args) -> Result<()> {
+    let (manifest, _engine) = bringup()?;
+    println!("artifacts: {}", manifest.dir.display());
+    println!(
+        "agent: D={} A={} hidden={} P_lstm={} P_fc={}",
+        manifest.agent.state_dim,
+        manifest.agent.n_actions,
+        manifest.agent.hidden,
+        manifest.agent.p_lstm,
+        manifest.agent.p_fc
+    );
+    println!("{:<10} {:>3} {:>8} {:>12} {:>12} dataset", "network", "L", "P", "weights", "MACs");
+    for net in &manifest.networks {
+        println!(
+            "{:<10} {:>3} {:>8} {:>12} {:>12} {}",
+            net.name,
+            net.l,
+            net.p,
+            net.total_weights(),
+            net.total_macs(),
+            net.dataset
+        );
+    }
+    Ok(())
+}
+
+pub fn cmd_pretrain(args: &Args) -> Result<()> {
+    let net_name = args.str_of("net", "lenet");
+    let (manifest, engine) = bringup()?;
+    let net = manifest.network(&net_name)?;
+    let mut env_cfg = EnvConfig::default();
+    env_cfg.pretrain_steps = args.usize_of("steps", config::preset(&net_name).env.pretrain_steps);
+    env_cfg.lr = args.f64_of("lr", env_cfg.lr as f64) as f32;
+    env_cfg.seed = args.u64_of("seed", env_cfg.seed);
+    let t0 = std::time::Instant::now();
+    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
+    println!(
+        "{net_name}: pretrained {} steps in {:.1}s, full-precision val accuracy {:.4}",
+        env.cfg.pretrain_steps,
+        t0.elapsed().as_secs_f64(),
+        env.acc_fullp
+    );
+    // quantization-sensitivity sweep: uniform k for k in 8..=2
+    println!("uniform-bitwidth sensitivity (short retrain {} steps):", env.cfg.retrain_steps);
+    for b in (2..=8).rev() {
+        let bits = vec![b; net.l];
+        let acc = env.accuracy(&bits)?;
+        println!("  {b} bits: acc {:.4} (state_acc {:.3}, state_q {:.3})",
+                 acc, acc / env.acc_fullp, env.state_q(&bits));
+    }
+    Ok(())
+}
+
+pub fn report_search(r: &SearchResult, verbose: bool) {
+    println!("network             : {}", r.net);
+    println!("episodes run        : {}", r.episodes_run);
+    if verbose {
+        println!("reward curve        : {}", sparkline(&r.log.rewards(), 60));
+        println!("state-of-acc curve  : {}", sparkline(&r.log.state_accs(), 60));
+        println!("state-of-quant curve: {}", sparkline(&r.log.state_qs(), 60));
+    }
+    println!("bitwidths           : {:?}", r.bits);
+    println!("average bitwidth    : {:.2}", r.avg_bits);
+    println!("state_q             : {:.3}", r.state_q);
+    println!(
+        "accuracy            : fp {:.4} -> quantized {:.4} (loss {:.2}%)",
+        r.acc_fullp, r.acc_final, r.acc_loss_pct
+    );
+}
+
+pub fn cmd_search(args: &Args) -> Result<()> {
+    let net_name = args.str_of("net", "lenet");
+    let (manifest, engine) = bringup()?;
+    let net = manifest.network(&net_name)?;
+    let cfg = config::resolve(&net_name, args)?;
+    let t0 = std::time::Instant::now();
+    let mut searcher = Searcher::new(engine.clone(), &manifest, net, cfg)?;
+    println!("{net_name}: pretrained, Acc_FullP = {:.4}; searching...", searcher.env.acc_fullp);
+    let result = searcher.run()?;
+    report_search(&result, true);
+    println!("wall time           : {:.1}s", t0.elapsed().as_secs_f64());
+    println!(
+        "env: {} evals, {} cache hits, {} train execs, {} eval execs",
+        searcher.env.stats.evals,
+        searcher.env.stats.cache_hits,
+        searcher.env.stats.train_execs,
+        searcher.env.stats.eval_execs
+    );
+    let dir = out_dir(args)?;
+    result.log.write_csv(&dir.join(format!("search_{net_name}.csv")))?;
+    result.log.write_json(&dir.join(format!("search_{net_name}.json")))?;
+    println!("logs: {}/search_{net_name}.{{csv,json}}", dir.display());
+    Ok(())
+}
+
+pub fn cmd_pareto(args: &Args) -> Result<()> {
+    let net_name = args.str_of("net", "lenet");
+    let (manifest, engine) = bringup()?;
+    let net = manifest.network(&net_name)?;
+    let mut env_cfg = EnvConfig::default();
+    env_cfg.pretrain_steps = config::preset(&net_name).env.pretrain_steps;
+    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
+    let mut ecfg = pareto::EnumConfig::default();
+    ecfg.max_points = args.usize_of("samples", ecfg.max_points);
+    ecfg.seed = args.u64_of("seed", ecfg.seed);
+    let space = pareto::space_size(&ecfg, net.l);
+    println!("{net_name}: design space {space} points; evaluating up to {}", ecfg.max_points);
+    let t0 = std::time::Instant::now();
+    let (points, exhaustive) = pareto::enumerate(&mut env, &ecfg)?;
+    let frontier = pareto::pareto_frontier(&points);
+    println!(
+        "evaluated {} points ({}) in {:.1}s; frontier has {} points:",
+        points.len(),
+        if exhaustive { "exhaustive" } else { "sampled" },
+        t0.elapsed().as_secs_f64(),
+        frontier.len()
+    );
+    println!("{:>8} {:>9} bits", "state_q", "state_acc");
+    for &i in &frontier {
+        println!("{:>8.3} {:>9.3} {:?}", points[i].state_q, points[i].state_acc, points[i].bits);
+    }
+    let dir = out_dir(args)?;
+    let path = dir.join(format!("pareto_{net_name}.csv"));
+    let mut csv = String::from("state_q,state_acc,on_frontier,bits\n");
+    for (i, p) in points.iter().enumerate() {
+        let on = frontier.contains(&i);
+        csv.push_str(&format!(
+            "{:.6},{:.6},{},{}\n",
+            p.state_q,
+            p.state_acc,
+            on as u8,
+            p.bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(" ")
+        ));
+    }
+    std::fs::write(&path, csv)?;
+    println!("points: {}", path.display());
+    Ok(())
+}
+
+pub fn cmd_hw_eval(args: &Args) -> Result<()> {
+    let net_name = args.str_of("net", "lenet");
+    let (manifest, _engine) = bringup()?;
+    let net = manifest.network(&net_name)?;
+    let bits = match args.opt_str("bits") {
+        Some(s) => parse_bits(&s),
+        None => crate::baselines::paper_releq_solution(&net_name)
+            .with_context(|| format!("no --bits and no stored solution for {net_name}"))?,
+    };
+    anyhow::ensure!(bits.len() == net.l, "need {} bitwidths, got {}", net.l, bits.len());
+    let stripes = Stripes::new(StripesConfig::default());
+    let (sp, en) = stripes.speedup_energy(net, &bits);
+    let tvm = TvmCpu::new(TvmCpuConfig::default());
+    let cpu_sp = tvm.speedup(net, &bits);
+    println!("{net_name} bits {:?}", bits);
+    println!("Stripes  : {sp:.2}x speedup, {en:.2}x energy reduction (vs 8-bit)");
+    println!("CPU (bit-serial): {cpu_sp:.2}x speedup (vs 8-bit)");
+    Ok(())
+}
+
+pub fn cmd_admm(args: &Args) -> Result<()> {
+    let net_name = args.str_of("net", "lenet");
+    let (manifest, engine) = bringup()?;
+    let net = manifest.network(&net_name)?;
+    let mut env_cfg = EnvConfig::default();
+    env_cfg.pretrain_steps = config::preset(&net_name).env.pretrain_steps;
+    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
+    let target = args.f64_of("target-bits", 5.0);
+    let sel = AdmmSelector::new(AdmmConfig::default());
+    let bits = sel.select(net, &env.pretrained, target);
+    let acc = env.retrain_and_eval(&bits, env.cfg.long_retrain_steps)?;
+    println!("{net_name}: ADMM-selected bits {:?} (target avg {target})", bits);
+    println!("accuracy {:.4} (fp {:.4}), state_q {:.3}", acc, env.acc_fullp, env.state_q(&bits));
+    if let Some(paper) = paper_solution(&net_name) {
+        println!("paper's published ADMM bits: {:?}", paper);
+    }
+    Ok(())
+}

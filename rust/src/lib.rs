@@ -1,0 +1,43 @@
+//! # ReLeQ — RL-driven deep quantization of neural networks
+//!
+//! Rust + JAX + Pallas reproduction of *ReLeQ: A Reinforcement Learning
+//! Approach for Deep Quantization of Neural Networks* (Elthakeb et al., 2018).
+//!
+//! Three-layer architecture (DESIGN.md):
+//!
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): fused
+//!   fake-quantize + matmul, AOT-lowered.
+//! * **Layer 2** — JAX models (`python/compile/`): the seven benchmark DNNs'
+//!   quantized train/eval steps and the PPO agent, AOT-lowered to HLO text.
+//! * **Layer 3** — this crate: the ReLeQ coordinator (environment, reward
+//!   shaping, PPO driver, search loop), the hardware simulators (Stripes,
+//!   bit-serial CPU), the ADMM baseline, the Pareto enumerator, and the
+//!   experiment harness regenerating every table/figure of the paper.
+//!
+//! Python never runs on the search path: `make artifacts` lowers everything
+//! once, and this crate loads and executes the artifacts via PJRT.
+
+pub mod baselines;
+pub mod exp;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod launcher;
+pub mod metrics;
+pub mod pareto;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Resolve the artifacts directory: `$RELEQ_ARTIFACTS` if set, else
+/// `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("RELEQ_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,53 @@
+//! ReLeQ CLI launcher.
+//!
+//! Subcommands (see README):
+//!   search       run the ReLeQ search on one network
+//!   pretrain     pretrain a network and report the full-precision accuracy
+//!   pareto       enumerate the quantization space + Pareto frontier (Fig 6)
+//!   hw-eval      run Stripes + bit-serial CPU simulators on a solution
+//!   admm         run the ADMM baseline bitwidth selection
+//!   exp <id>     regenerate a paper table/figure (table2|table4|table5|fig5..fig10|ablation-*)
+//!   stats        dump manifest / artifact info
+
+use anyhow::Result;
+use releq::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args());
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        "stats" => releq::launcher::cmd_stats(&args),
+        "pretrain" => releq::launcher::cmd_pretrain(&args),
+        "search" => releq::launcher::cmd_search(&args),
+        "pareto" => releq::launcher::cmd_pareto(&args),
+        "hw-eval" => releq::launcher::cmd_hw_eval(&args),
+        "admm" => releq::launcher::cmd_admm(&args),
+        "exp" => releq::exp::run(&args),
+        other => {
+            eprintln!("unknown subcommand `{other}`\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "releq — RL-driven deep quantization (paper reproduction)\n\
+         \n\
+         usage: releq <subcommand> [--flags]\n\
+         \n\
+         subcommands:\n\
+         \x20 search    --net <name> [--episodes N] [--seed S] [--reward proposed|ratio|diff]\n\
+         \x20           [--agent lstm|fc] [--action-space flexible|restricted] [--out dir]\n\
+         \x20 pretrain  --net <name> [--steps N] [--lr F] [--verbose]\n\
+         \x20 pareto    --net <name> [--samples N] [--out dir]\n\
+         \x20 hw-eval   --net <name> --bits 8,4,4,8\n\
+         \x20 admm      --net <name> [--target-bits F]\n\
+         \x20 exp       <table2|table4|table5|fig5|fig6|fig7|fig8|fig9|fig10|ablation-action|ablation-lstm|all>\n\
+         \x20 stats\n"
+    );
+}

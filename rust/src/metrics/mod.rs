@@ -1,0 +1,181 @@
+//! Search metrics: per-episode logs, moving averages, CSV/JSON emitters.
+//!
+//! Everything the experiment harness needs to regenerate the paper's learning
+//! curves (Fig 5, Fig 7, Fig 10) is recorded here during a search run.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// One episode's record.
+#[derive(Debug, Clone)]
+pub struct EpisodeLog {
+    pub episode: usize,
+    pub reward: f64,
+    pub state_acc: f64,
+    pub state_q: f64,
+    pub bits: Vec<u32>,
+    /// per-layer action probability vectors at this episode (Fig 5)
+    pub probs: Vec<Vec<f32>>,
+}
+
+#[derive(Debug, Default)]
+pub struct SearchLog {
+    pub episodes: Vec<EpisodeLog>,
+}
+
+impl SearchLog {
+    pub fn push(&mut self, e: EpisodeLog) {
+        self.episodes.push(e);
+    }
+
+    /// Moving average of a per-episode series.
+    pub fn moving_average(series: &[f64], window: usize) -> Vec<f64> {
+        let w = window.max(1);
+        let mut out = Vec::with_capacity(series.len());
+        let mut sum = 0.0;
+        for (i, &x) in series.iter().enumerate() {
+            sum += x;
+            if i >= w {
+                sum -= series[i - w];
+            }
+            out.push(sum / (i.min(w - 1) + 1) as f64);
+        }
+        out
+    }
+
+    pub fn rewards(&self) -> Vec<f64> {
+        self.episodes.iter().map(|e| e.reward).collect()
+    }
+
+    pub fn state_accs(&self) -> Vec<f64> {
+        self.episodes.iter().map(|e| e.state_acc).collect()
+    }
+
+    pub fn state_qs(&self) -> Vec<f64> {
+        self.episodes.iter().map(|e| e.state_q).collect()
+    }
+
+    /// CSV: episode, reward, state_acc, state_q, bits...
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "episode,reward,state_acc,state_q,bits")?;
+        for e in &self.episodes {
+            let bits = e
+                .bits
+                .iter()
+                .map(|b| b.to_string())
+                .collect::<Vec<_>>()
+                .join(" ");
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{}",
+                e.episode, e.reward, e.state_acc, e.state_q, bits
+            )?;
+        }
+        Ok(())
+    }
+
+    /// JSON dump including per-layer probability evolution (Fig 5 data).
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        let eps: Vec<Json> = self
+            .episodes
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("episode", Json::Num(e.episode as f64)),
+                    ("reward", Json::Num(e.reward)),
+                    ("state_acc", Json::Num(e.state_acc)),
+                    ("state_q", Json::Num(e.state_q)),
+                    ("bits", Json::arr_u32(&e.bits)),
+                    (
+                        "probs",
+                        Json::Arr(
+                            e.probs
+                                .iter()
+                                .map(|p| {
+                                    Json::arr_f64(
+                                        &p.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        std::fs::write(path, Json::Arr(eps).dump())?;
+        Ok(())
+    }
+}
+
+/// Render an ASCII sparkline of a series (terminal "figures").
+pub fn sparkline(series: &[f64], width: usize) -> String {
+    if series.is_empty() {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = series.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = series.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let w = width.min(series.len()).max(1);
+    let mut s = String::new();
+    for j in 0..w {
+        // endpoint-inclusive resampling so the last char reflects the last value
+        let i = if w == 1 { 0 } else { j * (series.len() - 1) / (w - 1) };
+        let v = series[i];
+        let idx = (((v - lo) / span) * 7.0).round() as usize;
+        s.push(BARS[idx.min(7)]);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moving_average_flat() {
+        let s = vec![2.0; 10];
+        assert_eq!(SearchLog::moving_average(&s, 3), vec![2.0; 10]);
+    }
+
+    #[test]
+    fn moving_average_window() {
+        let s = vec![0.0, 1.0, 2.0, 3.0];
+        let ma = SearchLog::moving_average(&s, 2);
+        assert_eq!(ma, vec![0.0, 0.5, 1.5, 2.5]);
+    }
+
+    #[test]
+    fn csv_roundtrip_lines() {
+        let mut log = SearchLog::default();
+        log.push(EpisodeLog {
+            episode: 0,
+            reward: 0.5,
+            state_acc: 0.9,
+            state_q: 0.4,
+            bits: vec![8, 2],
+            probs: vec![],
+        });
+        let dir = std::env::temp_dir().join("releq_test_metrics");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("log.csv");
+        log.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().nth(1).unwrap().starts_with("0,0.5"));
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        let sp = sparkline(&s, 8);
+        assert_eq!(sp.chars().count(), 8);
+        assert!(sp.starts_with('▁'));
+        assert!(sp.ends_with('█'));
+    }
+}

@@ -1,0 +1,180 @@
+//! Quantization design-space enumeration + Pareto analysis (paper §5.2,
+//! Fig 6).
+//!
+//! Each point is one bitwidth assignment; axes are State-of-Quantization
+//! (x, lower = cheaper) and relative accuracy (y, higher = better). For small
+//! networks the space is enumerated exhaustively (LeNet: 7^4 = 2401 points,
+//! as the paper did); for larger ones a seeded uniform sample is drawn and
+//! the limitation is reported (the paper itself calls full enumeration
+//! infeasible beyond moderate sizes).
+
+use anyhow::Result;
+
+use crate::coordinator::QuantEnv;
+use crate::util::rng::Pcg32;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub bits: Vec<u32>,
+    pub state_q: f64,
+    pub state_acc: f64,
+}
+
+/// Indices of the Pareto-optimal points (maximize acc, minimize state_q),
+/// sorted by increasing state_q.
+pub fn pareto_frontier(points: &[Point]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .state_q
+            .partial_cmp(&points[b].state_q)
+            .unwrap()
+            .then(points[b].state_acc.partial_cmp(&points[a].state_acc).unwrap())
+    });
+    let mut frontier = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for &i in &idx {
+        if points[i].state_acc > best_acc {
+            frontier.push(i);
+            best_acc = points[i].state_acc;
+        }
+    }
+    frontier
+}
+
+/// Enumeration plan for one network.
+#[derive(Debug, Clone)]
+pub struct EnumConfig {
+    pub min_bits: u32,
+    pub max_bits: u32,
+    /// point budget; exhaustive when the full space fits, else seeded sampling
+    pub max_points: usize,
+    pub seed: u64,
+}
+
+impl Default for EnumConfig {
+    fn default() -> Self {
+        EnumConfig { min_bits: 2, max_bits: 8, max_points: 2500, seed: 5 }
+    }
+}
+
+/// Number of assignments in the full space: (max-min+1)^L (saturating).
+pub fn space_size(cfg: &EnumConfig, l: usize) -> u128 {
+    let base = (cfg.max_bits - cfg.min_bits + 1) as u128;
+    let mut n: u128 = 1;
+    for _ in 0..l {
+        n = n.saturating_mul(base);
+    }
+    n
+}
+
+/// Generate the bitwidth assignments to evaluate (exhaustive or sampled).
+pub fn assignments(cfg: &EnumConfig, l: usize) -> (Vec<Vec<u32>>, bool) {
+    let total = space_size(cfg, l);
+    let exhaustive = total <= cfg.max_points as u128;
+    if exhaustive {
+        let base = cfg.max_bits - cfg.min_bits + 1;
+        let mut out = Vec::with_capacity(total as usize);
+        let mut cur = vec![cfg.min_bits; l];
+        loop {
+            out.push(cur.clone());
+            // odometer increment
+            let mut i = 0;
+            loop {
+                if i == l {
+                    return (out, true);
+                }
+                cur[i] += 1;
+                if cur[i] < cfg.min_bits + base {
+                    break;
+                }
+                cur[i] = cfg.min_bits;
+                i += 1;
+            }
+        }
+    }
+    let mut rng = Pcg32::new(cfg.seed);
+    let span = (cfg.max_bits - cfg.min_bits + 1) as usize;
+    let mut out = Vec::with_capacity(cfg.max_points);
+    // include the uniform corners so the frontier endpoints are present
+    for b in cfg.min_bits..=cfg.max_bits {
+        out.push(vec![b; l]);
+    }
+    while out.len() < cfg.max_points {
+        out.push((0..l).map(|_| cfg.min_bits + rng.below(span) as u32).collect());
+    }
+    (out, false)
+}
+
+/// Evaluate the space through the environment (short-retrain accuracy).
+/// Returns (points, exhaustive?).
+pub fn enumerate(env: &mut QuantEnv, cfg: &EnumConfig) -> Result<(Vec<Point>, bool)> {
+    let (assigns, exhaustive) = assignments(cfg, env.net.l);
+    let mut points = Vec::with_capacity(assigns.len());
+    for bits in assigns {
+        let state_acc = env.state_acc(&bits)?;
+        points.push(Point { state_q: env.state_q(&bits), state_acc, bits });
+    }
+    Ok((points, exhaustive))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(q: f64, a: f64) -> Point {
+        Point { bits: vec![], state_q: q, state_acc: a }
+    }
+
+    #[test]
+    fn frontier_filters_dominated() {
+        let pts = vec![pt(0.2, 0.5), pt(0.4, 0.9), pt(0.3, 0.4), pt(0.8, 1.0), pt(0.5, 0.8)];
+        let f = pareto_frontier(&pts);
+        // 0.3/0.4 dominated by 0.2/0.5; 0.5/0.8 dominated by 0.4/0.9
+        assert_eq!(f, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn frontier_monotone() {
+        let pts: Vec<Point> = (0..50)
+            .map(|i| pt((i as f64) / 50.0, ((i * 7) % 50) as f64 / 50.0))
+            .collect();
+        let f = pareto_frontier(&pts);
+        for w in f.windows(2) {
+            assert!(pts[w[0]].state_q <= pts[w[1]].state_q);
+            assert!(pts[w[0]].state_acc < pts[w[1]].state_acc);
+        }
+    }
+
+    #[test]
+    fn exhaustive_enumeration_count() {
+        let cfg = EnumConfig { min_bits: 2, max_bits: 4, max_points: 100, seed: 1 };
+        let (a, ex) = assignments(&cfg, 3);
+        assert!(ex);
+        assert_eq!(a.len(), 27);
+        // all distinct
+        let mut set = std::collections::HashSet::new();
+        for b in &a {
+            assert!(set.insert(b.clone()));
+        }
+    }
+
+    #[test]
+    fn sampled_when_space_too_big() {
+        let cfg = EnumConfig { min_bits: 2, max_bits: 8, max_points: 100, seed: 1 };
+        let (a, ex) = assignments(&cfg, 10);
+        assert!(!ex);
+        assert_eq!(a.len(), 100);
+        // uniform corners included
+        assert!(a.contains(&vec![2; 10]));
+        assert!(a.contains(&vec![8; 10]));
+    }
+
+    #[test]
+    fn space_size_saturates() {
+        let cfg = EnumConfig::default();
+        assert_eq!(space_size(&cfg, 2), 49);
+        assert!(space_size(&cfg, 80) > 1u128 << 100);
+    }
+}

@@ -1,0 +1,137 @@
+//! The paper's State-of-Quantization cost model (§2.4):
+//!
+//! ```text
+//!             Σ_l (n_w(l) · E_mem/E_mac + n_mac(l)) · bits(l)
+//! State_Q = ─────────────────────────────────────────────────────
+//!             Σ_l (n_w(l) · E_mem/E_mac + n_mac(l)) · bits_max
+//! ```
+//!
+//! with E_mem/E_mac ≈ 120 (TETRIS [16]). This single scalar drives the reward
+//! (together with State-of-Relative-Accuracy), the Pareto x-axis (Fig 6), and
+//! the average-bitwidth reporting of Table 2.
+
+use crate::runtime::NetworkMeta;
+
+/// Memory-access energy over MAC energy (paper §2.4, citing TETRIS).
+pub const E_MEM_OVER_E_MAC: f64 = 120.0;
+
+/// Per-network cost model with per-layer precomputed weights.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// per-layer (n_w * ratio + n_mac) — the bracketed term of State_Q
+    pub layer_cost: Vec<f64>,
+    pub bits_max: f64,
+    pub total_cost: f64,
+}
+
+impl CostModel {
+    pub fn new(net: &NetworkMeta, bits_max: u32) -> CostModel {
+        let layer_cost: Vec<f64> = net
+            .layers
+            .iter()
+            .map(|l| l.w_len as f64 * E_MEM_OVER_E_MAC + l.n_macs as f64)
+            .collect();
+        let total_cost = layer_cost.iter().sum();
+        CostModel { layer_cost, bits_max: bits_max as f64, total_cost }
+    }
+
+    /// State_Q for a bitwidth assignment (1.0 == every layer at bits_max).
+    pub fn state_q(&self, bits: &[u32]) -> f64 {
+        assert_eq!(bits.len(), self.layer_cost.len());
+        let num: f64 = self
+            .layer_cost
+            .iter()
+            .zip(bits)
+            .map(|(c, &b)| c * b as f64)
+            .sum();
+        num / (self.total_cost * self.bits_max)
+    }
+
+    /// Cost-weighted average bitwidth (what Table 2's "Average Bitwidth"
+    /// reports is the plain mean; both are exposed).
+    pub fn weighted_avg_bits(&self, bits: &[u32]) -> f64 {
+        self.state_q(bits) * self.bits_max
+    }
+
+    pub fn mean_bits(bits: &[u32]) -> f64 {
+        bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64
+    }
+}
+
+/// Test-support constructors shared by coordinator/pareto/sim unit tests.
+#[cfg(test)]
+pub mod tests_support {
+    use crate::runtime::{LayerMeta, NetworkMeta};
+
+    /// Build a toy network from per-layer (weight-count, MAC-count) pairs.
+    pub fn toy_net(costs: &[(usize, u64)]) -> NetworkMeta {
+        let layers = costs
+            .iter()
+            .enumerate()
+            .map(|(i, &(w, m))| LayerMeta {
+                name: format!("l{i}"),
+                kind: "dense".into(),
+                w_shape: vec![w],
+                w_offset: 0,
+                w_len: w,
+                b_offset: 0,
+                b_len: 0,
+                n_macs: m,
+                in_dim: 1,
+                out_dim: 1,
+            })
+            .collect();
+        NetworkMeta {
+            name: "toy".into(),
+            l: costs.len(),
+            p: 0,
+            input: [1, 1, 1],
+            classes: 10,
+            train_batch: 1,
+            eval_batch: 1,
+            fused_k: 4,
+            train_size: 64,
+            dataset: "none".into(),
+            layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::toy_net;
+    use super::*;
+
+    #[test]
+    fn uniform_max_bits_is_one() {
+        let net = toy_net(&[(100, 1000), (200, 500)]);
+        let cm = CostModel::new(&net, 8);
+        assert!((cm.state_q(&[8, 8]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_in_bits() {
+        let net = toy_net(&[(100, 1000), (200, 500)]);
+        let cm = CostModel::new(&net, 8);
+        assert!((cm.state_q(&[4, 4]) - 0.5).abs() < 1e-12);
+        assert!((cm.state_q(&[2, 2]) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighting_follows_layer_cost() {
+        // layer 0 dominates cost; lowering its bits moves State_Q much more
+        let net = toy_net(&[(10_000, 1_000_000), (10, 100)]);
+        let cm = CostModel::new(&net, 8);
+        let drop0 = cm.state_q(&[8, 8]) - cm.state_q(&[2, 8]);
+        let drop1 = cm.state_q(&[8, 8]) - cm.state_q(&[8, 2]);
+        assert!(drop0 > 100.0 * drop1, "{drop0} vs {drop1}");
+    }
+
+    #[test]
+    fn memory_ratio_weights_weight_heavy_layers() {
+        // same MACs, one layer has far more weights -> higher cost share
+        let net = toy_net(&[(100_000, 1000), (10, 1000)]);
+        let cm = CostModel::new(&net, 8);
+        assert!(cm.layer_cost[0] > 1000.0 * cm.layer_cost[1]);
+    }
+}

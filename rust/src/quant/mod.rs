@@ -1,0 +1,12 @@
+//! Quantization math mirrored on the Rust side: the WRPN fake-quantizer
+//! (paper §4.2, eq. 1) and the State-of-Quantization cost model (paper §2.4).
+//!
+//! The quantizer here must agree bit-for-bit with the Layer-1 Pallas kernel
+//! (`python/compile/kernels/qmatmul.py`); the integration test
+//! `rust/tests/artifact_parity.rs` checks that against the AOT artifacts.
+
+pub mod cost;
+pub mod wrpn;
+
+pub use cost::{CostModel, E_MEM_OVER_E_MAC};
+pub use wrpn::{quantize_mid_rise, quantize_mid_tread, quantize_slice, sq_error, FP_BITS};

@@ -1,0 +1,126 @@
+//! WRPN mid-tread weight quantizer (paper §4.2, eq. 1) — Rust mirror of the
+//! Pallas kernel's in-tile quantization, used by the ADMM baseline, the
+//! Pareto cost model and the parity tests.
+
+/// Bitwidths >= FP_BITS select the full-precision (identity) path,
+/// matching `python/compile/quant.py`.
+pub const FP_BITS: f32 = 9.0;
+
+/// Number of positive quantization levels for bitwidth `k` (one sign bit).
+#[inline]
+pub fn levels(k: f32) -> f32 {
+    (k - 1.0).exp2() - 1.0
+}
+
+/// Mid-tread fake quantization: zero IS a representable level (paper eq. 1).
+#[inline]
+pub fn quantize_mid_tread(w: f32, k: f32) -> f32 {
+    if k >= FP_BITS {
+        return w;
+    }
+    let l = levels(k);
+    let wc = w.clamp(-1.0, 1.0);
+    // jnp.round lowers to round-half-even; round_ties_even matches exactly.
+    (l * wc).round_ties_even() / l
+}
+
+/// Mid-rise variant (levels shifted half a step; zero excluded). The paper
+/// uses mid-tread; this exists for the quantization-style comparison.
+#[inline]
+pub fn quantize_mid_rise(w: f32, k: f32) -> f32 {
+    if k >= FP_BITS {
+        return w;
+    }
+    let l = levels(k);
+    let wc = w.clamp(-1.0, 1.0);
+    ((l * wc).floor() + 0.5) / l
+}
+
+/// Quantize a slice (one layer's weights) in place-free form.
+pub fn quantize_slice(w: &[f32], k: f32) -> Vec<f32> {
+    w.iter().map(|&x| quantize_mid_tread(x, k)).collect()
+}
+
+/// Total square quantization error of a layer at bitwidth `k`
+/// (the objective ADMM's bitwidth search minimizes, paper §4.6 / [46]).
+pub fn sq_error(w: &[f32], k: f32) -> f64 {
+    w.iter()
+        .map(|&x| {
+            let d = (quantize_mid_tread(x, k) - x) as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_at_fp_bits() {
+        for &w in &[-1.7f32, -0.3, 0.0, 0.9, 2.4] {
+            assert_eq!(quantize_mid_tread(w, 9.0), w);
+            assert_eq!(quantize_mid_tread(w, 16.0), w);
+        }
+    }
+
+    #[test]
+    fn binary_is_sign_times_unit() {
+        // k=1 -> levels = 0 -> degenerate; k=2 -> levels = 1 -> {-1, 0, 1}
+        assert_eq!(quantize_mid_tread(0.9, 2.0), 1.0);
+        assert_eq!(quantize_mid_tread(-0.9, 2.0), -1.0);
+        assert_eq!(quantize_mid_tread(0.2, 2.0), 0.0);
+    }
+
+    #[test]
+    fn clips_to_unit_range() {
+        assert_eq!(quantize_mid_tread(5.0, 3.0), 1.0);
+        assert_eq!(quantize_mid_tread(-5.0, 3.0), -1.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        for k in 2..=8 {
+            for i in -10..=10 {
+                let w = i as f32 / 10.0;
+                let q = quantize_mid_tread(w, k as f32);
+                assert_eq!(quantize_mid_tread(q, k as f32), q, "k={k} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let w: Vec<f32> = (0..1000).map(|i| ((i as f32) * 0.618).sin() * 0.8).collect();
+        let mut last = f64::INFINITY;
+        for k in 2..=8 {
+            let e = sq_error(&w, k as f32);
+            assert!(e < last, "k={k}: {e} !< {last}");
+            last = e;
+        }
+        assert_eq!(sq_error(&w, 9.0), 0.0);
+    }
+
+    #[test]
+    fn mid_rise_excludes_zero() {
+        let q = quantize_mid_rise(0.0, 3.0);
+        assert!(q != 0.0);
+        assert!((q.abs() - 0.5 / levels(3.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn values_are_on_grid() {
+        for k in 2..=8 {
+            let l = levels(k as f32);
+            for i in -20..=20 {
+                let w = i as f32 / 20.0 * 1.4;
+                let q = quantize_mid_tread(w, k as f32);
+                let steps = q * l;
+                assert!(
+                    (steps - steps.round()).abs() < 1e-5,
+                    "k={k} w={w} q={q} not on grid"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them once,
+//! and runs them from the coordinator hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! emits serialized protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+//! Every artifact is lowered with `return_tuple=True`, so execution returns a
+//! single tuple literal that [`Exe::run`] decomposes.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// A compiled artifact plus execution statistics.
+pub struct Exe {
+    pub name: String,
+    inner: PjRtLoadedExecutable,
+    pub exec_count: RefCell<u64>,
+    pub exec_ns: RefCell<u128>,
+}
+
+impl Exe {
+    /// Execute with host literals; returns the decomposed output tuple.
+    /// Accepts `&[&Literal]` (or owned) so callers can reuse cached operands.
+    pub fn run<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
+        let t0 = Instant::now();
+        let mut out = self
+            .inner
+            .execute::<L>(args)
+            .with_context(|| format!("executing `{}`", self.name))?;
+        let buf = out
+            .first_mut()
+            .and_then(|d| d.pop())
+            .with_context(|| format!("`{}` returned no outputs", self.name))?;
+        let lit = buf.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        *self.exec_count.borrow_mut() += 1;
+        *self.exec_ns.borrow_mut() += t0.elapsed().as_nanos();
+        Ok(parts)
+    }
+
+    /// Execute with device-resident buffers (perf hot path: persistent
+    /// operands like the training set or agent parameters are uploaded once
+    /// and reused across thousands of executions).
+    pub fn run_b<B: std::borrow::Borrow<PjRtBuffer>>(&self, args: &[B]) -> Result<Vec<Literal>> {
+        let t0 = Instant::now();
+        let mut out = self
+            .inner
+            .execute_b::<B>(args)
+            .with_context(|| format!("executing `{}` (buffers)", self.name))?;
+        let buf = out
+            .first_mut()
+            .and_then(|d| d.pop())
+            .with_context(|| format!("`{}` returned no outputs", self.name))?;
+        let lit = buf.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        *self.exec_count.borrow_mut() += 1;
+        *self.exec_ns.borrow_mut() += t0.elapsed().as_nanos();
+        Ok(parts)
+    }
+
+    pub fn mean_exec_ms(&self) -> f64 {
+        let n = *self.exec_count.borrow();
+        if n == 0 {
+            return 0.0;
+        }
+        *self.exec_ns.borrow() as f64 / n as f64 / 1e6
+    }
+}
+
+/// Engine: one PJRT CPU client + a compile-once executable cache keyed by
+/// artifact name (`lenet_train`, `agent_lstm_act`, ...).
+pub struct Engine {
+    pub client: PjRtClient,
+    pub dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Exe>>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: PathBuf) -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, dir: artifacts_dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Fetch (compiling on first use) the executable for `artifacts/<name>.hlo.txt`.
+    pub fn exe(&self, name: &str) -> Result<Rc<Exe>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("loading {path:?} — run `make artifacts`"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling `{name}`"))?;
+        let e = Rc::new(Exe {
+            name: name.to_string(),
+            inner: exe,
+            exec_count: RefCell::new(0),
+            exec_ns: RefCell::new(0),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 0.5 {
+            eprintln!("[engine] compiled `{name}` in {dt:.1}s");
+        }
+        Ok(e)
+    }
+
+    /// Per-executable timing summary (perf instrumentation).
+    pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
+        let mut v: Vec<(String, u64, f64)> = self
+            .cache
+            .borrow()
+            .values()
+            .map(|e| (e.name.clone(), *e.exec_count.borrow(), e.mean_exec_ms()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}
+
+impl Engine {
+    /// Upload an f32 tensor to the device (persistent operand).
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+}
+
+// ---- literal helpers ---------------------------------------------------------
+
+/// Build an f32 literal of the given logical shape.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    if dims.len() == 1 {
+        return Ok(Literal::vec1(data));
+    }
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn lit_scalar(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Extract the f32 payload of a literal.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn to_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

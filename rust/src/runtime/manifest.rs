@@ -1,0 +1,199 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the Python
+//! AOT compile path and the Rust runtime. Shapes, flat-parameter layouts and
+//! per-layer metadata all come from here; nothing about the networks is
+//! hard-coded on the Rust side.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One quantizable layer (the unit the RL agent assigns a bitwidth to).
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    /// `dense` | `conv` | `conv1x1` | `dwconv`
+    pub kind: String,
+    pub w_shape: Vec<usize>,
+    pub w_offset: usize,
+    pub w_len: usize,
+    pub b_offset: usize,
+    pub b_len: usize,
+    /// multiply-accumulates per example (the paper's n_l^MAcc)
+    pub n_macs: u64,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct NetworkMeta {
+    pub name: String,
+    /// episode length: number of quantizable layers
+    pub l: usize,
+    /// flat parameter count
+    pub p: usize,
+    /// input (H, W, C)
+    pub input: [usize; 3],
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    /// SGD steps baked into the fused `<net>_retrain_eval` artifact
+    pub fused_k: usize,
+    /// resident training-set size baked into the fused artifact
+    pub train_size: usize,
+    pub dataset: String,
+    pub layers: Vec<LayerMeta>,
+}
+
+impl NetworkMeta {
+    /// Total quantizable weights (the paper's n_l^w summed).
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.w_len as u64).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.n_macs).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AgentMeta {
+    pub state_dim: usize,
+    pub n_actions: usize,
+    pub hidden: usize,
+    pub episodes_per_update: usize,
+    /// flat param count of the LSTM agent
+    pub p_lstm: usize,
+    /// flat param count of the FC-ablation agent
+    pub p_fc: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fp_bits: f32,
+    pub bits_max: u32,
+    pub agent: AgentMeta,
+    pub networks: Vec<NetworkMeta>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let agent = AgentMeta {
+            state_dim: j.u("state_dim"),
+            n_actions: j.u("n_actions"),
+            hidden: j.u("hidden"),
+            episodes_per_update: j.u("episodes_per_update"),
+            p_lstm: j.req("agent").req("lstm").u("p"),
+            p_fc: j.req("agent").req("fc").u("p"),
+        };
+
+        let mut networks = Vec::new();
+        for (name, nj) in j.req("networks").as_obj().context("networks")? {
+            let input = nj.req("input").as_arr().context("input")?;
+            let layers = nj
+                .req("layers")
+                .as_arr()
+                .context("layers")?
+                .iter()
+                .map(|lj| LayerMeta {
+                    name: lj.s("name").to_string(),
+                    kind: lj.s("kind").to_string(),
+                    w_shape: lj
+                        .req("w_shape")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|d| d.as_usize().unwrap())
+                        .collect(),
+                    w_offset: lj.u("w_offset"),
+                    w_len: lj.u("w_len"),
+                    b_offset: lj.u("b_offset"),
+                    b_len: lj.u("b_len"),
+                    n_macs: lj.u("n_macs") as u64,
+                    in_dim: lj.u("in_dim"),
+                    out_dim: lj.u("out_dim"),
+                })
+                .collect::<Vec<_>>();
+            networks.push(NetworkMeta {
+                name: name.clone(),
+                l: nj.u("l"),
+                p: nj.u("p"),
+                input: [
+                    input[0].as_usize().unwrap(),
+                    input[1].as_usize().unwrap(),
+                    input[2].as_usize().unwrap(),
+                ],
+                classes: nj.u("classes"),
+                train_batch: nj.u("train_batch"),
+                eval_batch: nj.u("eval_batch"),
+                fused_k: nj.u("fused_k"),
+                train_size: nj.u("train_size"),
+                dataset: nj.s("dataset").to_string(),
+                layers,
+            });
+        }
+
+        Ok(Manifest {
+            dir: artifacts_dir.to_path_buf(),
+            fp_bits: j.f("fp_bits") as f32,
+            bits_max: j.u("bits_max") as u32,
+            agent,
+            networks,
+        })
+    }
+
+    pub fn network(&self, name: &str) -> Result<&NetworkMeta> {
+        self.networks
+            .iter()
+            .find(|n| n.name == name)
+            .with_context(|| {
+                format!(
+                    "unknown network `{name}` (have: {})",
+                    self.networks
+                        .iter()
+                        .map(|n| n.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration with the real artifacts (skipped if `make artifacts` has
+    /// not been run).
+    #[test]
+    fn loads_real_manifest() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.networks.len(), 7);
+        let lenet = m.network("lenet").unwrap();
+        assert_eq!(lenet.l, 4);
+        assert_eq!(lenet.layers.len(), 4);
+        // flat layout invariants: offsets are contiguous and within p
+        let mut expect = 0usize;
+        for layer in &lenet.layers {
+            assert_eq!(layer.w_offset, expect);
+            expect = layer.b_offset + layer.b_len;
+        }
+        assert_eq!(expect, lenet.p);
+        // resnet20 must expose the paper's 20-layer episode
+        assert_eq!(m.network("resnet20").unwrap().l, 20);
+        assert_eq!(m.network("mobilenet").unwrap().l, 28);
+        assert!(m.agent.p_lstm > m.agent.p_fc);
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: artifact loading/compilation/execution (engine) and the
+//! Python↔Rust contract (manifest).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{lit_f32, lit_scalar, to_f32, to_vec_f32, Engine, Exe};
+pub use manifest::{AgentMeta, LayerMeta, Manifest, NetworkMeta};

@@ -1,0 +1,8 @@
+//! Hardware evaluation substrates (paper §4.4, §4.5): the Stripes bit-serial
+//! accelerator simulator and the TVM-style bit-serial CPU cost model.
+
+pub mod stripes;
+pub mod tvm_cpu;
+
+pub use stripes::{SimReport, Stripes, StripesConfig};
+pub use tvm_cpu::{gmean, TvmCpu, TvmCpuConfig};

@@ -1,0 +1,5 @@
+//! In-repo property-testing framework (stands in for proptest — DESIGN.md §9).
+
+pub mod prop;
+
+pub use prop::{proptest, proptest_seeded, Gen};

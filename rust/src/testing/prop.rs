@@ -1,0 +1,124 @@
+//! Property-testing mini-framework (proptest is unavailable offline —
+//! DESIGN.md §9).
+//!
+//! Deterministic, seeded random-case generation with failure reporting that
+//! includes the case index and a replay seed. Used by the coordinator
+//! invariant tests (routing of actions to bitwidths, batching/trajectory
+//! bookkeeping, cost-model state).
+//!
+//! ```ignore
+//! proptest(1000, |g| {
+//!     let bits = g.vec_u32(1..=8, 1..=24);
+//!     let q = cost.state_q(&bits);
+//!     prop_assert!((0.0..=1.0).contains(&q));
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Case generator handed to each property iteration.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi] (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform u32 in [lo, hi] (inclusive).
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        self.usize_in(lo as usize, hi as usize) as u32
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    pub fn gaussian_f32(&mut self, std: f32) -> f32 {
+        self.rng.gaussian() * std
+    }
+
+    /// Vector of u32s, each in `range`, with length in `len_range`.
+    pub fn vec_u32(&mut self, range: std::ops::RangeInclusive<u32>,
+                   len_range: std::ops::RangeInclusive<usize>) -> Vec<u32> {
+        let n = self.usize_in(*len_range.start(), *len_range.end());
+        (0..n).map(|_| self.u32_in(*range.start(), *range.end())).collect()
+    }
+
+    /// Vector of f32s in `range`.
+    pub fn vec_f32(&mut self, range: std::ops::RangeInclusive<f32>, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(*range.start(), *range.end())).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+}
+
+/// Run `cases` seeded property iterations. Panics with the failing case's
+/// replay seed on the first failure.
+pub fn proptest<F: FnMut(&mut Gen)>(cases: usize, mut f: F) {
+    proptest_seeded(0x9e3779b9, cases, &mut f);
+}
+
+/// Replay a specific failing case: `proptest_seeded(seed, 1, ...)` with the
+/// seed printed by a failure.
+pub fn proptest_seeded<F: FnMut(&mut Gen)>(base_seed: u64, cases: usize, f: &mut F) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let mut g = Gen { rng: Pcg32::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(payload) = result {
+            eprintln!(
+                "property failed at case {case}/{cases}; replay with \
+                 proptest_seeded({base_seed:#x}.wrapping_add({case}), 1, ...)"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_respect_bounds() {
+        proptest(500, |g| {
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_u32(2..=8, 1..=16);
+            assert!(!v.is_empty() && v.len() <= 16);
+            assert!(v.iter().all(|&b| (2..=8).contains(&b)));
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        proptest(10, |g| first.push(g.u32_in(0, 1000)));
+        let mut second = Vec::new();
+        proptest(10, |g| second.push(g.u32_in(0, 1000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        proptest(50, |g| {
+            let v = g.usize_in(0, 100);
+            assert!(v < 90, "planted failure");
+        });
+    }
+}

@@ -1,0 +1,119 @@
+//! Bench harness (criterion is unavailable offline, DESIGN.md §9).
+//!
+//! Plain `harness = false` bench mains call [`Bench::run`] per case: warmup,
+//! timed iterations, mean/p50/p95 reporting, and a JSON record appended to
+//! `target/bench_results.json` so the experiment harness can diff runs.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+    results: Vec<Json>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            target_time: Duration::from_secs(2),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` and report; returns the stats for programmatic use.
+    pub fn case<F: FnMut()>(&mut self, case: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed() < self.target_time && samples.len() < self.max_iters)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let stats = Stats {
+            iters: n,
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            p50_ns: samples[n / 2],
+            p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+            min_ns: samples[0],
+        };
+        println!(
+            "{:<44} {:>12} (p50 {:>12}, p95 {:>12}, n={})",
+            format!("{}/{}", self.name, case),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p50_ns),
+            fmt_ns(stats.p95_ns),
+            n
+        );
+        self.results.push(Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("case", Json::Str(case.to_string())),
+            ("mean_ns", Json::Num(stats.mean_ns)),
+            ("p50_ns", Json::Num(stats.p50_ns)),
+            ("p95_ns", Json::Num(stats.p95_ns)),
+            ("min_ns", Json::Num(stats.min_ns)),
+            ("iters", Json::Num(n as f64)),
+        ]));
+        stats
+    }
+
+    /// Append this bench's records to `target/bench_results.json` (JSON lines).
+    pub fn flush(&self) {
+        let _ = std::fs::create_dir_all("target");
+        let mut out = String::new();
+        for r in &self.results {
+            out.push_str(&r.dump());
+            out.push('\n');
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open("target/bench_results.json")
+        {
+            let _ = f.write_all(out.as_bytes());
+        }
+    }
+}
+
+impl Drop for Bench {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}

@@ -1,0 +1,122 @@
+//! Declarative CLI argument parser (clap is unavailable offline, DESIGN.md §9).
+//!
+//! Grammar: `releq <subcommand> [positional...] [--flag value | --switch]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (element 0 = program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().skip(1).peekable();
+        let mut a = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                a.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare switch
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.flags.insert(name.to_string(), v);
+                } else {
+                    a.switches.push(name.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn str_of(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn f64_of(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize_of(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_of(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(
+            std::iter::once("releq".to_string()).chain(s.split_whitespace().map(String::from)),
+        )
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("search --net lenet --episodes 500 --verbose");
+        assert_eq!(a.subcommand, "search");
+        assert_eq!(a.str_of("net", ""), "lenet");
+        assert_eq!(a.usize_of("episodes", 0), 500);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn eq_form_and_positional() {
+        let a = parse("exp table2 --seed=7");
+        assert_eq!(a.subcommand, "exp");
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.u64_of("seed", 0), 7);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("bench");
+        assert_eq!(a.f64_of("lr", 0.05), 0.05);
+        assert_eq!(a.str_of("net", "lenet"), "lenet");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, "");
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,7 @@
+//! In-repo substrates for what the offline environment lacks (DESIGN.md §9):
+//! JSON, CLI parsing, deterministic PRNG, and a bench harness.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,164 @@
+//! Integration tests over the real AOT artifacts: the Rust quantizer must
+//! agree bit-for-bit with the Pallas kernel inside the lowered HLO, the
+//! train/eval artifacts must behave like training steps, and the agent
+//! artifacts must satisfy policy semantics.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! note) when the artifacts are missing so `cargo test` works in a fresh
+//! checkout.
+
+use std::rc::Rc;
+
+use releq::coordinator::{EnvConfig, QuantEnv};
+use releq::data;
+use releq::quant::quantize_mid_tread;
+use releq::runtime::{lit_f32, lit_scalar, Engine, Manifest};
+
+fn bringup() -> Option<(Manifest, Rc<Engine>)> {
+    let dir = releq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Rc::new(Engine::new(dir).unwrap());
+    Some((manifest, engine))
+}
+
+/// The eval artifact's forward pass must see exactly the weights the Rust
+/// quantizer predicts: quantizing params on the Rust side and evaluating at
+/// FP bits must equal evaluating the raw params at the quantized bitwidth.
+#[test]
+fn rust_quantizer_matches_pallas_kernel_in_hlo() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let net = manifest.network("lenet").unwrap();
+    let eval_exe = engine.exe("lenet_eval").unwrap();
+    let init_exe = engine.exe("lenet_init").unwrap();
+    let params = init_exe.run(&[lit_scalar(5.0)]).unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap();
+
+    let [h, w, c] = net.input;
+    let (_, val) = data::train_val(&net.dataset, 3, 64, net.eval_batch, h, net.classes);
+    let x = lit_f32(&val.images, &[net.eval_batch as i64, h as i64, w as i64, c as i64]).unwrap();
+    let y = lit_f32(&val.labels, &[net.eval_batch as i64]).unwrap();
+
+    for k in [2.0f32, 3.0, 5.0, 8.0] {
+        // path A: artifact quantizes (bits = k for every layer)
+        let bits_q = lit_f32(&vec![k; net.l], &[net.l as i64]).unwrap();
+        let p_lit = lit_f32(&params, &[net.p as i64]).unwrap();
+        let out_a = eval_exe.run(&[&p_lit, &x, &y, &bits_q]).unwrap();
+        let loss_a = out_a[0].get_first_element::<f32>().unwrap();
+
+        // path B: Rust quantizes the weights, artifact runs at FP bits.
+        // Only the weight slices are quantized; biases stay fp32.
+        let mut pq = params.clone();
+        for lm in &net.layers {
+            for v in &mut pq[lm.w_offset..lm.w_offset + lm.w_len] {
+                *v = quantize_mid_tread(*v, k);
+            }
+        }
+        let bits_fp = lit_f32(&vec![manifest.fp_bits; net.l], &[net.l as i64]).unwrap();
+        let pq_lit = lit_f32(&pq, &[net.p as i64]).unwrap();
+        let out_b = eval_exe.run(&[&pq_lit, &x, &y, &bits_fp]).unwrap();
+        let loss_b = out_b[0].get_first_element::<f32>().unwrap();
+
+        assert!(
+            (loss_a - loss_b).abs() < 1e-5,
+            "k={k}: artifact loss {loss_a} != rust-quantized loss {loss_b}"
+        );
+    }
+}
+
+/// Training through the artifact must reduce loss on a fixed batch.
+#[test]
+fn train_artifact_learns() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let net = manifest.network("lenet").unwrap();
+    let train_exe = engine.exe("lenet_train").unwrap();
+    let init_exe = engine.exe("lenet_init").unwrap();
+    let mut params = init_exe.run(&[lit_scalar(2.0)]).unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap();
+    let mut mom = vec![0.0f32; net.p];
+    let [h, w, c] = net.input;
+    let (train, _) = data::train_val(&net.dataset, 3, 64, net.eval_batch, h, net.classes);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    train.fill_batch(0, net.train_batch, &mut xs, &mut ys);
+    let x = lit_f32(&xs, &[net.train_batch as i64, h as i64, w as i64, c as i64]).unwrap();
+    let y = lit_f32(&ys, &[net.train_batch as i64]).unwrap();
+    let bits = lit_f32(&vec![manifest.fp_bits; net.l], &[net.l as i64]).unwrap();
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..25 {
+        let p_lit = lit_f32(&params, &[net.p as i64]).unwrap();
+        let m_lit = lit_f32(&mom, &[net.p as i64]).unwrap();
+        let out = train_exe
+            .run(&[&p_lit, &m_lit, &x, &y, &bits, &lit_scalar(0.01)])
+            .unwrap();
+        params = out[0].to_vec::<f32>().unwrap();
+        mom = out[1].to_vec::<f32>().unwrap();
+        last = out[2].get_first_element::<f32>().unwrap();
+        first.get_or_insert(last);
+    }
+    let first = first.unwrap();
+    assert!(last < first * 0.5, "loss did not drop: {first} -> {last}");
+}
+
+/// Agent act artifact: probabilities sum to 1, are non-negative, and the
+/// recurrent state must influence the LSTM agent but not the FC agent.
+#[test]
+fn agent_act_semantics() {
+    let Some((manifest, engine)) = bringup() else { return };
+    for tag in ["lstm", "fc"] {
+        let act = engine.exe(&format!("agent_{tag}_act")).unwrap();
+        let init = engine.exe(&format!("agent_{tag}_init")).unwrap();
+        let params = init.run(&[lit_scalar(4.0)]).unwrap()[0]
+            .to_vec::<f32>()
+            .unwrap();
+        let p = lit_f32(&params, &[params.len() as i64]).unwrap();
+        let s = lit_f32(&vec![0.5; manifest.agent.state_dim],
+                        &[manifest.agent.state_dim as i64]).unwrap();
+        let h0 = lit_f32(&vec![0.0; manifest.agent.hidden], &[manifest.agent.hidden as i64])
+            .unwrap();
+        let h1 = lit_f32(&vec![1.0; manifest.agent.hidden], &[manifest.agent.hidden as i64])
+            .unwrap();
+        let out0 = act.run(&[&p, &s, &h0, &h0]).unwrap();
+        let probs0 = out0[0].to_vec::<f32>().unwrap();
+        assert_eq!(probs0.len(), manifest.agent.n_actions);
+        let sum: f32 = probs0.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "{tag} probs sum {sum}");
+        assert!(probs0.iter().all(|&x| x >= 0.0));
+        let out1 = act.run(&[&p, &s, &h1, &h1]).unwrap();
+        let v0 = out0[1].get_first_element::<f32>().unwrap();
+        let v1 = out1[1].get_first_element::<f32>().unwrap();
+        if tag == "lstm" {
+            assert_ne!(v0, v1, "LSTM must use its recurrent state");
+        } else {
+            assert_eq!(v0, v1, "FC agent must ignore the recurrent state");
+        }
+    }
+}
+
+/// Environment invariants on the real artifacts: memo-cache determinism and
+/// the FP reference being the best achievable.
+#[test]
+fn env_accuracy_deterministic_and_cached() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let net = manifest.network("lenet").unwrap();
+    let mut cfg = EnvConfig::default();
+    cfg.pretrain_steps = 150;
+    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
+    assert!(env.acc_fullp > 0.5, "pretraining failed: {}", env.acc_fullp);
+    let bits = vec![4, 4, 4, 4];
+    let a1 = env.accuracy(&bits).unwrap();
+    let evals_before = env.stats.train_execs;
+    let a2 = env.accuracy(&bits).unwrap();
+    assert_eq!(a1, a2, "memoized accuracy must be identical");
+    assert_eq!(env.stats.train_execs, evals_before, "cache hit must not re-execute");
+    assert_eq!(env.stats.cache_hits, 1);
+    // heavy quantization must not beat the fp reference on this substrate
+    let low = env.accuracy(&vec![2, 2, 2, 2]).unwrap();
+    assert!(low <= env.acc_fullp + 0.05);
+}

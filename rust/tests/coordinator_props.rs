@@ -1,0 +1,234 @@
+//! Property-based tests (in-repo prop framework, DESIGN.md §9) on the
+//! coordinator's pure invariants: action routing, cost-model state, reward
+//! shaping, GAE bookkeeping, Pareto extraction, simulators, and the ADMM
+//! selector. None of these touch PJRT, so they run on any checkout.
+
+use releq::baselines::{AdmmConfig, AdmmSelector};
+use releq::coordinator::ppo::gae;
+use releq::coordinator::{RewardKind, RewardParams, StepRecord, STATE_DIM};
+use releq::pareto::{assignments, pareto_frontier, EnumConfig, Point};
+use releq::quant::{quantize_mid_tread, sq_error, CostModel};
+use releq::runtime::{LayerMeta, NetworkMeta};
+use releq::sim::{Stripes, StripesConfig, TvmCpu, TvmCpuConfig};
+use releq::testing::proptest;
+use releq::util::rng::Pcg32;
+
+fn rand_net(g: &mut releq::testing::Gen) -> NetworkMeta {
+    let l = g.usize_in(1, 24);
+    let mut off = 0usize;
+    let layers: Vec<LayerMeta> = (0..l)
+        .map(|i| {
+            let w = g.usize_in(16, 40_000);
+            let m = g.usize_in(w, 4_000_000) as u64;
+            let lm = LayerMeta {
+                name: format!("l{i}"),
+                kind: "conv".into(),
+                w_shape: vec![w],
+                w_offset: off,
+                w_len: w,
+                b_offset: off + w,
+                b_len: 8,
+                n_macs: m,
+                in_dim: 8,
+                out_dim: 8,
+            };
+            off += w + 8;
+            lm
+        })
+        .collect();
+    NetworkMeta {
+        name: "prop".into(),
+        l,
+        p: off,
+        input: [16, 16, 3],
+        classes: 10,
+        train_batch: 8,
+        eval_batch: 8,
+        fused_k: 4,
+        train_size: 64,
+        dataset: "cifar_syn".into(),
+        layers,
+    }
+}
+
+#[test]
+fn state_q_bounded_and_monotone() {
+    proptest(300, |g| {
+        let net = rand_net(g);
+        let cm = CostModel::new(&net, 8);
+        let bits: Vec<u32> = (0..net.l).map(|_| g.u32_in(1, 8)).collect();
+        let q = cm.state_q(&bits);
+        assert!((0.0..=1.0).contains(&q), "state_q {q}");
+        // raising any single layer's bits must not decrease state_q
+        let i = g.usize_in(0, net.l - 1);
+        if bits[i] < 8 {
+            let mut hi = bits.clone();
+            hi[i] += 1;
+            assert!(cm.state_q(&hi) >= q);
+        }
+        // uniform max-bits == 1.0 exactly
+        assert!((cm.state_q(&vec![8; net.l]) - 1.0).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn reward_invariants_all_formulations() {
+    proptest(600, |g| {
+        let kind = match g.usize_in(0, 2) {
+            0 => RewardKind::Proposed,
+            1 => RewardKind::Ratio,
+            _ => RewardKind::Diff,
+        };
+        let r = RewardParams::with_kind(kind);
+        let acc = g.f64_in(0.0, 1.2);
+        let q = g.f64_in(0.01, 1.0);
+        let rew = r.reward(acc, q);
+        assert!(rew.is_finite());
+        // monotone: better accuracy at fixed quantization never hurts
+        let rew_hi = r.reward((acc + 0.1).min(1.2), q);
+        assert!(rew_hi >= rew - 1e-9, "{kind:?} acc monotonicity");
+        // monotone: cheaper network at fixed accuracy never hurts
+        let rew_cheap = r.reward(acc, (q - 0.1).max(0.01));
+        assert!(rew_cheap >= rew - 1e-9, "{kind:?} quant monotonicity");
+    });
+}
+
+#[test]
+fn gae_matches_brute_force() {
+    proptest(300, |g| {
+        let n = g.usize_in(1, 30);
+        let gamma = g.f64_in(0.5, 1.0);
+        let lam = g.f64_in(0.0, 1.0);
+        let ep: Vec<StepRecord> = (0..n)
+            .map(|_| StepRecord {
+                state: [0.0; STATE_DIM],
+                action: 0,
+                logp: 0.0,
+                value: g.f32_in(-1.0, 1.0),
+                reward: g.f32_in(-1.0, 1.0),
+            })
+            .collect();
+        let (adv, ret) = gae(gamma, lam, &ep);
+        // brute force: adv[t] = sum_{j>=t} (gamma*lam)^(j-t) * delta_j
+        for t in 0..n {
+            let mut want = 0.0f64;
+            for j in t..n {
+                let next_v = if j + 1 < n { ep[j + 1].value as f64 } else { 0.0 };
+                let delta = ep[j].reward as f64 + gamma * next_v - ep[j].value as f64;
+                want += (gamma * lam).powi((j - t) as i32) * delta;
+            }
+            assert!(
+                (adv[t] as f64 - want).abs() < 1e-3,
+                "adv[{t}] {} != {want}",
+                adv[t]
+            );
+            assert!((ret[t] - (adv[t] + ep[t].value)).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn pareto_frontier_is_sound_and_complete() {
+    proptest(200, |g| {
+        let n = g.usize_in(1, 200);
+        let points: Vec<Point> = (0..n)
+            .map(|_| Point {
+                bits: vec![],
+                state_q: g.f64_in(0.0, 1.0),
+                state_acc: g.f64_in(0.0, 1.0),
+            })
+            .collect();
+        let f = pareto_frontier(&points);
+        assert!(!f.is_empty());
+        // soundness: no frontier point dominated by any other point
+        for &i in &f {
+            for (j, p) in points.iter().enumerate() {
+                if j == i {
+                    continue;
+                }
+                let dominates = p.state_q <= points[i].state_q
+                    && p.state_acc >= points[i].state_acc
+                    && (p.state_q < points[i].state_q || p.state_acc > points[i].state_acc);
+                assert!(!dominates, "frontier point {i} dominated by {j}");
+            }
+        }
+        // completeness: every non-frontier point is dominated by some frontier point
+        for (j, p) in points.iter().enumerate() {
+            if f.contains(&j) {
+                continue;
+            }
+            let dominated = f.iter().any(|&i| {
+                points[i].state_q <= p.state_q && points[i].state_acc >= p.state_acc
+            });
+            assert!(dominated, "point {j} neither on frontier nor dominated");
+        }
+    });
+}
+
+#[test]
+fn enumeration_covers_space_without_duplicates() {
+    proptest(60, |g| {
+        let min = g.u32_in(1, 4);
+        let max = min + g.u32_in(1, 4);
+        let l = g.usize_in(1, 4);
+        let cfg = EnumConfig { min_bits: min, max_bits: max, max_points: 5000, seed: 1 };
+        let (a, exhaustive) = assignments(&cfg, l);
+        if exhaustive {
+            let expect = ((max - min + 1) as usize).pow(l as u32);
+            assert_eq!(a.len(), expect);
+            let set: std::collections::HashSet<_> = a.iter().collect();
+            assert_eq!(set.len(), expect, "duplicates in exhaustive enumeration");
+        }
+        for bits in &a {
+            assert_eq!(bits.len(), l);
+            assert!(bits.iter().all(|&b| (min..=max).contains(&b)));
+        }
+    });
+}
+
+#[test]
+fn simulators_ratio_invariants() {
+    proptest(200, |g| {
+        let net = rand_net(g);
+        let bits: Vec<u32> = (0..net.l).map(|_| g.u32_in(2, 8)).collect();
+        let stripes = Stripes::new(StripesConfig::default());
+        let (sp, en) = stripes.speedup_energy(&net, &bits);
+        assert!(sp >= 0.99, "speedup {sp} < 1 for bits <= 8");
+        assert!(en >= 0.99, "energy reduction {en} < 1");
+        assert!(sp <= 8.5 && en <= 10.0, "unphysical ratios {sp} {en}");
+        let tvm = TvmCpu::new(TvmCpuConfig::default());
+        let cs = tvm.speedup(&net, &bits);
+        assert!((0.99..=8.5).contains(&cs), "cpu speedup {cs}");
+    });
+}
+
+#[test]
+fn quantizer_idempotent_and_error_zero_at_fp() {
+    proptest(400, |g| {
+        let k = g.u32_in(2, 8) as f32;
+        let w = g.f32_in(-2.0, 2.0);
+        let q = quantize_mid_tread(w, k);
+        assert_eq!(quantize_mid_tread(q, k), q);
+        assert!(q.abs() <= 1.0);
+        let v = g.vec_f32(-1.5..=1.5, 64);
+        assert_eq!(sq_error(&v, 9.0), 0.0);
+        assert!(sq_error(&v, k as f32) >= 0.0);
+    });
+}
+
+#[test]
+fn admm_respects_budget_and_bounds() {
+    proptest(60, |g| {
+        let net = rand_net(g);
+        let mut rng = Pcg32::new(g.case as u64 + 1);
+        let weights: Vec<f32> = (0..net.p).map(|_| rng.gaussian() * 0.4).collect();
+        let target = g.f64_in(2.5, 7.5);
+        let sel = AdmmSelector::new(AdmmConfig::default());
+        let bits = sel.select(&net, &weights, target);
+        assert_eq!(bits.len(), net.l);
+        assert!(bits.iter().all(|&b| (2..=8).contains(&b)));
+        let avg = bits.iter().map(|&b| b as f64).sum::<f64>() / net.l as f64;
+        // a feasible solution at or below target always exists (all-min-bits)
+        assert!(avg <= target + 1e-9, "avg {avg} > target {target}");
+    });
+}

@@ -1,0 +1,139 @@
+//! Failure-injection and edge-case tests: the system must fail loudly and
+//! informatively, not corrupt state, when artifacts are missing, shapes
+//! mismatch, or inputs are degenerate.
+
+use std::rc::Rc;
+
+use releq::coordinator::{PpoConfig, RewardParams, SearchConfig};
+use releq::data;
+use releq::pareto::{pareto_frontier, Point};
+use releq::runtime::{lit_f32, Engine, Manifest};
+use releq::util::json::Json;
+
+fn engine() -> Option<(Manifest, Rc<Engine>)> {
+    let dir = releq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some((
+        Manifest::load(&dir).unwrap(),
+        Rc::new(Engine::new(dir).unwrap()),
+    ))
+}
+
+#[test]
+fn missing_artifact_is_a_clear_error() {
+    let Some((_, engine)) = engine() else { return };
+    let Err(err) = engine.exe("definitely_not_an_artifact") else {
+        panic!("expected an error for a missing artifact");
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("definitely_not_an_artifact"), "{msg}");
+    assert!(msg.contains("make artifacts"), "should tell the user the fix: {msg}");
+}
+
+#[test]
+fn wrong_operand_count_is_an_error_not_ub() {
+    let Some((_, engine)) = engine() else { return };
+    let exe = engine.exe("agent_lstm_act").unwrap();
+    // act takes 4 operands; pass 1
+    let one = lit_f32(&[0.0f32; 8], &[8]).unwrap();
+    assert!(exe.run(&[&one]).is_err());
+}
+
+#[test]
+fn manifest_from_garbage_dir_fails_with_hint() {
+    let err = Manifest::load(std::path::Path::new("/nonexistent/dir")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn manifest_rejects_malformed_json() {
+    let dir = std::env::temp_dir().join("releq_bad_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn agent_rejects_mismatched_update_batch() {
+    let Some((manifest, engine)) = engine() else { return };
+    use releq::coordinator::{AgentKind, PpoAgent, StepRecord, STATE_DIM};
+    let mut agent = PpoAgent::new(
+        engine,
+        &manifest,
+        AgentKind::Lstm,
+        4,
+        1,
+        PpoConfig::default(),
+    )
+    .unwrap();
+    // episode of the wrong length must be rejected before reaching PJRT
+    let bad: Vec<StepRecord> = (0..3)
+        .map(|_| StepRecord { state: [0.0; STATE_DIM], action: 0, logp: 0.0, value: 0.0, reward: 0.0 })
+        .collect();
+    assert!(agent.finish_episode(bad).is_err());
+}
+
+#[test]
+fn lit_f32_shape_mismatch() {
+    assert!(lit_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+    assert!(lit_f32(&[1.0; 4], &[2, 2]).is_ok());
+}
+
+#[test]
+fn pareto_degenerate_inputs() {
+    assert!(pareto_frontier(&[]).is_empty());
+    let one = vec![Point { bits: vec![], state_q: 0.5, state_acc: 0.5 }];
+    assert_eq!(pareto_frontier(&one), vec![0]);
+    // all identical points: exactly one survives
+    let same: Vec<Point> = (0..5)
+        .map(|_| Point { bits: vec![], state_q: 0.3, state_acc: 0.7 })
+        .collect();
+    assert_eq!(pareto_frontier(&same).len(), 1);
+}
+
+#[test]
+fn reward_handles_degenerate_states() {
+    let r = RewardParams::default();
+    assert!(r.reward(0.0, 0.0).is_finite());
+    assert!(r.reward(f64::MIN_POSITIVE, 1.0).is_finite());
+    assert_eq!(r.reward(0.0, 0.5), -1.0); // below threshold
+    // acc slightly above 1 (protocol-matched ref can make this happen): finite, bounded
+    let above = r.reward(1.1, 0.5);
+    assert!(above.is_finite() && above <= 1.0);
+}
+
+#[test]
+fn data_generator_tiny_and_unbalanced_sizes() {
+    // n smaller than the class count still works (partial class coverage)
+    let s = data::generate("mnist_syn", 1, 2, 3, 16, 10);
+    assert_eq!(s.n, 3);
+    assert_eq!(s.labels, vec![0.0, 1.0, 2.0]);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    s.fill_batch(7, 4, &mut xs, &mut ys); // wraps several times
+    assert_eq!(ys.len(), 4);
+}
+
+#[test]
+fn json_defensive_accessors() {
+    let j = Json::parse(r#"{"a": 1, "s": "x"}"#).unwrap();
+    assert!(j.get("missing").is_none());
+    assert!(j.req("a").as_str().is_none());
+    assert!(j.req("s").as_f64().is_none());
+    assert_eq!(j.u("a"), 1);
+}
+
+#[test]
+fn search_config_round_trips_through_config_module() {
+    // every preset is a valid starting config
+    for net in ["lenet", "simplenet", "alexnet", "vgg11", "svhn10", "resnet20", "mobilenet"] {
+        let cfg: SearchConfig = releq::config::preset(net);
+        assert!(cfg.episodes >= 16);
+        assert!(cfg.env.retrain_steps >= 1);
+        assert!(cfg.min_bits >= 1 && cfg.min_bits <= 8);
+    }
+}
