@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example admm_compare [-- --net lenet]
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use releq::baselines::{paper_releq_solution, paper_solution, AdmmConfig, AdmmSelector};
@@ -17,7 +17,7 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args());
     let net_name = args.str_of("net", "lenet");
     let manifest = Manifest::load(&releq::artifacts_dir())?;
-    let engine = Rc::new(Engine::new(releq::artifacts_dir())?);
+    let engine = Arc::new(Engine::new(releq::artifacts_dir())?);
     let net = manifest.network(&net_name)?;
 
     let mut env_cfg = EnvConfig::default();

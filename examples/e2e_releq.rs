@@ -1,8 +1,9 @@
 //! END-TO-END driver (deliverable (b) / system-prompt requirement): run the
-//! complete ReLeQ system on a real small workload and report the paper's
+//! complete ReLeQ system on real small workloads and report the paper's
 //! headline metrics.
 //!
 //!     cargo run --release --example e2e_releq [-- --net lenet --episodes 300]
+//!     cargo run --release --example e2e_releq -- --nets lenet,simplenet,svhn10
 //!
 //! Pipeline exercised, proving all three layers compose:
 //!   1. synthetic dataset generation (data substrate)
@@ -13,70 +14,117 @@
 //!   4. final long retrain of the converged bitwidths
 //!   5. hardware projection on the Stripes + bit-serial CPU simulators
 //!
-//! The reward/accuracy learning curves are logged per episode to
-//! results/e2e_<net>.csv and summarized here — EXPERIMENTS.md records a run.
+//! With `--nets a,b,c` the per-network pipelines fan out across shard
+//! threads over the shared `Send + Sync` engine (EXPERIMENTS.md §Perf); the
+//! reports print in the order the networks were listed, not completion
+//! order. The reward/accuracy learning curves are logged per episode to
+//! results/e2e_<net>.csv.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use releq::config;
 use releq::coordinator::Searcher;
 use releq::metrics::{sparkline, SearchLog};
+use releq::parallel;
 use releq::runtime::{Engine, Manifest};
 use releq::sim::{Stripes, StripesConfig, TvmCpu, TvmCpuConfig};
 use releq::util::cli::Args;
 
-fn main() -> Result<()> {
-    let args = Args::parse(std::env::args());
-    let net_name = args.str_of("net", "lenet");
-    let dir = releq::artifacts_dir();
-    let manifest = Manifest::load(&dir)?;
-    let engine = Rc::new(Engine::new(dir)?);
-    let net = manifest.network(&net_name)?;
-
-    let mut cfg = config::resolve(&net_name, &args)?;
+/// One network's full pipeline. Returns the report as a string so the
+/// sharded driver can print merged output deterministically.
+fn run_one(engine: &Arc<Engine>, manifest: &Manifest, net_name: &str,
+           args: &Args) -> Result<String> {
+    use std::fmt::Write;
+    let net = manifest.network(net_name)?;
+    // full resolution (preset -> --config TOML -> CLI flags), same as the
+    // single-net path always did
+    let mut cfg = config::resolve(net_name, args)?;
     if let Some(e) = args.opt_str("episodes") {
         cfg.episodes = e.parse()?;
     }
 
-    println!("=== ReLeQ end-to-end: {} (L={}, P={}, dataset {}) ===",
-             net.name, net.l, net.p, net.dataset);
+    let mut out = String::new();
+    writeln!(out, "=== ReLeQ end-to-end: {} (L={}, P={}, dataset {}) ===",
+             net.name, net.l, net.p, net.dataset)?;
     let t0 = std::time::Instant::now();
-    let mut searcher = Searcher::new(engine.clone(), &manifest, net, cfg)?;
+    let mut searcher = Searcher::new(engine.clone(), manifest, net, cfg)?;
     let t_pre = t0.elapsed().as_secs_f64();
-    println!("[1] pretrained: Acc_FullP = {:.4} ({t_pre:.1}s)", searcher.env.acc_fullp);
+    writeln!(out, "[1] pretrained: Acc_FullP = {:.4} ({t_pre:.1}s)", searcher.env.acc_fullp)?;
 
     let result = searcher.run()?;
     let t_search = t0.elapsed().as_secs_f64() - t_pre;
-    println!("[2] search done: {} episodes in {:.1}s", result.episodes_run, t_search);
+    writeln!(out, "[2] search done: {} episodes in {:.1}s", result.episodes_run, t_search)?;
     let ma = |s: &[f64]| SearchLog::moving_average(s, 20);
-    println!("    reward   : {}", sparkline(&ma(&result.log.rewards()), 64));
-    println!("    state_acc: {}", sparkline(&ma(&result.log.state_accs()), 64));
-    println!("    state_q  : {}", sparkline(&ma(&result.log.state_qs()), 64));
+    writeln!(out, "    reward   : {}", sparkline(&ma(&result.log.rewards()), 64))?;
+    writeln!(out, "    state_acc: {}", sparkline(&ma(&result.log.state_accs()), 64))?;
+    writeln!(out, "    state_q  : {}", sparkline(&ma(&result.log.state_qs()), 64))?;
 
-    println!("[3] solution: bits {:?} (avg {:.2})", result.bits, result.avg_bits);
-    println!(
+    writeln!(out, "[3] solution: bits {:?} (avg {:.2})", result.bits, result.avg_bits)?;
+    writeln!(
+        out,
         "    accuracy: fp {:.4} -> quantized {:.4} (loss {:.2}%, paper target < 0.3%)",
         result.acc_fullp, result.acc_final, result.acc_loss_pct
-    );
+    )?;
 
     let stripes = Stripes::new(StripesConfig::default());
     let (sp, en) = stripes.speedup_energy(net, &result.bits);
     let tvm = TvmCpu::new(TvmCpuConfig::default());
     let cpu = tvm.speedup(net, &result.bits);
-    println!("[4] hardware projection vs 8-bit: Stripes {sp:.2}x speedup / {en:.2}x energy; CPU {cpu:.2}x");
+    writeln!(
+        out,
+        "[4] hardware projection vs 8-bit: Stripes {sp:.2}x speedup / {en:.2}x energy; CPU {cpu:.2}x"
+    )?;
 
     std::fs::create_dir_all("results")?;
     result
         .log
         .write_csv(std::path::Path::new(&format!("results/e2e_{net_name}.csv")))?;
-    println!(
-        "[5] env: {} evals ({} cache hits), {} train + {} eval PJRT execs; log -> results/e2e_{net_name}.csv",
+    writeln!(
+        out,
+        "[5] env: {} evals ({} cache hits), {} train + {} eval PJRT execs; \
+         agent: {} acts / {} param uploads; log -> results/e2e_{net_name}.csv",
         searcher.env.stats.evals,
         searcher.env.stats.cache_hits,
         searcher.env.stats.train_execs,
-        searcher.env.stats.eval_execs
-    );
-    println!("total wall time: {:.1}s", t0.elapsed().as_secs_f64());
+        searcher.env.stats.eval_execs,
+        searcher.agent.act_calls,
+        searcher.agent.param_uploads
+    )?;
+    writeln!(out, "wall time: {:.1}s", t0.elapsed().as_secs_f64())?;
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args());
+    let dir = releq::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Arc::new(Engine::new(dir)?);
+
+    // multi-network mode: fan the per-network pipelines across shard threads
+    let nets: Vec<String> = match args.opt_str("nets") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => vec![args.str_of("net", "lenet")],
+    };
+
+    let t0 = std::time::Instant::now();
+    if nets.len() == 1 {
+        print!("{}", run_one(&engine, &manifest, &nets[0], &args)?);
+        return Ok(());
+    }
+    let n_nets = nets.len();
+    let shards = parallel::default_shards(n_nets);
+    println!("running {n_nets} networks on {shards} shard(s): {nets:?}\n");
+    let chunks = parallel::chunk_evenly(nets, shards);
+    let reports = parallel::run_sharded(chunks, |_, chunk| {
+        chunk
+            .iter()
+            .map(|net_name| run_one(&engine, &manifest, net_name, &args))
+            .collect::<Result<Vec<String>>>()
+    })?;
+    for r in reports.into_iter().flatten() {
+        println!("{r}");
+    }
+    println!("total wall time ({n_nets} networks): {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())
 }

@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example pareto_frontier [-- --net lenet --samples 2500]
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use releq::baselines::paper_releq_solution;
@@ -18,21 +18,34 @@ fn main() -> Result<()> {
     let net_name = args.str_of("net", "lenet");
     let dir = releq::artifacts_dir();
     let manifest = Manifest::load(&dir)?;
-    let engine = Rc::new(Engine::new(dir)?);
+    let engine = Arc::new(Engine::new(dir)?);
     let net = manifest.network(&net_name)?;
 
     let mut env_cfg = EnvConfig::default();
     env_cfg.pretrain_steps = releq::config::preset(&net_name).env.pretrain_steps;
-    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
+    let mk_env = || {
+        QuantEnv::new(
+            engine.clone(),
+            net,
+            manifest.bits_max,
+            manifest.fp_bits,
+            env_cfg.clone(),
+        )
+    };
+    let mut env = mk_env()?;
     println!("{net_name}: Acc_FullP {:.4}", env.acc_fullp);
 
     let mut cfg = pareto::EnumConfig::default();
     cfg.max_points = args.usize_of("samples", 2500);
     let space = pareto::space_size(&cfg, net.l);
-    println!("design space: {space} assignments (bits {}..{})", cfg.min_bits, cfg.max_bits);
+    let shards = args.usize_of("shards", releq::parallel::default_shards(cfg.max_points));
+    println!(
+        "design space: {space} assignments (bits {}..{}); {shards} shard(s)",
+        cfg.min_bits, cfg.max_bits
+    );
 
     let t0 = std::time::Instant::now();
-    let (points, exhaustive) = pareto::enumerate(&mut env, &cfg)?;
+    let (points, exhaustive) = pareto::enumerate_sharded(&mk_env, &cfg, net.l, shards)?;
     println!(
         "evaluated {} points ({}) in {:.1}s",
         points.len(),

@@ -1,9 +1,9 @@
-use std::rc::Rc;
+use std::sync::Arc;
 use releq::coordinator::{EnvConfig, QuantEnv};
 use releq::runtime::{Engine, Manifest};
 fn main() {
     let manifest = Manifest::load(&releq::artifacts_dir()).unwrap();
-    let engine = Rc::new(Engine::new(releq::artifacts_dir()).unwrap());
+    let engine = Arc::new(Engine::new(releq::artifacts_dir()).unwrap());
     let net = manifest.network("resnet20").unwrap();
     let mut cfg = EnvConfig::default();
     cfg.pretrain_steps = 60;

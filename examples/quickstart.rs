@@ -7,7 +7,7 @@
 //! quantize+matmul kernel (Layer 1) inside the lowered train/eval HLO
 //! (Layer 2), driven by the Rust coordinator (Layer 3).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 use releq::coordinator::{SearchConfig, Searcher};
@@ -17,7 +17,7 @@ use releq::runtime::{Engine, Manifest};
 fn main() -> Result<()> {
     let dir = releq::artifacts_dir();
     let manifest = Manifest::load(&dir)?;
-    let engine = Rc::new(Engine::new(dir)?);
+    let engine = Arc::new(Engine::new(dir)?);
     let net = manifest.network("lenet")?;
 
     println!("== ReLeQ quickstart: {} (L={} layers, P={} params) ==", net.name, net.l, net.p);

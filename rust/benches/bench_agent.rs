@@ -1,7 +1,12 @@
 //! PPO agent benchmarks: the act hot path (called L times per episode) and
 //! the 3-epoch update through the AOT artifact.
+//!
+//! §Perf before/after: `act/*/literals(before)` re-marshals the full param
+//! vector as a host literal per call (the pre-resident-buffer runtime);
+//! `act/*/resident(after)` serves every call from the device-resident copy
+//! uploaded once per PPO update.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use releq::coordinator::{AgentKind, PpoAgent, PpoConfig, StepRecord, STATE_DIM};
 use releq::runtime::{Engine, Manifest};
@@ -9,16 +14,26 @@ use releq::util::benchkit::Bench;
 
 fn main() {
     let manifest = Manifest::load(&releq::artifacts_dir()).expect("make artifacts first");
-    let engine = Rc::new(Engine::new(releq::artifacts_dir()).unwrap());
+    let engine = Arc::new(Engine::new(releq::artifacts_dir()).unwrap());
     let mut b = Bench::new("agent");
     for (kind, tag) in [(AgentKind::Lstm, "lstm"), (AgentKind::Fc, "fc")] {
         let mut agent =
             PpoAgent::new(engine.clone(), &manifest, kind, 4, 1, PpoConfig::default()).unwrap();
         let (h, c) = agent.initial_hidden();
         let s = [0.5f32; STATE_DIM];
-        b.case(&format!("act/{tag}"), || {
+        b.case(&format!("act/{tag}/literals(before)"), || {
+            let _ = agent.act_via_literals(&s, &h, &c).unwrap();
+        });
+        assert_eq!(agent.param_uploads, 0, "literal path must not upload params");
+        b.case(&format!("act/{tag}/resident(after)"), || {
             let _ = agent.act(&s, &h, &c).unwrap();
         });
+        // the headline invariant: every resident-path call above (warmup
+        // included) was served by ONE host->device param transfer
+        assert_eq!(
+            agent.param_uploads, 1,
+            "act must not re-upload params between updates"
+        );
         let episode: Vec<Vec<StepRecord>> = (0..8)
             .map(|_| {
                 (0..4)
@@ -35,5 +50,10 @@ fn main() {
         b.case(&format!("update_3epoch/{tag}"), || {
             let _ = agent.update(&episode).unwrap();
         });
+        // update invalidates the resident copy; the next act re-uploads once
+        let uploads_before = agent.param_uploads;
+        let _ = agent.act(&s, &h, &c).unwrap();
+        let _ = agent.act(&s, &h, &c).unwrap();
+        assert_eq!(agent.param_uploads, uploads_before + 1);
     }
 }

@@ -1,7 +1,7 @@
 //! Environment hot-path benchmarks: the quantized short-retrain + eval that
 //! dominates search wall-time, and the memo-cache hit path.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use releq::coordinator::{EnvConfig, QuantEnv};
 use releq::runtime::{Engine, Manifest};
@@ -9,7 +9,7 @@ use releq::util::benchkit::Bench;
 
 fn main() {
     let manifest = Manifest::load(&releq::artifacts_dir()).expect("make artifacts first");
-    let engine = Rc::new(Engine::new(releq::artifacts_dir()).unwrap());
+    let engine = Arc::new(Engine::new(releq::artifacts_dir()).unwrap());
     let net = manifest.network("lenet").unwrap();
     let mut cfg = EnvConfig::default();
     cfg.pretrain_steps = 60; // enough for the bench; accuracy itself irrelevant

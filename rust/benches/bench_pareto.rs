@@ -1,6 +1,8 @@
-//! Pareto machinery benchmarks: assignment generation and frontier
-//! extraction at Fig-6 scale (the env evals are measured in bench_env).
+//! Pareto machinery benchmarks: assignment generation, frontier extraction
+//! at Fig-6 scale, and the sharded fan-out/merge overhead (the env evals are
+//! measured in bench_env; end-to-end sharded enumeration in bench_search).
 
+use releq::parallel::{chunk_evenly, run_sharded};
 use releq::pareto::{assignments, pareto_frontier, EnumConfig, Point};
 use releq::util::benchkit::Bench;
 use releq::util::rng::Pcg32;
@@ -24,5 +26,24 @@ fn main() {
         .collect();
     b.case("frontier/2401_points", || {
         let _ = pareto_frontier(&points);
+    });
+
+    // §Perf: pure fan-out/merge cost of the sharded driver at Fig-6 scale
+    // (2401 LeNet assignments, 8 shards, trivial per-item work) — the fixed
+    // overhead sharded enumeration pays on top of the env evals, vs the
+    // same loop run sequentially.
+    let (assigns, _) = assignments(&cfg, 4);
+    let fake_eval = |bits: &[u32]| -> f64 { bits.iter().map(|&b| b as f64).sum::<f64>() };
+    b.case("enumerate_sharded/overhead_seq_2401", || {
+        let total: f64 = assigns.iter().map(|a| fake_eval(a)).sum();
+        assert!(total > 0.0);
+    });
+    b.case("enumerate_sharded/overhead_8shards_2401", || {
+        let chunks = chunk_evenly(assigns.clone(), 8);
+        let sums = run_sharded(chunks, |_, chunk| {
+            Ok(chunk.iter().map(|a| fake_eval(a)).sum::<f64>())
+        })
+        .unwrap();
+        assert!(sums.iter().sum::<f64>() > 0.0);
     });
 }

@@ -1,7 +1,7 @@
 //! PJRT runtime micro-benchmarks: artifact execution latency per network
 //! (train step, eval) — the raw floor everything else sits on.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use releq::coordinator::EnvConfig;
 use releq::data;
@@ -10,7 +10,7 @@ use releq::util::benchkit::Bench;
 
 fn main() {
     let manifest = Manifest::load(&releq::artifacts_dir()).expect("make artifacts first");
-    let engine = Rc::new(Engine::new(releq::artifacts_dir()).unwrap());
+    let engine = Arc::new(Engine::new(releq::artifacts_dir()).unwrap());
     let mut b = Bench::new("runtime");
     let cfg = EnvConfig::default();
 

@@ -1,26 +1,69 @@
 //! End-to-end search benchmarks: one full episode (embed -> act -> env eval
-//! -> reward, for every layer) on LeNet — the paper-system hot loop.
+//! -> reward, for every layer) on LeNet — the paper-system hot loop — plus
+//! the sharded drivers (§Perf): multi-seed replicas and sharded Pareto
+//! enumeration with the shared accuracy memo-cache.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use releq::config;
-use releq::coordinator::Searcher;
+use releq::coordinator::{run_replicas, EnvConfig, QuantEnv, Searcher};
+use releq::pareto;
 use releq::runtime::{Engine, Manifest};
 use releq::util::benchkit::Bench;
 
 fn main() {
     let manifest = Manifest::load(&releq::artifacts_dir()).expect("make artifacts first");
-    let engine = Rc::new(Engine::new(releq::artifacts_dir()).unwrap());
+    let engine = Arc::new(Engine::new(releq::artifacts_dir()).unwrap());
     let net = manifest.network("lenet").unwrap();
     let mut cfg = config::preset("lenet");
     cfg.env.pretrain_steps = 60;
     cfg.episodes = 8; // one PPO update per measured iteration
     cfg.patience = 0;
-    let mut searcher = Searcher::new(engine, &manifest, net, cfg).unwrap();
+    let mut searcher = Searcher::new(engine.clone(), &manifest, net, cfg.clone()).unwrap();
     let mut b = Bench::new("search");
     b.min_iters = 3;
     b.max_iters = 12;
     b.case("8_episodes_plus_update/lenet", || {
         let _ = searcher.run().unwrap();
+    });
+
+    // §Perf: 4 independent replicas, sequential loop vs the sharded driver;
+    // RELEQ_SHARDS=1 on a single-core runner collapses both to the baseline
+    let seeds = [23u64, 24, 25, 26];
+    b.min_iters = 2;
+    b.max_iters = 4;
+    b.case("replicas_x4/sequential", || {
+        for &s in &seeds {
+            let mut one = cfg.clone();
+            one.seed = s;
+            let mut searcher = Searcher::new(engine.clone(), &manifest, net, one).unwrap();
+            let _ = searcher.run().unwrap();
+        }
+    });
+    b.case("replicas_x4/sharded", || {
+        let _ = run_replicas(&engine, &manifest, net, &cfg, &seeds).unwrap();
+    });
+
+    // §Perf: sharded Pareto enumeration (256 sampled LeNet points),
+    // sequential vs sharded with the shared memo-cache
+    let mut ecfg = pareto::EnumConfig::default();
+    ecfg.max_points = 256;
+    let mut env_cfg = EnvConfig::default();
+    env_cfg.pretrain_steps = 60;
+    let mk_env = || {
+        QuantEnv::new(
+            engine.clone(),
+            net,
+            manifest.bits_max,
+            manifest.fp_bits,
+            env_cfg.clone(),
+        )
+    };
+    b.case("pareto_256pts/1shard", || {
+        let _ = pareto::enumerate_sharded(&mk_env, &ecfg, net.l, 1).unwrap();
+    });
+    b.case("pareto_256pts/sharded", || {
+        let shards = releq::parallel::default_shards(ecfg.max_points);
+        let _ = pareto::enumerate_sharded(&mk_env, &ecfg, net.l, shards).unwrap();
     });
 }

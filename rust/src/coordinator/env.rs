@@ -9,18 +9,21 @@
 //! an accuracy memo-cache keyed by the bitwidth vector (identical bitwidth
 //! patterns recur constantly as the policy converges, so the cache removes
 //! most PJRT executions late in the search — see EXPERIMENTS.md §Perf).
+//!
+//! The memo-cache is an [`AccMemo`] behind an `Arc`: a lone env owns a
+//! private one, and the sharded drivers (`crate::parallel`) hand the same
+//! instance to every shard so an assignment evaluated by one shard is a
+//! cache hit for all the others.
 
-use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 use xla::Literal;
 
-use xla::PjRtBuffer;
-
 use crate::data::{self, Split};
+use crate::parallel::AccMemo;
 use crate::quant::CostModel;
-use crate::runtime::{lit_f32, lit_scalar, to_f32, to_vec_f32, Engine, Exe, NetworkMeta};
+use crate::runtime::{lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, NetworkMeta};
 
 #[derive(Debug, Clone)]
 pub struct EnvConfig {
@@ -61,12 +64,12 @@ pub struct QuantEnv {
     pub net: NetworkMeta,
     pub cost: CostModel,
     pub cfg: EnvConfig,
-    engine: Rc<Engine>,
-    train_exe: Rc<Exe>,
-    eval_exe: Rc<Exe>,
+    engine: Arc<Engine>,
+    train_exe: Arc<Exe>,
+    eval_exe: Arc<Exe>,
     /// fused retrain(k)+eval artifact — the accuracy-query hot path for
     /// shallow networks (None where the per-step path is faster)
-    fused_exe: Option<Rc<Exe>>,
+    fused_exe: Option<Arc<Exe>>,
     train: Split,
     /// pretrained full-precision snapshot (the search always retrains from it)
     pub pretrained: Vec<f32>,
@@ -79,8 +82,9 @@ pub struct QuantEnv {
     /// reachable so the asymmetric reward's accuracy term does not drown the
     /// quantization signal in evaluation noise (EXPERIMENTS.md, deviations).
     pub acc_ref: f64,
-    /// bits-vector -> validation accuracy
-    cache: HashMap<Vec<u32>, f64>,
+    /// bits-vector -> validation accuracy; private by default, shared across
+    /// shards via [`QuantEnv::share_memo`]
+    memo: Arc<AccMemo>,
     pub stats: EnvStats,
     /// fp-bits sentinel from the manifest (>= this disables quantization)
     fp_bits: f32,
@@ -100,18 +104,18 @@ pub struct QuantEnv {
 }
 
 struct FusedBuffers {
-    params: PjRtBuffer,
-    mom: PjRtBuffer,
-    train_x: PjRtBuffer,
-    train_y: PjRtBuffer,
-    val_x: PjRtBuffer,
-    val_y: PjRtBuffer,
+    params: DeviceBuf,
+    mom: DeviceBuf,
+    train_x: DeviceBuf,
+    train_y: DeviceBuf,
+    val_x: DeviceBuf,
+    val_y: DeviceBuf,
 }
 
 impl QuantEnv {
     /// Build the environment: generate synthetic data, pretrain the network
     /// in full precision, snapshot the weights, record Acc_FullP.
-    pub fn new(engine: Rc<Engine>, net: &NetworkMeta, bits_max: u32, fp_bits: f32,
+    pub fn new(engine: Arc<Engine>, net: &NetworkMeta, bits_max: u32, fp_bits: f32,
                cfg: EnvConfig) -> Result<QuantEnv> {
         let [h, _, _] = net.input;
         let (train, val) =
@@ -120,7 +124,7 @@ impl QuantEnv {
         Self::with_data(engine, net, bits_max, fp_bits, cfg, train, val)
     }
 
-    pub fn with_data(engine: Rc<Engine>, net: &NetworkMeta, bits_max: u32, fp_bits: f32,
+    pub fn with_data(engine: Arc<Engine>, net: &NetworkMeta, bits_max: u32, fp_bits: f32,
                      cfg: EnvConfig, train: Split, val: Split) -> Result<QuantEnv> {
         let train_exe = engine.exe(&format!("{}_train", net.name))?;
         let eval_exe = engine.exe(&format!("{}_eval", net.name))?;
@@ -162,7 +166,7 @@ impl QuantEnv {
             pretrained: params,
             acc_fullp: 0.0,
             acc_ref: 0.0,
-            cache: HashMap::new(),
+            memo: Arc::new(AccMemo::new()),
             stats: EnvStats::default(),
             fp_bits,
             bits_max,
@@ -180,6 +184,21 @@ impl QuantEnv {
         let base = env.accuracy(&vec![bits_max; env.net.l])?;
         env.acc_ref = env.acc_fullp.max(base);
         Ok(env)
+    }
+
+    /// Switch this env onto a shared memo-cache (sharded drivers call this
+    /// right after construction). Entries already memoized privately — e.g.
+    /// the uniform-bits_max probe from bring-up — are carried over.
+    pub fn share_memo(&mut self, memo: Arc<AccMemo>) {
+        if !Arc::ptr_eq(&self.memo, &memo) {
+            memo.extend(self.memo.entries());
+            self.memo = memo;
+        }
+    }
+
+    /// The memo-cache this env reads/writes (private unless shared).
+    pub fn memo(&self) -> &Arc<AccMemo> {
+        &self.memo
     }
 
     fn bits_literal(&self, bits: &[u32]) -> Result<Literal> {
@@ -281,16 +300,19 @@ impl QuantEnv {
         self.batch_cursor += self.net.fused_k;
         let bits_v: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
         let e = &self.engine;
+        let cursor_buf = e.buffer_scalar(cursor)?;
+        let bits_buf = e.buffer_f32(&bits_v, &[self.net.l])?;
+        let lr_buf = e.buffer_scalar(self.cfg.lr)?;
         let args = [
-            &bufs.params,
-            &bufs.mom,
-            &bufs.train_x,
-            &bufs.train_y,
-            &e.buffer_f32(&[cursor], &[])?,
-            &e.buffer_f32(&bits_v, &[self.net.l])?,
-            &e.buffer_f32(&[self.cfg.lr], &[])?,
-            &bufs.val_x,
-            &bufs.val_y,
+            bufs.params.raw(),
+            bufs.mom.raw(),
+            bufs.train_x.raw(),
+            bufs.train_y.raw(),
+            cursor_buf.raw(),
+            bits_buf.raw(),
+            lr_buf.raw(),
+            bufs.val_x.raw(),
+            bufs.val_y.raw(),
         ];
         let out = fused_exe.run_b(&args).context("fused retrain_eval")?;
         self.stats.train_execs += self.net.fused_k as u64;
@@ -304,7 +326,7 @@ impl QuantEnv {
     /// single-execution path when available.
     pub fn accuracy(&mut self, bits: &[u32]) -> Result<f64> {
         self.stats.evals += 1;
-        if let Some(&acc) = self.cache.get(bits) {
+        if let Some(acc) = self.memo.get(bits) {
             self.stats.cache_hits += 1;
             return Ok(acc);
         }
@@ -312,13 +334,19 @@ impl QuantEnv {
             Some(acc) => acc,
             None => self.retrain_and_eval(bits, self.cfg.retrain_steps)?,
         };
-        self.cache.insert(bits.to_vec(), acc);
+        self.memo.insert(bits, acc);
         Ok(acc)
     }
 
     /// Force the unfused (step-by-step literal) path — used by the perf
     /// benches to measure the before/after of the fused optimization.
+    ///
+    /// Deliberately bypasses the memo-cache on both read and write: the bench
+    /// must time the real retrain+eval every iteration, and a stale write
+    /// would poison `accuracy()` callers whose fused path is live. It still
+    /// counts as an eval in `EnvStats` so bench runs are not under-reported.
     pub fn accuracy_unfused(&mut self, bits: &[u32]) -> Result<f64> {
+        self.stats.evals += 1;
         self.retrain_and_eval(bits, self.cfg.retrain_steps)
     }
 
@@ -349,6 +377,6 @@ impl QuantEnv {
     }
 
     pub fn cache_len(&self) -> usize {
-        self.cache.len()
+        self.memo.len()
     }
 }

@@ -17,4 +17,6 @@ pub use embedding::{embed, StaticFeatures, STATE_DIM};
 pub use env::{EnvConfig, EnvStats, QuantEnv};
 pub use ppo::{AgentKind, PpoAgent, PpoConfig, StepRecord, UpdateStats};
 pub use reward::{RewardKind, RewardParams};
-pub use search::{ActionSpace, SearchConfig, SearchResult, Searcher};
+pub use search::{
+    best_replica, run_replicas, ActionSpace, SearchConfig, SearchResult, Searcher,
+};

@@ -7,12 +7,21 @@
 //! HLO; this module owns the *algorithm*: trajectory bookkeeping, GAE,
 //! advantage normalization, epoch looping — plus action sampling via the
 //! deterministic PCG stream.
+//!
+//! Perf (EXPERIMENTS.md §Perf): `act` is called L times per episode for
+//! thousands of episodes, and the parameter vector dominates its operand
+//! bytes. The params are therefore kept device-resident — uploaded once per
+//! PPO update (lazily, on the first act after an update invalidates them)
+//! instead of once per act call. Only the tiny state/h/c vectors transfer
+//! per call. The recurrent h'/c' come back to the host because PJRT returns
+//! the output tuple as a single host literal; re-uploading them costs
+//! `2*hidden` floats, negligible next to the param vector this path saves.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{lit_f32, lit_scalar, to_f32, to_vec_f32, Engine, Exe, Manifest};
+use crate::runtime::{lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, Manifest};
 use crate::util::rng::Pcg32;
 
 use super::embedding::STATE_DIM;
@@ -116,9 +125,14 @@ pub struct PpoAgent {
     pub cfg: PpoConfig,
     /// episode length this agent instance is bound to (the network's L)
     pub episode_len: usize,
-    act_exe: Rc<Exe>,
-    update_exe: Rc<Exe>,
+    engine: Arc<Engine>,
+    act_exe: Arc<Exe>,
+    update_exe: Arc<Exe>,
     pub params: Vec<f32>,
+    /// device-resident copy of `params`; uploaded lazily on the first act
+    /// after construction or an update, then reused for every act until the
+    /// next update invalidates it
+    params_buf: Option<DeviceBuf>,
     adam_m: Vec<f32>,
     adam_v: Vec<f32>,
     adam_t: f32,
@@ -127,10 +141,15 @@ pub struct PpoAgent {
     /// finished episodes waiting for the next update
     pending: Vec<Vec<StepRecord>>,
     pub updates_done: usize,
+    /// perf counters: host->device transfers of the full param vector, and
+    /// act calls served by the resident copy (EXPERIMENTS.md §Perf asserts
+    /// uploads == updates+1 over a run)
+    pub param_uploads: u64,
+    pub act_calls: u64,
 }
 
 impl PpoAgent {
-    pub fn new(engine: Rc<Engine>, manifest: &Manifest, kind: AgentKind,
+    pub fn new(engine: Arc<Engine>, manifest: &Manifest, kind: AgentKind,
                episode_len: usize, seed: u64, cfg: PpoConfig) -> Result<PpoAgent> {
         anyhow::ensure!(
             manifest.agent.state_dim == STATE_DIM,
@@ -163,9 +182,11 @@ impl PpoAgent {
             kind,
             cfg,
             episode_len,
+            engine,
             act_exe,
             update_exe,
             params,
+            params_buf: None,
             adam_m: vec![0.0; p],
             adam_v: vec![0.0; p],
             adam_t: 0.0,
@@ -173,6 +194,8 @@ impl PpoAgent {
             n_actions: manifest.agent.n_actions,
             pending: Vec::new(),
             updates_done: 0,
+            param_uploads: 0,
+            act_calls: 0,
         })
     }
 
@@ -181,16 +204,54 @@ impl PpoAgent {
         (vec![0.0; self.hidden], vec![0.0; self.hidden])
     }
 
+    /// Upload the params to the device if stale (post-update) or never
+    /// uploaded. This is the only place the full param vector crosses to the
+    /// device on the act path.
+    fn ensure_resident_params(&mut self) -> Result<()> {
+        if self.params_buf.is_none() {
+            self.params_buf =
+                Some(self.engine.buffer_f32(&self.params, &[self.params.len()])?);
+            self.param_uploads += 1;
+        }
+        Ok(())
+    }
+
     /// Policy forward: returns (action-probabilities, value, h', c').
-    pub fn act(&self, state: &[f32; STATE_DIM], h: &[f32], c: &[f32])
+    ///
+    /// Hot path: the params operand is device-resident (zero per-call param
+    /// uploads between PPO updates); only state/h/c (a few hundred bytes)
+    /// transfer per call.
+    pub fn act(&mut self, state: &[f32; STATE_DIM], h: &[f32], c: &[f32])
                -> Result<(Vec<f32>, f32, Vec<f32>, Vec<f32>)> {
+        self.act_calls += 1;
+        self.ensure_resident_params()?;
+        let s_buf = self.engine.buffer_f32(state, &[STATE_DIM])?;
+        let h_buf = self.engine.buffer_f32(h, &[self.hidden])?;
+        let c_buf = self.engine.buffer_f32(c, &[self.hidden])?;
+        let params_buf = self.params_buf.as_ref().expect("just ensured");
+        let args = [params_buf.raw(), s_buf.raw(), h_buf.raw(), c_buf.raw()];
+        let out = self.act_exe.run_b(&args).context("agent act")?;
+        Ok((
+            to_vec_f32(&out[0])?,
+            to_f32(&out[1])?,
+            to_vec_f32(&out[2])?,
+            to_vec_f32(&out[3])?,
+        ))
+    }
+
+    /// The pre-resident-buffer act path (full param vector re-marshalled as a
+    /// host literal on every call). Kept for the bench_agent before/after
+    /// measurement; not used by the search loop.
+    pub fn act_via_literals(&mut self, state: &[f32; STATE_DIM], h: &[f32], c: &[f32])
+                            -> Result<(Vec<f32>, f32, Vec<f32>, Vec<f32>)> {
+        self.act_calls += 1;
         let args = [
             lit_f32(&self.params, &[self.params.len() as i64])?,
             lit_f32(state, &[STATE_DIM as i64])?,
             lit_f32(h, &[self.hidden as i64])?,
             lit_f32(c, &[self.hidden as i64])?,
         ];
-        let out = self.act_exe.run(&args).context("agent act")?;
+        let out = self.act_exe.run(&args).context("agent act (literals)")?;
         Ok((
             to_vec_f32(&out[0])?,
             to_f32(&out[1])?,
@@ -224,6 +285,12 @@ impl PpoAgent {
 
     /// One PPO update: GAE + advantage normalization + `epochs` Adam steps
     /// through the AOT update artifact.
+    ///
+    /// The batch tensors (states/actions/old_logp/advs/rets) and the scalar
+    /// hyperparameters are constant across the epoch loop, so they are
+    /// uploaded to the device once per update; only the evolving params and
+    /// Adam state (which PJRT returns to the host each epoch) re-transfer
+    /// per epoch. Invalidates the resident act-path params on completion.
     pub fn update(&mut self, batch: &[Vec<StepRecord>]) -> Result<UpdateStats> {
         let b = batch.len();
         let l = self.episode_len;
@@ -252,24 +319,41 @@ impl PpoAgent {
             *a = ((*a as f64 - mean) / std) as f32;
         }
 
-        let bl = [b as i64, l as i64];
+        // per-update resident operands (constant across epochs)
+        let e = &self.engine;
+        let states_buf = e.buffer_f32(&states, &[b, l, d])?;
+        let actions_buf = e.buffer_f32(&actions, &[b, l])?;
+        let old_logp_buf = e.buffer_f32(&old_logp, &[b, l])?;
+        let advs_buf = e.buffer_f32(&advs, &[b, l])?;
+        let rets_buf = e.buffer_f32(&rets, &[b, l])?;
+        let clip_buf = e.buffer_scalar(self.cfg.clip_eps)?;
+        let ent_buf = e.buffer_scalar(self.cfg.ent_coef)?;
+        let lr_buf = e.buffer_scalar(self.cfg.lr)?;
+
+        let p = self.params.len();
         let mut stats = UpdateStats::default();
         for _ in 0..self.cfg.epochs {
+            // evolving state: PJRT hands these back as host literals each
+            // epoch, so they re-upload per epoch (small next to the batch)
+            let params_buf = e.buffer_f32(&self.params, &[p])?;
+            let m_buf = e.buffer_f32(&self.adam_m, &[p])?;
+            let v_buf = e.buffer_f32(&self.adam_v, &[p])?;
+            let t_buf = e.buffer_scalar(self.adam_t)?;
             let args = [
-                lit_f32(&self.params, &[self.params.len() as i64])?,
-                lit_f32(&self.adam_m, &[self.adam_m.len() as i64])?,
-                lit_f32(&self.adam_v, &[self.adam_v.len() as i64])?,
-                lit_scalar(self.adam_t),
-                lit_f32(&states, &[b as i64, l as i64, d as i64])?,
-                lit_f32(&actions, &bl)?,
-                lit_f32(&old_logp, &bl)?,
-                lit_f32(&advs, &bl)?,
-                lit_f32(&rets, &bl)?,
-                lit_scalar(self.cfg.clip_eps),
-                lit_scalar(self.cfg.ent_coef),
-                lit_scalar(self.cfg.lr),
+                params_buf.raw(),
+                m_buf.raw(),
+                v_buf.raw(),
+                t_buf.raw(),
+                states_buf.raw(),
+                actions_buf.raw(),
+                old_logp_buf.raw(),
+                advs_buf.raw(),
+                rets_buf.raw(),
+                clip_buf.raw(),
+                ent_buf.raw(),
+                lr_buf.raw(),
             ];
-            let out = self.update_exe.run(&args).context("agent update")?;
+            let out = self.update_exe.run_b(&args).context("agent update")?;
             self.params = to_vec_f32(&out[0])?;
             self.adam_m = to_vec_f32(&out[1])?;
             self.adam_v = to_vec_f32(&out[2])?;
@@ -279,12 +363,14 @@ impl PpoAgent {
             stats.entropy += to_f32(&out[6])? as f64;
             stats.approx_kl += to_f32(&out[7])? as f64;
         }
-        let e = self.cfg.epochs as f64;
-        stats.pi_loss /= e;
-        stats.v_loss /= e;
-        stats.entropy /= e;
-        stats.approx_kl /= e;
+        let ep_count = self.cfg.epochs as f64;
+        stats.pi_loss /= ep_count;
+        stats.v_loss /= ep_count;
+        stats.entropy /= ep_count;
+        stats.approx_kl /= ep_count;
         self.updates_done += 1;
+        // the resident act-path copy is stale now; next act re-uploads once
+        self.params_buf = None;
         Ok(stats)
     }
 

@@ -3,11 +3,12 @@
 //! convergence detection — then a greedy rollout + long retrain produces the
 //! final Table-2-style solution.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::metrics::{EpisodeLog, SearchLog};
+use crate::parallel;
 use crate::runtime::{Engine, Manifest, NetworkMeta};
 use crate::util::rng::Pcg32;
 
@@ -105,7 +106,7 @@ pub struct Searcher {
 }
 
 impl Searcher {
-    pub fn new(engine: Rc<Engine>, manifest: &Manifest, net: &NetworkMeta,
+    pub fn new(engine: Arc<Engine>, manifest: &Manifest, net: &NetworkMeta,
                cfg: SearchConfig) -> Result<Searcher> {
         let env = QuantEnv::new(
             engine.clone(),
@@ -160,12 +161,20 @@ impl Searcher {
             h = h2;
             c = c2;
             let action = if greedy {
-                probs
+                // total_cmp instead of partial_cmp().unwrap(): no panic on
+                // NaN — but total_cmp ranks NaN above +inf, so a diverged
+                // policy would silently "win" the argmax; surface it as a
+                // proper error instead of reporting a garbage solution
+                let (i, &p) = probs
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .expect("non-empty action probabilities");
+                anyhow::ensure!(
+                    !p.is_nan(),
+                    "policy diverged: NaN action probability at layer {l}"
+                );
+                i
             } else {
                 PpoAgent::sample(&probs, &mut self.rng)
             };
@@ -252,5 +261,86 @@ impl Searcher {
             episodes_run,
             final_probs,
         })
+    }
+}
+
+/// Run independent search replicas — `base` with each seed substituted — in
+/// parallel, one `Searcher` (own `QuantEnv` + agent) per shard thread over
+/// the shared engine. Results come back in seed order (deterministic merge),
+/// so `run_replicas(e, m, n, cfg, &[s])` reproduces a sequential
+/// `Searcher::new(..).run()` with `cfg.seed = s` exactly.
+pub fn run_replicas(engine: &Arc<Engine>, manifest: &Manifest, net: &NetworkMeta,
+                    base: &SearchConfig, seeds: &[u64]) -> Result<Vec<SearchResult>> {
+    let cfgs: Vec<SearchConfig> = seeds
+        .iter()
+        .map(|&s| {
+            let mut c = base.clone();
+            c.seed = s;
+            c
+        })
+        .collect();
+    parallel::run_sharded(cfgs, |_, cfg| {
+        let mut searcher = Searcher::new(engine.clone(), manifest, net, cfg)?;
+        searcher.run()
+    })
+}
+
+/// Pick the best replica: highest final accuracy, ties broken by lower
+/// State_Q (cheaper solution), then by index (deterministic). A diverged
+/// replica (NaN accuracy) always loses — `total_cmp` alone would rank NaN
+/// above +inf and hand the win to the one broken run.
+pub fn best_replica(results: &[SearchResult]) -> Option<usize> {
+    let acc_key = |i: usize| {
+        let a = results[i].acc_final;
+        if a.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            a
+        }
+    };
+    (0..results.len()).min_by(|&a, &b| {
+        acc_key(b)
+            .total_cmp(&acc_key(a))
+            .then(results[a].state_q.total_cmp(&results[b].state_q))
+            .then(a.cmp(&b))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(acc_final: f64, state_q: f64) -> SearchResult {
+        SearchResult {
+            net: "test".to_string(),
+            bits: vec![4, 4],
+            avg_bits: 4.0,
+            acc_fullp: 1.0,
+            acc_final,
+            acc_loss_pct: 0.0,
+            state_q,
+            log: SearchLog::default(),
+            episodes_run: 0,
+            final_probs: vec![],
+        }
+    }
+
+    #[test]
+    fn best_replica_picks_highest_acc_then_cheapest() {
+        let rs = vec![result(0.90, 0.5), result(0.95, 0.6), result(0.95, 0.4)];
+        assert_eq!(best_replica(&rs), Some(2));
+        assert_eq!(best_replica(&rs[..1]), Some(0));
+        assert_eq!(best_replica(&[]), None);
+    }
+
+    #[test]
+    fn best_replica_never_picks_nan() {
+        // total_cmp alone would rank NaN above +inf; a diverged replica
+        // must lose to any finite one
+        let rs = vec![result(f64::NAN, 0.1), result(0.6, 0.9)];
+        assert_eq!(best_replica(&rs), Some(1));
+        // all-NaN still returns deterministically
+        let all_nan = vec![result(f64::NAN, 0.2), result(f64::NAN, 0.1)];
+        assert_eq!(best_replica(&all_nan), Some(1));
     }
 }

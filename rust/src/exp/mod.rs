@@ -12,7 +12,7 @@ pub mod table2;
 pub mod table45;
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -24,7 +24,7 @@ use crate::util::cli::Args;
 /// Shared experiment context.
 pub struct Ctx {
     pub manifest: Manifest,
-    pub engine: Rc<Engine>,
+    pub engine: Arc<Engine>,
     pub out: PathBuf,
     /// scale factor on episode counts (`--fast` = 0.25, `--episodes-scale X`)
     pub episodes_scale: f64,

@@ -2,24 +2,27 @@
 //! sense: config resolution -> engine bring-up -> run -> report).
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::baselines::{paper_solution, AdmmConfig, AdmmSelector};
 use crate::config;
-use crate::coordinator::{EnvConfig, QuantEnv, SearchResult, Searcher};
+use crate::coordinator::{
+    best_replica, run_replicas, EnvConfig, QuantEnv, SearchResult, Searcher,
+};
 use crate::metrics::sparkline;
+use crate::parallel;
 use crate::pareto;
 use crate::runtime::{Engine, Manifest};
 use crate::sim::{Stripes, StripesConfig, TvmCpu, TvmCpuConfig};
 use crate::util::cli::Args;
 
 /// Shared bring-up: manifest + engine.
-pub fn bringup() -> Result<(Manifest, Rc<Engine>)> {
+pub fn bringup() -> Result<(Manifest, Arc<Engine>)> {
     let dir = crate::artifacts_dir();
     let manifest = Manifest::load(&dir)?;
-    let engine = Rc::new(Engine::new(dir)?);
+    let engine = Arc::new(Engine::new(dir)?);
     Ok((manifest, engine))
 }
 
@@ -110,18 +113,50 @@ pub fn cmd_search(args: &Args) -> Result<()> {
     let (manifest, engine) = bringup()?;
     let net = manifest.network(&net_name)?;
     let cfg = config::resolve(&net_name, args)?;
+    let replicas = args.usize_of("replicas", 1);
     let t0 = std::time::Instant::now();
+
+    // multi-seed replica mode: fan independent searches across shard threads
+    // (seeds base, base+1, ...) and report the best solution found
+    if replicas > 1 {
+        let seeds: Vec<u64> = (0..replicas as u64).map(|i| cfg.seed + i).collect();
+        println!("{net_name}: running {replicas} search replicas, seeds {seeds:?}...");
+        let results = run_replicas(&engine, &manifest, net, &cfg, &seeds)?;
+        for (r, seed) in results.iter().zip(&seeds) {
+            println!(
+                "seed {seed}: bits {:?} (avg {:.2}), acc {:.4} (loss {:.2}%), state_q {:.3}",
+                r.bits, r.avg_bits, r.acc_final, r.acc_loss_pct, r.state_q
+            );
+        }
+        let best = best_replica(&results).expect("replicas > 1");
+        println!("-- best replica: seed {} --", seeds[best]);
+        report_search(&results[best], true);
+        println!("wall time           : {:.1}s", t0.elapsed().as_secs_f64());
+        let dir = out_dir(args)?;
+        results[best]
+            .log
+            .write_csv(&dir.join(format!("search_{net_name}.csv")))?;
+        results[best]
+            .log
+            .write_json(&dir.join(format!("search_{net_name}.json")))?;
+        println!("logs (best replica): {}/search_{net_name}.{{csv,json}}", dir.display());
+        return Ok(());
+    }
+
     let mut searcher = Searcher::new(engine.clone(), &manifest, net, cfg)?;
     println!("{net_name}: pretrained, Acc_FullP = {:.4}; searching...", searcher.env.acc_fullp);
     let result = searcher.run()?;
     report_search(&result, true);
     println!("wall time           : {:.1}s", t0.elapsed().as_secs_f64());
     println!(
-        "env: {} evals, {} cache hits, {} train execs, {} eval execs",
+        "env: {} evals, {} cache hits, {} train execs, {} eval execs; \
+         agent: {} acts, {} param uploads",
         searcher.env.stats.evals,
         searcher.env.stats.cache_hits,
         searcher.env.stats.train_execs,
-        searcher.env.stats.eval_execs
+        searcher.env.stats.eval_execs,
+        searcher.agent.act_calls,
+        searcher.agent.param_uploads
     );
     let dir = out_dir(args)?;
     result.log.write_csv(&dir.join(format!("search_{net_name}.csv")))?;
@@ -136,14 +171,26 @@ pub fn cmd_pareto(args: &Args) -> Result<()> {
     let net = manifest.network(&net_name)?;
     let mut env_cfg = EnvConfig::default();
     env_cfg.pretrain_steps = config::preset(&net_name).env.pretrain_steps;
-    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
     let mut ecfg = pareto::EnumConfig::default();
     ecfg.max_points = args.usize_of("samples", ecfg.max_points);
     ecfg.seed = args.u64_of("seed", ecfg.seed);
+    let shards = args.usize_of("shards", parallel::default_shards(ecfg.max_points));
     let space = pareto::space_size(&ecfg, net.l);
-    println!("{net_name}: design space {space} points; evaluating up to {}", ecfg.max_points);
+    println!(
+        "{net_name}: design space {space} points; evaluating up to {} on {shards} shard(s)",
+        ecfg.max_points
+    );
     let t0 = std::time::Instant::now();
-    let (points, exhaustive) = pareto::enumerate(&mut env, &ecfg)?;
+    let mk_env = || {
+        QuantEnv::new(
+            engine.clone(),
+            net,
+            manifest.bits_max,
+            manifest.fp_bits,
+            env_cfg.clone(),
+        )
+    };
+    let (points, exhaustive) = pareto::enumerate_sharded(mk_env, &ecfg, net.l, shards)?;
     let frontier = pareto::pareto_frontier(&points);
     println!(
         "evaluated {} points ({}) in {:.1}s; frontier has {} points:",

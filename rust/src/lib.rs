@@ -24,6 +24,7 @@ pub mod coordinator;
 pub mod data;
 pub mod launcher;
 pub mod metrics;
+pub mod parallel;
 pub mod pareto;
 pub mod quant;
 pub mod runtime;

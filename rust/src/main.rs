@@ -43,8 +43,9 @@ fn print_help() {
          subcommands:\n\
          \x20 search    --net <name> [--episodes N] [--seed S] [--reward proposed|ratio|diff]\n\
          \x20           [--agent lstm|fc] [--action-space flexible|restricted] [--out dir]\n\
+         \x20           [--replicas N]   (N parallel multi-seed searches; best wins)\n\
          \x20 pretrain  --net <name> [--steps N] [--lr F] [--verbose]\n\
-         \x20 pareto    --net <name> [--samples N] [--out dir]\n\
+         \x20 pareto    --net <name> [--samples N] [--shards N] [--out dir]\n\
          \x20 hw-eval   --net <name> --bits 8,4,4,8\n\
          \x20 admm      --net <name> [--target-bits F]\n\
          \x20 exp       <table2|table4|table5|fig5|fig6|fig7|fig8|fig9|fig10|ablation-action|ablation-lstm|all>\n\

@@ -1,0 +1,265 @@
+//! Sharded parallel driver: a scoped-thread worker pool with deterministic
+//! merge order, plus the shared concurrent accuracy memo-cache.
+//!
+//! ReLeQ's wall-clock cost is thousands of small PJRT executions; several of
+//! the surrounding loops are embarrassingly parallel once the engine is
+//! `Send + Sync`:
+//!
+//! * Pareto `enumerate` — the assignment list splits into contiguous chunks,
+//!   one `QuantEnv` per shard, accuracies deduplicated through [`AccMemo`];
+//! * multi-seed search replicas — independent `Searcher`s per seed;
+//! * the per-network loop in `examples/e2e_releq.rs`.
+//!
+//! Design rules (EXPERIMENTS.md §Perf):
+//! * every shard owns its own `QuantEnv` (PJRT buffers and the train-batch
+//!   cursor are per-shard state); only the `Engine` and [`AccMemo`] are
+//!   shared;
+//! * results merge in **shard-index order**, never completion order, so a
+//!   sharded run reports the same sequence regardless of thread scheduling;
+//! * shard count comes from `RELEQ_SHARDS` when set, else
+//!   `available_parallelism` clamped to the number of work units.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use anyhow::Result;
+
+/// Number of shards to use for `n_units` independent units of work:
+/// `RELEQ_SHARDS` if set (>= 1), else `available_parallelism`, clamped to
+/// `n_units` so no shard is empty.
+pub fn default_shards(n_units: usize) -> usize {
+    let hw = std::env::var("RELEQ_SHARDS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    hw.min(n_units.max(1))
+}
+
+/// Split `items` into `n` contiguous chunks whose sizes differ by at most 1
+/// (the first `len % n` chunks get the extra element). Order is preserved, so
+/// concatenating the chunks reproduces `items` exactly — the invariant the
+/// deterministic merge relies on.
+pub fn chunk_evenly<T>(items: Vec<T>, n: usize) -> Vec<Vec<T>> {
+    let n = n.max(1);
+    let len = items.len();
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n.min(len.max(1)));
+    let mut it = items.into_iter();
+    for i in 0..n {
+        let take = base + usize::from(i < extra);
+        if take == 0 {
+            continue;
+        }
+        out.push(it.by_ref().take(take).collect());
+    }
+    out
+}
+
+/// Fan `shards` out across scoped worker threads and merge the results in
+/// shard-index order. `worker(shard_index, shard)` runs on its own thread;
+/// the merge is deterministic: element `i` of the returned vec is shard `i`'s
+/// result no matter which thread finished first. On failure the error of the
+/// lowest-indexed failing shard is returned (also deterministic).
+///
+/// A single shard runs inline on the caller's thread — no pool overhead for
+/// the sequential case.
+pub fn run_sharded<T, R, F>(shards: Vec<T>, worker: F) -> Result<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> Result<R> + Sync,
+{
+    if shards.len() <= 1 {
+        return shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| worker(i, s))
+            .collect();
+    }
+    let results: Vec<Result<R>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| scope.spawn({ let worker = &worker; move || worker(i, shard) }))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                // downcast the payload: `{:?}` on Box<dyn Any> prints only
+                // "Any { .. }", losing the actual panic message
+                Err(panic) => {
+                    let msg = panic
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| panic.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".to_string());
+                    Err(anyhow::anyhow!("shard worker panicked: {msg}"))
+                }
+            })
+            .collect()
+    });
+    results.into_iter().collect()
+}
+
+/// Shared concurrent accuracy memo-cache: bitwidth vector -> validation
+/// accuracy, shared across shards so one shard's evaluation saves every
+/// other shard the PJRT executions for the same assignment.
+///
+/// Hit/miss counters are global (atomics); per-env accounting stays in
+/// `EnvStats`.
+#[derive(Default)]
+pub struct AccMemo {
+    map: RwLock<HashMap<Vec<u32>, f64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl AccMemo {
+    pub fn new() -> AccMemo {
+        AccMemo::default()
+    }
+
+    pub fn get(&self, bits: &[u32]) -> Option<f64> {
+        let got = self.map.read().unwrap().get(bits).copied();
+        match got {
+            Some(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert an evaluated accuracy. Two shards racing on the same vector
+    /// both computed it from the same pretrained snapshot; last write wins
+    /// and either value is correct for that (bits -> accuracy) key.
+    pub fn insert(&self, bits: &[u32], acc: f64) {
+        self.map.write().unwrap().insert(bits.to_vec(), acc);
+    }
+
+    /// Bulk-import entries (used when an env with a warm private cache is
+    /// switched onto a shared memo).
+    pub fn extend<I: IntoIterator<Item = (Vec<u32>, f64)>>(&self, entries: I) {
+        let mut m = self.map.write().unwrap();
+        for (k, v) in entries {
+            m.insert(k, v);
+        }
+    }
+
+    /// Snapshot of all memoized (bits, accuracy) pairs.
+    pub fn entries(&self) -> Vec<(Vec<u32>, f64)> {
+        self.map
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, &v)| (k.clone(), v))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn chunks_preserve_order_and_balance() {
+        let items: Vec<usize> = (0..10).collect();
+        let chunks = chunk_evenly(items.clone(), 3);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0], vec![0, 1, 2, 3]);
+        assert_eq!(chunks[1], vec![4, 5, 6]);
+        assert_eq!(chunks[2], vec![7, 8, 9]);
+        let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+        assert_eq!(flat, items);
+    }
+
+    #[test]
+    fn chunks_more_shards_than_items() {
+        let chunks = chunk_evenly(vec![1, 2], 5);
+        assert_eq!(chunks, vec![vec![1], vec![2]]);
+        assert!(chunk_evenly(Vec::<u8>::new(), 4).is_empty());
+    }
+
+    #[test]
+    fn merge_order_is_shard_order_not_completion_order() {
+        // earlier shards sleep longer, so completion order is reversed;
+        // the merged output must still be in shard-index order
+        let shards: Vec<u64> = (0..6).collect();
+        let out = run_sharded(shards, |i, s| {
+            std::thread::sleep(std::time::Duration::from_millis(30 - 5 * i as u64));
+            Ok(s * 10)
+        })
+        .unwrap();
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50]);
+    }
+
+    #[test]
+    fn first_failing_shard_error_wins() {
+        let err = run_sharded(vec![0u32, 1, 2, 3], |i, _| {
+            if i >= 2 {
+                anyhow::bail!("shard {i} failed")
+            }
+            Ok(i)
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("shard 2"), "{err}");
+    }
+
+    #[test]
+    fn single_shard_runs_inline() {
+        let out = run_sharded(vec![41u64], |i, s| Ok(s + i as u64 + 1)).unwrap();
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn memo_counts_hits_across_threads() {
+        let memo = Arc::new(AccMemo::new());
+        memo.insert(&[4, 4], 0.9);
+        let shards: Vec<u32> = (0..8).collect();
+        run_sharded(shards, |_, _| {
+            assert_eq!(memo.get(&[4, 4]), Some(0.9)); // hit
+            if memo.get(&[2, 2]).is_none() {
+                memo.insert(&[2, 2], 0.5); // racy insert: last write wins
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(memo.hits(), 8);
+        assert!(memo.misses() >= 1);
+        assert_eq!(memo.len(), 2);
+        assert_eq!(memo.get(&[2, 2]), Some(0.5));
+    }
+
+    #[test]
+    fn default_shards_clamps_to_units() {
+        assert_eq!(default_shards(1), 1);
+        assert!(default_shards(1024) >= 1);
+        assert!(default_shards(2) <= 2);
+    }
+}

@@ -8,9 +8,12 @@
 //! the limitation is reported (the paper itself calls full enumeration
 //! infeasible beyond moderate sizes).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::coordinator::QuantEnv;
+use crate::parallel::{self, AccMemo};
 use crate::util::rng::Pcg32;
 
 /// One evaluated design point.
@@ -25,12 +28,14 @@ pub struct Point {
 /// sorted by increasing state_q.
 pub fn pareto_frontier(points: &[Point]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..points.len()).collect();
+    // total_cmp: a NaN accuracy (degenerate eval) must not panic frontier
+    // extraction; NaN state_acc sorts above +inf and then loses every
+    // `> best_acc` comparison below, so such points never enter the frontier
     idx.sort_by(|&a, &b| {
         points[a]
             .state_q
-            .partial_cmp(&points[b].state_q)
-            .unwrap()
-            .then(points[b].state_acc.partial_cmp(&points[a].state_acc).unwrap())
+            .total_cmp(&points[b].state_q)
+            .then(points[b].state_acc.total_cmp(&points[a].state_acc))
     });
     let mut frontier = Vec::new();
     let mut best_acc = f64::NEG_INFINITY;
@@ -117,6 +122,63 @@ pub fn enumerate(env: &mut QuantEnv, cfg: &EnumConfig) -> Result<(Vec<Point>, bo
         points.push(Point { state_q: env.state_q(&bits), state_acc, bits });
     }
     Ok((points, exhaustive))
+}
+
+/// Sharded enumeration: split the assignment list into contiguous chunks and
+/// evaluate them on `n_shards` worker threads, each owning its own `QuantEnv`
+/// built by `mk_env` (per-shard PJRT buffers and batch cursor), all shards
+/// deduplicating accuracy queries through one shared [`AccMemo`].
+///
+/// The merge is deterministic: chunks are contiguous and concatenate in
+/// shard-index order, so the returned points carry the bitwidth assignments
+/// in exactly the sequence the sequential [`enumerate`] would produce
+/// (accuracy *values* can differ slightly from a sequential run because each
+/// shard advances its own train-batch cursor).
+///
+/// Cost note: every shard pays `mk_env`'s full bring-up (data generation +
+/// pretraining). That fixed cost amortizes over Fig-6-scale chunks (hundreds
+/// of evals per shard); for tiny `max_points`, pass `n_shards = 1` or lower
+/// `pretrain_steps` in the env config the closure captures.
+///
+/// Reproducibility: identical `mk_env` closures produce identical envs
+/// (same seed, same bring-up), so the racy last-write-wins imports into the
+/// shared memo carry identical values. Chunks are disjoint, so each
+/// *distinct* vector is evaluated by exactly one shard. The one residual
+/// nondeterminism: a sampled space can contain the same random vector in
+/// two chunks, and which shard's (deterministic-per-shard) accuracy lands
+/// in both points depends on timing. Exhaustive spaces have no duplicates
+/// and are fully reproducible at any shard count.
+pub fn enumerate_sharded<F>(mk_env: F, cfg: &EnumConfig, l: usize, n_shards: usize)
+                            -> Result<(Vec<Point>, bool)>
+where
+    F: Fn() -> Result<QuantEnv> + Sync,
+{
+    enumerate_sharded_with(mk_env, cfg, l, n_shards, Arc::new(AccMemo::new()))
+}
+
+/// [`enumerate_sharded`] with a caller-supplied memo, so the accuracies
+/// evaluated during enumeration stay available afterwards (attach the memo
+/// to a follow-up env via `QuantEnv::share_memo` to score extra points
+/// without re-running their retrains — see `exp::figs::fig6`).
+pub fn enumerate_sharded_with<F>(mk_env: F, cfg: &EnumConfig, l: usize, n_shards: usize,
+                                 memo: Arc<AccMemo>) -> Result<(Vec<Point>, bool)>
+where
+    F: Fn() -> Result<QuantEnv> + Sync,
+{
+    let (assigns, exhaustive) = assignments(cfg, l);
+    let n_shards = n_shards.clamp(1, assigns.len().max(1));
+    let chunks = parallel::chunk_evenly(assigns, n_shards);
+    let per_shard = parallel::run_sharded(chunks, |_, chunk| {
+        let mut env = mk_env()?;
+        env.share_memo(memo.clone());
+        let mut points = Vec::with_capacity(chunk.len());
+        for bits in chunk {
+            let state_acc = env.state_acc(&bits)?;
+            points.push(Point { state_q: env.state_q(&bits), state_acc, bits });
+        }
+        Ok(points)
+    })?;
+    Ok((per_shard.into_iter().flatten().collect(), exhaustive))
 }
 
 #[cfg(test)]

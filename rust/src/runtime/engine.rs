@@ -6,25 +6,54 @@
 //! 0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
 //! Every artifact is lowered with `return_tuple=True`, so execution returns a
 //! single tuple literal that [`Exe::run`] decomposes.
+//!
+//! The engine is `Send + Sync`: the compile cache sits behind an `RwLock`,
+//! execution counters are atomics, and one `Engine` is shared across the
+//! sharded drivers in `crate::parallel` (PJRT clients serialize access to
+//! their internal state; concurrent `Execute` calls on a CPU client are part
+//! of the PJRT API contract).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 /// A compiled artifact plus execution statistics.
+///
+/// Counters are atomics so `&Exe` can be shared across shard threads; the
+/// relaxed ordering is fine because they are only read for reporting.
 pub struct Exe {
     pub name: String,
     inner: PjRtLoadedExecutable,
-    pub exec_count: RefCell<u64>,
-    pub exec_ns: RefCell<u128>,
+    pub exec_count: AtomicU64,
+    pub exec_ns: AtomicU64,
 }
 
+// SAFETY: `PjRtLoadedExecutable` wraps an immutable compiled program; the
+// PJRT C API specifies that `Execute` may be called concurrently from
+// multiple threads on the same executable (the CPU client locks internally).
+// The remaining fields are atomics/plain data.
+//
+// REQUIREMENT on the vendored `xla` binding (applies to every unsafe impl in
+// this file): the wrapper types must hold no non-atomic shared state of their
+// own (e.g. an internal `Rc` client handle cloned per call). The offline
+// build vendors a binding whose handles are plain FFI pointers; if the
+// binding is swapped for one with `Rc`-based internals, these impls are
+// unsound and must be replaced with a mutex-per-client wrapper.
+unsafe impl Send for Exe {}
+unsafe impl Sync for Exe {}
+
 impl Exe {
+    fn record(&self, t0: Instant) {
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+        self.exec_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
     /// Execute with host literals; returns the decomposed output tuple.
     /// Accepts `&[&Literal]` (or owned) so callers can reuse cached operands.
     pub fn run<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
@@ -39,8 +68,7 @@ impl Exe {
             .with_context(|| format!("`{}` returned no outputs", self.name))?;
         let lit = buf.to_literal_sync()?;
         let parts = lit.to_tuple()?;
-        *self.exec_count.borrow_mut() += 1;
-        *self.exec_ns.borrow_mut() += t0.elapsed().as_nanos();
+        self.record(t0);
         Ok(parts)
     }
 
@@ -59,55 +87,98 @@ impl Exe {
             .with_context(|| format!("`{}` returned no outputs", self.name))?;
         let lit = buf.to_literal_sync()?;
         let parts = lit.to_tuple()?;
-        *self.exec_count.borrow_mut() += 1;
-        *self.exec_ns.borrow_mut() += t0.elapsed().as_nanos();
+        self.record(t0);
         Ok(parts)
     }
 
+    pub fn exec_count(&self) -> u64 {
+        self.exec_count.load(Ordering::Relaxed)
+    }
+
     pub fn mean_exec_ms(&self) -> f64 {
-        let n = *self.exec_count.borrow();
+        let n = self.exec_count.load(Ordering::Relaxed);
         if n == 0 {
             return 0.0;
         }
-        *self.exec_ns.borrow() as f64 / n as f64 / 1e6
+        self.exec_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+    }
+}
+
+/// A device-resident operand. Wraps `PjRtBuffer` so persistent operands can
+/// be held by `Send + Sync` owners (`QuantEnv` shards, the PPO agent).
+pub struct DeviceBuf(PjRtBuffer);
+
+// SAFETY: a `PjRtBuffer` is immutable once the host->device transfer
+// completes (all uploads here are synchronous), and PJRT permits passing the
+// same buffer as an input to concurrent executions. We never alias a
+// donated/aliased output buffer.
+unsafe impl Send for DeviceBuf {}
+unsafe impl Sync for DeviceBuf {}
+
+impl DeviceBuf {
+    pub fn raw(&self) -> &PjRtBuffer {
+        &self.0
     }
 }
 
 /// Engine: one PJRT CPU client + a compile-once executable cache keyed by
 /// artifact name (`lenet_train`, `agent_lstm_act`, ...).
+///
+/// `Send + Sync`: share it as `Arc<Engine>` across shard threads. Two threads
+/// racing on the same uncached artifact may both compile it; the first insert
+/// wins and both receive the same cached `Arc<Exe>` (see the compile-cache
+/// race test in `rust/tests/parallel_concurrency.rs`).
 pub struct Engine {
     pub client: PjRtClient,
     pub dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<Exe>>>,
+    cache: RwLock<HashMap<String, Arc<Exe>>>,
 }
+
+// SAFETY: `PjRtClient` (CPU) is thread-safe per the PJRT API contract —
+// compilation and buffer creation take the client's internal lock. The cache
+// is behind an `RwLock`.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     pub fn new(artifacts_dir: PathBuf) -> Result<Engine> {
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, dir: artifacts_dir, cache: RefCell::new(HashMap::new()) })
+        Ok(Engine { client, dir: artifacts_dir, cache: RwLock::new(HashMap::new()) })
     }
 
     /// Fetch (compiling on first use) the executable for `artifacts/<name>.hlo.txt`.
-    pub fn exe(&self, name: &str) -> Result<Rc<Exe>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    pub fn exe(&self, name: &str) -> Result<Arc<Exe>> {
+        if let Some(e) = self.cache.read().unwrap().get(name) {
             return Ok(e.clone());
         }
+        // Compile outside the lock: compilation can take seconds and must not
+        // serialize unrelated shards. A concurrent thread may compile the
+        // same artifact; `entry().or_insert_with` below keeps exactly one.
         let path = self.dir.join(format!("{name}.hlo.txt"));
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("artifact path {path:?} is not valid UTF-8"))?;
         let t0 = Instant::now();
-        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+        let proto = HloModuleProto::from_text_file(path_str)
             .with_context(|| format!("loading {path:?} — run `make artifacts`"))?;
         let comp = XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
             .with_context(|| format!("compiling `{name}`"))?;
-        let e = Rc::new(Exe {
+        let e = Arc::new(Exe {
             name: name.to_string(),
             inner: exe,
-            exec_count: RefCell::new(0),
-            exec_ns: RefCell::new(0),
+            exec_count: AtomicU64::new(0),
+            exec_ns: AtomicU64::new(0),
         });
-        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        let e = self
+            .cache
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(e)
+            .clone();
         let dt = t0.elapsed().as_secs_f64();
         if dt > 0.5 {
             eprintln!("[engine] compiled `{name}` in {dt:.1}s");
@@ -119,19 +190,30 @@ impl Engine {
     pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
         let mut v: Vec<(String, u64, f64)> = self
             .cache
-            .borrow()
+            .read()
+            .unwrap()
             .values()
-            .map(|e| (e.name.clone(), *e.exec_count.borrow(), e.mean_exec_ms()))
+            .map(|e| (e.name.clone(), e.exec_count(), e.mean_exec_ms()))
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
+    }
+
+    /// Number of compiled artifacts currently cached.
+    pub fn cached_exes(&self) -> usize {
+        self.cache.read().unwrap().len()
     }
 }
 
 impl Engine {
     /// Upload an f32 tensor to the device (persistent operand).
-    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuf> {
+        Ok(DeviceBuf(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?))
+    }
+
+    /// Upload an f32 scalar to the device.
+    pub fn buffer_scalar(&self, x: f32) -> Result<DeviceBuf> {
+        self.buffer_f32(&[x], &[])
     }
 }
 
@@ -159,4 +241,21 @@ pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
 /// Extract a scalar f32.
 pub fn to_f32(lit: &Literal) -> Result<f32> {
     Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    /// Compile-time assertion: the runtime types cross shard threads.
+    #[test]
+    fn engine_types_are_send_sync() {
+        assert_send_sync::<Engine>();
+        assert_send_sync::<Exe>();
+        assert_send_sync::<DeviceBuf>();
+        assert_send_sync::<Arc<Engine>>();
+        assert_send_sync::<Arc<Exe>>();
+    }
 }

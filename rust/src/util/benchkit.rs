@@ -64,7 +64,8 @@ impl Bench {
             f();
             samples.push(t.elapsed().as_nanos() as f64);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a pathological timer reading must not panic the harness
+        samples.sort_by(|a, b| a.total_cmp(b));
         let n = samples.len();
         let stats = Stats {
             iters: n,
@@ -93,20 +94,30 @@ impl Bench {
         stats
     }
 
-    /// Append this bench's records to `target/bench_results.json` (JSON lines).
+    /// Where bench records go: `$BENCH_OUT` when set (CI / the perf harness
+    /// redirect runs to e.g. `BENCH_1.json`), else `target/bench_results.json`.
+    pub fn out_path() -> std::path::PathBuf {
+        match std::env::var("BENCH_OUT") {
+            Ok(p) if !p.trim().is_empty() => std::path::PathBuf::from(p),
+            _ => std::path::PathBuf::from("target/bench_results.json"),
+        }
+    }
+
+    /// Append this bench's records to [`Bench::out_path`] (JSON lines).
     pub fn flush(&self) {
-        let _ = std::fs::create_dir_all("target");
+        let path = Self::out_path();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
         let mut out = String::new();
         for r in &self.results {
             out.push_str(&r.dump());
             out.push('\n');
         }
         use std::io::Write;
-        if let Ok(mut f) = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open("target/bench_results.json")
-        {
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
             let _ = f.write_all(out.as_bytes());
         }
     }

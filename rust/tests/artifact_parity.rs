@@ -7,21 +7,21 @@
 //! note) when the artifacts are missing so `cargo test` works in a fresh
 //! checkout.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use releq::coordinator::{EnvConfig, QuantEnv};
 use releq::data;
 use releq::quant::quantize_mid_tread;
 use releq::runtime::{lit_f32, lit_scalar, Engine, Manifest};
 
-fn bringup() -> Option<(Manifest, Rc<Engine>)> {
+fn bringup() -> Option<(Manifest, Arc<Engine>)> {
     let dir = releq::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
         return None;
     }
     let manifest = Manifest::load(&dir).unwrap();
-    let engine = Rc::new(Engine::new(dir).unwrap());
+    let engine = Arc::new(Engine::new(dir).unwrap());
     Some((manifest, engine))
 }
 

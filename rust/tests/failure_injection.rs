@@ -2,7 +2,7 @@
 //! informatively, not corrupt state, when artifacts are missing, shapes
 //! mismatch, or inputs are degenerate.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use releq::coordinator::{PpoConfig, RewardParams, SearchConfig};
 use releq::data;
@@ -10,7 +10,7 @@ use releq::pareto::{pareto_frontier, Point};
 use releq::runtime::{lit_f32, Engine, Manifest};
 use releq::util::json::Json;
 
-fn engine() -> Option<(Manifest, Rc<Engine>)> {
+fn engine() -> Option<(Manifest, Arc<Engine>)> {
     let dir = releq::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
@@ -18,7 +18,7 @@ fn engine() -> Option<(Manifest, Rc<Engine>)> {
     }
     Some((
         Manifest::load(&dir).unwrap(),
-        Rc::new(Engine::new(dir).unwrap()),
+        Arc::new(Engine::new(dir).unwrap()),
     ))
 }
 

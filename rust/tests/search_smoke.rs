@@ -2,7 +2,7 @@
 //! must improve reward and produce a valid solution. Skipped without
 //! artifacts.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use releq::coordinator::{SearchConfig, Searcher};
 use releq::runtime::{Engine, Manifest};
@@ -15,7 +15,7 @@ fn tiny_search_improves_and_is_deterministic() {
         return;
     }
     let manifest = Manifest::load(&dir).unwrap();
-    let engine = Rc::new(Engine::new(dir).unwrap());
+    let engine = Arc::new(Engine::new(dir).unwrap());
     let net = manifest.network("lenet").unwrap();
 
     let mut cfg = SearchConfig::default();
