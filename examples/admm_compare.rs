@@ -22,7 +22,7 @@ fn main() -> Result<()> {
 
     let mut env_cfg = EnvConfig::default();
     env_cfg.pretrain_steps = releq::config::preset(&net_name).env.pretrain_steps;
-    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
+    let env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
 
     let releq_bits = paper_releq_solution(&net_name)
         .filter(|b| b.len() == net.l)

@@ -4,6 +4,7 @@
 //!
 //!     cargo run --release --example e2e_releq [-- --net lenet --episodes 300]
 //!     cargo run --release --example e2e_releq -- --nets lenet,simplenet,svhn10
+//!     cargo run --release --example e2e_releq -- --net lenet --rollout batched
 //!
 //! Pipeline exercised, proving all three layers compose:
 //!   1. synthetic dataset generation (data substrate)
@@ -37,12 +38,9 @@ fn run_one(engine: &Arc<Engine>, manifest: &Manifest, net_name: &str,
            args: &Args) -> Result<String> {
     use std::fmt::Write;
     let net = manifest.network(net_name)?;
-    // full resolution (preset -> --config TOML -> CLI flags), same as the
-    // single-net path always did
-    let mut cfg = config::resolve(net_name, args)?;
-    if let Some(e) = args.opt_str("episodes") {
-        cfg.episodes = e.parse()?;
-    }
+    // full resolution (preset -> --config TOML -> CLI flags, --episodes and
+    // --rollout included), same as the single-net path always did
+    let cfg = config::resolve(net_name, args)?;
 
     let mut out = String::new();
     writeln!(out, "=== ReLeQ end-to-end: {} (L={}, P={}, dataset {}) ===",
@@ -80,15 +78,17 @@ fn run_one(engine: &Arc<Engine>, manifest: &Manifest, net_name: &str,
     result
         .log
         .write_csv(std::path::Path::new(&format!("results/e2e_{net_name}.csv")))?;
+    let stats = searcher.env.stats();
     writeln!(
         out,
         "[5] env: {} evals ({} cache hits), {} train + {} eval PJRT execs; \
-         agent: {} acts / {} param uploads; log -> results/e2e_{net_name}.csv",
-        searcher.env.stats.evals,
-        searcher.env.stats.cache_hits,
-        searcher.env.stats.train_execs,
-        searcher.env.stats.eval_execs,
+         agent: {} acts / {} batched acts / {} param uploads; log -> results/e2e_{net_name}.csv",
+        stats.evals,
+        stats.cache_hits,
+        stats.train_execs,
+        stats.eval_execs,
         searcher.agent.act_calls,
+        searcher.agent.act_batch_calls,
         searcher.agent.param_uploads
     )?;
     writeln!(out, "wall time: {:.1}s", t0.elapsed().as_secs_f64())?;

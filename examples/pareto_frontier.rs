@@ -23,16 +23,16 @@ fn main() -> Result<()> {
 
     let mut env_cfg = EnvConfig::default();
     env_cfg.pretrain_steps = releq::config::preset(&net_name).env.pretrain_steps;
-    let mk_env = || {
-        QuantEnv::new(
-            engine.clone(),
-            net,
-            manifest.bits_max,
-            manifest.fp_bits,
-            env_cfg.clone(),
-        )
-    };
-    let mut env = mk_env()?;
+    // one shared-core env: the per-shard workers all query this pretrained
+    // snapshot (one pretrain total), and the paper-solution probe below
+    // reuses its warm memo
+    let env = QuantEnv::new(
+        engine.clone(),
+        net,
+        manifest.bits_max,
+        manifest.fp_bits,
+        env_cfg,
+    )?;
     println!("{net_name}: Acc_FullP {:.4}", env.acc_fullp);
 
     let mut cfg = pareto::EnumConfig::default();
@@ -45,7 +45,7 @@ fn main() -> Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let (points, exhaustive) = pareto::enumerate_sharded(&mk_env, &cfg, net.l, shards)?;
+    let (points, exhaustive) = pareto::enumerate_sharded(&env, &cfg, shards)?;
     println!(
         "evaluated {} points ({}) in {:.1}s",
         points.len(),

@@ -8,7 +8,7 @@ fn main() {
     let mut cfg = EnvConfig::default();
     cfg.pretrain_steps = 60;
     cfg.retrain_steps = 10;
-    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
+    let env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
     for (name, fused) in [("unfused", false), ("fused", true)] {
         let t0 = std::time::Instant::now();
         let n = 5;

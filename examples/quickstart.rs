@@ -47,7 +47,7 @@ fn main() -> Result<()> {
     );
     println!(
         "env stats: {:?} (cache {} entries)",
-        searcher.env.stats,
+        searcher.env.stats(),
         searcher.env.cache_len()
     );
     Ok(())

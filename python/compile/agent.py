@@ -168,6 +168,17 @@ def make_act(recurrent: bool):
     return act
 
 
+def make_act_batch(recurrent: bool):
+    """Vectorized act: ``(params, s[B,D], h[B,H], c[B,H]) ->
+    (probs[B,A], value[B], h'[B,H], c'[B,H])``.
+
+    One lowered execution serves a whole lockstep batch of B independent
+    episode lanes (params broadcast, per-lane state/hidden), so the Rust
+    driver pays one PJRT dispatch per *layer* instead of one per
+    (layer, episode)."""
+    return jax.vmap(make_act(recurrent), in_axes=(None, 0, 0, 0))
+
+
 def _episode_logits(p, states, recurrent: bool):
     """Run the encoder over one episode's L states -> (logits[L,A], values[L])."""
     if recurrent:

@@ -11,6 +11,9 @@ self-contained afterwards.  Outputs, under ``artifacts/``:
   see EXPERIMENTS.md §Perf)
 * ``agent_{lstm,fc}_init.hlo.txt``   (seed)                 -> params
 * ``agent_{lstm,fc}_act.hlo.txt``    (params, s, h, c)      -> (probs, value, h', c')
+* ``agent_{lstm,fc}_act_batch.hlo.txt`` (params, s[B,D], h[B,H], c[B,H])
+  -> (probs[B,A], value[B], h'[B,H], c'[B,H]) — the lockstep-rollout hot
+  path: one execution serves all B episode lanes of a PPO batch
 * ``agent_lstm_update_l<L>.hlo.txt`` (11 operands)          -> (params', m', v', t', stats...)
   for every network episode length L (+ the FC ablation update for LeNet)
 * ``manifest.json`` — shapes, flat-param layouts, per-layer metadata (weight
@@ -126,8 +129,13 @@ def lower_agent(out_dir: str, manifest: dict, episode_lengths) -> None:
         lower_to_file(
             act, (f32(P), f32(D), f32(agent_mod.HIDDEN), f32(agent_mod.HIDDEN)),
             os.path.join(out_dir, f"agent_{tag}_act.hlo.txt"))
+        act_batch = agent_mod.make_act_batch(recurrent)
+        lower_to_file(
+            act_batch,
+            (f32(P), f32(B, D), f32(B, agent_mod.HIDDEN), f32(B, agent_mod.HIDDEN)),
+            os.path.join(out_dir, f"agent_{tag}_act_batch.hlo.txt"))
         manifest["agent"][tag] = {"p": P}
-        print(f"[aot] agent_{tag}: P={P}", flush=True)
+        print(f"[aot] agent_{tag}: P={P} (act_batch B={B})", flush=True)
 
     update = agent_mod.make_update(True)
     for L in sorted(set(episode_lengths)):
@@ -169,6 +177,10 @@ def main() -> None:
         "n_actions": agent_mod.N_ACTIONS,
         "hidden": agent_mod.HIDDEN,
         "episodes_per_update": EPISODES_PER_UPDATE,
+        # lanes baked into the agent_*_act_batch artifacts (the lockstep
+        # rollout batch width; = episodes_per_update so one PPO batch rolls
+        # out in exactly one lane-set)
+        "act_batch": EPISODES_PER_UPDATE,
         "networks": {},
         "agent": {},
     }

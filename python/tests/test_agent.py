@@ -151,3 +151,33 @@ def test_param_layout_slots_contiguous():
             assert s.offset == off
             off += s.size
         assert off == A.param_count(rec)
+
+
+@pytest.mark.parametrize("rec", [True, False])
+def test_act_batch_matches_per_lane_act(rec):
+    """The vmapped batch act must reproduce the scalar act lane-for-lane:
+    the Rust lockstep driver relies on act_batch being a drop-in for B
+    independent act calls."""
+    B = 8
+    act = jax.jit(A.make_act(rec))
+    act_batch = jax.jit(A.make_act_batch(rec))
+    p = A.init_params(3, rec)
+    rng = np.random.RandomState(0)
+    s = jnp.asarray(rng.rand(B, A.STATE_DIM), jnp.float32)
+    h = jnp.asarray(rng.rand(B, A.HIDDEN), jnp.float32)
+    c = jnp.asarray(rng.rand(B, A.HIDDEN), jnp.float32)
+    probs_b, val_b, h_b, c_b = act_batch(p, s, h, c)
+    assert probs_b.shape == (B, A.N_ACTIONS)
+    assert val_b.shape == (B,)
+    assert h_b.shape == (B, A.HIDDEN)
+    assert c_b.shape == (B, A.HIDDEN)
+    for i in range(B):
+        probs_i, val_i, h_i, c_i = act(p, s[i], h[i], c[i])
+        np.testing.assert_allclose(np.asarray(probs_b[i]), np.asarray(probs_i),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(val_b[i]), float(val_i),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(h_b[i]), np.asarray(h_i),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(c_b[i]), np.asarray(c_i),
+                                   rtol=1e-5, atol=1e-6)

@@ -42,6 +42,17 @@ def test_agent_act_lowers():
     assert "HloModule" in text
 
 
+@pytest.mark.parametrize("rec", [True, False])
+def test_agent_act_batch_lowers(rec):
+    """The lockstep hot-path artifact: vmapped act over B lanes."""
+    act_batch = A.make_act_batch(rec)
+    P = A.param_count(rec)
+    B = 8
+    text = lower_text(
+        act_batch, (f32(P), f32(B, A.STATE_DIM), f32(B, A.HIDDEN), f32(B, A.HIDDEN)))
+    assert "HloModule" in text
+
+
 def test_hlo_text_parses_back():
     """The HLO text must parse back through XLA's text parser — the exact
     ingestion path the rust `xla` crate uses (`HloModuleProto::from_text_file`).
@@ -85,6 +96,10 @@ def test_manifest_matches_models(manifest):
 def test_manifest_agent_counts(manifest):
     assert manifest["agent"]["lstm"]["p"] == A.param_count(True)
     assert manifest["agent"]["fc"]["p"] == A.param_count(False)
+    # lockstep lane width: baked = PPO batch (rust falls back to
+    # episodes_per_update when the key predates the batched-act artifact)
+    assert manifest.get("act_batch", manifest["episodes_per_update"]) \
+        == manifest["episodes_per_update"]
 
 
 def test_artifact_files_exist(manifest):

@@ -4,7 +4,10 @@
 //! §Perf before/after: `act/*/literals(before)` re-marshals the full param
 //! vector as a host literal per call (the pre-resident-buffer runtime);
 //! `act/*/resident(after)` serves every call from the device-resident copy
-//! uploaded once per PPO update.
+//! uploaded once per PPO update. `act_batch/*/B_lanes` is the lockstep
+//! vectorized forward — compare one `act_batch` against B `resident` calls
+//! to see the per-layer dispatch amortization the batched rollout driver
+//! banks on.
 
 use std::sync::Arc;
 
@@ -33,6 +36,20 @@ fn main() {
         assert_eq!(
             agent.param_uploads, 1,
             "act must not re-upload params between updates"
+        );
+        // lockstep vectorized forward: B lanes per PJRT dispatch, sharing
+        // the same resident params buffer (no extra uploads)
+        let lanes = agent.act_lanes;
+        let states = vec![0.5f32; lanes * STATE_DIM];
+        let hb = vec![0.0f32; lanes * h.len()];
+        let cb = vec![0.0f32; lanes * c.len()];
+        b.case(&format!("act_batch/{tag}/{lanes}_lanes"), || {
+            let _ = agent.act_batch(&states, &hb, &cb).unwrap();
+        });
+        assert!(agent.act_batch_calls > 0);
+        assert_eq!(
+            agent.param_uploads, 1,
+            "act_batch must reuse the resident params buffer"
         );
         let episode: Vec<Vec<StepRecord>> = (0..8)
             .map(|_| {

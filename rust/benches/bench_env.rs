@@ -13,22 +13,27 @@ fn main() {
     let net = manifest.network("lenet").unwrap();
     let mut cfg = EnvConfig::default();
     cfg.pretrain_steps = 60; // enough for the bench; accuracy itself irrelevant
-    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
+    let env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
 
     let mut b = Bench::new("env");
     // §Perf before/after: the same accuracy query through the unfused
-    // (per-step literals) path vs the fused single-execution path
+    // (per-step literals) path vs the fused single-execution path.
+    // The bits odometer spans 7^4 = 2401 distinct vectors — more than the
+    // harness's max_iters — so the fused case never degenerates into
+    // memo-cache hits (which would measure ~400ns lookups, not the PJRT
+    // execution).
     let mut k = 0u32;
+    let fresh_bits = |k: u32| {
+        vec![2 + (k % 7), 2 + ((k / 7) % 7), 2 + ((k / 49) % 7), 2 + ((k / 343) % 7)]
+    };
     b.case("accuracy/unfused(4x train + eval, literals)", || {
         k += 1;
-        let bits = vec![2 + (k % 7), 2 + ((k / 7) % 7), 8, 8];
-        let _ = env.accuracy_unfused(&bits).unwrap();
+        let _ = env.accuracy_unfused(&fresh_bits(k)).unwrap();
     });
+    k = 0;
     b.case("accuracy/fused(1 exec, resident operands)", || {
-        // vary bits so the memo cache never hits
         k += 1;
-        let bits = vec![2 + (k % 7), 2 + ((k / 7) % 7), 8, 8];
-        let _ = env.accuracy(&bits).unwrap();
+        let _ = env.accuracy(&fresh_bits(k)).unwrap();
     });
     let hot = vec![4, 4, 4, 4];
     let _ = env.accuracy(&hot).unwrap();

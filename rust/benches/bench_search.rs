@@ -1,12 +1,13 @@
-//! End-to-end search benchmarks: one full episode (embed -> act -> env eval
-//! -> reward, for every layer) on LeNet — the paper-system hot loop — plus
-//! the sharded drivers (§Perf): multi-seed replicas and sharded Pareto
-//! enumeration with the shared accuracy memo-cache.
+//! End-to-end search benchmarks: one full PPO batch of episodes on LeNet —
+//! the paper-system hot loop — through the serial and the lockstep batched
+//! rollout drivers (§Perf), plus the sharded drivers: multi-seed replicas
+//! over a shared pretrained env core and sharded Pareto enumeration with the
+//! shared single-flight accuracy memo.
 
 use std::sync::Arc;
 
 use releq::config;
-use releq::coordinator::{run_replicas, EnvConfig, QuantEnv, Searcher};
+use releq::coordinator::{run_replicas, EnvConfig, QuantEnv, RolloutMode, Searcher};
 use releq::pareto;
 use releq::runtime::{Engine, Manifest};
 use releq::util::benchkit::Bench;
@@ -19,16 +20,36 @@ fn main() {
     cfg.env.pretrain_steps = 60;
     cfg.episodes = 8; // one PPO update per measured iteration
     cfg.patience = 0;
-    let mut searcher = Searcher::new(engine.clone(), &manifest, net, cfg.clone()).unwrap();
     let mut b = Bench::new("search");
     b.min_iters = 3;
     b.max_iters = 12;
-    b.case("8_episodes_plus_update/lenet", || {
-        let _ = searcher.run().unwrap();
-    });
 
-    // §Perf: 4 independent replicas, sequential loop vs the sharded driver;
-    // RELEQ_SHARDS=1 on a single-core runner collapses both to the baseline
+    // §Perf before/after: the serial rollout (one act per layer per episode)
+    // vs the lockstep batched driver (one act_batch per layer per PPO batch,
+    // accuracy misses deduped + fanned across shards)
+    let mut serial = Searcher::new(engine.clone(), &manifest, net, cfg.clone()).unwrap();
+    b.case("8_episodes_plus_update/serial", || {
+        let _ = serial.run().unwrap();
+    });
+    let mut bcfg = cfg.clone();
+    bcfg.rollout = RolloutMode::Batched;
+    let mut batched = Searcher::new(engine.clone(), &manifest, net, bcfg).unwrap();
+    b.case("8_episodes_plus_update/batched", || {
+        let _ = batched.run().unwrap();
+    });
+    // the headline invariant: each run is one 8-lane chunk = L act_batch
+    // executions (serial pays 8*L scalar acts for the same episodes); the
+    // only scalar acts in a batched run are the final greedy rollout's L, so
+    // the two counters match exactly at one-chunk-per-run scale
+    assert!(batched.agent.act_batch_calls > 0, "batched driver must use act_batch");
+    assert_eq!(
+        batched.agent.act_calls, batched.agent.act_batch_calls,
+        "batched search should spend scalar acts only on greedy rollouts"
+    );
+
+    // §Perf: 4 independent replicas, sequential loop vs the sharded driver
+    // over ONE shared pretrained env core; RELEQ_SHARDS=1 on a single-core
+    // runner collapses the sharding but keeps the single pretrain
     let seeds = [23u64, 24, 25, 26];
     b.min_iters = 2;
     b.max_iters = 4;
@@ -40,30 +61,29 @@ fn main() {
             let _ = searcher.run().unwrap();
         }
     });
-    b.case("replicas_x4/sharded", || {
+    b.case("replicas_x4/sharded_shared_core", || {
         let _ = run_replicas(&engine, &manifest, net, &cfg, &seeds).unwrap();
     });
 
-    // §Perf: sharded Pareto enumeration (256 sampled LeNet points),
-    // sequential vs sharded with the shared memo-cache
+    // §Perf: sharded Pareto enumeration (256 sampled LeNet points) over a
+    // shared-core env — exactly one pretrain regardless of shard count
     let mut ecfg = pareto::EnumConfig::default();
     ecfg.max_points = 256;
     let mut env_cfg = EnvConfig::default();
     env_cfg.pretrain_steps = 60;
-    let mk_env = || {
-        QuantEnv::new(
-            engine.clone(),
-            net,
-            manifest.bits_max,
-            manifest.fp_bits,
-            env_cfg.clone(),
-        )
-    };
+    let env = QuantEnv::new(
+        engine.clone(),
+        net,
+        manifest.bits_max,
+        manifest.fp_bits,
+        env_cfg,
+    )
+    .unwrap();
     b.case("pareto_256pts/1shard", || {
-        let _ = pareto::enumerate_sharded(&mk_env, &ecfg, net.l, 1).unwrap();
+        let _ = pareto::enumerate_sharded(&env, &ecfg, 1).unwrap();
     });
     b.case("pareto_256pts/sharded", || {
         let shards = releq::parallel::default_shards(ecfg.max_points);
-        let _ = pareto::enumerate_sharded(&mk_env, &ecfg, net.l, shards).unwrap();
+        let _ = pareto::enumerate_sharded(&env, &ecfg, shards).unwrap();
     });
 }

@@ -18,7 +18,7 @@ pub fn uniform(bits: u32, l: usize) -> Vec<u32> {
 /// Smallest uniform bitwidth whose (short-retrain) relative accuracy stays
 /// above `min_state_acc`. Scans downward from `from_bits`; returns the last
 /// bitwidth that met the budget (falling back to `from_bits`).
-pub fn best_uniform(env: &mut QuantEnv, from_bits: u32, min_bits: u32,
+pub fn best_uniform(env: &QuantEnv, from_bits: u32, min_bits: u32,
                     min_state_acc: f64) -> Result<(u32, f64)> {
     let l = env.net.l;
     let mut best = (from_bits, env.state_acc(&uniform(from_bits, l))?);

@@ -9,7 +9,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{ActionSpace, AgentKind, RewardKind, SearchConfig};
+use crate::coordinator::{ActionSpace, AgentKind, RewardKind, RolloutMode, SearchConfig};
 use crate::util::cli::Args;
 
 pub mod toml_lite;
@@ -53,79 +53,109 @@ pub fn preset(net: &str) -> SearchConfig {
     cfg
 }
 
-/// Apply a parsed TOML-lite table to a SearchConfig.
-pub fn apply_toml(cfg: &mut SearchConfig, tbl: &BTreeMap<String, TomlValue>) {
-    let f = |v: &TomlValue| v.as_f64().unwrap_or_else(|| panic!("number expected"));
+/// Apply a parsed TOML-lite table to a SearchConfig. Unknown keys and
+/// malformed values surface as errors, not panics.
+pub fn apply_toml(cfg: &mut SearchConfig, tbl: &BTreeMap<String, TomlValue>) -> Result<()> {
+    let f = |k: &str, v: &TomlValue| {
+        v.as_f64().with_context(|| format!("config key `{k}` expects a number"))
+    };
+    let s = |k: &str, v: &TomlValue| {
+        v.as_str().with_context(|| format!("config key `{k}` expects a string"))
+    };
     for (k, v) in tbl {
         match k.as_str() {
-            "episodes" => cfg.episodes = f(v) as usize,
-            "pretrain_steps" => cfg.env.pretrain_steps = f(v) as usize,
-            "retrain_steps" => cfg.env.retrain_steps = f(v) as usize,
-            "long_retrain_steps" => cfg.env.long_retrain_steps = f(v) as usize,
-            "lr" => cfg.env.lr = f(v) as f32,
-            "train_size" => cfg.env.train_size = f(v) as usize,
-            "seed" => cfg.seed = f(v) as u64,
-            "clip_eps" => cfg.ppo.clip_eps = f(v) as f32,
-            "ent_coef" => cfg.ppo.ent_coef = f(v) as f32,
-            "agent_lr" => cfg.ppo.lr = f(v) as f32,
-            "epochs" => cfg.ppo.epochs = f(v) as usize,
-            "gamma" => cfg.ppo.gamma = f(v),
-            "lam" => cfg.ppo.lam = f(v),
-            "reward" => cfg.reward.kind = RewardKind::parse(v.as_str().unwrap()),
-            "reward_a" => cfg.reward.a = f(v),
-            "reward_b" => cfg.reward.b = f(v),
-            "reward_th" => cfg.reward.th = f(v),
-            "agent" => cfg.agent_kind = AgentKind::parse(v.as_str().unwrap()),
-            "action_space" => cfg.action_space = ActionSpace::parse(v.as_str().unwrap()),
-            "eval_every_step" => cfg.eval_every_step = v.as_bool().unwrap(),
-            "min_bits" => cfg.min_bits = f(v) as u32,
-            "patience" => cfg.patience = f(v) as usize,
-            other => panic!("unknown config key `{other}`"),
+            "episodes" => cfg.episodes = f(k, v)? as usize,
+            "pretrain_steps" => cfg.env.pretrain_steps = f(k, v)? as usize,
+            "retrain_steps" => cfg.env.retrain_steps = f(k, v)? as usize,
+            "long_retrain_steps" => cfg.env.long_retrain_steps = f(k, v)? as usize,
+            "lr" => cfg.env.lr = f(k, v)? as f32,
+            "train_size" => cfg.env.train_size = f(k, v)? as usize,
+            "seed" => cfg.seed = f(k, v)? as u64,
+            "clip_eps" => cfg.ppo.clip_eps = f(k, v)? as f32,
+            "ent_coef" => cfg.ppo.ent_coef = f(k, v)? as f32,
+            "agent_lr" => cfg.ppo.lr = f(k, v)? as f32,
+            "epochs" => cfg.ppo.epochs = f(k, v)? as usize,
+            "gamma" => cfg.ppo.gamma = f(k, v)?,
+            "lam" => cfg.ppo.lam = f(k, v)?,
+            "reward" => cfg.reward.kind = RewardKind::parse(s(k, v)?)?,
+            "reward_a" => cfg.reward.a = f(k, v)?,
+            "reward_b" => cfg.reward.b = f(k, v)?,
+            "reward_th" => cfg.reward.th = f(k, v)?,
+            "agent" => cfg.agent_kind = AgentKind::parse(s(k, v)?)?,
+            "action_space" => cfg.action_space = ActionSpace::parse(s(k, v)?)?,
+            "rollout" => cfg.rollout = RolloutMode::parse(s(k, v)?)?,
+            "lanes" => cfg.lanes = f(k, v)? as usize,
+            "eval_every_step" => {
+                cfg.eval_every_step = v
+                    .as_bool()
+                    .with_context(|| format!("config key `{k}` expects a bool"))?
+            }
+            "min_bits" => cfg.min_bits = f(k, v)? as u32,
+            "patience" => cfg.patience = f(k, v)? as usize,
+            other => anyhow::bail!("unknown config key `{other}`"),
         }
     }
+    Ok(())
 }
 
-/// Apply individual CLI flags (highest precedence).
-pub fn apply_cli(cfg: &mut SearchConfig, args: &Args) {
-    if let Some(v) = args.opt_str("episodes") {
-        cfg.episodes = v.parse().expect("--episodes");
+/// Apply individual CLI flags (highest precedence). Bad flag values are
+/// reported as errors naming the flag.
+pub fn apply_cli(cfg: &mut SearchConfig, args: &Args) -> Result<()> {
+    fn num<T: std::str::FromStr>(args: &Args, flag: &str) -> Result<Option<T>> {
+        match args.opt_str(flag) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{flag} expects a number, got `{v}`")),
+        }
     }
-    if let Some(v) = args.opt_str("seed") {
-        cfg.seed = v.parse().expect("--seed");
+    if let Some(v) = num(args, "episodes")? {
+        cfg.episodes = v;
+    }
+    if let Some(v) = num(args, "seed")? {
+        cfg.seed = v;
     }
     if let Some(v) = args.opt_str("reward") {
-        cfg.reward.kind = RewardKind::parse(&v);
+        cfg.reward.kind = RewardKind::parse(&v)?;
     }
     if let Some(v) = args.opt_str("agent") {
-        cfg.agent_kind = AgentKind::parse(&v);
+        cfg.agent_kind = AgentKind::parse(&v)?;
     }
     if let Some(v) = args.opt_str("action-space") {
-        cfg.action_space = ActionSpace::parse(&v);
+        cfg.action_space = ActionSpace::parse(&v)?;
     }
-    if let Some(v) = args.opt_str("agent-lr") {
-        cfg.ppo.lr = v.parse().expect("--agent-lr");
+    if let Some(v) = args.opt_str("rollout") {
+        cfg.rollout = RolloutMode::parse(&v)?;
     }
-    if let Some(v) = args.opt_str("ent-coef") {
-        cfg.ppo.ent_coef = v.parse().expect("--ent-coef");
+    if let Some(v) = num(args, "lanes")? {
+        cfg.lanes = v;
     }
-    if let Some(v) = args.opt_str("clip-eps") {
-        cfg.ppo.clip_eps = v.parse().expect("--clip-eps");
+    if let Some(v) = num(args, "agent-lr")? {
+        cfg.ppo.lr = v;
     }
-    if let Some(v) = args.opt_str("retrain-steps") {
-        cfg.env.retrain_steps = v.parse().expect("--retrain-steps");
+    if let Some(v) = num(args, "ent-coef")? {
+        cfg.ppo.ent_coef = v;
     }
-    if let Some(v) = args.opt_str("pretrain-steps") {
-        cfg.env.pretrain_steps = v.parse().expect("--pretrain-steps");
+    if let Some(v) = num(args, "clip-eps")? {
+        cfg.ppo.clip_eps = v;
     }
-    if let Some(v) = args.opt_str("lr") {
-        cfg.env.lr = v.parse().expect("--lr");
+    if let Some(v) = num(args, "retrain-steps")? {
+        cfg.env.retrain_steps = v;
     }
-    if let Some(v) = args.opt_str("patience") {
-        cfg.patience = v.parse().expect("--patience");
+    if let Some(v) = num(args, "pretrain-steps")? {
+        cfg.env.pretrain_steps = v;
+    }
+    if let Some(v) = num(args, "lr")? {
+        cfg.env.lr = v;
+    }
+    if let Some(v) = num(args, "patience")? {
+        cfg.patience = v;
     }
     if args.has("eval-at-end") {
         cfg.eval_every_step = false;
     }
+    Ok(())
 }
 
 /// Resolve the full precedence chain for a network.
@@ -137,13 +167,14 @@ pub fn resolve(net: &str, args: &Args) -> Result<SearchConfig> {
         let doc = toml_lite::parse(&text).with_context(|| format!("parsing {path}"))?;
         // global [search] section, then per-network [search.<net>]
         if let Some(tbl) = doc.get("search") {
-            apply_toml(&mut cfg, tbl);
+            apply_toml(&mut cfg, tbl).with_context(|| format!("config {path} [search]"))?;
         }
         if let Some(tbl) = doc.get(&format!("search.{net}")) {
-            apply_toml(&mut cfg, tbl);
+            apply_toml(&mut cfg, tbl)
+                .with_context(|| format!("config {path} [search.{net}]"))?;
         }
     }
-    apply_cli(&mut cfg, args);
+    apply_cli(&mut cfg, args)?;
     Ok(cfg)
 }
 
@@ -167,6 +198,24 @@ mod tests {
         let cfg = resolve("lenet", &args("search --net lenet --episodes 7 --reward diff")).unwrap();
         assert_eq!(cfg.episodes, 7);
         assert_eq!(cfg.reward.kind, RewardKind::Diff);
+    }
+
+    #[test]
+    fn bad_flag_values_are_errors_not_panics() {
+        assert!(resolve("lenet", &args("search --episodes nope")).is_err());
+        assert!(resolve("lenet", &args("search --agent gru")).is_err());
+        assert!(resolve("lenet", &args("search --action-space wild")).is_err());
+        assert!(resolve("lenet", &args("search --reward spicy")).is_err());
+        assert!(resolve("lenet", &args("search --rollout warp")).is_err());
+        assert!(resolve("lenet", &args("search --lanes many")).is_err());
+    }
+
+    #[test]
+    fn rollout_flags_resolve() {
+        let cfg = resolve("lenet", &args("search --rollout batched --lanes 4")).unwrap();
+        assert_eq!(cfg.rollout, RolloutMode::Batched);
+        assert_eq!(cfg.lanes, 4);
+        assert_eq!(preset("lenet").rollout, RolloutMode::Serial);
     }
 
     #[test]

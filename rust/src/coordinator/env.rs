@@ -10,11 +10,27 @@
 //! patterns recur constantly as the policy converges, so the cache removes
 //! most PJRT executions late in the search — see EXPERIMENTS.md §Perf).
 //!
-//! The memo-cache is an [`AccMemo`] behind an `Arc`: a lone env owns a
-//! private one, and the sharded drivers (`crate::parallel`) hand the same
-//! instance to every shard so an assignment evaluated by one shard is a
-//! cache hit for all the others.
+//! # Shared core
+//!
+//! All post-pretrain state lives in an immutable [`EnvCore`]; [`QuantEnv`]
+//! is a cheaply cloneable `Arc` handle onto it. `accuracy`/`state_acc` work
+//! from `&self`, counters are atomics, and the accuracy memo is a
+//! single-flight [`AccMemo`] — so one pretrained env is shared by every
+//! shard of `pareto::enumerate_sharded`, every replica of
+//! `coordinator::run_replicas`, and every lane of the lockstep batched
+//! rollout, paying the data-generation + pretraining bring-up **once**
+//! instead of once per consumer.
+//!
+//! # Determinism
+//!
+//! Accuracy queries derive their retrain start-batch from the queried bits
+//! vector itself (`bits_cursor`, an FNV-1a hash) instead of a shared mutable
+//! cursor. That makes `accuracy(bits)` a pure function of the core: the
+//! memoized value for a vector is identical no matter which shard, lane, or
+//! schedule computed it, so sharded enumeration and batched search are
+//! bit-reproducible at any concurrency (EXPERIMENTS.md §Determinism).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -23,7 +39,9 @@ use xla::Literal;
 use crate::data::{self, Split};
 use crate::parallel::AccMemo;
 use crate::quant::CostModel;
-use crate::runtime::{lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, NetworkMeta};
+use crate::runtime::{
+    lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, HostLit, NetworkMeta,
+};
 
 #[derive(Debug, Clone)]
 pub struct EnvConfig {
@@ -52,6 +70,8 @@ impl Default for EnvConfig {
 }
 
 /// Counters the environment accumulates (perf + cache instrumentation).
+/// A point-in-time snapshot of the core's atomic counters — see
+/// [`EnvCore::stats`].
 #[derive(Debug, Default, Clone, Copy)]
 pub struct EnvStats {
     pub evals: u64,
@@ -60,7 +80,46 @@ pub struct EnvStats {
     pub eval_execs: u64,
 }
 
+/// Atomic backing store for [`EnvStats`]: the counters are bumped from
+/// `&self` on the concurrent hot paths.
+#[derive(Debug, Default)]
+struct EnvStatsAtomic {
+    evals: AtomicU64,
+    cache_hits: AtomicU64,
+    train_execs: AtomicU64,
+    eval_execs: AtomicU64,
+}
+
+impl EnvStatsAtomic {
+    fn snapshot(&self) -> EnvStats {
+        EnvStats {
+            evals: self.evals.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            train_execs: self.train_execs.load(Ordering::Relaxed),
+            eval_execs: self.eval_execs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A cheaply cloneable handle onto a shared, immutable [`EnvCore`]. Clones
+/// share the pretrained snapshot, device buffers, memo-cache and counters.
+#[derive(Clone)]
 pub struct QuantEnv {
+    core: Arc<EnvCore>,
+}
+
+impl std::ops::Deref for QuantEnv {
+    type Target = EnvCore;
+
+    fn deref(&self) -> &EnvCore {
+        &self.core
+    }
+}
+
+/// The immutable post-pretrain environment state. `Send + Sync`: every
+/// method on the query path takes `&self`; the only mutation is through
+/// atomics and the concurrent memo.
+pub struct EnvCore {
     pub net: NetworkMeta,
     pub cost: CostModel,
     pub cfg: EnvConfig,
@@ -82,21 +141,17 @@ pub struct QuantEnv {
     /// reachable so the asymmetric reward's accuracy term does not drown the
     /// quantization signal in evaluation noise (EXPERIMENTS.md, deviations).
     pub acc_ref: f64,
-    /// bits-vector -> validation accuracy; private by default, shared across
-    /// shards via [`QuantEnv::share_memo`]
+    /// bits-vector -> validation accuracy; single-flight, shared by every
+    /// clone of the env handle
     memo: Arc<AccMemo>,
-    pub stats: EnvStats,
+    stats: EnvStatsAtomic,
     /// fp-bits sentinel from the manifest (>= this disables quantization)
     fp_bits: f32,
     pub bits_max: u32,
-    // prebuilt literals for the fixed validation set (unfused path)
-    val_x_lit: Literal,
-    val_y_lit: Literal,
-    batch_cursor: usize,
-    xs_buf: Vec<f32>,
-    ys_buf: Vec<f32>,
-    val_images_cache: Vec<f32>,
-    val_labels_cache: Vec<f32>,
+    // prebuilt literals for the fixed validation set (unfused path); shared
+    // read-only across threads
+    val_x_lit: HostLit,
+    val_y_lit: HostLit,
     // device-resident operands for the fused hot path (uploaded once;
     // EXPERIMENTS.md §Perf): snapshot params, zero momentum, the whole
     // training set, and the validation set.
@@ -142,19 +197,18 @@ impl QuantEnv {
             val.n,
             net.eval_batch
         );
-        let val_x_lit = lit_f32(
+        let val_x_lit = HostLit::new(lit_f32(
             &val.images,
             &[net.eval_batch as i64, val.h as i64, val.w as i64, val.c as i64],
-        )?;
-        let val_y_lit = lit_f32(&val.labels, &[net.eval_batch as i64])?;
-        let val_images_cache = val.images.clone();
-        let val_labels_cache = val.labels.clone();
+        )?);
+        let val_y_lit = HostLit::new(lit_f32(&val.labels, &[net.eval_batch as i64])?);
 
         let out = init_exe.run(&[lit_scalar(cfg.seed as f32)])?;
         let params = to_vec_f32(&out[0])?;
         anyhow::ensure!(params.len() == net.p, "init params {} != P {}", params.len(), net.p);
 
-        let mut env = QuantEnv {
+        // the core is mutable only here, before it is wrapped in the Arc
+        let mut core = EnvCore {
             net: net.clone(),
             cost: CostModel::new(net, bits_max),
             cfg,
@@ -167,38 +221,31 @@ impl QuantEnv {
             acc_fullp: 0.0,
             acc_ref: 0.0,
             memo: Arc::new(AccMemo::new()),
-            stats: EnvStats::default(),
+            stats: EnvStatsAtomic::default(),
             fp_bits,
             bits_max,
             val_x_lit,
             val_y_lit,
-            batch_cursor: 0,
-            xs_buf: Vec::new(),
-            ys_buf: Vec::new(),
-            val_images_cache,
-            val_labels_cache,
             fused_bufs: None,
         };
-        env.pretrain()?;
-        env.upload_fused_operands()?;
-        let base = env.accuracy(&vec![bits_max; env.net.l])?;
-        env.acc_ref = env.acc_fullp.max(base);
-        Ok(env)
+        core.pretrain()?;
+        core.upload_fused_operands(&val)?;
+        let base = core.accuracy(&vec![bits_max; core.net.l])?;
+        core.acc_ref = core.acc_fullp.max(base);
+        Ok(QuantEnv { core: Arc::new(core) })
     }
 
-    /// Switch this env onto a shared memo-cache (sharded drivers call this
-    /// right after construction). Entries already memoized privately — e.g.
-    /// the uniform-bits_max probe from bring-up — are carried over.
-    pub fn share_memo(&mut self, memo: Arc<AccMemo>) {
-        if !Arc::ptr_eq(&self.memo, &memo) {
-            memo.extend(self.memo.entries());
-            self.memo = memo;
-        }
-    }
+}
 
-    /// The memo-cache this env reads/writes (private unless shared).
+impl EnvCore {
+    /// The memo-cache this env reads/writes (shared by all handle clones).
     pub fn memo(&self) -> &Arc<AccMemo> {
         &self.memo
+    }
+
+    /// Snapshot of the perf/cache counters (shared across all clones).
+    pub fn stats(&self) -> EnvStats {
+        self.stats.snapshot()
     }
 
     fn bits_literal(&self, bits: &[u32]) -> Result<Literal> {
@@ -206,43 +253,59 @@ impl QuantEnv {
         lit_f32(&v, &[self.net.l as i64])
     }
 
+    fn n_batches(&self) -> usize {
+        (self.train.n / self.net.train_batch).max(1)
+    }
+
+    /// Deterministic retrain start-batch for a bitwidth vector (FNV-1a over
+    /// the bits). See the module docs: deriving the cursor from the query
+    /// instead of shared mutable state is what makes `accuracy` pure and
+    /// every concurrent driver bit-reproducible.
+    fn bits_cursor(&self, bits: &[u32]) -> usize {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &b in bits {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        (h % self.n_batches() as u64) as usize
+    }
+
     /// Full-precision pretraining (bits = FP sentinel), establishing the
     /// Acc_FullP reference and the snapshot every evaluation retrains from.
+    /// Runs before the core is shared; the step index doubles as the
+    /// sequential train-batch cursor (post-pretrain accuracy queries use
+    /// the bits-derived `bits_cursor` instead, so the shared core holds no
+    /// mutable cursor at all).
     fn pretrain(&mut self) -> Result<()> {
         let fp = vec![self.fp_bits as u32; self.net.l];
         let bits_lit = self.bits_literal(&fp)?;
         let mut params = std::mem::take(&mut self.pretrained);
         let mut mom = vec![0.0f32; self.net.p];
-        for _ in 0..self.cfg.pretrain_steps {
-            let (p2, m2, _, _) = self.train_once(&params, &mom, &bits_lit)?;
+        for step in 0..self.cfg.pretrain_steps {
+            let (p2, m2, _, _) = self.train_once(&params, &mom, &bits_lit, step)?;
             params = p2;
             mom = m2;
         }
         self.pretrained = params;
-        self.acc_fullp = self.eval_with(&self.pretrained.clone(), &fp)?;
+        self.acc_fullp = self.eval_with(&self.pretrained, &fp)?;
         Ok(())
     }
 
-    fn train_once(&mut self, params: &[f32], mom: &[f32], bits_lit: &Literal)
+    fn train_once(&self, params: &[f32], mom: &[f32], bits_lit: &Literal, cursor: usize)
                   -> Result<(Vec<f32>, Vec<f32>, f32, f32)> {
         let b = self.net.train_batch;
         let [h, w, c] = self.net.input;
-        let cursor = self.batch_cursor;
-        self.batch_cursor += 1;
-        // split borrows: temporarily move the buffers out
-        let mut xs = std::mem::take(&mut self.xs_buf);
-        let mut ys = std::mem::take(&mut self.ys_buf);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
         self.train.fill_batch(cursor, b, &mut xs, &mut ys);
         let params_lit = lit_f32(params, &[self.net.p as i64])?;
         let mom_lit = lit_f32(mom, &[self.net.p as i64])?;
         let x_lit = lit_f32(&xs, &[b as i64, h as i64, w as i64, c as i64])?;
         let y_lit = lit_f32(&ys, &[b as i64])?;
         let lr_lit = lit_scalar(self.cfg.lr);
-        self.xs_buf = xs;
-        self.ys_buf = ys;
         let args = [&params_lit, &mom_lit, &x_lit, &y_lit, bits_lit, &lr_lit];
         let out = self.train_exe.run(&args).context("train step")?;
-        self.stats.train_execs += 1;
+        self.stats.train_execs.fetch_add(1, Ordering::Relaxed);
         Ok((
             to_vec_f32(&out[0])?,
             to_vec_f32(&out[1])?,
@@ -251,19 +314,19 @@ impl QuantEnv {
         ))
     }
 
-    fn eval_with(&mut self, params: &[f32], bits: &[u32]) -> Result<f64> {
+    fn eval_with(&self, params: &[f32], bits: &[u32]) -> Result<f64> {
         let params_lit = lit_f32(params, &[self.net.p as i64])?;
         let bits_lit = self.bits_literal(bits)?;
-        let args = [&params_lit, &self.val_x_lit, &self.val_y_lit, &bits_lit];
+        let args = [&params_lit, self.val_x_lit.raw(), self.val_y_lit.raw(), &bits_lit];
         let out = self.eval_exe.run(&args).context("eval")?;
-        self.stats.eval_execs += 1;
+        self.stats.eval_execs.fetch_add(1, Ordering::Relaxed);
         let ncorrect = to_f32(&out[1])? as f64;
         Ok(ncorrect / self.net.eval_batch as f64)
     }
 
     /// Upload the persistent operands of the fused artifact (called once
     /// after pretraining; the snapshot never changes during a search).
-    fn upload_fused_operands(&mut self) -> Result<()> {
+    fn upload_fused_operands(&mut self, val: &Split) -> Result<()> {
         if self.fused_exe.is_none() || self.train.n != self.net.train_size {
             // training split doesn't match the AOT-baked resident set; the
             // unfused fallback still works, so just skip the fast path.
@@ -277,11 +340,8 @@ impl QuantEnv {
             mom: e.buffer_f32(&vec![0.0; self.net.p], &[self.net.p])?,
             train_x: e.buffer_f32(&self.train.images, &[self.train.n, h, w, c])?,
             train_y: e.buffer_f32(&self.train.labels, &[self.train.n])?,
-            val_x: e.buffer_f32(
-                &self.val_images_cache,
-                &[self.net.eval_batch, h, w, c],
-            )?,
-            val_y: e.buffer_f32(&self.val_labels_cache, &[self.net.eval_batch])?,
+            val_x: e.buffer_f32(&val.images, &[self.net.eval_batch, h, w, c])?,
+            val_y: e.buffer_f32(&val.labels, &[self.net.eval_batch])?,
         });
         Ok(())
     }
@@ -289,18 +349,15 @@ impl QuantEnv {
     /// Fused accuracy query: one PJRT execution covering the k-step quantized
     /// retrain and the validation eval, with all large operands resident on
     /// the device. Per query only the bits vector, cursor and lr transfer.
-    fn accuracy_fused(&mut self, bits: &[u32]) -> Result<Option<f64>> {
+    fn accuracy_fused(&self, bits: &[u32], cursor: usize) -> Result<Option<f64>> {
         if self.cfg.retrain_steps != self.net.fused_k {
             return Ok(None);
         }
         let Some(bufs) = &self.fused_bufs else { return Ok(None) };
         let Some(fused_exe) = self.fused_exe.clone() else { return Ok(None) };
-        let n_batches = self.train.n / self.net.train_batch;
-        let cursor = (self.batch_cursor % n_batches) as f32;
-        self.batch_cursor += self.net.fused_k;
         let bits_v: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
         let e = &self.engine;
-        let cursor_buf = e.buffer_scalar(cursor)?;
+        let cursor_buf = e.buffer_scalar(cursor as f32)?;
         let bits_buf = e.buffer_f32(&bits_v, &[self.net.l])?;
         let lr_buf = e.buffer_scalar(self.cfg.lr)?;
         let args = [
@@ -315,26 +372,28 @@ impl QuantEnv {
             bufs.val_y.raw(),
         ];
         let out = fused_exe.run_b(&args).context("fused retrain_eval")?;
-        self.stats.train_execs += self.net.fused_k as u64;
-        self.stats.eval_execs += 1;
+        self.stats.train_execs.fetch_add(self.net.fused_k as u64, Ordering::Relaxed);
+        self.stats.eval_execs.fetch_add(1, Ordering::Relaxed);
         let ncorrect = to_f32(&out[1])? as f64;
         Ok(Some(ncorrect / self.net.eval_batch as f64))
     }
 
     /// Validation accuracy for a bitwidth assignment after a short quantized
-    /// retrain from the pretrained snapshot (memoized). Takes the fused
-    /// single-execution path when available.
-    pub fn accuracy(&mut self, bits: &[u32]) -> Result<f64> {
-        self.stats.evals += 1;
-        if let Some(acc) = self.memo.get(bits) {
-            self.stats.cache_hits += 1;
-            return Ok(acc);
+    /// retrain from the pretrained snapshot. Memoized and **single-flight**:
+    /// concurrent callers for the same uncached vector coalesce onto one
+    /// PJRT evaluation. Takes the fused single-execution path when
+    /// available.
+    pub fn accuracy(&self, bits: &[u32]) -> Result<f64> {
+        self.stats.evals.fetch_add(1, Ordering::Relaxed);
+        let (acc, cached) = self.memo.get_or_compute(bits, || {
+            match self.accuracy_fused(bits, self.bits_cursor(bits))? {
+                Some(acc) => Ok(acc),
+                None => self.retrain_and_eval(bits, self.cfg.retrain_steps),
+            }
+        })?;
+        if cached {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
         }
-        let acc = match self.accuracy_fused(bits)? {
-            Some(acc) => acc,
-            None => self.retrain_and_eval(bits, self.cfg.retrain_steps)?,
-        };
-        self.memo.insert(bits, acc);
         Ok(acc)
     }
 
@@ -345,20 +404,23 @@ impl QuantEnv {
     /// must time the real retrain+eval every iteration, and a stale write
     /// would poison `accuracy()` callers whose fused path is live. It still
     /// counts as an eval in `EnvStats` so bench runs are not under-reported.
-    pub fn accuracy_unfused(&mut self, bits: &[u32]) -> Result<f64> {
-        self.stats.evals += 1;
+    pub fn accuracy_unfused(&self, bits: &[u32]) -> Result<f64> {
+        self.stats.evals.fetch_add(1, Ordering::Relaxed);
         self.retrain_and_eval(bits, self.cfg.retrain_steps)
     }
 
     /// Quantized (re)training from the snapshot for `steps` SGD steps, then
     /// evaluate on the validation split. Used both for the per-step reward
     /// estimate (short) and the final long retrain of the converged solution.
-    pub fn retrain_and_eval(&mut self, bits: &[u32], steps: usize) -> Result<f64> {
+    /// The start batch is bits-derived (see `bits_cursor`), so the result is
+    /// a pure function of (bits, steps).
+    pub fn retrain_and_eval(&self, bits: &[u32], steps: usize) -> Result<f64> {
         let bits_lit = self.bits_literal(bits)?;
+        let start = self.bits_cursor(bits);
         let mut params = self.pretrained.clone();
         let mut mom = vec![0.0f32; self.net.p];
-        for _ in 0..steps {
-            let (p2, m2, _, _) = self.train_once(&params, &mom, &bits_lit)?;
+        for i in 0..steps {
+            let (p2, m2, _, _) = self.train_once(&params, &mom, &bits_lit, start + i)?;
             params = p2;
             mom = m2;
         }
@@ -367,7 +429,7 @@ impl QuantEnv {
 
     /// State-of-Relative-Accuracy (paper §2.4): Acc_curr over the reference
     /// (see `acc_ref`).
-    pub fn state_acc(&mut self, bits: &[u32]) -> Result<f64> {
+    pub fn state_acc(&self, bits: &[u32]) -> Result<f64> {
         Ok(self.accuracy(bits)? / self.acc_ref.max(1e-9))
     }
 

@@ -5,18 +5,21 @@
 //!   accuracy evaluation through the AOT artifacts
 //! * [`reward`] — asymmetric reward shaping + the two ablation forms (§2.6)
 //! * [`ppo`] — PPO driver: trajectories, GAE, updates through HLO (§2.7)
+//! * [`rollout`] — lockstep batched rollouts over the shared env core
 //! * [`search`] — the episode loop, convergence detection, final solution
 
 pub mod embedding;
 pub mod env;
 pub mod ppo;
 pub mod reward;
+pub mod rollout;
 pub mod search;
 
 pub use embedding::{embed, StaticFeatures, STATE_DIM};
-pub use env::{EnvConfig, EnvStats, QuantEnv};
+pub use env::{EnvConfig, EnvCore, EnvStats, QuantEnv};
 pub use ppo::{AgentKind, PpoAgent, PpoConfig, StepRecord, UpdateStats};
 pub use reward::{RewardKind, RewardParams};
+pub use rollout::LaneRollout;
 pub use search::{
-    best_replica, run_replicas, ActionSpace, SearchConfig, SearchResult, Searcher,
+    best_replica, run_replicas, ActionSpace, RolloutMode, SearchConfig, SearchResult, Searcher,
 };

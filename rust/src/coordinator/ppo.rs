@@ -42,11 +42,11 @@ impl AgentKind {
         }
     }
 
-    pub fn parse(s: &str) -> AgentKind {
+    pub fn parse(s: &str) -> Result<AgentKind> {
         match s {
-            "lstm" => AgentKind::Lstm,
-            "fc" => AgentKind::Fc,
-            other => panic!("unknown agent kind `{other}` (lstm|fc)"),
+            "lstm" => Ok(AgentKind::Lstm),
+            "fc" => Ok(AgentKind::Fc),
+            other => anyhow::bail!("unknown agent kind `{other}` (expected lstm|fc)"),
         }
     }
 }
@@ -127,6 +127,9 @@ pub struct PpoAgent {
     pub episode_len: usize,
     engine: Arc<Engine>,
     act_exe: Arc<Exe>,
+    /// vectorized act artifact (`agent_*_act_batch`), compiled lazily on the
+    /// first `act_batch` call so serial-only runs never pay for it
+    act_batch_exe: Option<Arc<Exe>>,
     update_exe: Arc<Exe>,
     pub params: Vec<f32>,
     /// device-resident copy of `params`; uploaded lazily on the first act
@@ -138,6 +141,9 @@ pub struct PpoAgent {
     adam_t: f32,
     hidden: usize,
     pub n_actions: usize,
+    /// lanes baked into the `agent_*_act_batch` artifact (manifest
+    /// `act_batch`; = episodes_per_update as AOT-compiled)
+    pub act_lanes: usize,
     /// finished episodes waiting for the next update
     pending: Vec<Vec<StepRecord>>,
     pub updates_done: usize,
@@ -146,6 +152,9 @@ pub struct PpoAgent {
     /// uploads == updates+1 over a run)
     pub param_uploads: u64,
     pub act_calls: u64,
+    /// lockstep batched forwards: each replaces up to `act_lanes` scalar
+    /// `act` dispatches with one PJRT execution
+    pub act_batch_calls: u64,
 }
 
 impl PpoAgent {
@@ -184,6 +193,7 @@ impl PpoAgent {
             episode_len,
             engine,
             act_exe,
+            act_batch_exe: None,
             update_exe,
             params,
             params_buf: None,
@@ -192,10 +202,12 @@ impl PpoAgent {
             adam_t: 0.0,
             hidden: manifest.agent.hidden,
             n_actions: manifest.agent.n_actions,
+            act_lanes: manifest.agent.act_batch,
             pending: Vec::new(),
             updates_done: 0,
             param_uploads: 0,
             act_calls: 0,
+            act_batch_calls: 0,
         })
     }
 
@@ -237,6 +249,57 @@ impl PpoAgent {
             to_vec_f32(&out[2])?,
             to_vec_f32(&out[3])?,
         ))
+    }
+
+    /// Vectorized policy forward over `act_lanes` independent lanes: one
+    /// PJRT execution where the serial driver would issue `act_lanes`
+    /// (EXPERIMENTS.md §Perf). Operands are flattened row-major:
+    /// `states[B*STATE_DIM]`, `h`/`c` `[B*hidden]`; returns
+    /// `(probs[B*n_actions], values[B], h'[B*hidden], c'[B*hidden])`.
+    ///
+    /// The params operand is the same device-resident buffer the scalar act
+    /// path uses (zero per-call param uploads between PPO updates); only the
+    /// lane states/hiddens transfer per call.
+    pub fn act_batch(&mut self, states: &[f32], h: &[f32], c: &[f32])
+                     -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let b = self.act_lanes;
+        anyhow::ensure!(
+            states.len() == b * STATE_DIM && h.len() == b * self.hidden
+                && c.len() == b * self.hidden,
+            "act_batch operands must cover exactly {b} lanes"
+        );
+        if self.act_batch_exe.is_none() {
+            let exe = self
+                .engine
+                .exe(&format!("agent_{}_act_batch", self.kind.tag()))
+                .with_context(|| {
+                    format!(
+                        "no act_batch artifact for `{}` — re-run `make artifacts` \
+                         (the lockstep driver needs agent_{}_act_batch.hlo.txt)",
+                        self.kind.tag(),
+                        self.kind.tag()
+                    )
+                })?;
+            self.act_batch_exe = Some(exe);
+        }
+        self.act_batch_calls += 1;
+        self.ensure_resident_params()?;
+        let s_buf = self.engine.buffer_f32(states, &[b, STATE_DIM])?;
+        let h_buf = self.engine.buffer_f32(h, &[b, self.hidden])?;
+        let c_buf = self.engine.buffer_f32(c, &[b, self.hidden])?;
+        let params_buf = self.params_buf.as_ref().expect("just ensured");
+        let exe = self.act_batch_exe.as_ref().expect("just ensured");
+        let args = [params_buf.raw(), s_buf.raw(), h_buf.raw(), c_buf.raw()];
+        let out = exe.run_b(&args).context("agent act_batch")?;
+        let probs = to_vec_f32(&out[0])?;
+        let values = to_vec_f32(&out[1])?;
+        let h2 = to_vec_f32(&out[2])?;
+        let c2 = to_vec_f32(&out[3])?;
+        anyhow::ensure!(
+            probs.len() == b * self.n_actions && values.len() == b,
+            "act_batch artifact returned unexpected shapes"
+        );
+        Ok((probs, values, h2, c2))
     }
 
     /// The pre-resident-buffer act path (full param vector re-marshalled as a

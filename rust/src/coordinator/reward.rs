@@ -29,12 +29,12 @@ pub enum RewardKind {
 }
 
 impl RewardKind {
-    pub fn parse(s: &str) -> RewardKind {
+    pub fn parse(s: &str) -> anyhow::Result<RewardKind> {
         match s {
-            "proposed" => RewardKind::Proposed,
-            "ratio" => RewardKind::Ratio,
-            "diff" => RewardKind::Diff,
-            other => panic!("unknown reward kind `{other}` (proposed|ratio|diff)"),
+            "proposed" => Ok(RewardKind::Proposed),
+            "ratio" => Ok(RewardKind::Ratio),
+            "diff" => Ok(RewardKind::Diff),
+            other => anyhow::bail!("unknown reward kind `{other}` (expected proposed|ratio|diff)"),
         }
     }
 }

@@ -1,0 +1,214 @@
+//! Lockstep batched rollouts (EXPERIMENTS.md §Perf): advance a whole PPO
+//! batch of episodes layer-by-layer instead of episode-by-episode.
+//!
+//! Per layer the driver pays
+//!
+//! 1. **one** `agent_*_act_batch` PJRT execution for all B lanes (the serial
+//!    driver pays B scalar `act` executions), then
+//! 2. one accuracy query per **distinct uncached** bits vector among the
+//!    lanes: candidates dedup through the single-flight [`AccMemo`], and the
+//!    ≤B misses fan out across shard threads via [`parallel::run_sharded`]
+//!    against the shared env core.
+//!
+//! Equivalence with the serial driver: every episode samples from its own
+//! per-episode PCG stream (`Searcher::episode_rng`) and `EnvCore::accuracy`
+//! is a pure function of the bits vector, so a lanes=1 run replays the
+//! serial trajectory bit-for-bit (it even dispatches through the scalar
+//! `act` artifact), and a lanes=B run draws the same actions the serial
+//! driver would whenever B divides `episodes_per_update` — PPO updates then
+//! land on the same episode boundaries — up to the vmapped act_batch
+//! artifact agreeing numerically with the scalar act (XLA guarantees this
+//! only to float-rounding level; python/tests/test_agent.py pins it at
+//! ~1e-5, so parity tests compare converged solutions, not raw
+//! trajectories: `rust/tests/rollout_parity.rs`).
+
+use anyhow::Result;
+
+use crate::metrics::{EpisodeLog, SearchLog};
+use crate::parallel;
+use crate::util::rng::Pcg32;
+
+use super::embedding::{embed, STATE_DIM};
+use super::ppo::{PpoAgent, StepRecord};
+use super::search::{SearchResult, Searcher};
+
+/// One episode lane's finished rollout.
+pub struct LaneRollout {
+    pub bits: Vec<u32>,
+    pub probs: Vec<Vec<f32>>,
+    pub records: Vec<StepRecord>,
+}
+
+impl Searcher {
+    /// Roll out `rngs.len()` training episodes in lockstep (lane `i` samples
+    /// from `rngs[i]`). Lane count must not exceed the act_batch artifact's
+    /// baked width; a single active lane takes the scalar `act` path.
+    pub(super) fn rollout_lockstep(&mut self, rngs: &mut [Pcg32]) -> Result<Vec<LaneRollout>> {
+        let n = rngs.len();
+        let l_total = self.env.net.l;
+        let lanes = self.agent.act_lanes;
+        anyhow::ensure!(n >= 1, "lockstep rollout needs at least one lane");
+        anyhow::ensure!(
+            n <= lanes,
+            "{n} lanes exceed the act_batch artifact's width {lanes}"
+        );
+        let (h0, c0) = self.agent.initial_hidden();
+        let hidden = h0.len();
+        let n_actions = self.agent.n_actions;
+
+        // per-lane episode state (paper §5.1: all layers start at bits_max)
+        let mut bits: Vec<Vec<u32>> = vec![vec![self.bits_max; l_total]; n];
+        let mut hs: Vec<Vec<f32>> = vec![h0; n];
+        let mut cs: Vec<Vec<f32>> = vec![c0; n];
+        let mut state_accs = vec![1.0f64; n];
+        let mut state_qs: Vec<f64> = bits.iter().map(|b| self.env.state_q(b)).collect();
+        let mut out: Vec<LaneRollout> = (0..n)
+            .map(|_| LaneRollout {
+                bits: Vec::new(),
+                probs: Vec::with_capacity(l_total),
+                records: Vec::with_capacity(l_total),
+            })
+            .collect();
+
+        for l in 0..l_total {
+            let mut lane_states: Vec<[f32; STATE_DIM]> = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut s = [0.0f32; STATE_DIM];
+                embed(&self.statics, l, &bits[i], self.bits_max, state_accs[i], state_qs[i],
+                      &mut s);
+                lane_states.push(s);
+            }
+
+            // one batched forward for all lanes (scalar act when only one
+            // lane is active: cheaper than padding, and bit-identical to the
+            // serial rollout — the B=1 parity guarantee)
+            let (probs_per_lane, values, new_h, new_c) = if n == 1 {
+                let (p, v, h2, c2) = self.agent.act(&lane_states[0], &hs[0], &cs[0])?;
+                (vec![p], vec![v], vec![h2], vec![c2])
+            } else {
+                let mut states = vec![0.0f32; lanes * STATE_DIM];
+                let mut hcat = vec![0.0f32; lanes * hidden];
+                let mut ccat = vec![0.0f32; lanes * hidden];
+                for i in 0..n {
+                    states[i * STATE_DIM..(i + 1) * STATE_DIM].copy_from_slice(&lane_states[i]);
+                    hcat[i * hidden..(i + 1) * hidden].copy_from_slice(&hs[i]);
+                    ccat[i * hidden..(i + 1) * hidden].copy_from_slice(&cs[i]);
+                }
+                let (pf, vf, hf, cf) = self.agent.act_batch(&states, &hcat, &ccat)?;
+                (
+                    (0..n).map(|i| pf[i * n_actions..(i + 1) * n_actions].to_vec()).collect(),
+                    vf[..n].to_vec(),
+                    (0..n).map(|i| hf[i * hidden..(i + 1) * hidden].to_vec()).collect(),
+                    (0..n).map(|i| cf[i * hidden..(i + 1) * hidden].to_vec()).collect(),
+                )
+            };
+
+            let mut actions = Vec::with_capacity(n);
+            for i in 0..n {
+                let action = PpoAgent::sample(&probs_per_lane[i], &mut rngs[i]);
+                bits[i][l] = self.action_to_bits(action, bits[i][l]);
+                state_qs[i] = self.env.state_q(&bits[i]);
+                hs[i] = new_h[i].clone();
+                cs[i] = new_c[i].clone();
+                actions.push(action);
+            }
+
+            let last = l + 1 == l_total;
+            let mut rewards = vec![0.0f32; n];
+            if self.cfg.eval_every_step || last {
+                // dedup the ≤n distinct candidate vectors, then fan only the
+                // uncached ones across shard threads; the single-flight memo
+                // guarantees each distinct vector costs one PJRT evaluation
+                let mut misses: Vec<Vec<u32>> = Vec::new();
+                for b in bits.iter().take(n) {
+                    if !self.env.memo().contains(b) && !misses.contains(b) {
+                        misses.push(b.clone());
+                    }
+                }
+                if misses.len() > 1 {
+                    let env = &self.env;
+                    let shards = parallel::default_shards(misses.len());
+                    let chunks = parallel::chunk_evenly(misses, shards);
+                    parallel::run_sharded(chunks, |_, chunk| {
+                        for bv in &chunk {
+                            env.accuracy(bv)?;
+                        }
+                        Ok(())
+                    })?;
+                }
+                for i in 0..n {
+                    state_accs[i] = self.env.state_acc(&bits[i])?;
+                    rewards[i] = self.cfg.reward.reward(state_accs[i], state_qs[i]) as f32;
+                }
+            }
+
+            for i in 0..n {
+                out[i].records.push(StepRecord {
+                    state: lane_states[i],
+                    action: actions[i],
+                    logp: probs_per_lane[i][actions[i]].max(1e-8).ln(),
+                    value: values[i],
+                    reward: rewards[i],
+                });
+                out[i].probs.push(probs_per_lane[i].clone());
+            }
+        }
+
+        for (lane, b) in out.iter_mut().zip(bits) {
+            lane.bits = b;
+        }
+        Ok(out)
+    }
+
+    /// The batched search loop: lockstep rollouts in chunks of `cfg.lanes`
+    /// (default: episodes_per_update, one PPO batch per chunk), with the same
+    /// logging, update cadence, and greedy convergence detection as the
+    /// serial driver.
+    pub(super) fn run_batched(&mut self) -> Result<SearchResult> {
+        let lanes = if self.cfg.lanes == 0 {
+            self.agent.act_lanes.min(self.cfg.ppo.episodes_per_update)
+        } else {
+            self.cfg.lanes
+        };
+        anyhow::ensure!(
+            lanes >= 1 && lanes <= self.agent.act_lanes,
+            "--lanes {lanes} out of range 1..={}",
+            self.agent.act_lanes
+        );
+        let mut log = SearchLog::default();
+        let mut stable_updates = 0usize;
+        let mut last_greedy: Option<Vec<u32>> = None;
+        let mut episodes_run = 0usize;
+
+        let mut ep = 0usize;
+        'episodes: while ep < self.cfg.episodes {
+            let n = lanes.min(self.cfg.episodes - ep);
+            let mut rngs: Vec<Pcg32> = (ep..ep + n).map(|e| self.episode_rng(e)).collect();
+            let batch = self.rollout_lockstep(&mut rngs)?;
+            for (i, lane) in batch.into_iter().enumerate() {
+                episodes_run = ep + i + 1;
+                let reward_sum: f64 = lane.records.iter().map(|r| r.reward as f64).sum();
+                let state_acc = self.env.state_acc(&lane.bits)?;
+                let state_q = self.env.state_q(&lane.bits);
+                log.push(EpisodeLog {
+                    episode: ep + i,
+                    reward: reward_sum,
+                    state_acc,
+                    state_q,
+                    bits: lane.bits.clone(),
+                    probs: lane.probs,
+                });
+                let updated = self.agent.finish_episode(lane.records)?.is_some();
+                if updated
+                    && self.cfg.patience > 0
+                    && self.greedy_converged(&mut last_greedy, &mut stable_updates)?
+                {
+                    break 'episodes;
+                }
+            }
+            ep += n;
+        }
+
+        self.finalize(log, episodes_run)
+    }
+}

@@ -2,6 +2,13 @@
 //! bitwidth actions, reward at each step, PPO updates every B episodes, and
 //! convergence detection — then a greedy rollout + long retrain produces the
 //! final Table-2-style solution.
+//!
+//! Episodes roll out either serially (one agent `act` per layer per episode)
+//! or in lockstep batches (`RolloutMode::Batched`, `coordinator::rollout`):
+//! the whole PPO batch advances layer-by-layer with one `act_batch`
+//! execution per layer. Action sampling draws from independent per-episode
+//! PCG streams (`episode_rng`), so both modes sample identical actions for
+//! episode `ep` under the same seed.
 
 use std::sync::Arc;
 
@@ -28,11 +35,31 @@ pub enum ActionSpace {
 }
 
 impl ActionSpace {
-    pub fn parse(s: &str) -> ActionSpace {
+    pub fn parse(s: &str) -> Result<ActionSpace> {
         match s {
-            "flexible" => ActionSpace::Flexible,
-            "restricted" => ActionSpace::Restricted,
-            other => panic!("unknown action space `{other}` (flexible|restricted)"),
+            "flexible" => Ok(ActionSpace::Flexible),
+            "restricted" => Ok(ActionSpace::Restricted),
+            other => anyhow::bail!("unknown action space `{other}` (expected flexible|restricted)"),
+        }
+    }
+}
+
+/// How episodes roll out (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RolloutMode {
+    /// one agent `act` dispatch per (layer, episode)
+    Serial,
+    /// lockstep lanes: one `act_batch` dispatch per layer for a whole PPO
+    /// batch, accuracy misses deduped + fanned across shard threads
+    Batched,
+}
+
+impl RolloutMode {
+    pub fn parse(s: &str) -> Result<RolloutMode> {
+        match s {
+            "serial" => Ok(RolloutMode::Serial),
+            "batched" => Ok(RolloutMode::Batched),
+            other => anyhow::bail!("unknown rollout mode `{other}` (expected batched|serial)"),
         }
     }
 }
@@ -45,6 +72,12 @@ pub struct SearchConfig {
     pub reward: RewardParams,
     pub agent_kind: AgentKind,
     pub action_space: ActionSpace,
+    /// rollout driver; `Batched` needs the `agent_*_act_batch` artifact
+    pub rollout: RolloutMode,
+    /// lockstep lanes per batch (0 = episodes_per_update). 1 replays the
+    /// serial trajectory exactly; values that divide episodes_per_update
+    /// keep PPO updates on the same episode boundaries as the serial driver.
+    pub lanes: usize,
     /// evaluate accuracy (and reward) at every layer step; when false, only
     /// the terminal step is evaluated (paper §3: "for deeper networks ... we
     /// perform this phase after all the bitwidths are selected")
@@ -67,6 +100,8 @@ impl Default for SearchConfig {
             reward: RewardParams::default(),
             agent_kind: AgentKind::Lstm,
             action_space: ActionSpace::Flexible,
+            rollout: RolloutMode::Serial,
+            lanes: 0,
             eval_every_step: true,
             min_bits: 2,
             seed: 23,
@@ -100,9 +135,10 @@ pub struct Searcher {
     pub env: QuantEnv,
     pub agent: PpoAgent,
     pub cfg: SearchConfig,
-    statics: StaticFeatures,
-    rng: Pcg32,
-    bits_max: u32,
+    pub(super) statics: StaticFeatures,
+    /// seed anchor for the per-episode sampling streams (never advanced)
+    base_rng: Pcg32,
+    pub(super) bits_max: u32,
 }
 
 impl Searcher {
@@ -115,22 +151,40 @@ impl Searcher {
             manifest.fp_bits,
             cfg.env.clone(),
         )?;
+        Self::with_env(env, engine, manifest, cfg)
+    }
+
+    /// Build a searcher over an existing — possibly shared-core — env, so
+    /// multiple searchers (e.g. [`run_replicas`] shards) reuse one
+    /// pretrained snapshot and one accuracy memo instead of each paying the
+    /// full env bring-up. The env's own `EnvConfig` governs evaluation;
+    /// `cfg.env` is ignored (pretraining already happened).
+    pub fn with_env(env: QuantEnv, engine: Arc<Engine>, manifest: &Manifest,
+                    cfg: SearchConfig) -> Result<Searcher> {
         let agent = PpoAgent::new(
             engine,
             manifest,
             cfg.agent_kind,
-            net.l,
+            env.net.l,
             cfg.seed ^ 0xa9e27,
             cfg.ppo.clone(),
         )?;
-        let statics = StaticFeatures::new(net, &env.pretrained);
-        let rng = Pcg32::new(cfg.seed);
+        let statics = StaticFeatures::new(&env.net, &env.pretrained);
+        let base_rng = Pcg32::new(cfg.seed);
         let bits_max = manifest.bits_max;
-        Ok(Searcher { env, agent, cfg, statics, rng, bits_max })
+        Ok(Searcher { env, agent, cfg, statics, base_rng, bits_max })
+    }
+
+    /// Independent action-sampling stream for episode `ep`. Serial and
+    /// lockstep rollouts both draw episode `ep` from this stream, which is
+    /// what makes a lanes=1 batched run replay the serial trajectory exactly
+    /// and a lanes=B run sample the same actions the serial driver would.
+    pub(super) fn episode_rng(&self, ep: usize) -> Pcg32 {
+        self.base_rng.derive(ep as u64)
     }
 
     /// Map a sampled action index to a bitwidth, honoring the action space.
-    fn action_to_bits(&self, action: usize, current: u32) -> u32 {
+    pub(super) fn action_to_bits(&self, action: usize, current: u32) -> u32 {
         let target = (action as u32 + 1).clamp(self.cfg.min_bits, self.bits_max);
         match self.cfg.action_space {
             ActionSpace::Flexible => target,
@@ -141,10 +195,11 @@ impl Searcher {
         }
     }
 
-    /// Run one episode. `greedy` takes argmax actions and skips recording.
-    /// Returns (bits, per-step probs, episode records).
-    fn rollout(&mut self, greedy: bool)
-               -> Result<(Vec<u32>, Vec<Vec<f32>>, Vec<StepRecord>)> {
+    /// Run one serial episode. `rng = None` takes greedy (argmax) actions
+    /// and skips recording. Returns (bits, per-step probs, episode records).
+    pub(super) fn rollout(&mut self, mut rng: Option<&mut Pcg32>)
+                          -> Result<(Vec<u32>, Vec<Vec<f32>>, Vec<StepRecord>)> {
+        let greedy = rng.is_none();
         let l_total = self.env.net.l;
         // onset of exploration: all layers start at bits_max (paper §5.1)
         let mut bits = vec![self.bits_max; l_total];
@@ -160,23 +215,24 @@ impl Searcher {
             let (probs, value, h2, c2) = self.agent.act(&s, &h, &c)?;
             h = h2;
             c = c2;
-            let action = if greedy {
-                // total_cmp instead of partial_cmp().unwrap(): no panic on
-                // NaN — but total_cmp ranks NaN above +inf, so a diverged
-                // policy would silently "win" the argmax; surface it as a
-                // proper error instead of reporting a garbage solution
-                let (i, &p) = probs
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .expect("non-empty action probabilities");
-                anyhow::ensure!(
-                    !p.is_nan(),
-                    "policy diverged: NaN action probability at layer {l}"
-                );
-                i
-            } else {
-                PpoAgent::sample(&probs, &mut self.rng)
+            let action = match rng.as_mut() {
+                None => {
+                    // total_cmp instead of partial_cmp().unwrap(): no panic on
+                    // NaN — but total_cmp ranks NaN above +inf, so a diverged
+                    // policy would silently "win" the argmax; surface it as a
+                    // proper error instead of reporting a garbage solution
+                    let (i, &p) = probs
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .expect("non-empty action probabilities");
+                    anyhow::ensure!(
+                        !p.is_nan(),
+                        "policy diverged: NaN action probability at layer {l}"
+                    );
+                    i
+                }
+                Some(r) => PpoAgent::sample(&probs, *r),
             };
             bits[l] = self.action_to_bits(action, bits[l]);
             state_q = self.env.state_q(&bits);
@@ -202,51 +258,30 @@ impl Searcher {
         Ok((bits, probs_hist, records))
     }
 
-    /// Full search: episodes + PPO updates + convergence detection, then the
-    /// greedy rollout and final long retrain.
-    pub fn run(&mut self) -> Result<SearchResult> {
-        let mut log = SearchLog::default();
-        let mut stable_updates = 0usize;
-        let mut last_greedy: Option<Vec<u32>> = None;
-        let mut episodes_run = 0usize;
-
-        for ep in 0..self.cfg.episodes {
-            let (bits, probs, records) = self.rollout(false)?;
-            episodes_run = ep + 1;
-            let reward_sum: f64 = records.iter().map(|r| r.reward as f64).sum();
-            let state_acc = self.env.state_acc(&bits)?;
-            let state_q = self.env.state_q(&bits);
-            log.push(EpisodeLog {
-                episode: ep,
-                reward: reward_sum,
-                state_acc,
-                state_q,
-                bits: bits.clone(),
-                probs,
-            });
-            let updated = self.agent.finish_episode(records)?.is_some();
-
-            // convergence check after each PPO update: greedy policy stability
-            if updated && self.cfg.patience > 0 {
-                let (gbits, _, _) = self.rollout(true)?;
-                if last_greedy.as_ref() == Some(&gbits) {
-                    stable_updates += 1;
-                    if stable_updates >= self.cfg.patience {
-                        break;
-                    }
-                } else {
-                    stable_updates = 0;
-                    last_greedy = Some(gbits);
-                }
-            }
+    /// Convergence check after a PPO update: greedy policy stability.
+    /// Returns true once the greedy rollout has been stable for
+    /// `cfg.patience` consecutive updates.
+    pub(super) fn greedy_converged(&mut self, last_greedy: &mut Option<Vec<u32>>,
+                                   stable_updates: &mut usize) -> Result<bool> {
+        let (gbits, _, _) = self.rollout(None)?;
+        if last_greedy.as_ref() == Some(&gbits) {
+            *stable_updates += 1;
+            Ok(*stable_updates >= self.cfg.patience)
+        } else {
+            *stable_updates = 0;
+            *last_greedy = Some(gbits);
+            Ok(false)
         }
+    }
 
-        // final solution: greedy rollout of the converged policy
-        let (bits, final_probs, _) = self.rollout(true)?;
+    /// Final solution: greedy rollout of the converged policy + long retrain.
+    pub(super) fn finalize(&mut self, log: SearchLog, episodes_run: usize)
+                           -> Result<SearchResult> {
+        let (bits, final_probs, _) = self.rollout(None)?;
         let state_q = self.env.state_q(&bits);
         let acc_final = self
             .env
-            .retrain_and_eval(&bits, self.cfg.env.long_retrain_steps)?;
+            .retrain_and_eval(&bits, self.env.cfg.long_retrain_steps)?;
         let acc_fullp = self.env.acc_fullp;
         let acc_loss_pct = ((acc_fullp - acc_final) * 100.0).max(0.0);
         Ok(SearchResult {
@@ -262,15 +297,69 @@ impl Searcher {
             final_probs,
         })
     }
+
+    /// Full search: episodes + PPO updates + convergence detection, then the
+    /// greedy rollout and final long retrain. Dispatches on
+    /// `cfg.rollout` — the batched driver lives in `coordinator::rollout`.
+    pub fn run(&mut self) -> Result<SearchResult> {
+        match self.cfg.rollout {
+            RolloutMode::Serial => self.run_serial(),
+            RolloutMode::Batched => self.run_batched(),
+        }
+    }
+
+    fn run_serial(&mut self) -> Result<SearchResult> {
+        let mut log = SearchLog::default();
+        let mut stable_updates = 0usize;
+        let mut last_greedy: Option<Vec<u32>> = None;
+        let mut episodes_run = 0usize;
+
+        for ep in 0..self.cfg.episodes {
+            let mut rng = self.episode_rng(ep);
+            let (bits, probs, records) = self.rollout(Some(&mut rng))?;
+            episodes_run = ep + 1;
+            let reward_sum: f64 = records.iter().map(|r| r.reward as f64).sum();
+            let state_acc = self.env.state_acc(&bits)?;
+            let state_q = self.env.state_q(&bits);
+            log.push(EpisodeLog {
+                episode: ep,
+                reward: reward_sum,
+                state_acc,
+                state_q,
+                bits: bits.clone(),
+                probs,
+            });
+            let updated = self.agent.finish_episode(records)?.is_some();
+
+            if updated
+                && self.cfg.patience > 0
+                && self.greedy_converged(&mut last_greedy, &mut stable_updates)?
+            {
+                break;
+            }
+        }
+
+        self.finalize(log, episodes_run)
+    }
 }
 
 /// Run independent search replicas — `base` with each seed substituted — in
-/// parallel, one `Searcher` (own `QuantEnv` + agent) per shard thread over
-/// the shared engine. Results come back in seed order (deterministic merge),
-/// so `run_replicas(e, m, n, cfg, &[s])` reproduces a sequential
-/// `Searcher::new(..).run()` with `cfg.seed = s` exactly.
+/// parallel, one `Searcher` per shard thread over a **shared pretrained env
+/// core**: the env bring-up (data generation + full-precision pretraining)
+/// runs exactly once, and every accuracy a replica evaluates memoizes for
+/// all the others. Sharing changes no result — `EnvCore::accuracy` is a pure
+/// function of the bits vector — and results come back in seed order
+/// (deterministic merge), so `run_replicas(e, m, n, cfg, &[s])` reproduces a
+/// sequential `Searcher::new(..).run()` with `cfg.seed = s` exactly.
 pub fn run_replicas(engine: &Arc<Engine>, manifest: &Manifest, net: &NetworkMeta,
                     base: &SearchConfig, seeds: &[u64]) -> Result<Vec<SearchResult>> {
+    let env = QuantEnv::new(
+        engine.clone(),
+        net,
+        manifest.bits_max,
+        manifest.fp_bits,
+        base.env.clone(),
+    )?;
     let cfgs: Vec<SearchConfig> = seeds
         .iter()
         .map(|&s| {
@@ -280,7 +369,7 @@ pub fn run_replicas(engine: &Arc<Engine>, manifest: &Manifest, net: &NetworkMeta
         })
         .collect();
     parallel::run_sharded(cfgs, |_, cfg| {
-        let mut searcher = Searcher::new(engine.clone(), manifest, net, cfg)?;
+        let mut searcher = Searcher::with_env(env.clone(), engine.clone(), manifest, cfg)?;
         searcher.run()
     })
 }
@@ -342,5 +431,14 @@ mod tests {
         // all-NaN still returns deterministically
         let all_nan = vec![result(f64::NAN, 0.2), result(f64::NAN, 0.1)];
         assert_eq!(best_replica(&all_nan), Some(1));
+    }
+
+    #[test]
+    fn parsers_reject_unknown_values() {
+        assert!(ActionSpace::parse("flexible").is_ok());
+        assert!(ActionSpace::parse("sideways").is_err());
+        assert_eq!(RolloutMode::parse("batched").unwrap(), RolloutMode::Batched);
+        assert_eq!(RolloutMode::parse("serial").unwrap(), RolloutMode::Serial);
+        assert!(RolloutMode::parse("vectorized").is_err());
     }
 }

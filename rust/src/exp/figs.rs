@@ -61,25 +61,22 @@ pub fn fig6(ctx: &Ctx) -> Result<()> {
         let mut env_cfg = EnvConfig::default();
         env_cfg.pretrain_steps = crate::config::preset(&net).env.pretrain_steps;
         env_cfg.seed = ctx.seed;
-        let mk_env = || {
-            QuantEnv::new(
-                ctx.engine.clone(),
-                meta,
-                ctx.manifest.bits_max,
-                ctx.manifest.fp_bits,
-                env_cfg.clone(),
-            )
-        };
+        // one shared-core env: every shard queries the same pretrained
+        // snapshot, and its warm memo serves the stored-solution probe below
+        // without re-running retrains
+        let env = QuantEnv::new(
+            ctx.engine.clone(),
+            meta,
+            ctx.manifest.bits_max,
+            ctx.manifest.fp_bits,
+            env_cfg,
+        )?;
         let mut ecfg = pareto::EnumConfig::default();
         // keep the evaluation budget proportional to the ctx scale
         ecfg.max_points = ((1200.0 * ctx.episodes_scale) as usize).max(150);
         ecfg.seed = ctx.seed;
         let shards = crate::parallel::default_shards(ecfg.max_points);
-        // keep the memo: the stored-solution probe below reuses the
-        // enumeration's accuracies instead of re-running retrains
-        let memo = std::sync::Arc::new(crate::parallel::AccMemo::new());
-        let (points, exhaustive) =
-            pareto::enumerate_sharded_with(&mk_env, &ecfg, meta.l, shards, memo.clone())?;
+        let (points, exhaustive) = pareto::enumerate_sharded(&env, &ecfg, shards)?;
         let frontier = pareto::pareto_frontier(&points);
         // where does the (stored) ReLeQ solution sit relative to the frontier?
         let releq = super::table2::stored_solution(ctx, &net);
@@ -106,8 +103,6 @@ pub fn fig6(ctx: &Ctx) -> Result<()> {
         );
         if let Some(rb) = &releq {
             if rb.len() == meta.l {
-                let mut env = mk_env()?;
-                env.share_memo(memo);
                 let sq = env.state_q(rb);
                 let sa = env.state_acc(rb)?;
                 // distance to the frontier in state_q at comparable accuracy

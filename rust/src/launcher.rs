@@ -32,9 +32,13 @@ fn out_dir(args: &Args) -> Result<PathBuf> {
     Ok(dir)
 }
 
-fn parse_bits(s: &str) -> Vec<u32> {
+fn parse_bits(s: &str) -> Result<Vec<u32>> {
     s.split(',')
-        .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("bad bits `{t}`")))
+        .map(|t| {
+            let t = t.trim();
+            t.parse()
+                .map_err(|_| anyhow::anyhow!("bad bitwidth `{t}` in --bits (expected e.g. 8,4,4,8)"))
+        })
         .collect()
 }
 
@@ -73,7 +77,7 @@ pub fn cmd_pretrain(args: &Args) -> Result<()> {
     env_cfg.lr = args.f64_of("lr", env_cfg.lr as f64) as f32;
     env_cfg.seed = args.u64_of("seed", env_cfg.seed);
     let t0 = std::time::Instant::now();
-    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
+    let env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
     println!(
         "{net_name}: pretrained {} steps in {:.1}s, full-precision val accuracy {:.4}",
         env.cfg.pretrain_steps,
@@ -148,14 +152,16 @@ pub fn cmd_search(args: &Args) -> Result<()> {
     let result = searcher.run()?;
     report_search(&result, true);
     println!("wall time           : {:.1}s", t0.elapsed().as_secs_f64());
+    let stats = searcher.env.stats();
     println!(
         "env: {} evals, {} cache hits, {} train execs, {} eval execs; \
-         agent: {} acts, {} param uploads",
-        searcher.env.stats.evals,
-        searcher.env.stats.cache_hits,
-        searcher.env.stats.train_execs,
-        searcher.env.stats.eval_execs,
+         agent: {} acts, {} batched acts, {} param uploads",
+        stats.evals,
+        stats.cache_hits,
+        stats.train_execs,
+        stats.eval_execs,
         searcher.agent.act_calls,
+        searcher.agent.act_batch_calls,
         searcher.agent.param_uploads
     );
     let dir = out_dir(args)?;
@@ -181,16 +187,14 @@ pub fn cmd_pareto(args: &Args) -> Result<()> {
         ecfg.max_points
     );
     let t0 = std::time::Instant::now();
-    let mk_env = || {
-        QuantEnv::new(
-            engine.clone(),
-            net,
-            manifest.bits_max,
-            manifest.fp_bits,
-            env_cfg.clone(),
-        )
-    };
-    let (points, exhaustive) = pareto::enumerate_sharded(mk_env, &ecfg, net.l, shards)?;
+    // one shared-core env: all shards query the same pretrained snapshot
+    let env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
+    println!(
+        "pretrained once ({} train execs) in {:.1}s; enumerating...",
+        env.stats().train_execs,
+        t0.elapsed().as_secs_f64()
+    );
+    let (points, exhaustive) = pareto::enumerate_sharded(&env, &ecfg, shards)?;
     let frontier = pareto::pareto_frontier(&points);
     println!(
         "evaluated {} points ({}) in {:.1}s; frontier has {} points:",
@@ -226,7 +230,7 @@ pub fn cmd_hw_eval(args: &Args) -> Result<()> {
     let (manifest, _engine) = bringup()?;
     let net = manifest.network(&net_name)?;
     let bits = match args.opt_str("bits") {
-        Some(s) => parse_bits(&s),
+        Some(s) => parse_bits(&s)?,
         None => crate::baselines::paper_releq_solution(&net_name)
             .with_context(|| format!("no --bits and no stored solution for {net_name}"))?,
     };
@@ -247,7 +251,7 @@ pub fn cmd_admm(args: &Args) -> Result<()> {
     let net = manifest.network(&net_name)?;
     let mut env_cfg = EnvConfig::default();
     env_cfg.pretrain_steps = config::preset(&net_name).env.pretrain_steps;
-    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
+    let env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, env_cfg)?;
     let target = args.f64_of("target-bits", 5.0);
     let sel = AdmmSelector::new(AdmmConfig::default());
     let bits = sel.select(net, &env.pretrained, target);

@@ -5,15 +5,19 @@
 //! the surrounding loops are embarrassingly parallel once the engine is
 //! `Send + Sync`:
 //!
-//! * Pareto `enumerate` — the assignment list splits into contiguous chunks,
-//!   one `QuantEnv` per shard, accuracies deduplicated through [`AccMemo`];
-//! * multi-seed search replicas — independent `Searcher`s per seed;
+//! * Pareto `enumerate` — the assignment list splits into contiguous chunks
+//!   evaluated against one shared-core `QuantEnv`, accuracies deduplicated
+//!   through [`AccMemo`];
+//! * multi-seed search replicas — independent `Searcher`s per seed over one
+//!   shared pretrained env core;
+//! * the per-step accuracy fan-out of the lockstep batched rollout
+//!   (`coordinator::rollout`);
 //! * the per-network loop in `examples/e2e_releq.rs`.
 //!
 //! Design rules (EXPERIMENTS.md §Perf):
-//! * every shard owns its own `QuantEnv` (PJRT buffers and the train-batch
-//!   cursor are per-shard state); only the `Engine` and [`AccMemo`] are
-//!   shared;
+//! * shards share one immutable post-pretrain `EnvCore` (`Arc`), one
+//!   `Engine`, and one [`AccMemo`]; everything mutable on the hot path is an
+//!   atomic or behind the memo's single-flight protocol;
 //! * results merge in **shard-index order**, never completion order, so a
 //!   sharded run reports the same sequence regardless of thread scheduling;
 //! * shard count comes from `RELEQ_SHARDS` when set, else
@@ -21,7 +25,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use anyhow::Result;
 
@@ -111,13 +115,52 @@ where
 /// accuracy, shared across shards so one shard's evaluation saves every
 /// other shard the PJRT executions for the same assignment.
 ///
+/// Lookups are **single-flight** via [`AccMemo::get_or_compute`]: the first
+/// caller to miss on a key becomes the leader and computes it; concurrent
+/// callers for the same key block on the leader's in-flight entry instead of
+/// duplicating the PJRT evaluation (the pre-single-flight behavior was
+/// "both compute, last write wins"). If the leader's computation fails, the
+/// in-flight entry is removed and exactly one waiter retries as the new
+/// leader, so a transient failure never wedges the key.
+///
 /// Hit/miss counters are global (atomics); per-env accounting stays in
 /// `EnvStats`.
 #[derive(Default)]
 pub struct AccMemo {
-    map: RwLock<HashMap<Vec<u32>, f64>>,
+    map: RwLock<HashMap<Vec<u32>, Slot>>,
     hits: AtomicU64,
     misses: AtomicU64,
+}
+
+/// Cache slot: a finished value, or a leader's in-flight computation that
+/// followers wait on.
+enum Slot {
+    Done(f64),
+    InFlight(Arc<Flight>),
+}
+
+/// Rendezvous for one in-flight computation. `result` transitions
+/// None -> Some(outcome) exactly once; `Some(None)` means the leader failed
+/// and waiters must retry.
+#[derive(Default)]
+struct Flight {
+    result: Mutex<Option<Option<f64>>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn finish(&self, outcome: Option<f64>) {
+        *self.result.lock().unwrap() = Some(outcome);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Option<f64> {
+        let mut g = self.result.lock().unwrap();
+        while g.is_none() {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.unwrap()
+    }
 }
 
 impl AccMemo {
@@ -125,8 +168,14 @@ impl AccMemo {
         AccMemo::default()
     }
 
+    /// Non-blocking lookup of a finished value (counts a hit or a miss).
+    /// An in-flight computation by another thread counts as a miss — use
+    /// [`AccMemo::get_or_compute`] to coalesce with it instead.
     pub fn get(&self, bits: &[u32]) -> Option<f64> {
-        let got = self.map.read().unwrap().get(bits).copied();
+        let got = match self.map.read().unwrap().get(bits) {
+            Some(Slot::Done(v)) => Some(*v),
+            _ => None,
+        };
         match got {
             Some(v) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -139,34 +188,149 @@ impl AccMemo {
         }
     }
 
-    /// Insert an evaluated accuracy. Two shards racing on the same vector
-    /// both computed it from the same pretrained snapshot; last write wins
-    /// and either value is correct for that (bits -> accuracy) key.
-    pub fn insert(&self, bits: &[u32], acc: f64) {
-        self.map.write().unwrap().insert(bits.to_vec(), acc);
+    /// Counter-free peek: is a finished value cached for `bits`? (The
+    /// lockstep driver uses this to split a batch into hits and misses
+    /// without skewing the hit/miss statistics.)
+    pub fn contains(&self, bits: &[u32]) -> bool {
+        matches!(self.map.read().unwrap().get(bits), Some(Slot::Done(_)))
     }
 
-    /// Bulk-import entries (used when an env with a warm private cache is
-    /// switched onto a shared memo).
-    pub fn extend<I: IntoIterator<Item = (Vec<u32>, f64)>>(&self, entries: I) {
-        let mut m = self.map.write().unwrap();
-        for (k, v) in entries {
-            m.insert(k, v);
+    /// Single-flight lookup-or-compute. Returns `(value, was_cached)`:
+    /// `was_cached` is true when the value was served without running
+    /// `compute` on this thread (a finished entry, or another thread's
+    /// in-flight result we waited for).
+    pub fn get_or_compute<F>(&self, bits: &[u32], mut compute: F) -> Result<(f64, bool)>
+    where
+        F: FnMut() -> Result<f64>,
+    {
+        /// Unwinding/error guard for the leader: while armed, dropping it
+        /// removes the in-flight slot and wakes waiters with "failed" so a
+        /// panicking or erroring computation can never wedge the key (its
+        /// followers retry; one becomes the new leader).
+        struct UnpinOnDrop<'a> {
+            memo: &'a AccMemo,
+            bits: &'a [u32],
+            armed: bool,
+        }
+        impl Drop for UnpinOnDrop<'_> {
+            fn drop(&mut self) {
+                if !self.armed {
+                    return;
+                }
+                let mut m = self.memo.map.write().unwrap();
+                // remove only if the slot is still this leader's in-flight
+                // entry — a concurrent insert()/extend() may have replaced
+                // it with a Done value (resolving our waiters), which must
+                // not be evicted
+                let still_in_flight = matches!(m.get(self.bits), Some(Slot::InFlight(_)));
+                if still_in_flight {
+                    if let Some(Slot::InFlight(f)) = m.remove(self.bits) {
+                        f.finish(None);
+                    }
+                }
+            }
+        }
+
+        loop {
+            // fast path: finished value under the shared read lock — the
+            // steady-state of a converged search is hit-only and must not
+            // contend on the write lock or allocate an owned key
+            if let Some(Slot::Done(v)) = self.map.read().unwrap().get(bits) {
+                let v = *v;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((v, true));
+            }
+            // miss or in-flight: re-check and claim under one write lock
+            // (entry API: lookup and insert in one borrow)
+            let flight = {
+                let mut m = self.map.write().unwrap();
+                match m.entry(bits.to_vec()) {
+                    std::collections::hash_map::Entry::Occupied(e) => match e.get() {
+                        Slot::Done(v) => {
+                            let v = *v;
+                            self.hits.fetch_add(1, Ordering::Relaxed);
+                            return Ok((v, true));
+                        }
+                        Slot::InFlight(f) => Some(f.clone()),
+                    },
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(Slot::InFlight(Arc::new(Flight::default())));
+                        None
+                    }
+                }
+            };
+            if let Some(f) = flight {
+                // follower: block on the leader; retry (possibly as the new
+                // leader) if it failed
+                match f.wait() {
+                    Some(v) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return Ok((v, true));
+                    }
+                    None => continue,
+                }
+            }
+            // leader: compute outside the lock, publish, wake followers
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            let mut guard = UnpinOnDrop { memo: self, bits, armed: true };
+            let result = compute();
+            match result {
+                Ok(v) => {
+                    guard.armed = false;
+                    let old = self.map.write().unwrap().insert(bits.to_vec(), Slot::Done(v));
+                    if let Some(Slot::InFlight(f)) = old {
+                        f.finish(Some(v));
+                    }
+                    return Ok((v, false));
+                }
+                // the armed guard unpins the key and wakes waiters
+                Err(e) => return Err(e),
+            }
         }
     }
 
-    /// Snapshot of all memoized (bits, accuracy) pairs.
+    /// Insert an evaluated accuracy. Replacing another thread's in-flight
+    /// entry resolves it with this value so its waiters wake instead of
+    /// hanging.
+    pub fn insert(&self, bits: &[u32], acc: f64) {
+        let old = self.map.write().unwrap().insert(bits.to_vec(), Slot::Done(acc));
+        if let Some(Slot::InFlight(f)) = old {
+            f.finish(Some(acc));
+        }
+    }
+
+    /// Bulk-import finished entries (e.g. warming a fresh memo from a
+    /// previous run's [`AccMemo::entries`] snapshot).
+    pub fn extend<I: IntoIterator<Item = (Vec<u32>, f64)>>(&self, entries: I) {
+        let mut m = self.map.write().unwrap();
+        for (k, v) in entries {
+            if let Some(Slot::InFlight(f)) = m.insert(k, Slot::Done(v)) {
+                f.finish(Some(v));
+            }
+        }
+    }
+
+    /// Snapshot of all finished (bits, accuracy) pairs.
     pub fn entries(&self) -> Vec<(Vec<u32>, f64)> {
         self.map
             .read()
             .unwrap()
             .iter()
-            .map(|(k, &v)| (k.clone(), v))
+            .filter_map(|(k, v)| match v {
+                Slot::Done(v) => Some((k.clone(), *v)),
+                Slot::InFlight(_) => None,
+            })
             .collect()
     }
 
+    /// Number of finished entries (in-flight computations excluded).
     pub fn len(&self) -> usize {
-        self.map.read().unwrap().len()
+        self.map
+            .read()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s, Slot::Done(_)))
+            .count()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -235,6 +399,26 @@ mod tests {
     fn single_shard_runs_inline() {
         let out = run_sharded(vec![41u64], |i, s| Ok(s + i as u64 + 1)).unwrap();
         assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn get_or_compute_caches_and_recovers() {
+        let memo = AccMemo::new();
+        let (v, cached) = memo.get_or_compute(&[4, 2], || Ok(0.75)).unwrap();
+        assert!(!cached);
+        assert_eq!(v, 0.75);
+        let (v2, cached2) = memo
+            .get_or_compute(&[4, 2], || panic!("must not recompute a cached key"))
+            .unwrap();
+        assert!(cached2);
+        assert_eq!(v2, 0.75);
+        // a failed computation must not poison the key
+        assert!(memo.get_or_compute(&[9], || anyhow::bail!("boom")).is_err());
+        assert!(!memo.contains(&[9]), "failed compute must unpin the key");
+        let (v3, cached3) = memo.get_or_compute(&[9], || Ok(0.5)).unwrap();
+        assert!(!cached3);
+        assert_eq!(v3, 0.5);
+        assert_eq!(memo.len(), 2);
     }
 
     #[test]

@@ -8,12 +8,10 @@
 //! the limitation is reported (the paper itself calls full enumeration
 //! infeasible beyond moderate sizes).
 
-use std::sync::Arc;
-
 use anyhow::Result;
 
 use crate::coordinator::QuantEnv;
-use crate::parallel::{self, AccMemo};
+use crate::parallel;
 use crate::util::rng::Pcg32;
 
 /// One evaluated design point.
@@ -40,6 +38,12 @@ pub fn pareto_frontier(points: &[Point]) -> Vec<usize> {
     let mut frontier = Vec::new();
     let mut best_acc = f64::NEG_INFINITY;
     for &i in &idx {
+        // a NaN state_q sorts after +inf under total_cmp and would otherwise
+        // slip into the frontier on accuracy alone; a degenerate cost point
+        // can never be Pareto-optimal
+        if points[i].state_q.is_nan() {
+            continue;
+        }
         if points[i].state_acc > best_acc {
             frontier.push(i);
             best_acc = points[i].state_acc;
@@ -114,7 +118,7 @@ pub fn assignments(cfg: &EnumConfig, l: usize) -> (Vec<Vec<u32>>, bool) {
 
 /// Evaluate the space through the environment (short-retrain accuracy).
 /// Returns (points, exhaustive?).
-pub fn enumerate(env: &mut QuantEnv, cfg: &EnumConfig) -> Result<(Vec<Point>, bool)> {
+pub fn enumerate(env: &QuantEnv, cfg: &EnumConfig) -> Result<(Vec<Point>, bool)> {
     let (assigns, exhaustive) = assignments(cfg, env.net.l);
     let mut points = Vec::with_capacity(assigns.len());
     for bits in assigns {
@@ -124,53 +128,30 @@ pub fn enumerate(env: &mut QuantEnv, cfg: &EnumConfig) -> Result<(Vec<Point>, bo
     Ok((points, exhaustive))
 }
 
-/// Sharded enumeration: split the assignment list into contiguous chunks and
-/// evaluate them on `n_shards` worker threads, each owning its own `QuantEnv`
-/// built by `mk_env` (per-shard PJRT buffers and batch cursor), all shards
-/// deduplicating accuracy queries through one shared [`AccMemo`].
+/// Sharded enumeration over a **shared-core env**: split the assignment list
+/// into contiguous chunks and evaluate them on `n_shards` worker threads,
+/// every shard querying the same pretrained [`QuantEnv`] core (one pretrain
+/// total — pre-refactor, each shard paid its own env bring-up) and
+/// deduplicating accuracy queries through its single-flight memo.
 ///
 /// The merge is deterministic: chunks are contiguous and concatenate in
 /// shard-index order, so the returned points carry the bitwidth assignments
-/// in exactly the sequence the sequential [`enumerate`] would produce
-/// (accuracy *values* can differ slightly from a sequential run because each
-/// shard advances its own train-batch cursor).
+/// in exactly the sequence the sequential [`enumerate`] would produce.
+/// Accuracy *values* are also identical to a sequential run at any shard
+/// count: `EnvCore::accuracy` is a pure function of the bits vector (the
+/// retrain start-batch derives from the bits, not from a shared cursor), and
+/// the single-flight memo guarantees each distinct vector is evaluated
+/// exactly once no matter how chunks or duplicated sampled vectors race.
 ///
-/// Cost note: every shard pays `mk_env`'s full bring-up (data generation +
-/// pretraining). That fixed cost amortizes over Fig-6-scale chunks (hundreds
-/// of evals per shard); for tiny `max_points`, pass `n_shards = 1` or lower
-/// `pretrain_steps` in the env config the closure captures.
-///
-/// Reproducibility: identical `mk_env` closures produce identical envs
-/// (same seed, same bring-up), so the racy last-write-wins imports into the
-/// shared memo carry identical values. Chunks are disjoint, so each
-/// *distinct* vector is evaluated by exactly one shard. The one residual
-/// nondeterminism: a sampled space can contain the same random vector in
-/// two chunks, and which shard's (deterministic-per-shard) accuracy lands
-/// in both points depends on timing. Exhaustive spaces have no duplicates
-/// and are fully reproducible at any shard count.
-pub fn enumerate_sharded<F>(mk_env: F, cfg: &EnumConfig, l: usize, n_shards: usize)
-                            -> Result<(Vec<Point>, bool)>
-where
-    F: Fn() -> Result<QuantEnv> + Sync,
-{
-    enumerate_sharded_with(mk_env, cfg, l, n_shards, Arc::new(AccMemo::new()))
-}
-
-/// [`enumerate_sharded`] with a caller-supplied memo, so the accuracies
-/// evaluated during enumeration stay available afterwards (attach the memo
-/// to a follow-up env via `QuantEnv::share_memo` to score extra points
-/// without re-running their retrains — see `exp::figs::fig6`).
-pub fn enumerate_sharded_with<F>(mk_env: F, cfg: &EnumConfig, l: usize, n_shards: usize,
-                                 memo: Arc<AccMemo>) -> Result<(Vec<Point>, bool)>
-where
-    F: Fn() -> Result<QuantEnv> + Sync,
-{
-    let (assigns, exhaustive) = assignments(cfg, l);
+/// The memo stays warm on the caller's env afterwards — score follow-up
+/// points (e.g. a stored ReLeQ solution, `exp::figs::fig6`) on the same env
+/// without re-running their retrains.
+pub fn enumerate_sharded(env: &QuantEnv, cfg: &EnumConfig, n_shards: usize)
+                         -> Result<(Vec<Point>, bool)> {
+    let (assigns, exhaustive) = assignments(cfg, env.net.l);
     let n_shards = n_shards.clamp(1, assigns.len().max(1));
     let chunks = parallel::chunk_evenly(assigns, n_shards);
     let per_shard = parallel::run_sharded(chunks, |_, chunk| {
-        let mut env = mk_env()?;
-        env.share_memo(memo.clone());
         let mut points = Vec::with_capacity(chunk.len());
         for bits in chunk {
             let state_acc = env.state_acc(&bits)?;
@@ -207,6 +188,16 @@ mod tests {
             assert!(pts[w[0]].state_q <= pts[w[1]].state_q);
             assert!(pts[w[0]].state_acc < pts[w[1]].state_acc);
         }
+    }
+
+    #[test]
+    fn frontier_excludes_degenerate_points() {
+        // NaN cost: would sort after +inf and win on accuracy alone
+        let pts = vec![pt(0.5, 0.9), pt(f64::NAN, 0.95)];
+        assert_eq!(pareto_frontier(&pts), vec![0]);
+        // NaN accuracy: loses every `> best_acc` comparison
+        let pts = vec![pt(0.5, 0.9), pt(0.6, f64::NAN)];
+        assert_eq!(pareto_frontier(&pts), vec![0]);
     }
 
     #[test]

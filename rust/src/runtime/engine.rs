@@ -121,6 +121,28 @@ impl DeviceBuf {
     }
 }
 
+/// An immutable host literal that may be shared across shard threads (e.g.
+/// the validation-set operands held by the shared env core).
+///
+/// SAFETY: a `Literal` is a plain host-memory buffer; after construction it
+/// is only ever read (`Exe::run` borrows it immutably to stage the transfer).
+/// The same vendored-binding requirement as `Exe`/`DeviceBuf` applies: the
+/// wrapper must hold no non-atomic shared internals.
+pub struct HostLit(Literal);
+
+unsafe impl Send for HostLit {}
+unsafe impl Sync for HostLit {}
+
+impl HostLit {
+    pub fn new(lit: Literal) -> HostLit {
+        HostLit(lit)
+    }
+
+    pub fn raw(&self) -> &Literal {
+        &self.0
+    }
+}
+
 /// Engine: one PJRT CPU client + a compile-once executable cache keyed by
 /// artifact name (`lenet_train`, `agent_lstm_act`, ...).
 ///

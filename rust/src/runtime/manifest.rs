@@ -63,6 +63,11 @@ pub struct AgentMeta {
     pub n_actions: usize,
     pub hidden: usize,
     pub episodes_per_update: usize,
+    /// lanes baked into the `agent_*_act_batch` artifacts (the lockstep
+    /// rollout batch width). Manifests predating the batched-act artifact
+    /// fall back to `episodes_per_update`, which is what the AOT compiler
+    /// bakes anyway.
+    pub act_batch: usize,
     /// flat param count of the LSTM agent
     pub p_lstm: usize,
     /// flat param count of the FC-ablation agent
@@ -90,6 +95,10 @@ impl Manifest {
             n_actions: j.u("n_actions"),
             hidden: j.u("hidden"),
             episodes_per_update: j.u("episodes_per_update"),
+            act_batch: j
+                .get("act_batch")
+                .and_then(|v| v.as_usize())
+                .unwrap_or_else(|| j.u("episodes_per_update")),
             p_lstm: j.req("agent").req("lstm").u("p"),
             p_fc: j.req("agent").req("fc").u("p"),
         };
@@ -195,5 +204,7 @@ mod tests {
         assert_eq!(m.network("resnet20").unwrap().l, 20);
         assert_eq!(m.network("mobilenet").unwrap().l, 28);
         assert!(m.agent.p_lstm > m.agent.p_fc);
+        // the AOT compiler bakes the lockstep lane count = the PPO batch
+        assert_eq!(m.agent.act_batch, m.agent.episodes_per_update);
     }
 }

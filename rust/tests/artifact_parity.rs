@@ -149,15 +149,15 @@ fn env_accuracy_deterministic_and_cached() {
     let net = manifest.network("lenet").unwrap();
     let mut cfg = EnvConfig::default();
     cfg.pretrain_steps = 150;
-    let mut env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
+    let env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
     assert!(env.acc_fullp > 0.5, "pretraining failed: {}", env.acc_fullp);
     let bits = vec![4, 4, 4, 4];
     let a1 = env.accuracy(&bits).unwrap();
-    let evals_before = env.stats.train_execs;
+    let evals_before = env.stats().train_execs;
     let a2 = env.accuracy(&bits).unwrap();
     assert_eq!(a1, a2, "memoized accuracy must be identical");
-    assert_eq!(env.stats.train_execs, evals_before, "cache hit must not re-execute");
-    assert_eq!(env.stats.cache_hits, 1);
+    assert_eq!(env.stats().train_execs, evals_before, "cache hit must not re-execute");
+    assert_eq!(env.stats().cache_hits, 1);
     // heavy quantization must not beat the fp reference on this substrate
     let low = env.accuracy(&vec![2, 2, 2, 2]).unwrap();
     assert!(low <= env.acc_fullp + 0.05);

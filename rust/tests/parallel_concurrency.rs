@@ -33,6 +33,61 @@ fn engine_is_send_sync() {
     assert_send_sync::<Engine>();
     assert_send_sync::<releq::runtime::Exe>();
     assert_send_sync::<releq::runtime::DeviceBuf>();
+    assert_send_sync::<releq::runtime::HostLit>();
+    // the shared-core env handle is what actually crosses shard threads now
+    assert_send_sync::<releq::coordinator::EnvCore>();
+    assert_send_sync::<QuantEnv>();
+}
+
+/// Single-flight memo: N threads racing `get_or_compute` on the same cold
+/// key must run the computation exactly once; every other caller blocks and
+/// receives the leader's value (pre-single-flight, all of them computed and
+/// the last write won).
+#[test]
+fn memo_get_or_compute_is_single_flight() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let memo = Arc::new(AccMemo::new());
+    let computes = AtomicU64::new(0);
+    let results = run_sharded(vec![(); 8], |_, _| {
+        let (v, _cached) = memo.get_or_compute(&[3, 3, 3, 3], || {
+            computes.fetch_add(1, Ordering::SeqCst);
+            // hold the flight open long enough that every racer sees it
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            Ok(0.625)
+        })?;
+        Ok(v)
+    })
+    .unwrap();
+    assert_eq!(computes.load(Ordering::SeqCst), 1, "duplicate evaluation of a cold key");
+    assert!(results.iter().all(|&v| v == 0.625));
+    assert_eq!(memo.len(), 1);
+    assert_eq!(memo.misses(), 1, "only the leader counts a miss");
+    assert_eq!(memo.hits(), 7, "followers coalesce onto the leader's value");
+}
+
+/// A failing leader must not wedge the key: one waiter retries as the new
+/// leader and the value still lands in the cache.
+#[test]
+fn memo_single_flight_recovers_from_leader_failure() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let memo = Arc::new(AccMemo::new());
+    let attempts = AtomicU64::new(0);
+    let results = run_sharded(vec![(); 4], |_, _| {
+        let r = memo.get_or_compute(&[2, 2], || {
+            let n = attempts.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            if n == 0 {
+                anyhow::bail!("transient failure")
+            }
+            Ok(0.5)
+        });
+        Ok(r.map(|(v, _)| v).ok())
+    })
+    .unwrap();
+    // exactly one caller saw the injected failure; everyone else got 0.5
+    assert_eq!(results.iter().filter(|r| r.is_none()).count(), 1);
+    assert!(results.iter().flatten().all(|&v| v == 0.5));
+    assert_eq!(memo.get(&[2, 2]), Some(0.5), "retry must repopulate the key");
 }
 
 /// Two threads requesting the same uncompiled artifact must both succeed,
@@ -78,72 +133,96 @@ fn compile_cache_race_on_missing_artifact_fails_cleanly() {
     assert!(engine.exe("agent_lstm_init").is_ok(), "engine must survive the failed race");
 }
 
-/// Shards sharing one `AccMemo` must see each other's evaluations: the same
-/// assignment list run by N shards costs (at most) one miss per distinct
-/// vector, with every re-query counted as a hit.
+/// One shared-core env queried by racing shards: the single-flight memo
+/// must see each other's evaluations — each distinct vector costs exactly
+/// one evaluation's PJRT executions, every re-query is a hit.
 #[test]
 fn shared_memo_hits_across_shards() {
     let Some((manifest, engine)) = bringup() else { return };
     let net = manifest.network("lenet").unwrap();
     let mut cfg = EnvConfig::default();
     cfg.pretrain_steps = 40;
-    let memo = Arc::new(AccMemo::new());
-    // every shard evaluates the SAME three assignments
+    // ONE env; every shard gets a clone of the same core
+    let env = QuantEnv::new(
+        engine.clone(),
+        net,
+        manifest.bits_max,
+        manifest.fp_bits,
+        cfg.clone(),
+    )
+    .unwrap();
+    let pretrain_execs = env.stats().train_execs;
+    // pretraining ran once, before any sharing: pretrain_steps SGD steps
+    // plus the one acc_ref probe's short retrain
+    assert_eq!(
+        pretrain_execs,
+        (cfg.pretrain_steps + cfg.retrain_steps) as u64,
+        "env bring-up must pretrain exactly once"
+    );
+    // every shard evaluates the SAME three assignments, twice
     let assigns = vec![vec![4, 4, 4, 4], vec![8, 4, 4, 8], vec![2, 2, 2, 2]];
     let shard_inputs: Vec<Vec<Vec<u32>>> = vec![assigns.clone(); 3];
-    let stats = run_sharded(shard_inputs, |_, list| {
-        let mut env = QuantEnv::new(
-            engine.clone(),
-            net,
-            manifest.bits_max,
-            manifest.fp_bits,
-            cfg.clone(),
-        )?;
-        env.share_memo(memo.clone());
+    run_sharded(shard_inputs, |_, list| {
         for bits in &list {
             env.accuracy(bits)?;
         }
-        // second pass is all local-or-shared hits
         for bits in &list {
             env.accuracy(bits)?;
         }
-        Ok(env.stats)
+        Ok(())
     })
     .unwrap();
-    // 3 distinct vectors + the per-env uniform-bits_max bring-up probe
-    assert_eq!(memo.len(), 4);
-    // across 3 shards x 2 passes x 3 vectors = 18 queries of 3 distinct
-    // vectors: the 9 second-pass queries are guaranteed hits; first-pass
-    // queries hit whenever another shard won the race (>= 0 of 9)
-    let total_hits: u64 = stats.iter().map(|s| s.cache_hits).sum();
-    assert!(total_hits >= 9, "expected >= 9 shared hits, got {total_hits}");
-    assert!(memo.hits() >= total_hits, "global counter covers every env's hits");
+    // 3 distinct vectors + the uniform-bits_max bring-up probe
+    assert_eq!(env.cache_len(), 4);
+    let stats = env.stats();
+    // 18 queries of 3 distinct vectors: single-flight leaves exactly 3
+    // evaluations (3 * retrain_steps train execs); all 15 others are hits
+    assert_eq!(stats.cache_hits, 15, "single-flight must coalesce every duplicate");
+    assert_eq!(
+        stats.train_execs - pretrain_execs,
+        3 * cfg.retrain_steps as u64,
+        "each distinct vector must retrain exactly once across all shards"
+    );
 }
 
-/// Sharded enumeration must return points in exactly the sequential
-/// assignment order, independent of shard count.
+/// Sharded enumeration over the shared core must return the exact same
+/// points — assignments AND accuracy values — at any shard count: accuracy
+/// is a pure function of the bits vector (bits-derived retrain cursor), so
+/// sharding cannot perturb the results.
 #[test]
-fn sharded_enumeration_merge_order_is_deterministic() {
+fn sharded_enumeration_is_bit_reproducible() {
     let Some((manifest, engine)) = bringup() else { return };
     let net = manifest.network("lenet").unwrap();
     let mut env_cfg = EnvConfig::default();
     env_cfg.pretrain_steps = 40;
-    let mk_env = || {
-        QuantEnv::new(
+    let env = QuantEnv::new(
+        engine.clone(),
+        net,
+        manifest.bits_max,
+        manifest.fp_bits,
+        env_cfg.clone(),
+    )
+    .unwrap();
+    let mut ecfg = pareto::EnumConfig::default();
+    ecfg.max_points = 60; // sampled path, fast
+    let (expected, _) = pareto::assignments(&ecfg, net.l);
+    let (seq, _) = pareto::enumerate_sharded(&env, &ecfg, 1).unwrap();
+    let seq_accs: Vec<f64> = seq.iter().map(|p| p.state_acc).collect();
+    for shards in [3usize, 7] {
+        // fresh core per shard count so the warm memo can't mask value drift
+        let fresh = QuantEnv::new(
             engine.clone(),
             net,
             manifest.bits_max,
             manifest.fp_bits,
             env_cfg.clone(),
         )
-    };
-    let mut ecfg = pareto::EnumConfig::default();
-    ecfg.max_points = 60; // sampled path, fast
-    let (expected, _) = pareto::assignments(&ecfg, net.l);
-    for shards in [1usize, 3, 7] {
-        let (points, _) = pareto::enumerate_sharded(&mk_env, &ecfg, net.l, shards).unwrap();
+        .unwrap();
+        let (points, _) = pareto::enumerate_sharded(&fresh, &ecfg, shards).unwrap();
         let got: Vec<Vec<u32>> = points.iter().map(|p| p.bits.clone()).collect();
         assert_eq!(got, expected, "order must not depend on shard count ({shards})");
+        let accs: Vec<f64> = points.iter().map(|p| p.state_acc).collect();
+        assert_eq!(accs, seq_accs, "accuracies must not depend on shard count ({shards})");
     }
 }
 
