@@ -1,0 +1,71 @@
+//! Minimal client for the `releq serve` daemon: submit a job, poll the live
+//! tail, print the solution, and demonstrate the archive hit on resubmit.
+//!
+//! Usage (daemon first: `releq serve --addr 127.0.0.1:7463`):
+//!   cargo run --example serve_client -- [addr] [net] [episodes]
+//! Defaults: 127.0.0.1:7463 lenet 48
+
+use releq::serve::http::request;
+use releq::util::json::Json;
+
+fn submit(addr: &str, net: &str, episodes: usize) -> u64 {
+    let body = Json::parse(&format!(
+        r#"{{"net": "{net}", "config": {{"episodes": {episodes}, "rollout": "batched"}}, "deadline_ms": 1800000}}"#
+    ))
+    .unwrap();
+    let (status, resp) = request(addr, "POST", "/v1/jobs", Some(&body)).unwrap();
+    assert!(status == 200 || status == 202, "submit failed ({status}): {}", resp.dump());
+    println!("submitted job {} (status {}, source {})", resp.u("id"), resp.s("status"), resp.s("source"));
+    resp.u("id") as u64
+}
+
+fn wait(addr: &str, id: u64) -> Json {
+    loop {
+        let (status, j) = request(addr, "GET", &format!("/v1/jobs/{id}"), None).unwrap();
+        assert_eq!(status, 200, "poll failed: {}", j.dump());
+        let state = j.s("status").to_string();
+        println!(
+            "job {id}: {state}, episode {}/{}",
+            j.u("episodes_run"),
+            j.u("episodes_total")
+        );
+        match state.as_str() {
+            "done" => {
+                let (rs, result) = request(addr, "GET", &format!("/v1/jobs/{id}/result"), None).unwrap();
+                assert_eq!(rs, 200, "result fetch failed: {}", result.dump());
+                return result;
+            }
+            "failed" | "cancelled" => panic!("job {id} ended as {state}: {}", j.dump()),
+            _ => std::thread::sleep(std::time::Duration::from_millis(500)),
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let addr = args.get(1).map(String::as_str).unwrap_or("127.0.0.1:7463").to_string();
+    let net = args.get(2).map(String::as_str).unwrap_or("lenet").to_string();
+    let episodes: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(48);
+
+    let id = submit(&addr, &net, episodes);
+    let result = wait(&addr, id);
+    println!(
+        "{net}: bits {:?} (avg {:.2}), acc {:.4} (loss {:.2}%), reward {:.3}, {} pareto points",
+        result.req("bits").as_arr().unwrap().iter().map(|b| b.as_usize().unwrap()).collect::<Vec<_>>(),
+        result.f("avg_bits"),
+        result.f("acc_final"),
+        result.f("acc_loss_pct"),
+        result.f("reward"),
+        result.req("pareto").as_arr().unwrap().len(),
+    );
+
+    // identical resubmission: answered from the archive, zero new evals
+    let id2 = submit(&addr, &net, episodes);
+    let (s2, j2) = request(&addr, "GET", &format!("/v1/jobs/{id2}"), None).unwrap();
+    assert_eq!(s2, 200);
+    println!("resubmit: job {id2} status {} source {}", j2.s("status"), j2.s("source"));
+
+    let (ss, stats) = request(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(ss, 200);
+    println!("stats: {}", stats.dump());
+}

@@ -1,16 +1,21 @@
 //! Experiment configuration: a TOML-subset file format + per-network presets
-//! + CLI override plumbing, feeding [`crate::coordinator::SearchConfig`].
+//! + CLI override plumbing, feeding [`crate::coordinator::SearchConfig`] —
+//! plus the `releq serve` job/daemon config layer.
 //!
 //! Precedence (lowest to highest): built-in defaults -> network preset ->
-//! `--config file.toml` -> individual CLI flags.
+//! `--config file.toml` -> individual CLI flags. A serve job resolves the
+//! same chain with its JSON `config` object in place of the TOML file: both
+//! formats funnel through one key table ([`apply_kv`] via [`Val`]), so a
+//! key accepted in `releq.toml` is accepted verbatim in `POST /v1/jobs`.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{ActionSpace, AgentKind, RewardKind, RolloutMode, SearchConfig};
 use crate::util::cli::Args;
+use crate::util::json::Json;
 
 pub mod toml_lite;
 
@@ -53,67 +58,132 @@ pub fn preset(net: &str) -> SearchConfig {
     cfg
 }
 
-/// Apply a parsed TOML-lite table to a SearchConfig. Unknown keys and
-/// malformed values surface as errors, not panics.
-pub fn apply_toml(cfg: &mut SearchConfig, tbl: &BTreeMap<String, TomlValue>) -> Result<()> {
-    let f = |k: &str, v: &TomlValue| {
-        v.as_f64().with_context(|| format!("config key `{k}` expects a number"))
-    };
-    let s = |k: &str, v: &TomlValue| {
-        v.as_str().with_context(|| format!("config key `{k}` expects a string"))
-    };
-    for (k, v) in tbl {
-        match k.as_str() {
-            "episodes" => cfg.episodes = f(k, v)? as usize,
-            "pretrain_steps" => cfg.env.pretrain_steps = f(k, v)? as usize,
-            "retrain_steps" => cfg.env.retrain_steps = f(k, v)? as usize,
-            "long_retrain_steps" => cfg.env.long_retrain_steps = f(k, v)? as usize,
-            "lr" => cfg.env.lr = f(k, v)? as f32,
-            "train_size" => cfg.env.train_size = f(k, v)? as usize,
-            "seed" => cfg.seed = f(k, v)? as u64,
-            "clip_eps" => cfg.ppo.clip_eps = f(k, v)? as f32,
-            "ent_coef" => cfg.ppo.ent_coef = f(k, v)? as f32,
-            "agent_lr" => cfg.ppo.lr = f(k, v)? as f32,
-            "epochs" => cfg.ppo.epochs = f(k, v)? as usize,
-            "gamma" => cfg.ppo.gamma = f(k, v)?,
-            "lam" => cfg.ppo.lam = f(k, v)?,
-            "reward" => cfg.reward.kind = RewardKind::parse(s(k, v)?)?,
-            "reward_a" => cfg.reward.a = f(k, v)?,
-            "reward_b" => cfg.reward.b = f(k, v)?,
-            "reward_th" => cfg.reward.th = f(k, v)?,
-            "agent" => cfg.agent_kind = AgentKind::parse(s(k, v)?)?,
-            "action_space" => cfg.action_space = ActionSpace::parse(s(k, v)?)?,
-            "rollout" => cfg.rollout = RolloutMode::parse(s(k, v)?)?,
-            "lanes" => cfg.lanes = f(k, v)? as usize,
-            "eval_every_step" => {
-                cfg.eval_every_step = v
-                    .as_bool()
-                    .with_context(|| format!("config key `{k}` expects a bool"))?
-            }
-            "min_bits" => cfg.min_bits = f(k, v)? as u32,
-            "patience" => cfg.patience = f(k, v)? as usize,
-            other => anyhow::bail!("unknown config key `{other}`"),
+/// A borrowed scalar config value — the common shape of a TOML-lite value
+/// and a JSON value, so the config file layer and the serve job layer flow
+/// through one [`apply_kv`] key table instead of two drifting copies.
+enum Val<'a> {
+    Num(f64),
+    Bool(bool),
+    Str(&'a str),
+}
+
+impl<'a> Val<'a> {
+    fn from_toml(v: &'a TomlValue) -> Option<Val<'a>> {
+        match v {
+            TomlValue::Num(n) => Some(Val::Num(*n)),
+            TomlValue::Bool(b) => Some(Val::Bool(*b)),
+            TomlValue::Str(s) => Some(Val::Str(s)),
+            TomlValue::Arr(_) => None,
         }
     }
+
+    fn from_json(v: &'a Json) -> Option<Val<'a>> {
+        match v {
+            Json::Num(n) => Some(Val::Num(*n)),
+            Json::Bool(b) => Some(Val::Bool(*b)),
+            Json::Str(s) => Some(Val::Str(s)),
+            _ => None,
+        }
+    }
+
+    fn num(&self, k: &str) -> Result<f64> {
+        match self {
+            Val::Num(n) => Ok(*n),
+            _ => anyhow::bail!("config key `{k}` expects a number"),
+        }
+    }
+
+    fn str(&self, k: &str) -> Result<&'a str> {
+        match self {
+            Val::Str(s) => Ok(s),
+            _ => anyhow::bail!("config key `{k}` expects a string"),
+        }
+    }
+
+    fn bool(&self, k: &str) -> Result<bool> {
+        match self {
+            Val::Bool(b) => Ok(*b),
+            _ => anyhow::bail!("config key `{k}` expects a bool"),
+        }
+    }
+}
+
+/// Apply one `key = value` to a SearchConfig — THE key table, shared by the
+/// TOML file layer and the serve job-JSON layer. Unknown keys and malformed
+/// values surface as errors, not panics.
+fn apply_kv(cfg: &mut SearchConfig, k: &str, v: &Val) -> Result<()> {
+    match k {
+        "episodes" => cfg.episodes = v.num(k)? as usize,
+        "pretrain_steps" => cfg.env.pretrain_steps = v.num(k)? as usize,
+        "retrain_steps" => cfg.env.retrain_steps = v.num(k)? as usize,
+        "long_retrain_steps" => cfg.env.long_retrain_steps = v.num(k)? as usize,
+        "lr" => cfg.env.lr = v.num(k)? as f32,
+        "train_size" => cfg.env.train_size = v.num(k)? as usize,
+        "memo_cap" => cfg.env.memo_cap = v.num(k)? as usize,
+        "seed" => cfg.seed = v.num(k)? as u64,
+        "clip_eps" => cfg.ppo.clip_eps = v.num(k)? as f32,
+        "ent_coef" => cfg.ppo.ent_coef = v.num(k)? as f32,
+        "agent_lr" => cfg.ppo.lr = v.num(k)? as f32,
+        "epochs" => cfg.ppo.epochs = v.num(k)? as usize,
+        "gamma" => cfg.ppo.gamma = v.num(k)?,
+        "lam" => cfg.ppo.lam = v.num(k)?,
+        "reward" => cfg.reward.kind = RewardKind::parse(v.str(k)?)?,
+        "reward_a" => cfg.reward.a = v.num(k)?,
+        "reward_b" => cfg.reward.b = v.num(k)?,
+        "reward_th" => cfg.reward.th = v.num(k)?,
+        "agent" => cfg.agent_kind = AgentKind::parse(v.str(k)?)?,
+        "action_space" => cfg.action_space = ActionSpace::parse(v.str(k)?)?,
+        "rollout" => cfg.rollout = RolloutMode::parse(v.str(k)?)?,
+        "lanes" => cfg.lanes = v.num(k)? as usize,
+        "eval_every_step" => cfg.eval_every_step = v.bool(k)?,
+        "min_bits" => cfg.min_bits = v.num(k)? as u32,
+        "patience" => cfg.patience = v.num(k)? as usize,
+        other => anyhow::bail!("unknown config key `{other}`"),
+    }
     Ok(())
+}
+
+/// Apply a parsed TOML-lite table to a SearchConfig.
+pub fn apply_toml(cfg: &mut SearchConfig, tbl: &BTreeMap<String, TomlValue>) -> Result<()> {
+    for (k, v) in tbl {
+        let v = Val::from_toml(v)
+            .with_context(|| format!("config key `{k}` expects a scalar value"))?;
+        apply_kv(cfg, k, &v)?;
+    }
+    Ok(())
+}
+
+/// Apply a job-JSON `config` object to a SearchConfig — the serve wire
+/// format's counterpart of [`apply_toml`], same keys, same validation.
+pub fn apply_json(cfg: &mut SearchConfig, obj: &BTreeMap<String, Json>) -> Result<()> {
+    for (k, v) in obj {
+        let v = Val::from_json(v)
+            .with_context(|| format!("config key `{k}` expects a scalar value"))?;
+        apply_kv(cfg, k, &v)?;
+    }
+    Ok(())
+}
+
+/// Result-returning numeric flag parse, shared by [`apply_cli`] and
+/// [`serve_config`]: `Ok(None)` when absent, an error naming the flag on a
+/// malformed value.
+fn flag_num<T: std::str::FromStr>(args: &Args, flag: &str) -> Result<Option<T>> {
+    match args.opt_str(flag) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("--{flag} expects a number, got `{v}`")),
+    }
 }
 
 /// Apply individual CLI flags (highest precedence). Bad flag values are
 /// reported as errors naming the flag.
 pub fn apply_cli(cfg: &mut SearchConfig, args: &Args) -> Result<()> {
-    fn num<T: std::str::FromStr>(args: &Args, flag: &str) -> Result<Option<T>> {
-        match args.opt_str(flag) {
-            None => Ok(None),
-            Some(v) => v
-                .parse()
-                .map(Some)
-                .map_err(|_| anyhow::anyhow!("--{flag} expects a number, got `{v}`")),
-        }
-    }
-    if let Some(v) = num(args, "episodes")? {
+    if let Some(v) = flag_num(args, "episodes")? {
         cfg.episodes = v;
     }
-    if let Some(v) = num(args, "seed")? {
+    if let Some(v) = flag_num(args, "seed")? {
         cfg.seed = v;
     }
     if let Some(v) = args.opt_str("reward") {
@@ -128,28 +198,28 @@ pub fn apply_cli(cfg: &mut SearchConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.opt_str("rollout") {
         cfg.rollout = RolloutMode::parse(&v)?;
     }
-    if let Some(v) = num(args, "lanes")? {
+    if let Some(v) = flag_num(args, "lanes")? {
         cfg.lanes = v;
     }
-    if let Some(v) = num(args, "agent-lr")? {
+    if let Some(v) = flag_num(args, "agent-lr")? {
         cfg.ppo.lr = v;
     }
-    if let Some(v) = num(args, "ent-coef")? {
+    if let Some(v) = flag_num(args, "ent-coef")? {
         cfg.ppo.ent_coef = v;
     }
-    if let Some(v) = num(args, "clip-eps")? {
+    if let Some(v) = flag_num(args, "clip-eps")? {
         cfg.ppo.clip_eps = v;
     }
-    if let Some(v) = num(args, "retrain-steps")? {
+    if let Some(v) = flag_num(args, "retrain-steps")? {
         cfg.env.retrain_steps = v;
     }
-    if let Some(v) = num(args, "pretrain-steps")? {
+    if let Some(v) = flag_num(args, "pretrain-steps")? {
         cfg.env.pretrain_steps = v;
     }
-    if let Some(v) = num(args, "lr")? {
+    if let Some(v) = flag_num(args, "lr")? {
         cfg.env.lr = v;
     }
-    if let Some(v) = num(args, "patience")? {
+    if let Some(v) = flag_num(args, "patience")? {
         cfg.patience = v;
     }
     if args.has("eval-at-end") {
@@ -176,6 +246,150 @@ pub fn resolve(net: &str, args: &Args) -> Result<SearchConfig> {
     }
     apply_cli(&mut cfg, args)?;
     Ok(cfg)
+}
+
+// ---- bitwidth lists ---------------------------------------------------------
+
+/// Validate a bitwidth list — the one gate shared by CLI `--bits`, archive
+/// records and job JSON (so all entry points reject the same garbage).
+pub fn validate_bits(bits: &[u32]) -> Result<()> {
+    anyhow::ensure!(!bits.is_empty(), "empty bitwidth list");
+    for &b in bits {
+        anyhow::ensure!((1..=32).contains(&b), "bitwidth {b} out of range 1..=32");
+    }
+    Ok(())
+}
+
+/// Parse a comma-separated bitwidth list (`"8,4,4,8"`), validated.
+pub fn parse_bits(s: &str) -> Result<Vec<u32>> {
+    let bits = s
+        .split(',')
+        .map(|t| {
+            let t = t.trim();
+            t.parse()
+                .map_err(|_| anyhow::anyhow!("bad bitwidth `{t}` (expected e.g. 8,4,4,8)"))
+        })
+        .collect::<Result<Vec<u32>>>()?;
+    validate_bits(&bits)?;
+    Ok(bits)
+}
+
+/// Decode a JSON bitwidth array, validated through the same gate.
+pub fn bits_from_json(v: &Json) -> Result<Vec<u32>> {
+    let arr = v.as_arr().context("expected a bits array")?;
+    let bits = arr
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .filter(|f| f.fract() == 0.0 && *f >= 0.0)
+                .map(|f| f as u32)
+                .context("bits array entries must be non-negative integers")
+        })
+        .collect::<Result<Vec<u32>>>()?;
+    validate_bits(&bits)?;
+    Ok(bits)
+}
+
+// ---- serve: job + daemon config ---------------------------------------------
+
+/// One decoded `POST /v1/jobs` request: the target network, the fully
+/// resolved search config (network preset -> job `config` overrides), and
+/// an optional wall-clock deadline (measured from submission, so queue wait
+/// counts).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub net: String,
+    pub cfg: SearchConfig,
+    pub deadline_ms: Option<u64>,
+}
+
+/// Decode a job submission. The `config` object accepts exactly the keys a
+/// `[search]` TOML section accepts (one shared [`apply_kv`] table), and the
+/// top level is equally strict — a typo like `deadline` for `deadline_ms`
+/// must 400, not silently run with no deadline.
+pub fn job_from_json(j: &Json) -> Result<JobSpec> {
+    let obj = j.as_obj().context("job body must be a JSON object")?;
+    for k in obj.keys() {
+        anyhow::ensure!(
+            matches!(k.as_str(), "net" | "config" | "deadline_ms"),
+            "unknown job key `{k}` (expected net, config, deadline_ms)"
+        );
+    }
+    let net = j
+        .get("net")
+        .and_then(Json::as_str)
+        .context("job needs a string `net` field")?
+        .to_string();
+    let mut cfg = preset(&net);
+    if let Some(c) = j.get("config") {
+        let obj = c.as_obj().context("job `config` must be an object")?;
+        apply_json(&mut cfg, obj)?;
+    }
+    let deadline_ms = match j.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_f64()
+                .filter(|x| *x >= 0.0)
+                .context("`deadline_ms` must be a non-negative number")? as u64,
+        ),
+    };
+    Ok(JobSpec { net, cfg, deadline_ms })
+}
+
+/// `releq serve` daemon configuration (see `serve::Server`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// listen address (`--addr`; port 0 binds an ephemeral port)
+    pub addr: String,
+    /// worker threads executing searches (`--workers`)
+    pub workers: usize,
+    /// queued-job bound before submissions get 429 (`--queue-cap`)
+    pub queue_cap: usize,
+    /// solution archive path (`--archive`)
+    pub archive: PathBuf,
+    /// episodes kept in each job's live log tail (`--log-tail`)
+    pub log_tail: usize,
+    /// accuracy-memo entries persisted per archive record for warm-starts
+    /// (`--memo-persist`)
+    pub memo_persist: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7463".to_string(),
+            workers: 2,
+            queue_cap: 64,
+            archive: PathBuf::from("archive.json"),
+            log_tail: 32,
+            memo_persist: 256,
+        }
+    }
+}
+
+/// Resolve the serve daemon config from CLI flags, with the same
+/// Result-returning discipline as [`apply_cli`].
+pub fn serve_config(args: &Args) -> Result<ServeConfig> {
+    let mut c = ServeConfig::default();
+    c.addr = args.str_of("addr", &c.addr);
+    if let Some(v) = flag_num(args, "workers")? {
+        anyhow::ensure!(v >= 1, "--workers must be >= 1");
+        c.workers = v;
+    }
+    if let Some(v) = flag_num(args, "queue-cap")? {
+        anyhow::ensure!(v >= 1, "--queue-cap must be >= 1");
+        c.queue_cap = v;
+    }
+    if let Some(v) = args.opt_str("archive") {
+        c.archive = PathBuf::from(v);
+    }
+    if let Some(v) = flag_num(args, "log-tail")? {
+        c.log_tail = v;
+    }
+    if let Some(v) = flag_num(args, "memo-persist")? {
+        c.memo_persist = v;
+    }
+    Ok(c)
 }
 
 #[cfg(test)]
@@ -216,6 +430,97 @@ mod tests {
         assert_eq!(cfg.rollout, RolloutMode::Batched);
         assert_eq!(cfg.lanes, 4);
         assert_eq!(preset("lenet").rollout, RolloutMode::Serial);
+    }
+
+    #[test]
+    fn json_and_toml_share_the_key_table() {
+        // same overrides through both layers must produce the same config
+        let mut via_toml = preset("lenet");
+        let doc = toml_lite::parse(
+            "[search]\nepisodes = 9\nreward = \"diff\"\neval_every_step = false\nmemo_cap = 128\n",
+        )
+        .unwrap();
+        apply_toml(&mut via_toml, doc.get("search").unwrap()).unwrap();
+
+        let mut via_json = preset("lenet");
+        let j = Json::parse(
+            r#"{"episodes": 9, "reward": "diff", "eval_every_step": false, "memo_cap": 128}"#,
+        )
+        .unwrap();
+        apply_json(&mut via_json, j.as_obj().unwrap()).unwrap();
+
+        for cfg in [&via_toml, &via_json] {
+            assert_eq!(cfg.episodes, 9);
+            assert_eq!(cfg.reward.kind, RewardKind::Diff);
+            assert!(!cfg.eval_every_step);
+            assert_eq!(cfg.env.memo_cap, 128);
+        }
+        // unknown keys and type mismatches error in both layers
+        let bad = Json::parse(r#"{"episodez": 1}"#).unwrap();
+        assert!(apply_json(&mut via_json, bad.as_obj().unwrap()).is_err());
+        let bad = Json::parse(r#"{"episodes": "many"}"#).unwrap();
+        assert!(apply_json(&mut via_json, bad.as_obj().unwrap()).is_err());
+    }
+
+    #[test]
+    fn bits_parsers_share_validation() {
+        assert_eq!(parse_bits("8, 4,4,8").unwrap(), vec![8, 4, 4, 8]);
+        assert!(parse_bits("8,nope").is_err());
+        assert!(parse_bits("").is_err());
+        assert!(parse_bits("8,0").is_err(), "0 bits rejected");
+        assert!(parse_bits("8,64").is_err(), "64 bits rejected");
+        let j = Json::parse("[8, 4, 2]").unwrap();
+        assert_eq!(bits_from_json(&j).unwrap(), vec![8, 4, 2]);
+        assert!(bits_from_json(&Json::parse("[8, 2.5]").unwrap()).is_err());
+        assert!(bits_from_json(&Json::parse("[]").unwrap()).is_err());
+        assert!(bits_from_json(&Json::parse("[8, 0]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn job_from_json_resolves_preset_then_overrides() {
+        let j = Json::parse(
+            r#"{"net": "lenet", "config": {"episodes": 12, "seed": 5}, "deadline_ms": 60000}"#,
+        )
+        .unwrap();
+        let spec = job_from_json(&j).unwrap();
+        assert_eq!(spec.net, "lenet");
+        assert_eq!(spec.cfg.episodes, 12);
+        assert_eq!(spec.cfg.seed, 5);
+        // untouched keys come from the preset
+        assert_eq!(spec.cfg.env.pretrain_steps, preset("lenet").env.pretrain_steps);
+        assert_eq!(spec.deadline_ms, Some(60_000));
+
+        assert!(job_from_json(&Json::parse(r#"{"config": {}}"#).unwrap()).is_err());
+        assert!(
+            job_from_json(&Json::parse(r#"{"net": "lenet", "config": 3}"#).unwrap()).is_err()
+        );
+        assert!(job_from_json(
+            &Json::parse(r#"{"net": "lenet", "deadline_ms": -1}"#).unwrap()
+        )
+        .is_err());
+        // top-level typos are rejected, same strictness as config keys
+        assert!(job_from_json(
+            &Json::parse(r#"{"net": "lenet", "deadline": 60000}"#).unwrap()
+        )
+        .is_err());
+        assert!(job_from_json(&Json::parse("[1,2]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn serve_config_flags_resolve() {
+        let c = serve_config(&args("serve")).unwrap();
+        assert_eq!(c.addr, "127.0.0.1:7463");
+        assert_eq!(c.workers, 2);
+        let c = serve_config(&args(
+            "serve --addr 127.0.0.1:0 --workers 4 --queue-cap 2 --archive /tmp/a.json",
+        ))
+        .unwrap();
+        assert_eq!(c.addr, "127.0.0.1:0");
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.queue_cap, 2);
+        assert_eq!(c.archive, std::path::PathBuf::from("/tmp/a.json"));
+        assert!(serve_config(&args("serve --workers 0")).is_err());
+        assert!(serve_config(&args("serve --queue-cap zero")).is_err());
     }
 
     #[test]

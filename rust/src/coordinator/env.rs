@@ -54,6 +54,11 @@ pub struct EnvConfig {
     pub lr: f32,
     pub train_size: usize,
     pub seed: u64,
+    /// bound on finished accuracy-memo entries (0 = unbounded). The default
+    /// is far above what a one-shot search touches; it exists so a
+    /// long-running `releq serve` session cannot grow without limit
+    /// (coarse-LRU eviction, see [`AccMemo`]).
+    pub memo_cap: usize,
 }
 
 impl Default for EnvConfig {
@@ -65,19 +70,27 @@ impl Default for EnvConfig {
             lr: 0.01,
             train_size: 2048,
             seed: 17,
+            memo_cap: 65_536,
         }
     }
 }
 
 /// Counters the environment accumulates (perf + cache instrumentation).
 /// A point-in-time snapshot of the core's atomic counters — see
-/// [`EnvCore::stats`].
+/// [`EnvCore::stats`]. The `memo_*` fields mirror the shared [`AccMemo`]'s
+/// own counters so one snapshot carries everything `/v1/stats` reports.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct EnvStats {
     pub evals: u64,
     pub cache_hits: u64,
     pub train_execs: u64,
     pub eval_execs: u64,
+    /// finished entries currently resident in the accuracy memo
+    pub memo_len: usize,
+    /// memo-global hit/miss/eviction counters (shared by every env clone)
+    pub memo_hits: u64,
+    pub memo_misses: u64,
+    pub memo_evictions: u64,
 }
 
 /// Atomic backing store for [`EnvStats`]: the counters are bumped from
@@ -97,6 +110,7 @@ impl EnvStatsAtomic {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             train_execs: self.train_execs.load(Ordering::Relaxed),
             eval_execs: self.eval_execs.load(Ordering::Relaxed),
+            ..EnvStats::default()
         }
     }
 }
@@ -207,6 +221,7 @@ impl QuantEnv {
         let params = to_vec_f32(&out[0])?;
         anyhow::ensure!(params.len() == net.p, "init params {} != P {}", params.len(), net.p);
 
+        let memo_cap = cfg.memo_cap;
         // the core is mutable only here, before it is wrapped in the Arc
         let mut core = EnvCore {
             net: net.clone(),
@@ -220,7 +235,7 @@ impl QuantEnv {
             pretrained: params,
             acc_fullp: 0.0,
             acc_ref: 0.0,
-            memo: Arc::new(AccMemo::new()),
+            memo: Arc::new(AccMemo::with_capacity(memo_cap)),
             stats: EnvStatsAtomic::default(),
             fp_bits,
             bits_max,
@@ -243,9 +258,16 @@ impl EnvCore {
         &self.memo
     }
 
-    /// Snapshot of the perf/cache counters (shared across all clones).
+    /// Snapshot of the perf/cache counters (shared across all clones),
+    /// merged with the accuracy memo's occupancy and hit/miss/eviction
+    /// counters.
     pub fn stats(&self) -> EnvStats {
-        self.stats.snapshot()
+        let mut s = self.stats.snapshot();
+        s.memo_len = self.memo.len();
+        s.memo_hits = self.memo.hits();
+        s.memo_misses = self.memo.misses();
+        s.memo_evictions = self.memo.evictions();
+        s
     }
 
     fn bits_literal(&self, bits: &[u32]) -> Result<Literal> {
@@ -257,16 +279,13 @@ impl EnvCore {
         (self.train.n / self.net.train_batch).max(1)
     }
 
-    /// Deterministic retrain start-batch for a bitwidth vector (FNV-1a over
-    /// the bits). See the module docs: deriving the cursor from the query
-    /// instead of shared mutable state is what makes `accuracy` pure and
-    /// every concurrent driver bit-reproducible.
+    /// Deterministic retrain start-batch for a bitwidth vector (word-wise
+    /// FNV-1a over the bits — `util::fnv`, bit-identical to the inline
+    /// loop this shipped with). See the module docs: deriving the cursor
+    /// from the query instead of shared mutable state is what makes
+    /// `accuracy` pure and every concurrent driver bit-reproducible.
     fn bits_cursor(&self, bits: &[u32]) -> usize {
-        let mut h: u64 = 0xcbf29ce484222325;
-        for &b in bits {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
+        let h = crate::util::fnv::Fnv::new().write_u32_words(bits).finish();
         (h % self.n_batches() as u64) as usize
     }
 

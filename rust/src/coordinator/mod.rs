@@ -21,5 +21,6 @@ pub use ppo::{AgentKind, PpoAgent, PpoConfig, StepRecord, UpdateStats};
 pub use reward::{RewardKind, RewardParams};
 pub use rollout::LaneRollout;
 pub use search::{
-    best_replica, run_replicas, ActionSpace, RolloutMode, SearchConfig, SearchResult, Searcher,
+    best_replica, run_replicas, ActionSpace, Cancelled, RolloutMode, SearchConfig, SearchCtl,
+    SearchResult, Searcher,
 };

@@ -30,7 +30,7 @@ use crate::util::rng::Pcg32;
 
 use super::embedding::{embed, STATE_DIM};
 use super::ppo::{PpoAgent, StepRecord};
-use super::search::{SearchResult, Searcher};
+use super::search::{SearchCtl, SearchResult, Searcher};
 
 /// One episode lane's finished rollout.
 pub struct LaneRollout {
@@ -163,8 +163,9 @@ impl Searcher {
     /// The batched search loop: lockstep rollouts in chunks of `cfg.lanes`
     /// (default: episodes_per_update, one PPO batch per chunk), with the same
     /// logging, update cadence, and greedy convergence detection as the
-    /// serial driver.
-    pub(super) fn run_batched(&mut self) -> Result<SearchResult> {
+    /// serial driver. `ctl` is checked once per lockstep chunk (the batched
+    /// equivalent of the serial driver's per-episode boundary).
+    pub(super) fn run_batched(&mut self, ctl: &SearchCtl) -> Result<SearchResult> {
         let lanes = if self.cfg.lanes == 0 {
             self.agent.act_lanes.min(self.cfg.ppo.episodes_per_update)
         } else {
@@ -182,6 +183,7 @@ impl Searcher {
 
         let mut ep = 0usize;
         'episodes: while ep < self.cfg.episodes {
+            ctl.check()?;
             let n = lanes.min(self.cfg.episodes - ep);
             let mut rngs: Vec<Pcg32> = (ep..ep + n).map(|e| self.episode_rng(e)).collect();
             let batch = self.rollout_lockstep(&mut rngs)?;
@@ -190,14 +192,16 @@ impl Searcher {
                 let reward_sum: f64 = lane.records.iter().map(|r| r.reward as f64).sum();
                 let state_acc = self.env.state_acc(&lane.bits)?;
                 let state_q = self.env.state_q(&lane.bits);
-                log.push(EpisodeLog {
+                let entry = EpisodeLog {
                     episode: ep + i,
                     reward: reward_sum,
                     state_acc,
                     state_q,
                     bits: lane.bits.clone(),
                     probs: lane.probs,
-                });
+                };
+                ctl.notify(&entry);
+                log.push(entry);
                 let updated = self.agent.finish_episode(lane.records)?.is_some();
                 if updated
                     && self.cfg.patience > 0
@@ -209,6 +213,7 @@ impl Searcher {
             ep += n;
         }
 
+        ctl.check()?;
         self.finalize(log, episodes_run)
     }
 }

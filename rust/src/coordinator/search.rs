@@ -10,7 +10,9 @@
 //! PCG streams (`episode_rng`), so both modes sample identical actions for
 //! episode `ep` under the same seed.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -60,6 +62,84 @@ impl RolloutMode {
             "serial" => Ok(RolloutMode::Serial),
             "batched" => Ok(RolloutMode::Batched),
             other => anyhow::bail!("unknown rollout mode `{other}` (expected batched|serial)"),
+        }
+    }
+}
+
+/// Typed marker for cooperative cancellation: a search interrupted through
+/// [`SearchCtl`] fails with this error, so a driver (the serve scheduler)
+/// can tell "cancelled"/"deadline exceeded" apart from a genuine failure
+/// via `err.downcast_ref::<Cancelled>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cancelled(pub &'static str);
+
+impl std::fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "search stopped: {}", self.0)
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+/// Cooperative run control for a search: a cancellation flag, an optional
+/// wall-clock deadline, and a per-episode progress hook. Built by the
+/// driving side (e.g. the `releq serve` scheduler), shared with the
+/// controller via `Arc`, and checked by both rollout drivers at every
+/// episode boundary — a search never dies mid-PJRT-execution, it stops at
+/// the next episode with a typed [`Cancelled`] error.
+#[derive(Default)]
+pub struct SearchCtl {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+    progress: Option<Box<dyn Fn(&EpisodeLog) + Send + Sync>>,
+}
+
+impl SearchCtl {
+    pub fn new() -> SearchCtl {
+        SearchCtl::default()
+    }
+
+    /// Cancel the search once `d` has elapsed from now (the scheduler
+    /// starts the clock at job submission, so queue wait counts).
+    pub fn with_deadline(mut self, d: Duration) -> SearchCtl {
+        self.deadline = Some(Instant::now() + d);
+        self
+    }
+
+    /// Invoke `f` for every finished training episode (greedy convergence
+    /// probes are not reported). Called on the search thread — keep it
+    /// cheap; the serve scheduler just appends to a bounded tail buffer.
+    pub fn with_progress(mut self, f: impl Fn(&EpisodeLog) + Send + Sync + 'static) -> SearchCtl {
+        self.progress = Some(Box::new(f));
+        self
+    }
+
+    /// Request cancellation; the search stops at the next episode boundary.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+            || self.deadline.map_or(false, |d| Instant::now() >= d)
+    }
+
+    /// Bail with the typed [`Cancelled`] error if cancellation or the
+    /// deadline fired. The rollout drivers call this at episode boundaries.
+    pub fn check(&self) -> Result<()> {
+        if self.cancelled.load(Ordering::Relaxed) {
+            return Err(Cancelled("cancelled").into());
+        }
+        if self.deadline.map_or(false, |d| Instant::now() >= d) {
+            return Err(Cancelled("deadline exceeded").into());
+        }
+        Ok(())
+    }
+
+    /// Report a finished episode to the progress hook (if any).
+    pub fn notify(&self, ep: &EpisodeLog) {
+        if let Some(f) = &self.progress {
+            f(ep);
         }
     }
 }
@@ -302,33 +382,44 @@ impl Searcher {
     /// greedy rollout and final long retrain. Dispatches on
     /// `cfg.rollout` — the batched driver lives in `coordinator::rollout`.
     pub fn run(&mut self) -> Result<SearchResult> {
+        self.run_ctl(&SearchCtl::default())
+    }
+
+    /// [`Searcher::run`] under external control: `ctl` is checked at every
+    /// episode boundary (cancellation / deadline surface as the typed
+    /// [`Cancelled`] error) and receives every finished episode through its
+    /// progress hook. `run()` is `run_ctl` with an inert control.
+    pub fn run_ctl(&mut self, ctl: &SearchCtl) -> Result<SearchResult> {
         match self.cfg.rollout {
-            RolloutMode::Serial => self.run_serial(),
-            RolloutMode::Batched => self.run_batched(),
+            RolloutMode::Serial => self.run_serial(ctl),
+            RolloutMode::Batched => self.run_batched(ctl),
         }
     }
 
-    fn run_serial(&mut self) -> Result<SearchResult> {
+    fn run_serial(&mut self, ctl: &SearchCtl) -> Result<SearchResult> {
         let mut log = SearchLog::default();
         let mut stable_updates = 0usize;
         let mut last_greedy: Option<Vec<u32>> = None;
         let mut episodes_run = 0usize;
 
         for ep in 0..self.cfg.episodes {
+            ctl.check()?;
             let mut rng = self.episode_rng(ep);
             let (bits, probs, records) = self.rollout(Some(&mut rng))?;
             episodes_run = ep + 1;
             let reward_sum: f64 = records.iter().map(|r| r.reward as f64).sum();
             let state_acc = self.env.state_acc(&bits)?;
             let state_q = self.env.state_q(&bits);
-            log.push(EpisodeLog {
+            let entry = EpisodeLog {
                 episode: ep,
                 reward: reward_sum,
                 state_acc,
                 state_q,
                 bits: bits.clone(),
                 probs,
-            });
+            };
+            ctl.notify(&entry);
+            log.push(entry);
             let updated = self.agent.finish_episode(records)?.is_some();
 
             if updated
@@ -339,6 +430,7 @@ impl Searcher {
             }
         }
 
+        ctl.check()?;
         self.finalize(log, episodes_run)
     }
 }
@@ -431,6 +523,46 @@ mod tests {
         // all-NaN still returns deterministically
         let all_nan = vec![result(f64::NAN, 0.2), result(f64::NAN, 0.1)];
         assert_eq!(best_replica(&all_nan), Some(1));
+    }
+
+    #[test]
+    fn search_ctl_cancel_and_deadline_are_typed() {
+        let ctl = SearchCtl::new();
+        assert!(!ctl.is_cancelled());
+        assert!(ctl.check().is_ok());
+        ctl.cancel();
+        assert!(ctl.is_cancelled());
+        let err = ctl.check().unwrap_err();
+        assert_eq!(err.downcast_ref::<Cancelled>(), Some(&Cancelled("cancelled")));
+
+        // an already-expired deadline fires immediately
+        let ctl = SearchCtl::new().with_deadline(Duration::from_secs(0));
+        let err = ctl.check().unwrap_err();
+        assert_eq!(err.downcast_ref::<Cancelled>(), Some(&Cancelled("deadline exceeded")));
+
+        // a far-future deadline does not
+        let ctl = SearchCtl::new().with_deadline(Duration::from_secs(3600));
+        assert!(ctl.check().is_ok());
+    }
+
+    #[test]
+    fn search_ctl_progress_hook_fires() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let seen = Arc::new(AtomicUsize::new(0));
+        let seen2 = seen.clone();
+        let ctl = SearchCtl::new().with_progress(move |ep| {
+            seen2.fetch_add(ep.episode + 1, Ordering::Relaxed);
+        });
+        let entry = EpisodeLog {
+            episode: 4,
+            reward: 0.0,
+            state_acc: 1.0,
+            state_q: 0.5,
+            bits: vec![8, 8],
+            probs: vec![],
+        };
+        ctl.notify(&entry);
+        assert_eq!(seen.load(Ordering::Relaxed), 5);
     }
 
     #[test]

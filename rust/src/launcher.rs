@@ -32,15 +32,6 @@ fn out_dir(args: &Args) -> Result<PathBuf> {
     Ok(dir)
 }
 
-fn parse_bits(s: &str) -> Result<Vec<u32>> {
-    s.split(',')
-        .map(|t| {
-            let t = t.trim();
-            t.parse()
-                .map_err(|_| anyhow::anyhow!("bad bitwidth `{t}` in --bits (expected e.g. 8,4,4,8)"))
-        })
-        .collect()
-}
 
 pub fn cmd_stats(_args: &Args) -> Result<()> {
     let (manifest, _engine) = bringup()?;
@@ -230,7 +221,9 @@ pub fn cmd_hw_eval(args: &Args) -> Result<()> {
     let (manifest, _engine) = bringup()?;
     let net = manifest.network(&net_name)?;
     let bits = match args.opt_str("bits") {
-        Some(s) => parse_bits(&s)?,
+        // the shared validated parser (config layer) — same gate as the
+        // TOML and serve job-JSON bits paths
+        Some(s) => config::parse_bits(&s).context("--bits")?,
         None => crate::baselines::paper_releq_solution(&net_name)
             .with_context(|| format!("no --bits and no stored solution for {net_name}"))?,
     };
@@ -242,6 +235,23 @@ pub fn cmd_hw_eval(args: &Args) -> Result<()> {
     println!("{net_name} bits {:?}", bits);
     println!("Stripes  : {sp:.2}x speedup, {en:.2}x energy reduction (vs 8-bit)");
     println!("CPU (bit-serial): {cpu_sp:.2}x speedup (vs 8-bit)");
+    Ok(())
+}
+
+/// `releq serve`: the quantization-as-a-service daemon. Blocks until a
+/// `POST /v1/shutdown` completes its drain.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = config::serve_config(args)?;
+    let (manifest, engine) = bringup()?;
+    let workers = cfg.workers;
+    let archive = cfg.archive.clone();
+    let server = crate::serve::Server::bind(cfg, manifest, engine)?;
+    println!("releq serve: listening on http://{}", server.local_addr());
+    println!("  workers: {workers}, archive: {}", archive.display());
+    println!("  POST /v1/jobs | GET /v1/jobs/<id>[/result] | POST /v1/jobs/<id>/cancel");
+    println!("  GET /v1/stats | POST /v1/shutdown (drains + persists)");
+    server.run()?;
+    println!("releq serve: drained and stopped");
     Ok(())
 }
 

@@ -11,8 +11,9 @@
 //!   quantized train/eval steps and the PPO agent, AOT-lowered to HLO text.
 //! * **Layer 3** — this crate: the ReLeQ coordinator (environment, reward
 //!   shaping, PPO driver, search loop), the hardware simulators (Stripes,
-//!   bit-serial CPU), the ADMM baseline, the Pareto enumerator, and the
-//!   experiment harness regenerating every table/figure of the paper.
+//!   bit-serial CPU), the ADMM baseline, the Pareto enumerator, the
+//!   experiment harness regenerating every table/figure of the paper, and
+//!   the `releq serve` quantization-as-a-service daemon (`serve`).
 //!
 //! Python never runs on the search path: `make artifacts` lowers everything
 //! once, and this crate loads and executes the artifacts via PJRT.
@@ -28,6 +29,7 @@ pub mod parallel;
 pub mod pareto;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testing;
 pub mod util;

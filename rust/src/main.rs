@@ -6,6 +6,7 @@
 //!   pareto       enumerate the quantization space + Pareto frontier (Fig 6)
 //!   hw-eval      run Stripes + bit-serial CPU simulators on a solution
 //!   admm         run the ADMM baseline bitwidth selection
+//!   serve        run the quantization-as-a-service daemon (HTTP/JSON)
 //!   exp <id>     regenerate a paper table/figure (table2|table4|table5|fig5..fig10|ablation-*)
 //!   stats        dump manifest / artifact info
 
@@ -25,6 +26,7 @@ fn main() -> Result<()> {
         "pareto" => releq::launcher::cmd_pareto(&args),
         "hw-eval" => releq::launcher::cmd_hw_eval(&args),
         "admm" => releq::launcher::cmd_admm(&args),
+        "serve" => releq::launcher::cmd_serve(&args),
         "exp" => releq::exp::run(&args),
         other => {
             eprintln!("unknown subcommand `{other}`\n");
@@ -49,6 +51,8 @@ fn print_help() {
          \x20 pareto    --net <name> [--samples N] [--shards N] [--out dir]\n\
          \x20 hw-eval   --net <name> --bits 8,4,4,8\n\
          \x20 admm      --net <name> [--target-bits F]\n\
+         \x20 serve     [--addr host:port] [--workers N] [--queue-cap N] [--archive file.json]\n\
+         \x20           [--log-tail N] [--memo-persist N]   (see examples/serve_client.rs)\n\
          \x20 exp       <table2|table4|table5|fig5|fig6|fig7|fig8|fig9|fig10|ablation-action|ablation-lstm|all>\n\
          \x20 stats\n"
     );

@@ -22,6 +22,42 @@ pub struct EpisodeLog {
     pub probs: Vec<Vec<f32>>,
 }
 
+impl EpisodeLog {
+    /// JSON view of one episode. `with_probs` controls whether the (large)
+    /// per-layer probability vectors are included: the file emitters keep
+    /// them (Fig 5 needs them), the serve status tail drops them — a live
+    /// polling client wants scalars, not O(L × A) floats per poll.
+    pub fn to_json(&self, with_probs: bool) -> Json {
+        let mut fields = vec![
+            ("episode", Json::Num(self.episode as f64)),
+            ("reward", Json::Num(self.reward)),
+            ("state_acc", Json::Num(self.state_acc)),
+            ("state_q", Json::Num(self.state_q)),
+            ("bits", Json::arr_u32(&self.bits)),
+        ];
+        if with_probs {
+            fields.push((
+                "probs",
+                Json::Arr(
+                    self.probs
+                        .iter()
+                        .map(|p| {
+                            Json::arr_f64(&p.iter().map(|&x| x as f64).collect::<Vec<_>>())
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// JSON array over a slice of episodes — shared by [`SearchLog::write_json`]
+/// and the serve daemon's live log tail (`GET /v1/jobs/{id}`).
+pub fn episodes_json(eps: &[EpisodeLog], with_probs: bool) -> Json {
+    Json::Arr(eps.iter().map(|e| e.to_json(with_probs)).collect())
+}
+
 #[derive(Debug, Default)]
 pub struct SearchLog {
     pub episodes: Vec<EpisodeLog>,
@@ -81,33 +117,7 @@ impl SearchLog {
 
     /// JSON dump including per-layer probability evolution (Fig 5 data).
     pub fn write_json(&self, path: &Path) -> Result<()> {
-        let eps: Vec<Json> = self
-            .episodes
-            .iter()
-            .map(|e| {
-                Json::obj(vec![
-                    ("episode", Json::Num(e.episode as f64)),
-                    ("reward", Json::Num(e.reward)),
-                    ("state_acc", Json::Num(e.state_acc)),
-                    ("state_q", Json::Num(e.state_q)),
-                    ("bits", Json::arr_u32(&e.bits)),
-                    (
-                        "probs",
-                        Json::Arr(
-                            e.probs
-                                .iter()
-                                .map(|p| {
-                                    Json::arr_f64(
-                                        &p.iter().map(|&x| x as f64).collect::<Vec<_>>(),
-                                    )
-                                })
-                                .collect(),
-                        ),
-                    ),
-                ])
-            })
-            .collect();
-        std::fs::write(path, Json::Arr(eps).dump())?;
+        std::fs::write(path, episodes_json(&self.episodes, true).dump())?;
         Ok(())
     }
 }
@@ -168,6 +178,28 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text.lines().count(), 2);
         assert!(text.lines().nth(1).unwrap().starts_with("0,0.5"));
+    }
+
+    #[test]
+    fn episode_json_tail_drops_probs() {
+        let e = EpisodeLog {
+            episode: 3,
+            reward: 1.25,
+            state_acc: 0.9,
+            state_q: 0.4,
+            bits: vec![4, 2],
+            probs: vec![vec![0.25; 8]; 2],
+        };
+        let full = e.to_json(true);
+        assert_eq!(full.req("probs").as_arr().unwrap().len(), 2);
+        let lite = e.to_json(false);
+        assert!(lite.get("probs").is_none());
+        assert_eq!(lite.u("episode"), 3);
+        assert_eq!(lite.f("reward"), 1.25);
+        // the array emitter round-trips through the parser
+        let arr = episodes_json(&[e], false).dump();
+        let parsed = Json::parse(&arr).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -125,17 +125,40 @@ where
 ///
 /// Hit/miss counters are global (atomics); per-env accounting stays in
 /// `EnvStats`.
-#[derive(Default)]
+///
+/// # Bounding
+///
+/// A long-running process (the `releq serve` daemon) would otherwise grow
+/// the memo without limit — every distinct bits vector ever evaluated stays
+/// resident. [`AccMemo::with_capacity`] bounds the number of **finished**
+/// entries; when an insert pushes the map past the bound, the
+/// least-recently-touched quarter of the finished entries is evicted in one
+/// batch (coarse LRU: reads stamp a monotone touch tick under the shared
+/// read lock, so the hit path never takes the write lock). In-flight
+/// entries are never evicted — a leader's followers must always find their
+/// flight. `capacity == 0` means unbounded (the one-shot CLI default
+/// before PR 3; searches touch far fewer vectors than the daemon bound).
 pub struct AccMemo {
     map: RwLock<HashMap<Vec<u32>, Slot>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    /// bound on finished entries (0 = unbounded)
+    cap: usize,
+    /// monotone clock for the coarse-LRU touch stamps
+    tick: AtomicU64,
 }
 
-/// Cache slot: a finished value, or a leader's in-flight computation that
-/// followers wait on.
+impl Default for AccMemo {
+    fn default() -> AccMemo {
+        AccMemo::with_capacity(0)
+    }
+}
+
+/// Cache slot: a finished value (with its last-touch tick), or a leader's
+/// in-flight computation that followers wait on.
 enum Slot {
-    Done(f64),
+    Done { v: f64, touched: AtomicU64 },
     InFlight(Arc<Flight>),
 }
 
@@ -164,8 +187,64 @@ impl Flight {
 }
 
 impl AccMemo {
+    /// Unbounded memo (one-shot search runs; see [`AccMemo::with_capacity`]).
     pub fn new() -> AccMemo {
         AccMemo::default()
+    }
+
+    /// Memo bounded to `cap` finished entries (`0` = unbounded).
+    pub fn with_capacity(cap: usize) -> AccMemo {
+        AccMemo {
+            map: RwLock::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            cap,
+            tick: AtomicU64::new(0),
+        }
+    }
+
+    /// Next touch-clock value (monotone; relaxed is fine — ties only blur
+    /// the eviction order, never correctness).
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn touch(&self, touched: &AtomicU64) {
+        touched.store(self.next_tick(), Ordering::Relaxed);
+    }
+
+    fn done(&self, v: f64) -> Slot {
+        Slot::Done { v, touched: AtomicU64::new(self.next_tick()) }
+    }
+
+    /// Enforce the capacity bound; call with the write lock held, after an
+    /// insert. Evicts the least-recently-touched finished entries in one
+    /// batch down to 3/4 of capacity, so the O(n) scan amortizes over the
+    /// next cap/4 inserts. In-flight entries are exempt.
+    fn evict_excess(&self, m: &mut HashMap<Vec<u32>, Slot>) {
+        if self.cap == 0 || m.len() <= self.cap {
+            return;
+        }
+        let n_done = m.values().filter(|s| matches!(s, Slot::Done { .. })).count();
+        let target = self.cap - self.cap / 4;
+        if n_done <= target {
+            return;
+        }
+        let mut ages: Vec<(u64, Vec<u32>)> = m
+            .iter()
+            .filter_map(|(k, s)| match s {
+                Slot::Done { touched, .. } => Some((touched.load(Ordering::Relaxed), k.clone())),
+                Slot::InFlight(_) => None,
+            })
+            .collect();
+        // (tick, key) sort: deterministic even on touch-tick ties
+        ages.sort_unstable();
+        let n_evict = n_done - target;
+        for (_, k) in ages.into_iter().take(n_evict) {
+            m.remove(&k);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Non-blocking lookup of a finished value (counts a hit or a miss).
@@ -173,7 +252,10 @@ impl AccMemo {
     /// [`AccMemo::get_or_compute`] to coalesce with it instead.
     pub fn get(&self, bits: &[u32]) -> Option<f64> {
         let got = match self.map.read().unwrap().get(bits) {
-            Some(Slot::Done(v)) => Some(*v),
+            Some(Slot::Done { v, touched }) => {
+                self.touch(touched);
+                Some(*v)
+            }
             _ => None,
         };
         match got {
@@ -192,7 +274,7 @@ impl AccMemo {
     /// lockstep driver uses this to split a batch into hits and misses
     /// without skewing the hit/miss statistics.)
     pub fn contains(&self, bits: &[u32]) -> bool {
-        matches!(self.map.read().unwrap().get(bits), Some(Slot::Done(_)))
+        matches!(self.map.read().unwrap().get(bits), Some(Slot::Done { .. }))
     }
 
     /// Single-flight lookup-or-compute. Returns `(value, was_cached)`:
@@ -235,7 +317,8 @@ impl AccMemo {
             // fast path: finished value under the shared read lock — the
             // steady-state of a converged search is hit-only and must not
             // contend on the write lock or allocate an owned key
-            if let Some(Slot::Done(v)) = self.map.read().unwrap().get(bits) {
+            if let Some(Slot::Done { v, touched }) = self.map.read().unwrap().get(bits) {
+                self.touch(touched);
                 let v = *v;
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return Ok((v, true));
@@ -246,7 +329,8 @@ impl AccMemo {
                 let mut m = self.map.write().unwrap();
                 match m.entry(bits.to_vec()) {
                     std::collections::hash_map::Entry::Occupied(e) => match e.get() {
-                        Slot::Done(v) => {
+                        Slot::Done { v, touched } => {
+                            self.touch(touched);
                             let v = *v;
                             self.hits.fetch_add(1, Ordering::Relaxed);
                             return Ok((v, true));
@@ -277,10 +361,12 @@ impl AccMemo {
             match result {
                 Ok(v) => {
                     guard.armed = false;
-                    let old = self.map.write().unwrap().insert(bits.to_vec(), Slot::Done(v));
+                    let mut m = self.map.write().unwrap();
+                    let old = m.insert(bits.to_vec(), self.done(v));
                     if let Some(Slot::InFlight(f)) = old {
                         f.finish(Some(v));
                     }
+                    self.evict_excess(&mut m);
                     return Ok((v, false));
                 }
                 // the armed guard unpins the key and wakes waiters
@@ -293,34 +379,93 @@ impl AccMemo {
     /// entry resolves it with this value so its waiters wake instead of
     /// hanging.
     pub fn insert(&self, bits: &[u32], acc: f64) {
-        let old = self.map.write().unwrap().insert(bits.to_vec(), Slot::Done(acc));
+        let mut m = self.map.write().unwrap();
+        let old = m.insert(bits.to_vec(), self.done(acc));
         if let Some(Slot::InFlight(f)) = old {
             f.finish(Some(acc));
         }
+        self.evict_excess(&mut m);
     }
 
-    /// Bulk-import finished entries (e.g. warming a fresh memo from a
-    /// previous run's [`AccMemo::entries`] snapshot).
+    /// Bulk-import finished entries (e.g. warming a fresh memo from the
+    /// solution archive's snapshot of a previous run — see
+    /// `serve::archive`). The capacity bound is enforced once at the end of
+    /// the import, so a warm-start larger than the bound keeps the
+    /// most-recently-imported entries.
     pub fn extend<I: IntoIterator<Item = (Vec<u32>, f64)>>(&self, entries: I) {
         let mut m = self.map.write().unwrap();
         for (k, v) in entries {
-            if let Some(Slot::InFlight(f)) = m.insert(k, Slot::Done(v)) {
+            if let Some(Slot::InFlight(f)) = m.insert(k, self.done(v)) {
                 f.finish(Some(v));
             }
         }
+        self.evict_excess(&mut m);
     }
 
-    /// Snapshot of all finished (bits, accuracy) pairs.
+    /// Snapshot of all finished (bits, accuracy) pairs, sorted by bits
+    /// vector so the export is deterministic regardless of hash order (the
+    /// archive persists a truncated prefix of this).
     pub fn entries(&self) -> Vec<(Vec<u32>, f64)> {
-        self.map
+        let mut v: Vec<(Vec<u32>, f64)> = self
+            .map
             .read()
             .unwrap()
             .iter()
-            .filter_map(|(k, v)| match v {
-                Slot::Done(v) => Some((k.clone(), *v)),
+            .filter_map(|(k, s)| match s {
+                Slot::Done { v, .. } => Some((k.clone(), *v)),
                 Slot::InFlight(_) => None,
             })
-            .collect()
+            .collect();
+        v.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Up to `limit` finished (bits, accuracy) pairs ordered
+    /// most-recently-touched first (ties broken by bits vector). This is
+    /// the archive-persistence export: the prefix keeps the entries the
+    /// search was actually revisiting, not an arbitrary lexicographic
+    /// corner. Top-k, not clone-everything-and-sort: a warm daemon memo
+    /// holds tens of thousands of entries and a job persists a few
+    /// hundred, so the cutoff tick is found first (no key clones) and
+    /// only entries at or above it are materialized.
+    pub fn entries_by_recency(&self, limit: usize) -> Vec<(Vec<u32>, f64)> {
+        if limit == 0 {
+            return Vec::new();
+        }
+        let m = self.map.read().unwrap();
+        let mut ticks: Vec<u64> = m
+            .values()
+            .filter_map(|s| match s {
+                Slot::Done { touched, .. } => Some(touched.load(Ordering::Relaxed)),
+                Slot::InFlight(_) => None,
+            })
+            .collect();
+        if ticks.is_empty() {
+            return Vec::new();
+        }
+        let cutoff = if ticks.len() <= limit {
+            0
+        } else {
+            // the limit-th largest tick; concurrent touches only raise
+            // ticks, so the second pass can select more than `limit`
+            // (handled by the truncate), never fewer
+            let idx = ticks.len() - limit;
+            *ticks.select_nth_unstable(idx).1
+        };
+        let mut v: Vec<(u64, Vec<u32>, f64)> = m
+            .iter()
+            .filter_map(|(k, s)| match s {
+                Slot::Done { v, touched } => {
+                    let t = touched.load(Ordering::Relaxed);
+                    (t >= cutoff).then(|| (t, k.clone(), *v))
+                }
+                Slot::InFlight(_) => None,
+            })
+            .collect();
+        drop(m);
+        v.sort_unstable_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+        v.truncate(limit);
+        v.into_iter().map(|(_, k, val)| (k, val)).collect()
     }
 
     /// Number of finished entries (in-flight computations excluded).
@@ -329,12 +474,17 @@ impl AccMemo {
             .read()
             .unwrap()
             .values()
-            .filter(|s| matches!(s, Slot::Done(_)))
+            .filter(|s| matches!(s, Slot::Done { .. }))
             .count()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Configured bound on finished entries (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.cap
     }
 
     pub fn hits(&self) -> u64 {
@@ -343,6 +493,11 @@ impl AccMemo {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Finished entries dropped by the capacity bound since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 }
 
@@ -438,6 +593,73 @@ mod tests {
         assert!(memo.misses() >= 1);
         assert_eq!(memo.len(), 2);
         assert_eq!(memo.get(&[2, 2]), Some(0.5));
+    }
+
+    #[test]
+    fn bounded_memo_evicts_least_recently_touched() {
+        let memo = AccMemo::with_capacity(8);
+        for i in 0..8u32 {
+            memo.insert(&[i], i as f64 / 10.0);
+        }
+        assert_eq!(memo.len(), 8);
+        assert_eq!(memo.evictions(), 0);
+        // touch the first four so they are the most-recently-used half
+        for i in 0..4u32 {
+            assert!(memo.get(&[i]).is_some());
+        }
+        // pushing past the bound evicts down to 3/4 capacity = 6 entries,
+        // dropping the least-recently-touched ones ([4] .. [6])
+        memo.insert(&[100], 0.99);
+        assert_eq!(memo.len(), 6);
+        assert_eq!(memo.evictions(), 3);
+        for i in 0..4u32 {
+            assert!(memo.contains(&[i]), "recently touched [{i}] must survive");
+        }
+        assert!(memo.contains(&[100]), "the triggering insert must survive");
+        assert!(!memo.contains(&[4]) && !memo.contains(&[5]) && !memo.contains(&[6]));
+        // an evicted key recomputes transparently
+        let (v, cached) = memo.get_or_compute(&[4], || Ok(0.4)).unwrap();
+        assert!(!cached);
+        assert_eq!(v, 0.4);
+        // unbounded memo never evicts
+        let unbounded = AccMemo::new();
+        for i in 0..64u32 {
+            unbounded.insert(&[i], 0.5);
+        }
+        assert_eq!(unbounded.len(), 64);
+        assert_eq!(unbounded.evictions(), 0);
+        assert_eq!(unbounded.capacity(), 0);
+    }
+
+    #[test]
+    fn memo_entries_export_is_sorted() {
+        let memo = AccMemo::with_capacity(16);
+        memo.insert(&[8, 2], 0.7);
+        memo.insert(&[2, 8], 0.6);
+        memo.insert(&[4, 4], 0.9);
+        let e = memo.entries();
+        let keys: Vec<Vec<u32>> = e.iter().map(|(k, _)| k.clone()).collect();
+        assert_eq!(keys, vec![vec![2, 8], vec![4, 4], vec![8, 2]]);
+    }
+
+    #[test]
+    fn recency_export_leads_with_recently_touched() {
+        let memo = AccMemo::with_capacity(16);
+        memo.insert(&[1, 1], 0.1);
+        memo.insert(&[2, 2], 0.2);
+        memo.insert(&[3, 3], 0.3);
+        // re-touch the oldest entry: it must lead the recency export even
+        // though it sorts first lexicographically too — so also check the
+        // untouched pair ordering flips vs insertion
+        assert_eq!(memo.get(&[1, 1]), Some(0.1));
+        let keys: Vec<Vec<u32>> =
+            memo.entries_by_recency(10).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec![vec![1, 1], vec![3, 3], vec![2, 2]]);
+        // top-k truncation keeps the most recent, drops the stalest
+        let top2: Vec<Vec<u32>> =
+            memo.entries_by_recency(2).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(top2, vec![vec![1, 1], vec![3, 3]]);
+        assert!(memo.entries_by_recency(0).is_empty());
     }
 
     #[test]

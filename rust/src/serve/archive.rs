@@ -1,0 +1,589 @@
+//! Persistent solution archive: every completed quantization policy, keyed
+//! by network + config fingerprint, persisted as one JSON file with
+//! atomic write-rename so a crash mid-save never corrupts prior results.
+//!
+//! Two cache levels ride on the archive:
+//!
+//! * **exact hits** — a resubmitted job whose (network, env fingerprint,
+//!   search fingerprint) triple matches a stored record is answered
+//!   instantly, with zero accuracy evaluations;
+//! * **warm starts** — a *near*-duplicate job (same network and env
+//!   fingerprint, different search knobs) pretrains through the session
+//!   cache but seeds its [`crate::parallel::AccMemo`] with the stored
+//!   (bits, accuracy) pairs of every matching record. Validity rests on
+//!   PR 2's purity invariant: `EnvCore::accuracy` is a pure function of
+//!   (env config, bits), so an accuracy computed under the same env
+//!   fingerprint is the accuracy, no matter which process computed it.
+//!
+//! Fingerprints are FNV-1a over the config fields ([`crate::util::fnv`] —
+//! not `DefaultHasher`, whose output is allowed to change between Rust
+//! releases; archives outlive compiler upgrades).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config;
+use crate::coordinator::{EnvConfig, SearchConfig};
+use crate::util::fnv::Fnv;
+use crate::util::json::Json;
+
+/// Bound on retained records — the archive must not be the daemon's one
+/// remaining unbounded map (each distinct job config is a fresh record
+/// under multi-tenant traffic). At the cap, the least-hit records are
+/// evicted first (ties by key, deterministic): a record that keeps
+/// answering resubmissions is exactly the one worth keeping, and the cap
+/// also bounds every full-file save at O(ARCHIVE_CAP).
+const ARCHIVE_CAP: usize = 4096;
+
+/// Fingerprint of everything that determines an accuracy value: the
+/// network, the quantization ceiling, and the env config. Jobs sharing
+/// this share a pretrained session core and may exchange memo entries.
+pub fn env_fingerprint(net: &str, bits_max: u32, cfg: &EnvConfig) -> u64 {
+    let mut h = Fnv::new();
+    h.write_str(net)
+        .write_u64(bits_max as u64)
+        .write_u64(cfg.pretrain_steps as u64)
+        .write_u64(cfg.retrain_steps as u64)
+        .write_u64(cfg.long_retrain_steps as u64)
+        .write_f64(cfg.lr as f64)
+        .write_u64(cfg.train_size as u64)
+        .write_u64(cfg.seed);
+    // memo_cap is deliberately excluded: it bounds the cache, it does not
+    // change any accuracy value.
+    h.finish()
+}
+
+/// Fingerprint of the full search outcome determinants: env fingerprint
+/// plus every agent/reward/rollout knob. Two jobs sharing this produce the
+/// same solution, so the second is answered from the archive.
+pub fn search_fingerprint(net: &str, bits_max: u32, cfg: &SearchConfig) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(env_fingerprint(net, bits_max, &cfg.env))
+        .write_u64(cfg.episodes as u64)
+        .write_f64(cfg.ppo.clip_eps as f64)
+        .write_f64(cfg.ppo.ent_coef as f64)
+        .write_f64(cfg.ppo.lr as f64)
+        .write_u64(cfg.ppo.epochs as u64)
+        .write_f64(cfg.ppo.gamma)
+        .write_f64(cfg.ppo.lam)
+        .write_u64(cfg.ppo.episodes_per_update as u64)
+        .write_str(&format!("{:?}", cfg.reward.kind))
+        .write_f64(cfg.reward.a)
+        .write_f64(cfg.reward.b)
+        .write_f64(cfg.reward.th)
+        .write_str(&format!("{:?}", cfg.agent_kind))
+        .write_str(&format!("{:?}", cfg.action_space))
+        // rollout mode + lanes are included: batched vs serial agree only
+        // to float-rounding level (see coordinator::rollout), so they are
+        // distinct archive keys rather than pretending bit-equality
+        .write_str(&format!("{:?}", cfg.rollout))
+        .write_u64(cfg.lanes as u64)
+        .write_u64(cfg.eval_every_step as u64)
+        .write_u64(cfg.min_bits as u64)
+        .write_u64(cfg.seed)
+        .write_u64(cfg.patience as u64);
+    h.finish()
+}
+
+/// A finished quantization policy — the archive payload and the job-result
+/// wire shape (`GET /v1/jobs/{id}/result`).
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub bits: Vec<u32>,
+    pub avg_bits: f64,
+    pub acc_fullp: f64,
+    pub acc_final: f64,
+    pub acc_loss_pct: f64,
+    pub state_q: f64,
+    /// best per-episode reward observed during the search
+    pub reward: f64,
+    pub episodes_run: usize,
+    /// Pareto frontier over the search's episode history:
+    /// (state_q, state_acc, bits), sorted by increasing state_q
+    pub pareto: Vec<(f64, f64, Vec<u32>)>,
+}
+
+impl Solution {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bits", Json::arr_u32(&self.bits)),
+            ("avg_bits", Json::Num(self.avg_bits)),
+            ("acc_fullp", Json::Num(self.acc_fullp)),
+            ("acc_final", Json::Num(self.acc_final)),
+            ("acc_loss_pct", Json::Num(self.acc_loss_pct)),
+            ("state_q", Json::Num(self.state_q)),
+            ("reward", Json::Num(self.reward)),
+            ("episodes_run", Json::Num(self.episodes_run as f64)),
+            (
+                "pareto",
+                Json::Arr(
+                    self.pareto
+                        .iter()
+                        .map(|(q, a, b)| {
+                            Json::obj(vec![
+                                ("state_q", Json::Num(*q)),
+                                ("state_acc", Json::Num(*a)),
+                                ("bits", Json::arr_u32(b)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Solution> {
+        let bits = config::bits_from_json(j.req("bits")).context("solution bits")?;
+        let pareto = j
+            .req("pareto")
+            .as_arr()
+            .context("solution pareto")?
+            .iter()
+            .map(|p| {
+                Ok((
+                    p.get("state_q").and_then(Json::as_f64).context("pareto state_q")?,
+                    p.get("state_acc").and_then(Json::as_f64).context("pareto state_acc")?,
+                    config::bits_from_json(p.req("bits")).context("pareto bits")?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).with_context(|| format!("solution `{k}`"));
+        Ok(Solution {
+            bits,
+            avg_bits: f("avg_bits")?,
+            acc_fullp: f("acc_fullp")?,
+            acc_final: f("acc_final")?,
+            acc_loss_pct: f("acc_loss_pct")?,
+            state_q: f("state_q")?,
+            reward: f("reward")?,
+            episodes_run: f("episodes_run")? as usize,
+            pareto,
+        })
+    }
+}
+
+/// One archived policy: the solution plus its keys, a bounded snapshot of
+/// the accuracy memo for warm-starts, and a served-hit counter.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub net: String,
+    pub env_fp: u64,
+    pub search_fp: u64,
+    pub solution: Solution,
+    /// (bits, accuracy) pairs exported from the session memo at completion
+    pub memo: Vec<(Vec<u32>, f64)>,
+    /// times this record answered a resubmission
+    pub hits: u64,
+}
+
+impl Record {
+    /// A record is archivable only if every numeric field is finite: the
+    /// serializer emits non-finite values as `null` (to keep documents
+    /// parseable), which `from_json` would then reject at the next
+    /// `Archive::open` — one diverged search must not brick the daemon's
+    /// restarts or poison warm-starts.
+    fn is_finite(&self) -> bool {
+        let s = &self.solution;
+        [s.avg_bits, s.acc_fullp, s.acc_final, s.acc_loss_pct, s.state_q, s.reward]
+            .iter()
+            .all(|v| v.is_finite())
+            && s.pareto.iter().all(|(q, a, _)| q.is_finite() && a.is_finite())
+            && self.memo.iter().all(|(_, a)| a.is_finite())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("net", Json::Str(self.net.clone())),
+            ("env_fp", Json::Str(format!("{:016x}", self.env_fp))),
+            ("search_fp", Json::Str(format!("{:016x}", self.search_fp))),
+            ("solution", self.solution.to_json()),
+            (
+                "memo",
+                Json::Arr(
+                    self.memo
+                        .iter()
+                        .map(|(b, a)| Json::Arr(vec![Json::arr_u32(b), Json::Num(*a)]))
+                        .collect(),
+                ),
+            ),
+            ("hits", Json::Num(self.hits as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Record> {
+        let fp = |k: &str| -> Result<u64> {
+            let s = j.get(k).and_then(Json::as_str).with_context(|| format!("record `{k}`"))?;
+            u64::from_str_radix(s, 16).with_context(|| format!("record `{k}` = `{s}`"))
+        };
+        let memo = j
+            .req("memo")
+            .as_arr()
+            .context("record memo")?
+            .iter()
+            .map(|e| {
+                let pair = e.as_arr().filter(|a| a.len() == 2).context("memo pair")?;
+                Ok((
+                    config::bits_from_json(&pair[0]).context("memo bits")?,
+                    pair[1].as_f64().context("memo accuracy")?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Record {
+            net: j.get("net").and_then(Json::as_str).context("record net")?.to_string(),
+            env_fp: fp("env_fp")?,
+            search_fp: fp("search_fp")?,
+            solution: Solution::from_json(j.req("solution")).context("record solution")?,
+            memo,
+            hits: j.get("hits").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+/// The archive: an in-memory map mirrored to `archive.json`.
+///
+/// Concurrency: one `Mutex` over the map — archive operations are rare
+/// (job completion, submission lookup) next to everything else the daemon
+/// does. Persistence is explicit ([`Archive::save`]) and atomic: serialize
+/// to `<path>.tmp`, then `rename` over the target, so readers of the path
+/// always see a complete document.
+pub struct Archive {
+    path: PathBuf,
+    records: Mutex<BTreeMap<String, Record>>,
+    /// serializes save(): two workers finishing jobs near-simultaneously
+    /// must not interleave writes to the shared tmp file (the rename is
+    /// atomic, the write before it is not)
+    save_lock: Mutex<()>,
+    /// completion time of the last save, for [`Archive::save_throttled`]
+    last_save: Mutex<Option<Instant>>,
+    hits: AtomicU64,
+}
+
+impl Archive {
+    /// The composite key of a record.
+    pub fn key(net: &str, env_fp: u64, search_fp: u64) -> String {
+        format!("{net}:{env_fp:016x}:{search_fp:016x}")
+    }
+
+    /// Open (or start empty at) `path`. A missing file is an empty archive;
+    /// a malformed file is an error — silently discarding accumulated
+    /// solutions would be worse than refusing to start.
+    pub fn open(path: &Path) -> Result<Archive> {
+        let mut records = BTreeMap::new();
+        if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading archive {}", path.display()))?;
+            let j = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("archive {}: {e}", path.display()))?;
+            for (k, v) in j.as_obj().context("archive root must be an object")? {
+                let rec = Record::from_json(v)
+                    .with_context(|| format!("archive record `{k}`"))?;
+                records.insert(k.clone(), rec);
+            }
+        }
+        Ok(Archive {
+            path: path.to_path_buf(),
+            records: Mutex::new(records),
+            save_lock: Mutex::new(()),
+            last_save: Mutex::new(None),
+            hits: AtomicU64::new(0),
+        })
+    }
+
+    /// Exact-hit lookup; bumps the record's and the archive's hit counters.
+    pub fn lookup(&self, net: &str, env_fp: u64, search_fp: u64) -> Option<Solution> {
+        let mut m = self.records.lock().unwrap();
+        let rec = m.get_mut(&Self::key(net, env_fp, search_fp))?;
+        rec.hits += 1;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(rec.solution.clone())
+    }
+
+    /// Insert (or replace) a completed record. A replacement inherits the
+    /// replaced record's accumulated hit count — two concurrent identical
+    /// jobs race to insert the same key, and the loser's write must not
+    /// zero the counter resubmissions have been bumping in between.
+    /// Enforces [`ARCHIVE_CAP`] by evicting least-hit records (never the
+    /// one just inserted).
+    pub fn insert(&self, mut rec: Record) {
+        let key = Self::key(&rec.net, rec.env_fp, rec.search_fp);
+        if !rec.is_finite() {
+            // the job is still served live from memory; it just isn't
+            // worth persisting a diverged policy
+            eprintln!("[serve] not archiving `{key}`: non-finite values (diverged search)");
+            return;
+        }
+        let mut m = self.records.lock().unwrap();
+        if let Some(old) = m.get(&key) {
+            rec.hits += old.hits;
+        }
+        m.insert(key.clone(), rec);
+        while m.len() > ARCHIVE_CAP {
+            let victim = m
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by(|a, b| (a.1.hits, a.0).cmp(&(b.1.hits, b.0)))
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(v) => {
+                    m.remove(&v);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Union of the memo snapshots of every record matching (net, env_fp) —
+    /// the warm-start set for a new session of that environment.
+    pub fn memo_for(&self, net: &str, env_fp: u64) -> Vec<(Vec<u32>, f64)> {
+        let m = self.records.lock().unwrap();
+        let mut out: BTreeMap<Vec<u32>, f64> = BTreeMap::new();
+        for rec in m.values() {
+            if rec.net == net && rec.env_fp == env_fp {
+                for (b, a) in &rec.memo {
+                    out.insert(b.clone(), *a);
+                }
+                // every completed solution's final bits/accuracy is also a
+                // valid short-retrain memo entry ONLY under the short
+                // protocol — acc_final comes from the long retrain, so it
+                // is deliberately NOT inserted here.
+            }
+        }
+        out.into_iter().collect()
+    }
+
+    /// Persist atomically: write `<path>.tmp`, fsync-free rename over the
+    /// target (rename within a directory is atomic on POSIX). Saves are
+    /// serialized so concurrent completions can't interleave on the tmp
+    /// file; each save snapshots the map afresh, so the last one to run
+    /// writes the union.
+    pub fn save(&self) -> Result<()> {
+        let _serialize = self.save_lock.lock().unwrap();
+        let doc = {
+            let m = self.records.lock().unwrap();
+            Json::Obj(m.iter().map(|(k, r)| (k.clone(), r.to_json())).collect())
+        };
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let tmp = self.path.with_extension("json.tmp");
+        std::fs::write(&tmp, doc.dump())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), self.path.display()))?;
+        Ok(())
+    }
+
+    /// Throttled persistence for the per-completion hot path: each save
+    /// serializes the WHOLE archive, so under heavy traffic saving on
+    /// every completion would make completion cost grow with archive
+    /// size. Skips (returning false) when a save completed within
+    /// `min_interval`. The shutdown drain calls [`Archive::save`]
+    /// unconditionally, so a skip here delays persistence to the next
+    /// completion after the interval or to shutdown; a crash can lose at
+    /// most the last `min_interval` of completions — the archive is a
+    /// cache, not a ledger.
+    pub fn save_throttled(&self, min_interval: std::time::Duration) -> Result<bool> {
+        {
+            let last = self.last_save.lock().unwrap();
+            if let Some(t) = *last {
+                if t.elapsed() < min_interval {
+                    return Ok(false);
+                }
+            }
+        }
+        // stamp only on success: a failed attempt must not suppress the
+        // retry on the very next completion. (Two racing callers may both
+        // pass the check and both save — save_lock serializes them and the
+        // result is simply one redundant write.)
+        self.save()?;
+        *self.last_save.lock().unwrap() = Some(Instant::now());
+        Ok(true)
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resubmissions served from the archive since this process started.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solution() -> Solution {
+        Solution {
+            bits: vec![8, 4, 4, 2],
+            avg_bits: 4.5,
+            acc_fullp: 0.98,
+            acc_final: 0.97,
+            acc_loss_pct: 1.0,
+            state_q: 0.55,
+            reward: 1.8,
+            episodes_run: 40,
+            pareto: vec![(0.4, 0.9, vec![2, 2, 2, 2]), (0.6, 0.99, vec![8, 4, 4, 2])],
+        }
+    }
+
+    fn record(net: &str, env_fp: u64, search_fp: u64) -> Record {
+        Record {
+            net: net.to_string(),
+            env_fp,
+            search_fp,
+            solution: solution(),
+            memo: vec![(vec![8, 8, 8, 8], 0.97), (vec![4, 4, 4, 4], 0.94)],
+            hits: 0,
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("releq_archive_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrips_through_disk() {
+        let path = tmp_path("roundtrip.json");
+        let _ = std::fs::remove_file(&path);
+        let a = Archive::open(&path).unwrap();
+        assert!(a.is_empty());
+        a.insert(record("lenet", 0xaa, 0xbb));
+        a.insert(record("mobilenet", 0xcc, 0xdd));
+        a.save().unwrap();
+
+        let b = Archive::open(&path).unwrap();
+        assert_eq!(b.len(), 2);
+        let sol = b.lookup("lenet", 0xaa, 0xbb).expect("persisted record");
+        assert_eq!(sol.bits, vec![8, 4, 4, 2]);
+        assert_eq!(sol.pareto.len(), 2);
+        assert_eq!(b.hits(), 1);
+        assert!(b.lookup("lenet", 0xaa, 0xff).is_none());
+        // per-record hit counters persist across save/open
+        b.save().unwrap();
+        let c = Archive::open(&path).unwrap();
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn memo_union_is_scoped_to_env_fingerprint() {
+        let path = tmp_path("memo.json");
+        let _ = std::fs::remove_file(&path);
+        let a = Archive::open(&path).unwrap();
+        a.insert(record("lenet", 0x1, 0x10));
+        let mut other = record("lenet", 0x1, 0x20);
+        other.memo = vec![(vec![2, 2, 2, 2], 0.80), (vec![4, 4, 4, 4], 0.94)];
+        a.insert(other);
+        a.insert(record("lenet", 0x2, 0x30)); // different env: excluded
+        let warm = a.memo_for("lenet", 0x1);
+        assert_eq!(warm.len(), 3); // union, deduped on bits
+        assert!(a.memo_for("lenet", 0x9).is_empty());
+        assert!(a.memo_for("vgg11", 0x1).is_empty());
+    }
+
+    #[test]
+    fn non_finite_solutions_are_not_archived() {
+        let path = tmp_path("nan.json");
+        let _ = std::fs::remove_file(&path);
+        let a = Archive::open(&path).unwrap();
+        let mut diverged = record("lenet", 9, 9);
+        diverged.solution.acc_final = f64::NAN;
+        a.insert(diverged);
+        assert!(a.is_empty(), "diverged solutions must be rejected");
+        let mut bad_memo = record("lenet", 9, 10);
+        bad_memo.memo.push((vec![2, 2, 2, 2], f64::INFINITY));
+        a.insert(bad_memo);
+        assert!(a.is_empty());
+        // save/reopen of a clean archive still round-trips
+        a.insert(record("lenet", 1, 1));
+        a.save().unwrap();
+        assert_eq!(Archive::open(&path).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn archive_is_bounded_and_keeps_hot_records() {
+        let path = tmp_path("cap.json");
+        let _ = std::fs::remove_file(&path);
+        let a = Archive::open(&path).unwrap();
+        let mut hot = record("lenet", 0, 0);
+        hot.hits = 50;
+        a.insert(hot);
+        for i in 1..=(ARCHIVE_CAP as u64 + 8) {
+            a.insert(record("lenet", i, i));
+        }
+        assert_eq!(a.len(), ARCHIVE_CAP, "records map must stay bounded");
+        assert!(a.lookup("lenet", 0, 0).is_some(), "least-hit eviction keeps hot records");
+    }
+
+    #[test]
+    fn throttled_save_coalesces() {
+        let path = tmp_path("throttle.json");
+        let _ = std::fs::remove_file(&path);
+        let a = Archive::open(&path).unwrap();
+        a.insert(record("lenet", 1, 1));
+        assert!(a.save_throttled(std::time::Duration::from_secs(60)).unwrap());
+        a.insert(record("lenet", 1, 2));
+        assert!(
+            !a.save_throttled(std::time::Duration::from_secs(60)).unwrap(),
+            "second save within the interval must be skipped"
+        );
+        // the skipped record is not on disk yet...
+        assert_eq!(Archive::open(&path).unwrap().len(), 1);
+        // ...until an unconditional save (the shutdown path)
+        a.save().unwrap();
+        assert_eq!(Archive::open(&path).unwrap().len(), 2);
+        // a zero interval never throttles
+        assert!(a.save_throttled(std::time::Duration::from_secs(0)).unwrap());
+    }
+
+    #[test]
+    fn corrupt_archive_is_an_error_not_a_wipe() {
+        let path = tmp_path("corrupt.json");
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(Archive::open(&path).is_err());
+    }
+
+    #[test]
+    fn fingerprints_separate_env_from_search_knobs() {
+        let base = SearchConfig::default();
+        let mut search_tweak = base.clone();
+        search_tweak.seed += 1;
+        let mut env_tweak = base.clone();
+        env_tweak.env.retrain_steps += 1;
+
+        let e0 = env_fingerprint("lenet", 8, &base.env);
+        assert_eq!(e0, env_fingerprint("lenet", 8, &search_tweak.env));
+        assert_ne!(e0, env_fingerprint("lenet", 8, &env_tweak.env));
+        assert_ne!(e0, env_fingerprint("vgg11", 8, &base.env));
+        assert_ne!(e0, env_fingerprint("lenet", 4, &base.env));
+
+        let s0 = search_fingerprint("lenet", 8, &base);
+        assert_eq!(s0, search_fingerprint("lenet", 8, &base.clone()));
+        assert_ne!(s0, search_fingerprint("lenet", 8, &search_tweak));
+        assert_ne!(s0, search_fingerprint("lenet", 8, &env_tweak));
+
+        // memo_cap is cache sizing, not an accuracy determinant
+        let mut cap_tweak = base.clone();
+        cap_tweak.env.memo_cap = 7;
+        assert_eq!(e0, env_fingerprint("lenet", 8, &cap_tweak.env));
+    }
+}

@@ -1,0 +1,266 @@
+//! Dependency-free HTTP/1.1 plumbing for the serve daemon (the build
+//! environment is offline — no hyper/axum; DESIGN.md §9). One request per
+//! connection (`Connection: close`), JSON bodies only, via
+//! [`crate::util::json::Json`].
+//!
+//! Scope is deliberately narrow: request line + headers + `Content-Length`
+//! body. No chunked transfer, no keep-alive, no TLS — the daemon fronts a
+//! trusted deployment pipeline on localhost, not the open internet. Hard
+//! limits ([`MAX_BODY`], [`MAX_HEADERS`], [`MAX_LINE`]) bound what one
+//! connection can make the daemon buffer.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Maximum accepted request/response body (a job submission is < 1 KiB;
+/// this is pure defense).
+pub const MAX_BODY: usize = 1 << 20;
+/// Maximum header lines read before giving up on a connection.
+pub const MAX_HEADERS: usize = 64;
+/// Maximum bytes in one request/status/header line — without this cap a
+/// newline-free stream would grow `read_line`'s buffer without limit.
+pub const MAX_LINE: usize = 8 << 10;
+
+/// `read_line` with the [`MAX_LINE`] bound: reads through a `Take` so a
+/// pathological sender can't buffer more than the cap.
+fn read_line_capped<R: BufRead>(r: &mut R, line: &mut String) -> Result<usize> {
+    let n = r
+        .take(MAX_LINE as u64 + 1)
+        .read_line(line)
+        .context("reading line")?;
+    anyhow::ensure!(n <= MAX_LINE, "line exceeds {MAX_LINE} bytes");
+    Ok(n)
+}
+
+/// Scan the header section up to the blank line, returning the
+/// `Content-Length` value if present. Shared by the server parser and the
+/// test/example client so the two sides cannot drift. EOF before the blank
+/// line is tolerated only for header-only messages (no content-length).
+fn read_headers<R: BufRead>(r: &mut R) -> Result<Option<usize>> {
+    let mut line = String::new();
+    let mut content_len: Option<usize> = None;
+    for _ in 0..MAX_HEADERS {
+        line.clear();
+        if read_line_capped(r, &mut line)? == 0 {
+            break; // EOF
+        }
+        let t = line.trim_end();
+        if t.is_empty() {
+            return Ok(content_len);
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = Some(
+                    v.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad content-length `{}`", v.trim()))?,
+                );
+            }
+        }
+    }
+    anyhow::ensure!(
+        content_len.is_none(),
+        "header section exceeds {MAX_HEADERS} lines"
+    );
+    Ok(None)
+}
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Decode the body as JSON; an empty body decodes to `Json::Null`.
+    pub fn json(&self) -> Result<Json> {
+        if self.body.is_empty() {
+            return Ok(Json::Null);
+        }
+        let text = std::str::from_utf8(&self.body).context("request body is not UTF-8")?;
+        Json::parse(text).map_err(|e| anyhow::anyhow!("request body: {e}"))
+    }
+}
+
+/// Read one request off a buffered stream. Fails (closing the connection)
+/// on a malformed request line, an oversized body, or header overflow.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request> {
+    let mut line = String::new();
+    read_line_capped(r, &mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_string();
+    let path = parts.next().context("request line has no path")?.to_string();
+    let version = parts.next().context("request line has no version")?;
+    anyhow::ensure!(version.starts_with("HTTP/1."), "unsupported version `{version}`");
+
+    let content_len = read_headers(r)?.unwrap_or(0);
+    anyhow::ensure!(content_len <= MAX_BODY, "body of {content_len} bytes exceeds {MAX_BODY}");
+
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body).context("reading request body")?;
+    Ok(Request { method, path, body })
+}
+
+/// One JSON response.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub body: Json,
+}
+
+impl Response {
+    pub fn ok(body: Json) -> Response {
+        Response { status: 200, body }
+    }
+
+    pub fn status(status: u16, body: Json) -> Response {
+        Response { status, body }
+    }
+
+    /// Error envelope: `{"error": msg}` under the given status.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::status(status, Json::obj(vec![("error", Json::Str(msg.to_string()))]))
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let body = self.body.dump();
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            self.status,
+            reason(self.status),
+            body.len(),
+            body
+        )?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for the handful of statuses the daemon emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+/// Minimal blocking client: one request, one connection. Returns the status
+/// code and the decoded JSON body (`Json::Null` for an empty body). Used by
+/// `examples/serve_client.rs` and the integration tests; production clients
+/// can use anything that speaks HTTP (see README for the curl session).
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(600)))?;
+    let body = body.map(|j| j.dump()).unwrap_or_default();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    read_line_capped(&mut r, &mut line).context("reading status line")?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line `{}`", line.trim_end()))?;
+    let body = match read_headers(&mut r)? {
+        Some(n) => {
+            anyhow::ensure!(n <= MAX_BODY, "response body too large");
+            let mut b = vec![0u8; n];
+            r.read_exact(&mut b)?;
+            b
+        }
+        None => {
+            let mut b = Vec::new();
+            r.read_to_end(&mut b)?;
+            b
+        }
+    };
+    if body.is_empty() {
+        return Ok((status, Json::Null));
+    }
+    let text = std::str::from_utf8(&body).context("response body is not UTF-8")?;
+    let json = Json::parse(text).map_err(|e| anyhow::anyhow!("response body: {e}"))?;
+    Ok((status, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = "POST /v1/jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 15\r\n\r\n{\"net\":\"lenet\"}";
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/jobs");
+        assert_eq!(req.json().unwrap().s("net"), "lenet");
+    }
+
+    #[test]
+    fn parses_bodyless_request() {
+        let raw = "GET /v1/stats HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+        assert_eq!(req.json().unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(read_request(&mut Cursor::new("\r\n")).is_err());
+        assert!(read_request(&mut Cursor::new("GET\r\n\r\n")).is_err());
+        assert!(read_request(&mut Cursor::new("GET /x SPDY/3\r\n\r\n")).is_err());
+        assert!(read_request(&mut Cursor::new(
+            "POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n"
+        ))
+        .is_err());
+        let oversized = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(read_request(&mut Cursor::new(oversized)).is_err());
+        // a newline-free request line must hit the MAX_LINE cap, not grow
+        // the buffer until the stream ends
+        let endless = "G".repeat(MAX_LINE + 100);
+        assert!(read_request(&mut Cursor::new(endless)).is_err());
+        // ... and an oversized header line likewise
+        let long_header =
+            format!("GET /x HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "p".repeat(MAX_LINE + 10));
+        assert!(read_request(&mut Cursor::new(long_header)).is_err());
+        // declared body longer than the stream
+        assert!(read_request(&mut Cursor::new(
+            "POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        Response::error(429, "queue full").write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Content-Type: application/json"));
+        assert!(text.ends_with("{\"error\":\"queue full\"}"));
+        let body_len = "{\"error\":\"queue full\"}".len();
+        assert!(text.contains(&format!("Content-Length: {body_len}")));
+    }
+}

@@ -1,0 +1,293 @@
+//! Quantization-as-a-service: the `releq serve` daemon.
+//!
+//! ReLeQ's output — a per-layer bitwidth policy — is consumed by deployment
+//! pipelines that need it *on demand*, per network × per constraint set
+//! (HAQ makes the same observation: the search re-runs per target). This
+//! module turns the one-shot CLI into a long-running service over the
+//! substrate PRs 1–2 built (thread-safe engine, shared-core envs,
+//! single-flight memo):
+//!
+//! * [`http`] — dependency-free HTTP/1.1 over `std::net::TcpListener`,
+//!   JSON wire format via `util::json`;
+//! * [`scheduler`] — bounded job queue + worker pool, per-job cancellation
+//!   and deadlines, graceful drain;
+//! * [`session`] — one pretrained shared-core env per (network, env
+//!   config) for the whole process lifetime, single-flight creation;
+//! * [`archive`] — persistent solution store (atomic write-rename):
+//!   exact resubmissions are answered with zero accuracy evaluations,
+//!   near-duplicates warm-start the accuracy memo.
+//!
+//! # Endpoints
+//!
+//! | method | path                  | purpose                                   |
+//! |--------|-----------------------|-------------------------------------------|
+//! | POST   | `/v1/jobs`            | submit `{net, config?, deadline_ms?}`     |
+//! | GET    | `/v1/jobs/{id}`       | status + live episode tail                |
+//! | GET    | `/v1/jobs/{id}/result`| bits, accuracy, reward, Pareto points     |
+//! | POST   | `/v1/jobs/{id}/cancel`| cooperative cancellation                  |
+//! | GET    | `/v1/stats`           | queue/session/engine/archive counters     |
+//! | POST   | `/v1/shutdown`        | drain in-flight jobs, persist, exit       |
+
+pub mod archive;
+pub mod http;
+pub mod scheduler;
+pub mod session;
+
+pub use archive::{env_fingerprint, search_fingerprint, Archive, Record, Solution};
+pub use scheduler::{CancelOutcome, Job, JobRunner, JobStatus, Scheduler, SubmitError};
+pub use session::{SessionCache, SessionKey, SessionRunner};
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::{self, ServeConfig};
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Json;
+
+use http::{read_request, Request, Response};
+
+/// Shared daemon state handed to every connection thread.
+pub struct Daemon {
+    pub sched: Arc<Scheduler>,
+    pub archive: Arc<Archive>,
+    runner: Arc<dyn JobRunner>,
+    cfg: ServeConfig,
+    local_addr: SocketAddr,
+    /// set once a shutdown request finished draining; breaks the accept loop
+    shutdown: AtomicBool,
+}
+
+/// The bound-but-not-yet-serving daemon. `bind` then `run`; `local_addr`
+/// in between is how tests discover the ephemeral port of `--addr :0`.
+pub struct Server {
+    listener: TcpListener,
+    daemon: Arc<Daemon>,
+}
+
+impl Server {
+    /// Production bring-up: PJRT engine + manifest behind a
+    /// [`SessionRunner`].
+    pub fn bind(cfg: ServeConfig, manifest: Manifest, engine: Arc<Engine>) -> Result<Server> {
+        let archive = Arc::new(Archive::open(&cfg.archive)?);
+        let runner =
+            Arc::new(SessionRunner::new(manifest, engine, archive.clone(), cfg.memo_persist));
+        Server::bind_with(cfg, runner, archive)
+    }
+
+    /// Bring-up over any [`JobRunner`] backend — the seam the integration
+    /// tests use to exercise queueing/cancellation/drain without PJRT
+    /// artifacts.
+    pub fn bind_with(cfg: ServeConfig, runner: Arc<dyn JobRunner>, archive: Arc<Archive>)
+                     -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        let sched = Scheduler::new(runner.clone(), archive.clone(), &cfg);
+        sched.spawn_workers(cfg.workers);
+        let daemon = Arc::new(Daemon {
+            sched,
+            archive,
+            runner,
+            cfg,
+            local_addr,
+            shutdown: AtomicBool::new(false),
+        });
+        Ok(Server { listener, daemon })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.daemon.local_addr
+    }
+
+    /// Accept loop: one thread per connection (one request per connection —
+    /// `Connection: close`). Returns after a `POST /v1/shutdown` has
+    /// drained the scheduler and persisted the archive.
+    pub fn run(self) -> Result<()> {
+        for conn in self.listener.incoming() {
+            if self.daemon.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[serve] accept error: {e}");
+                    continue;
+                }
+            };
+            let d = self.daemon.clone();
+            // thread-per-connection is proportionate here: requests are
+            // tiny JSON exchanges; the expensive work happens on the
+            // scheduler's bounded worker pool, not these threads
+            std::thread::spawn(move || handle_conn(&d, stream));
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(d: &Arc<Daemon>, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let (response, exit_after) = match read_request(&mut reader) {
+        Ok(req) => route(d, &req),
+        Err(e) => (Response::error(400, &format!("{e:#}")), false),
+    };
+    let mut w = stream;
+    let _ = response.write_to(&mut w);
+    if exit_after {
+        d.shutdown.store(true, Ordering::SeqCst);
+        // kick the accept loop out of its blocking accept
+        let _ = TcpStream::connect(d.local_addr);
+    }
+}
+
+/// Dispatch one request. The bool is "exit the accept loop after
+/// responding" — true only for a completed shutdown.
+pub fn route(d: &Daemon, req: &Request) -> (Response, bool) {
+    let path = req.path.split('?').next().unwrap_or("");
+    let segs: Vec<&str> = path.trim_matches('/').split('/').collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["v1", "jobs"]) => (post_job(d, req), false),
+        ("GET", ["v1", "jobs", id]) => (with_job(d, id, |j| Response::ok(j.status_json())), false),
+        ("GET", ["v1", "jobs", id, "result"]) => (with_job(d, id, job_result), false),
+        ("POST", ["v1", "jobs", id, "cancel"]) => (cancel_job(d, id), false),
+        ("GET", ["v1", "stats"]) => (stats(d), false),
+        ("POST", ["v1", "shutdown"]) => shutdown(d),
+        _ => {
+            // a known path with the wrong method is a 405, not a
+            // misleading "no such endpoint"
+            let known = matches!(
+                segs.as_slice(),
+                ["v1", "jobs"]
+                    | ["v1", "jobs", _]
+                    | ["v1", "jobs", _, "result"]
+                    | ["v1", "jobs", _, "cancel"]
+                    | ["v1", "stats"]
+                    | ["v1", "shutdown"]
+            );
+            if known {
+                (Response::error(405, "method not allowed for this endpoint"), false)
+            } else {
+                (Response::error(404, "no such endpoint"), false)
+            }
+        }
+    }
+}
+
+fn post_job(d: &Daemon, req: &Request) -> Response {
+    let body = match req.json() {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let spec = match config::job_from_json(&body) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    match d.sched.submit(spec) {
+        Ok(job) => {
+            let (status, from_archive) = {
+                let s = job.state.lock().unwrap();
+                (s.status, s.from_archive)
+            };
+            // an archive answer is complete right now (200); a queued job
+            // is accepted-for-processing (202)
+            let code = if from_archive { 200 } else { 202 };
+            Response::status(
+                code,
+                Json::obj(vec![
+                    ("id", Json::Num(job.id as f64)),
+                    ("status", Json::Str(status.as_str().to_string())),
+                    (
+                        "source",
+                        Json::Str(if from_archive { "archive" } else { "search" }.to_string()),
+                    ),
+                ]),
+            )
+        }
+        Err(SubmitError::Full) => Response::error(429, "job queue is full; retry later"),
+        Err(SubmitError::Draining) => Response::error(503, "daemon is draining"),
+        Err(SubmitError::Invalid(e)) => Response::error(400, &format!("{e:#}")),
+    }
+}
+
+fn with_job(d: &Daemon, id: &str, f: impl FnOnce(&Job) -> Response) -> Response {
+    let Ok(id) = id.parse::<u64>() else {
+        return Response::error(400, "job id must be a number");
+    };
+    match d.sched.job(id) {
+        Some(job) => f(&job),
+        None => Response::error(404, "no such job (finished jobs are retained briefly)"),
+    }
+}
+
+fn job_result(job: &Job) -> Response {
+    let status = job.state.lock().unwrap().status;
+    match status {
+        JobStatus::Done => match job.result_json() {
+            Some(j) => Response::ok(j),
+            None => Response::error(500, "done job has no solution"),
+        },
+        JobStatus::Failed => {
+            let err = job.state.lock().unwrap().error.clone().unwrap_or_default();
+            Response::error(500, &format!("job failed: {err}"))
+        }
+        JobStatus::Cancelled => Response::error(409, "job was cancelled"),
+        JobStatus::Queued | JobStatus::Running => {
+            Response::error(409, "job not finished; poll GET /v1/jobs/{id}")
+        }
+    }
+}
+
+fn cancel_job(d: &Daemon, id: &str) -> Response {
+    let Ok(id) = id.parse::<u64>() else {
+        return Response::error(400, "job id must be a number");
+    };
+    match d.sched.cancel(id) {
+        CancelOutcome::Accepted => {
+            Response::ok(Json::obj(vec![("cancelled", Json::Bool(true))]))
+        }
+        CancelOutcome::AlreadyFinished => Response::error(409, "job already finished"),
+        CancelOutcome::Unknown => Response::error(404, "no such job"),
+    }
+}
+
+fn stats(d: &Daemon) -> Response {
+    Response::ok(Json::obj(vec![
+        ("workers", Json::Num(d.cfg.workers as f64)),
+        ("draining", Json::Bool(d.sched.is_draining())),
+        ("scheduler", d.sched.stats_json()),
+        (
+            "archive",
+            Json::obj(vec![
+                ("path", Json::Str(d.archive.path().display().to_string())),
+                ("records", Json::Num(d.archive.len() as f64)),
+                ("hits", Json::Num(d.archive.hits() as f64)),
+            ]),
+        ),
+        ("runner", d.runner.stats()),
+    ]))
+}
+
+fn shutdown(d: &Daemon) -> (Response, bool) {
+    // drain first, persist second, respond third: when the client sees the
+    // 200, every accepted job has finished and the archive is on disk
+    d.sched.drain();
+    match d.archive.save() {
+        Ok(()) => (
+            Response::ok(Json::obj(vec![
+                ("drained", Json::Bool(true)),
+                ("archived_records", Json::Num(d.archive.len() as f64)),
+            ])),
+            true,
+        ),
+        Err(e) => (
+            Response::error(500, &format!("drained, but archive save failed: {e:#}")),
+            true,
+        ),
+    }
+}

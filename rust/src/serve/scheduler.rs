@@ -1,0 +1,513 @@
+//! Job scheduler: a bounded queue of quantization-search jobs multiplexed
+//! over a fixed worker-thread pool, with per-job cooperative cancellation
+//! (through [`SearchCtl`]), live log tails, instant archive answers for
+//! exact resubmissions, and a graceful drain for shutdown.
+//!
+//! The execution backend is abstracted behind [`JobRunner`] so the queue /
+//! backpressure / cancellation / drain machinery is testable without PJRT
+//! artifacts (`rust/tests/serve_daemon.rs` drives it with a stub runner);
+//! the real backend is `session::SessionRunner`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::{JobSpec, ServeConfig};
+use crate::coordinator::{Cancelled, SearchCtl};
+use crate::metrics::{episodes_json, EpisodeLog};
+use crate::util::json::Json;
+
+use super::archive::{Archive, Record, Solution};
+
+/// Finished jobs retained for status queries after completion. Without a
+/// bound the job table is the daemon's second unbounded map (the first
+/// being the accuracy memo, bounded in this same PR).
+const FINISHED_RETAIN: usize = 256;
+
+/// Minimum interval between per-completion archive saves (each save
+/// rewrites the whole file — see [`Archive::save_throttled`]). The
+/// shutdown drain persists unconditionally regardless.
+const SAVE_INTERVAL: Duration = Duration::from_secs(5);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled)
+    }
+}
+
+/// Mutable per-job state (behind the job's own mutex, not the scheduler
+/// lock — status polls never contend with queue operations).
+pub struct JobState {
+    pub status: JobStatus,
+    pub error: Option<String>,
+    pub episodes_run: usize,
+    /// bounded live tail of finished episodes (`GET /v1/jobs/{id}`)
+    pub tail: VecDeque<EpisodeLog>,
+    pub solution: Option<Solution>,
+    /// answered from the archive without running a search
+    pub from_archive: bool,
+}
+
+pub struct Job {
+    pub id: u64,
+    pub spec: JobSpec,
+    pub env_fp: u64,
+    pub search_fp: u64,
+    /// cancellation + deadline + progress control, shared with the search
+    pub ctl: Arc<SearchCtl>,
+    pub state: Arc<Mutex<JobState>>,
+}
+
+impl Job {
+    /// `GET /v1/jobs/{id}` body: status + live `SearchLog` tail (without
+    /// the per-layer probability payloads).
+    pub fn status_json(&self) -> Json {
+        let s = self.state.lock().unwrap();
+        let tail: Vec<EpisodeLog> = s.tail.iter().cloned().collect();
+        let mut fields = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("net", Json::Str(self.spec.net.clone())),
+            ("status", Json::Str(s.status.as_str().to_string())),
+            (
+                "source",
+                Json::Str(if s.from_archive { "archive" } else { "search" }.to_string()),
+            ),
+            ("episodes_run", Json::Num(s.episodes_run as f64)),
+            ("episodes_total", Json::Num(self.spec.cfg.episodes as f64)),
+            ("tail", episodes_json(&tail, false)),
+        ];
+        if let Some(e) = &s.error {
+            fields.push(("error", Json::Str(e.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    /// `GET /v1/jobs/{id}/result` body, once the job is done.
+    pub fn result_json(&self) -> Option<Json> {
+        let s = self.state.lock().unwrap();
+        let sol = s.solution.as_ref()?;
+        let mut obj = match sol.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("Solution::to_json returns an object"),
+        };
+        obj.insert("id".to_string(), Json::Num(self.id as f64));
+        obj.insert("net".to_string(), Json::Str(self.spec.net.clone()));
+        obj.insert(
+            "source".to_string(),
+            Json::Str(if s.from_archive { "archive" } else { "search" }.to_string()),
+        );
+        Some(Json::Obj(obj))
+    }
+}
+
+/// Execution backend for one job. `Send + Sync`: called concurrently from
+/// every worker thread.
+pub trait JobRunner: Send + Sync {
+    /// Validate a submission (does the network exist? is the config sane?)
+    /// and return its `(env, search)` fingerprints — the archive key.
+    fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)>;
+
+    /// Execute the search. Stream episodes through `job.ctl`'s progress
+    /// hook, honor `job.ctl.check()`. Returns the solution plus the
+    /// (bits, accuracy) memo export to persist for warm-starts —
+    /// most-relevant-first, because the scheduler truncates it to
+    /// `memo_persist` entries before archiving.
+    fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)>;
+
+    /// Backend fragment of `GET /v1/stats` (sessions, engine counters).
+    fn stats(&self) -> Json {
+        Json::Null
+    }
+}
+
+/// What a cancel request actually did (mapped to HTTP statuses by the
+/// router — claiming `cancelled: true` for a job that already finished
+/// would mislead clients into thinking its solution was not archived).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// the job will stop (queued: already marked; running: at its next
+    /// episode boundary) — 200
+    Accepted,
+    /// the job already reached a terminal state — 409
+    AlreadyFinished,
+    /// no such job id — 404
+    Unknown,
+}
+
+/// Why a submission was rejected (mapped to HTTP statuses by the router).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// daemon is shutting down — 503
+    Draining,
+    /// queue at capacity — 429, retry later
+    Full,
+    /// bad job spec — 400
+    Invalid(anyhow::Error),
+}
+
+struct Sched {
+    queue: VecDeque<Arc<Job>>,
+    jobs: BTreeMap<u64, Arc<Job>>,
+    finished_order: VecDeque<u64>,
+    running: usize,
+    draining: bool,
+}
+
+/// Cumulative outcome counters (survive job-table pruning).
+#[derive(Default)]
+struct Totals {
+    submitted: AtomicU64,
+    done: AtomicU64,
+    failed: AtomicU64,
+    cancelled: AtomicU64,
+    /// submissions answered instantly from the archive
+    archived: AtomicU64,
+}
+
+pub struct Scheduler {
+    runner: Arc<dyn JobRunner>,
+    pub archive: Arc<Archive>,
+    queue_cap: usize,
+    log_tail: usize,
+    memo_persist: usize,
+    next_id: AtomicU64,
+    totals: Totals,
+    inner: Mutex<Sched>,
+    cv: Condvar,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    pub fn new(runner: Arc<dyn JobRunner>, archive: Arc<Archive>, cfg: &ServeConfig)
+               -> Arc<Scheduler> {
+        Arc::new(Scheduler {
+            runner,
+            archive,
+            queue_cap: cfg.queue_cap,
+            log_tail: cfg.log_tail,
+            memo_persist: cfg.memo_persist,
+            next_id: AtomicU64::new(0),
+            totals: Totals::default(),
+            inner: Mutex::new(Sched {
+                queue: VecDeque::new(),
+                jobs: BTreeMap::new(),
+                finished_order: VecDeque::new(),
+                running: 0,
+                draining: false,
+            }),
+            cv: Condvar::new(),
+            workers: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn spawn_workers(self: &Arc<Self>, n: usize) {
+        let mut handles = self.workers.lock().unwrap();
+        for i in 0..n {
+            let me = self.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("releq-worker-{i}"))
+                    .spawn(move || me.worker_loop())
+                    .expect("spawning worker thread"),
+            );
+        }
+    }
+
+    /// Submit a job: validated, fingerprinted, then either answered from
+    /// the archive (no queue slot, no accuracy evals) or enqueued.
+    ///
+    /// Known limitation: two *identical* jobs submitted before the first
+    /// completes both run (the archive only answers after a completion).
+    /// The duplicate's accuracy queries — the expensive part — all hit the
+    /// shared session memo, so the waste is bounded to the agent-side
+    /// episode work; job-level single-flight (parking the duplicate on the
+    /// first job's completion) is deliberately deferred.
+    pub fn submit(&self, spec: JobSpec) -> Result<Arc<Job>, SubmitError> {
+        let (env_fp, search_fp) = self.runner.prepare(&spec).map_err(SubmitError::Invalid)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+
+        let state = Arc::new(Mutex::new(JobState {
+            status: JobStatus::Queued,
+            error: None,
+            episodes_run: 0,
+            tail: VecDeque::new(),
+            solution: None,
+            from_archive: false,
+        }));
+        let tail_cap = self.log_tail;
+        let st = state.clone();
+        let mut ctl = SearchCtl::new().with_progress(move |ep| {
+            let mut s = st.lock().unwrap();
+            s.episodes_run = s.episodes_run.max(ep.episode + 1);
+            if tail_cap > 0 {
+                if s.tail.len() == tail_cap {
+                    s.tail.pop_front();
+                }
+                // the status endpoint serializes the tail without probs
+                // (episodes_json(.., false)), so don't retain the
+                // O(layers × actions) probability vectors it will drop
+                let mut ep = ep.clone();
+                ep.probs = Vec::new();
+                s.tail.push_back(ep);
+            }
+        });
+        if let Some(ms) = spec.deadline_ms {
+            ctl = ctl.with_deadline(Duration::from_millis(ms));
+        }
+        let job = Arc::new(Job { id, spec, env_fp, search_fp, ctl: Arc::new(ctl), state });
+
+        // one authoritative gate: the draining check precedes the archive
+        // lookup so a 503-rejected resubmission can't bump the persistent
+        // hit counters, and precedes the enqueue so drain() can never miss
+        // a submission. (Lock order inner -> archive/state is safe: no
+        // path acquires them in the reverse order while holding either.)
+        let mut g = self.inner.lock().unwrap();
+        if g.draining {
+            return Err(SubmitError::Draining);
+        }
+
+        // exact archive hit: the whole point of the archive — answered
+        // without a queue slot, a session, or a single accuracy evaluation
+        if let Some(sol) = self.archive.lookup(&job.spec.net, env_fp, search_fp) {
+            {
+                let mut s = job.state.lock().unwrap();
+                s.status = JobStatus::Done;
+                s.episodes_run = sol.episodes_run;
+                s.solution = Some(sol);
+                s.from_archive = true;
+            }
+            // counted only once accepted: a 429/503 rejection must not
+            // inflate `submitted` in /v1/stats
+            self.totals.submitted.fetch_add(1, Ordering::Relaxed);
+            self.totals.archived.fetch_add(1, Ordering::Relaxed);
+            g.jobs.insert(id, job.clone());
+            g.finished_order.push_back(id);
+            Self::prune_finished(&mut g);
+            return Ok(job);
+        }
+
+        if g.queue.len() >= self.queue_cap {
+            return Err(SubmitError::Full);
+        }
+        self.totals.submitted.fetch_add(1, Ordering::Relaxed);
+        g.jobs.insert(id, job.clone());
+        g.queue.push_back(job.clone());
+        drop(g);
+        self.cv.notify_one();
+        Ok(job)
+    }
+
+    pub fn job(&self, id: u64) -> Option<Arc<Job>> {
+        self.inner.lock().unwrap().jobs.get(&id).cloned()
+    }
+
+    /// Cancel a job: a queued job flips to `Cancelled` immediately and is
+    /// removed from the queue (its slot frees up right away — a cancelled
+    /// job must not hold a `queue_cap` place or inflate `queue_depth`);
+    /// a running one stops at its next episode boundary.
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        let Some(job) = self.job(id) else { return CancelOutcome::Unknown };
+        let was_queued = {
+            let mut s = job.state.lock().unwrap();
+            if s.status.is_terminal() {
+                return CancelOutcome::AlreadyFinished;
+            }
+            job.ctl.cancel();
+            if s.status == JobStatus::Queued {
+                s.status = JobStatus::Cancelled;
+                s.error = Some("cancelled while queued".to_string());
+                self.totals.cancelled.fetch_add(1, Ordering::Relaxed);
+                true
+            } else {
+                false
+            }
+        };
+        if was_queued {
+            let mut g = self.inner.lock().unwrap();
+            let before = g.queue.len();
+            g.queue.retain(|j| j.id != id);
+            // push to finished_order only if we actually removed it — when
+            // a worker popped the job in the same instant, the worker's
+            // loop records the finish, and a double push would burn a
+            // second FINISHED_RETAIN slot and evict an older job early
+            if g.queue.len() < before {
+                g.finished_order.push_back(id);
+                Self::prune_finished(&mut g);
+            }
+            drop(g);
+            // a drain() may be waiting on the queue emptying
+            self.cv.notify_all();
+        }
+        CancelOutcome::Accepted
+    }
+
+    fn prune_finished(g: &mut Sched) {
+        while g.finished_order.len() > FINISHED_RETAIN {
+            if let Some(old) = g.finished_order.pop_front() {
+                g.jobs.remove(&old);
+            }
+        }
+    }
+
+    fn worker_loop(self: Arc<Self>) {
+        loop {
+            let job = {
+                let mut g = self.inner.lock().unwrap();
+                loop {
+                    if let Some(j) = g.queue.pop_front() {
+                        g.running += 1;
+                        break j;
+                    }
+                    if g.draining {
+                        return;
+                    }
+                    g = self.cv.wait(g).unwrap();
+                }
+            };
+            // a panic anywhere in the job path (runner, archive) must not
+            // kill the worker with `running` stuck high — that would hang
+            // drain()/shutdown forever and strand the job in "running"
+            let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.execute(&job)
+            }));
+            if ran.is_err() {
+                eprintln!("[serve] job {} panicked in the runner", job.id);
+                // the state mutex may be poisoned by the panic; best-effort
+                if let Ok(mut s) = job.state.lock() {
+                    if !s.status.is_terminal() {
+                        s.status = JobStatus::Failed;
+                        s.error = Some("job execution panicked".to_string());
+                        self.totals.failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            let mut g = self.inner.lock().unwrap();
+            g.running -= 1;
+            g.finished_order.push_back(job.id);
+            Self::prune_finished(&mut g);
+            drop(g);
+            // wake both idle workers and a drain() waiting on running == 0
+            self.cv.notify_all();
+        }
+    }
+
+    fn execute(&self, job: &Arc<Job>) {
+        {
+            let mut s = job.state.lock().unwrap();
+            if s.status.is_terminal() {
+                return; // cancelled while queued
+            }
+            if job.ctl.is_cancelled() {
+                // deadline elapsed in the queue
+                s.status = JobStatus::Cancelled;
+                s.error = Some("deadline exceeded while queued".to_string());
+                self.totals.cancelled.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            s.status = JobStatus::Running;
+        }
+        match self.runner.run(job) {
+            Ok((sol, mut memo)) => {
+                {
+                    let mut s = job.state.lock().unwrap();
+                    s.episodes_run = sol.episodes_run;
+                    s.solution = Some(sol.clone());
+                    s.status = JobStatus::Done;
+                }
+                self.totals.done.fetch_add(1, Ordering::Relaxed);
+                memo.truncate(self.memo_persist);
+                self.archive.insert(Record {
+                    net: job.spec.net.clone(),
+                    env_fp: job.env_fp,
+                    search_fp: job.search_fp,
+                    solution: sol,
+                    memo,
+                    hits: 0,
+                });
+                // persistence failure must not fail the job — the result
+                // is still served from memory; the operator sees the log
+                if let Err(e) = self.archive.save_throttled(SAVE_INTERVAL) {
+                    eprintln!("[serve] archive save failed: {e:#}");
+                }
+            }
+            Err(e) => {
+                let mut s = job.state.lock().unwrap();
+                if let Some(c) = e.downcast_ref::<Cancelled>() {
+                    s.status = JobStatus::Cancelled;
+                    s.error = Some(c.0.to_string());
+                    self.totals.cancelled.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    s.status = JobStatus::Failed;
+                    s.error = Some(format!("{e:#}"));
+                    self.totals.failed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Graceful drain: stop accepting submissions, let the workers finish
+    /// everything already accepted (queued AND running), then join them.
+    /// Idempotent; blocks until the pool is quiet.
+    pub fn drain(&self) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.draining = true;
+            self.cv.notify_all();
+            while !g.queue.is_empty() || g.running > 0 {
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.inner.lock().unwrap().draining
+    }
+
+    /// `GET /v1/stats` scheduler fragment.
+    pub fn stats_json(&self) -> Json {
+        let (queue_depth, running, retained) = {
+            let g = self.inner.lock().unwrap();
+            (g.queue.len(), g.running, g.jobs.len())
+        };
+        Json::obj(vec![
+            ("queue_depth", Json::Num(queue_depth as f64)),
+            ("running", Json::Num(running as f64)),
+            ("retained_jobs", Json::Num(retained as f64)),
+            ("submitted", Json::Num(self.totals.submitted.load(Ordering::Relaxed) as f64)),
+            ("done", Json::Num(self.totals.done.load(Ordering::Relaxed) as f64)),
+            ("failed", Json::Num(self.totals.failed.load(Ordering::Relaxed) as f64)),
+            ("cancelled", Json::Num(self.totals.cancelled.load(Ordering::Relaxed) as f64)),
+            ("archive_answers", Json::Num(self.totals.archived.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}

@@ -1,0 +1,372 @@
+//! Session cache: one pretrained shared-core environment per
+//! (network, env fingerprint), shared by every job the daemon runs.
+//!
+//! PR 2 established the one-pretrain invariant *within* a run: every shard,
+//! replica and lane of one search shares one `Arc<EnvCore>`. This module
+//! extends it *across jobs*: the first job for a network pays the data
+//! generation + full-precision pretraining bring-up, every later job (and
+//! every concurrent job — creation is single-flight, same leader/follower
+//! protocol as `AccMemo::get_or_compute`) gets a clone of the same handle,
+//! with the same single-flight accuracy memo. Sessions are deliberately
+//! retained for the process lifetime ("pretrain once per network per
+//! process lifetime"): distinct (network, env-config) pairs are few and
+//! each holds the device-resident buffers a warm search needs.
+//!
+//! A freshly built session warm-starts its memo from the solution
+//! archive's records for the same (network, env fingerprint) — accuracy is
+//! a pure function of (env config, bits), so entries computed by an
+//! earlier process are valid verbatim.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::config::JobSpec;
+use crate::coordinator::{QuantEnv, Searcher};
+use crate::pareto;
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Json;
+
+use super::archive::{env_fingerprint, search_fingerprint, Archive, Solution};
+use super::scheduler::{Job, JobRunner};
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SessionKey {
+    pub net: String,
+    pub env_fp: u64,
+}
+
+enum Slot {
+    /// a leader is pretraining; followers wait on the condvar
+    Building,
+    Ready(QuantEnv),
+}
+
+/// Single-flight map of live sessions.
+pub struct SessionCache {
+    slots: Mutex<HashMap<SessionKey, Slot>>,
+    cv: Condvar,
+    /// environment bring-ups actually paid (the across-jobs invariant
+    /// counter: stays at 1 no matter how many jobs share a network)
+    pretrains: AtomicU64,
+}
+
+impl Default for SessionCache {
+    fn default() -> SessionCache {
+        SessionCache {
+            slots: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            pretrains: AtomicU64::new(0),
+        }
+    }
+}
+
+impl SessionCache {
+    pub fn new() -> SessionCache {
+        SessionCache::default()
+    }
+
+    /// Get the session for `key`, building it with `build` if absent.
+    /// Single-flight: concurrent callers for the same key block on the one
+    /// leader instead of each pretraining. A failed build unpins the key
+    /// and one waiter retries as the new leader; a *panicking* build does
+    /// the same via a drop guard — a wedged `Building` slot would block
+    /// every future job for that network forever.
+    pub fn get_or_create<F>(&self, key: SessionKey, build: F) -> Result<QuantEnv>
+    where
+        F: FnOnce() -> Result<QuantEnv>,
+    {
+        /// Unwind guard for the leader: while armed, dropping it removes
+        /// the `Building` slot and wakes waiters so one can retry as the
+        /// new leader (same protocol as `AccMemo`'s `UnpinOnDrop`).
+        struct ClearOnDrop<'a> {
+            cache: &'a SessionCache,
+            key: &'a SessionKey,
+            armed: bool,
+        }
+        impl Drop for ClearOnDrop<'_> {
+            fn drop(&mut self) {
+                if !self.armed {
+                    return;
+                }
+                let mut m = self.cache.slots.lock().unwrap();
+                if matches!(m.get(self.key), Some(Slot::Building)) {
+                    m.remove(self.key);
+                }
+                self.cache.cv.notify_all();
+            }
+        }
+
+        {
+            let mut m = self.slots.lock().unwrap();
+            loop {
+                match m.get(&key) {
+                    Some(Slot::Ready(env)) => return Ok(env.clone()),
+                    Some(Slot::Building) => m = self.cv.wait(m).unwrap(),
+                    None => {
+                        m.insert(key.clone(), Slot::Building);
+                        break;
+                    }
+                }
+            }
+        }
+        // leader: build outside the lock (pretraining takes seconds)
+        let mut guard = ClearOnDrop { cache: self, key: &key, armed: true };
+        let built = build();
+        guard.armed = false;
+        drop(guard);
+        let mut m = self.slots.lock().unwrap();
+        match built {
+            Ok(env) => {
+                self.pretrains.fetch_add(1, Ordering::Relaxed);
+                m.insert(key, Slot::Ready(env.clone()));
+                self.cv.notify_all();
+                Ok(env)
+            }
+            Err(e) => {
+                m.remove(&key);
+                self.cv.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// Environment bring-ups paid since process start.
+    pub fn pretrains(&self) -> u64 {
+        self.pretrains.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-session stats fragment for `GET /v1/stats` (key-ordered — the
+    /// rows collect into `Json::Obj`'s BTreeMap).
+    pub fn stats_json(&self) -> Json {
+        let m = self.slots.lock().unwrap();
+        let rows: Vec<(String, Json)> = m
+            .iter()
+            .filter_map(|(k, slot)| match slot {
+                Slot::Ready(env) => {
+                    let s = env.stats();
+                    Some((
+                        format!("{}:{:016x}", k.net, k.env_fp),
+                        Json::obj(vec![
+                            ("net", Json::Str(k.net.clone())),
+                            ("env_fp", Json::Str(format!("{:016x}", k.env_fp))),
+                            ("acc_fullp", Json::Num(env.acc_fullp)),
+                            ("evals", Json::Num(s.evals as f64)),
+                            ("cache_hits", Json::Num(s.cache_hits as f64)),
+                            ("train_execs", Json::Num(s.train_execs as f64)),
+                            ("eval_execs", Json::Num(s.eval_execs as f64)),
+                            ("memo_len", Json::Num(s.memo_len as f64)),
+                            ("memo_hits", Json::Num(s.memo_hits as f64)),
+                            ("memo_misses", Json::Num(s.memo_misses as f64)),
+                            ("memo_evictions", Json::Num(s.memo_evictions as f64)),
+                        ]),
+                    ))
+                }
+                Slot::Building => None,
+            })
+            .collect();
+        Json::Obj(rows.into_iter().collect())
+    }
+}
+
+/// The real execution backend: resolves jobs onto shared-core sessions and
+/// runs the ReLeQ search through the PJRT engine.
+pub struct SessionRunner {
+    manifest: Manifest,
+    engine: Arc<Engine>,
+    sessions: SessionCache,
+    archive: Arc<Archive>,
+    /// memo entries exported per job for archive warm-starts (top-k by
+    /// recency; the scheduler's `memo_persist` bound)
+    memo_persist: usize,
+}
+
+impl SessionRunner {
+    pub fn new(manifest: Manifest, engine: Arc<Engine>, archive: Arc<Archive>,
+               memo_persist: usize) -> SessionRunner {
+        SessionRunner { manifest, engine, sessions: SessionCache::new(), archive, memo_persist }
+    }
+
+    pub fn sessions(&self) -> &SessionCache {
+        &self.sessions
+    }
+}
+
+impl JobRunner for SessionRunner {
+    fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
+        self.manifest.network(&spec.net)?;
+        anyhow::ensure!(spec.cfg.episodes >= 1, "job needs episodes >= 1");
+        let bits_max = self.manifest.bits_max;
+        Ok((
+            env_fingerprint(&spec.net, bits_max, &spec.cfg.env),
+            search_fingerprint(&spec.net, bits_max, &spec.cfg),
+        ))
+    }
+
+    fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+        let spec = &job.spec;
+        let net = self.manifest.network(&spec.net)?;
+        let key = SessionKey { net: spec.net.clone(), env_fp: job.env_fp };
+        let env = self.sessions.get_or_create(key, || {
+            let env = QuantEnv::new(
+                self.engine.clone(),
+                net,
+                self.manifest.bits_max,
+                self.manifest.fp_bits,
+                spec.cfg.env.clone(),
+            )?;
+            let warm = self.archive.memo_for(&spec.net, job.env_fp);
+            if !warm.is_empty() {
+                eprintln!(
+                    "[serve] warm-starting {} session memo with {} archived entries",
+                    spec.net,
+                    warm.len()
+                );
+                env.memo().extend(warm);
+            }
+            Ok(env)
+        })?;
+        // memo_cap is deliberately outside the env fingerprint (it bounds
+        // the cache, it doesn't change accuracy values), so a job joining
+        // an existing session keeps the session's bound — surface that
+        // instead of silently dropping the request
+        if env.memo().capacity() != spec.cfg.env.memo_cap {
+            eprintln!(
+                "[serve] job {}: memo_cap {} ignored — session already holds a memo \
+                 bounded to {} (set at session creation)",
+                job.id,
+                spec.cfg.env.memo_cap,
+                env.memo().capacity()
+            );
+        }
+        // a cancel during pretraining stops before the search starts
+        job.ctl.check()?;
+
+        let mut searcher =
+            Searcher::with_env(env.clone(), self.engine.clone(), &self.manifest, spec.cfg.clone())
+                .with_context(|| format!("building searcher for {}", spec.net))?;
+        let result = searcher.run_ctl(&job.ctl)?;
+
+        // Pareto view of everything this search visited: dedup episode
+        // bits (accuracy is pure in bits, so later duplicates are
+        // identical), then extract the frontier
+        let mut seen: std::collections::BTreeMap<Vec<u32>, (f64, f64)> =
+            std::collections::BTreeMap::new();
+        for e in &result.log.episodes {
+            seen.entry(e.bits.clone()).or_insert((e.state_q, e.state_acc));
+        }
+        let points: Vec<pareto::Point> = seen
+            .into_iter()
+            .map(|(bits, (state_q, state_acc))| pareto::Point { bits, state_q, state_acc })
+            .collect();
+        let frontier = pareto::pareto_frontier(&points);
+        let pareto_pts: Vec<(f64, f64, Vec<u32>)> = frontier
+            .into_iter()
+            .map(|i| (points[i].state_q, points[i].state_acc, points[i].bits.clone()))
+            .collect();
+
+        let reward = result
+            .log
+            .rewards()
+            .into_iter()
+            .fold(f64::NEG_INFINITY, f64::max);
+        let solution = Solution {
+            bits: result.bits,
+            avg_bits: result.avg_bits,
+            acc_fullp: result.acc_fullp,
+            acc_final: result.acc_final,
+            acc_loss_pct: result.acc_loss_pct,
+            state_q: result.state_q,
+            reward: if reward.is_finite() { reward } else { 0.0 },
+            episodes_run: result.episodes_run,
+            pareto: pareto_pts,
+        };
+        // top-k by recency: the entries this search was actually
+        // revisiting, already bounded to what the archive will persist
+        Ok((solution, env.memo().entries_by_recency(self.memo_persist)))
+    }
+
+    fn stats(&self) -> Json {
+        Json::obj(vec![
+            ("pretrains", Json::Num(self.sessions.pretrains() as f64)),
+            ("sessions", self.sessions.stats_json()),
+            (
+                "engine",
+                Json::Arr(
+                    self.engine
+                        .exec_stats()
+                        .into_iter()
+                        .map(|(name, execs, mean_ms)| {
+                            Json::obj(vec![
+                                ("artifact", Json::Str(name)),
+                                ("execs", Json::Num(execs as f64)),
+                                ("mean_exec_ms", Json::Num(mean_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::run_sharded;
+
+    /// The single-flight protocol is testable without PJRT: a counter-typed
+    /// "env" is impossible here (build returns QuantEnv), so race the
+    /// leader election itself with a build that fails — every caller must
+    /// observe the error, the key must unpin, and no slot may leak.
+    #[test]
+    fn failed_builds_unpin_the_key() {
+        let cache = SessionCache::new();
+        let key = SessionKey { net: "lenet".to_string(), env_fp: 7 };
+        let r = cache.get_or_create(key.clone(), || anyhow::bail!("no artifacts"));
+        assert!(r.is_err());
+        assert_eq!(cache.len(), 0, "failed build must not leave a Building slot");
+        assert_eq!(cache.pretrains(), 0);
+        // the key is retryable
+        let r2 = cache.get_or_create(key, || anyhow::bail!("still no artifacts"));
+        assert!(r2.is_err());
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn panicking_build_unpins_the_key() {
+        let cache = SessionCache::new();
+        let key = SessionKey { net: "lenet".to_string(), env_fp: 3 };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = cache.get_or_create(key.clone(), || panic!("boom"));
+        }));
+        assert!(r.is_err());
+        assert_eq!(cache.len(), 0, "panicked build must not leave a Building slot");
+        // the key stays retryable
+        assert!(cache.get_or_create(key, || anyhow::bail!("still failing")).is_err());
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn concurrent_failed_builds_never_wedge() {
+        let cache = std::sync::Arc::new(SessionCache::new());
+        let results = run_sharded(vec![(); 8], |i, _| {
+            let key = SessionKey { net: "lenet".to_string(), env_fp: 1 };
+            let r = cache.get_or_create(key, || anyhow::bail!("build {i} failed"));
+            Ok(r.is_err())
+        })
+        .unwrap();
+        assert!(results.into_iter().all(|failed| failed));
+        assert_eq!(cache.len(), 0);
+    }
+}

@@ -1,0 +1,96 @@
+//! FNV-1a hashing — the repo's one stable hash (unlike `DefaultHasher`,
+//! its output is fixed across Rust releases and platforms, so values
+//! derived from it can be persisted: archive fingerprints outlive compiler
+//! upgrades, and the env's retrain cursor stays bit-reproducible).
+//!
+//! Two folding granularities share the constants:
+//!
+//! * byte-wise ([`Fnv::write_bytes`] and the typed writers on top of it) —
+//!   the standard FNV-1a, used by the serve archive's config fingerprints;
+//! * word-wise ([`Fnv::write_u32_words`], one fold per `u32`) — the
+//!   variant `EnvCore::bits_cursor` has used since PR 2; kept distinct for
+//!   bit-compatibility of every memoized accuracy value.
+
+/// Streaming FNV-1a hasher.
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv::default()
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) -> &mut Fnv {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+        self
+    }
+
+    pub fn write_u64(&mut self, x: u64) -> &mut Fnv {
+        self.write_bytes(&x.to_le_bytes())
+    }
+
+    pub fn write_f64(&mut self, x: f64) -> &mut Fnv {
+        self.write_u64(x.to_bits())
+    }
+
+    pub fn write_str(&mut self, s: &str) -> &mut Fnv {
+        // length-prefix so ("ab","c") and ("a","bc") differ
+        self.write_u64(s.len() as u64).write_bytes(s.as_bytes())
+    }
+
+    /// Word-wise folding: one xor-multiply per `u32`, not per byte.
+    pub fn write_u32_words(&mut self, words: &[u32]) -> &mut Fnv {
+        for &w in words {
+            self.0 ^= w as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+        self
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_wise_matches_the_historic_bits_cursor_fold() {
+        // pinned against the inline loop EnvCore::bits_cursor shipped in
+        // PR 2 — the memoized accuracy values depend on these exact hashes
+        let reference = |bits: &[u32]| {
+            let mut h: u64 = 0xcbf29ce484222325;
+            for &b in bits {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            h
+        };
+        for bits in [&[8u32, 4, 4, 8][..], &[2][..], &[][..]] {
+            assert_eq!(Fnv::new().write_u32_words(bits).finish(), reference(bits));
+        }
+    }
+
+    #[test]
+    fn length_prefix_separates_string_splits() {
+        let h = |parts: &[&str]| {
+            let mut f = Fnv::new();
+            for p in parts {
+                f.write_str(p);
+            }
+            f.finish()
+        };
+        assert_ne!(h(&["ab", "c"]), h(&["a", "bc"]));
+        assert_ne!(h(&["ab"]), h(&["ab", ""]));
+    }
+}

@@ -128,7 +128,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/inf; `format!("{n}")` would emit the
+                    // bare token `NaN`, making the whole document
+                    // unparseable. `null` keeps every emitted document
+                    // valid (the JSON.stringify convention).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -398,5 +404,16 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(42.0).dump(), "42");
         assert_eq!(Json::Num(1.5).dump(), "1.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // a diverged search can produce NaN accuracies; the emitted
+        // document must still parse
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        let doc = Json::obj(vec![("acc", Json::Num(f64::NAN))]);
+        let reparsed = Json::parse(&doc.dump()).unwrap();
+        assert_eq!(reparsed.req("acc"), &Json::Null);
     }
 }

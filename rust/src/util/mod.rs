@@ -3,5 +3,6 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod fnv;
 pub mod json;
 pub mod rng;

@@ -1,0 +1,123 @@
+//! Property tests for `util::json` — it graduated from internal
+//! manifest/metrics plumbing to the serve daemon's public wire format, so
+//! its round-trip and error-reporting behavior is pinned here with the
+//! in-tree property harness (`testing::prop`; proptest is unavailable
+//! offline).
+
+use releq::testing::prop::{proptest, Gen};
+use releq::util::json::Json;
+
+/// Characters chosen to stress the string escaper: quotes, backslashes,
+/// control characters, multi-byte UTF-8.
+const PALETTE: &[char] = &[
+    'a', 'Z', '0', ' ', '"', '\\', '\n', '\t', '\r', '\u{1}', '\u{1f}', '/', '{', ']', 'é', '→',
+    '🦀',
+];
+
+fn gen_string(g: &mut Gen) -> String {
+    let n = g.usize_in(0, 12);
+    (0..n).map(|_| PALETTE[g.usize_in(0, PALETTE.len() - 1)]).collect()
+}
+
+fn gen_num(g: &mut Gen) -> Json {
+    // mix integers (serialized without a fraction), negatives, and
+    // fractional doubles (serialized via Rust's shortest-roundtrip repr)
+    match g.usize_in(0, 2) {
+        0 => Json::Num(g.usize_in(0, 1_000_000_000) as f64),
+        1 => Json::Num(-(g.usize_in(0, 90_000) as f64)),
+        _ => Json::Num(g.f64_in(-1e9, 1e9)),
+    }
+}
+
+fn gen_value(g: &mut Gen, depth: usize) -> Json {
+    let max_kind = if depth == 0 { 3 } else { 5 };
+    match g.usize_in(0, max_kind) {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => gen_num(g),
+        3 => Json::Str(gen_string(g)),
+        4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| gen_value(g, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..g.usize_in(0, 4))
+                .map(|_| (gen_string(g), gen_value(g, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn parse_dump_parse_roundtrip_on_generated_values() {
+    proptest(500, |g| {
+        let v = gen_value(g, 3);
+        let s = v.dump();
+        let v2 = Json::parse(&s).unwrap_or_else(|e| panic!("dump must parse: {e} in `{s}`"));
+        assert_eq!(v, v2, "value drift through dump/parse of `{s}`");
+        // serialization is a fixed point: dumping the reparsed value is
+        // byte-identical (objects are BTreeMaps, so key order is canonical)
+        assert_eq!(v2.dump(), s, "second dump must be stable");
+    });
+}
+
+#[test]
+fn error_positions_point_at_the_offending_byte() {
+    // hand-checked positions: (input, expected error byte offset)
+    let cases: &[(&str, usize)] = &[
+        ("[1,]", 3),        // `]` where a value must start
+        ("{\"a\" 1}", 5),   // missing `:` (after the skipped space)
+        ("12 34", 3),       // trailing garbage after a complete value
+        ("\"abc", 4),       // unterminated string: position = end of input
+        ("{\"a\": tru}", 6), // bad literal starts at the `t`
+        ("[1, 2", 5),       // truncated array: expected `,` or `]` at EOF
+    ];
+    for &(input, pos) in cases {
+        let err = Json::parse(input).expect_err(input);
+        assert_eq!(
+            err.pos, pos,
+            "`{input}`: expected error at byte {pos}, got {} ({})",
+            err.pos, err.msg
+        );
+    }
+}
+
+#[test]
+fn truncated_documents_error_within_bounds() {
+    proptest(400, |g| {
+        let v = gen_value(g, 3);
+        let s = v.dump();
+        if s.len() < 2 {
+            return;
+        }
+        let cut = g.usize_in(1, s.len() - 1);
+        if !s.is_char_boundary(cut) {
+            return;
+        }
+        match Json::parse(&s[..cut]) {
+            // a truncated doc can still be valid (e.g. "12" cut from "123")
+            Ok(_) => {}
+            Err(e) => assert!(
+                e.pos <= cut,
+                "error position {} beyond the {cut}-byte input `{}`",
+                e.pos,
+                &s[..cut]
+            ),
+        }
+    });
+}
+
+#[test]
+fn mutated_documents_never_panic_the_parser() {
+    // flip one byte of a valid document into an arbitrary printable byte:
+    // the parser must return (Ok or Err), never panic or loop
+    proptest(400, |g| {
+        let v = gen_value(g, 3);
+        let mut bytes = v.dump().into_bytes();
+        if bytes.is_empty() {
+            return;
+        }
+        let idx = g.usize_in(0, bytes.len() - 1);
+        bytes[idx] = g.usize_in(0x20, 0x7e) as u8;
+        if let Ok(s) = String::from_utf8(bytes) {
+            let _ = Json::parse(&s);
+        }
+    });
+}

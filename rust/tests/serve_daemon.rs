@@ -1,0 +1,404 @@
+//! Integration tests for the `releq serve` daemon.
+//!
+//! Two tiers:
+//!
+//! * **stub tier** (always runs, no PJRT): a `StubRunner` backend drives
+//!   the real HTTP front end, scheduler, archive and drain machinery —
+//!   queue backpressure (429), cancellation, deadlines, archive exact hits
+//!   and persistence across daemon restarts.
+//! * **artifact tier** (skipped without `artifacts/manifest.json`): the
+//!   acceptance-criteria invariant — two simultaneous jobs on one network
+//!   share ONE pretrained `EnvCore` (engine exec counters), an identical
+//!   resubmission is answered from the archive with zero new accuracy
+//!   evaluations, and `POST /v1/shutdown` drains and persists before exit.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use releq::config::{JobSpec, ServeConfig};
+use releq::metrics::EpisodeLog;
+use releq::serve::http::request;
+use releq::serve::{
+    env_fingerprint, search_fingerprint, Archive, Job, JobRunner, Server, Solution,
+};
+use releq::util::json::Json;
+
+// ---- stub backend ------------------------------------------------------------
+
+/// Fake search backend: one "episode" = one short sleep + one progress
+/// notification, honoring the job's cancellation control exactly like the
+/// real searcher.
+struct StubRunner {
+    episode_ms: u64,
+    runs: AtomicU64,
+}
+
+impl StubRunner {
+    fn new(episode_ms: u64) -> Arc<StubRunner> {
+        Arc::new(StubRunner { episode_ms, runs: AtomicU64::new(0) })
+    }
+}
+
+impl JobRunner for StubRunner {
+    fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
+        anyhow::ensure!(spec.net != "unknown-net", "unknown network `{}`", spec.net);
+        Ok((
+            env_fingerprint(&spec.net, 8, &spec.cfg.env),
+            search_fingerprint(&spec.net, 8, &spec.cfg),
+        ))
+    }
+
+    fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        let eps = job.spec.cfg.episodes;
+        for e in 0..eps {
+            job.ctl.check()?;
+            std::thread::sleep(Duration::from_millis(self.episode_ms));
+            job.ctl.notify(&EpisodeLog {
+                episode: e,
+                reward: e as f64,
+                state_acc: 0.9,
+                state_q: 0.5,
+                bits: vec![4, 4],
+                probs: vec![],
+            });
+        }
+        let solution = Solution {
+            bits: vec![4, 4],
+            avg_bits: 4.0,
+            acc_fullp: 0.95,
+            acc_final: 0.93,
+            acc_loss_pct: 2.0,
+            state_q: 0.5,
+            reward: eps.saturating_sub(1) as f64,
+            episodes_run: eps,
+            pareto: vec![(0.5, 0.98, vec![4, 4])],
+        };
+        Ok((solution, vec![(vec![4, 4], 0.93), (vec![8, 8], 0.95)]))
+    }
+}
+
+// ---- helpers -----------------------------------------------------------------
+
+fn tmp_archive(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("releq_serve_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.json"));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+fn serve_cfg(archive: &PathBuf, workers: usize, queue_cap: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.addr = "127.0.0.1:0".to_string();
+    cfg.workers = workers;
+    cfg.queue_cap = queue_cap;
+    cfg.archive = archive.clone();
+    cfg.log_tail = 4;
+    cfg
+}
+
+/// Spawn the accept loop; returns (addr, join handle).
+fn spawn(server: Server) -> (String, std::thread::JoinHandle<Result<()>>) {
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn submit(addr: &str, body: &str) -> (u16, Json) {
+    request(addr, "POST", "/v1/jobs", Some(&Json::parse(body).unwrap())).unwrap()
+}
+
+fn poll_status(addr: &str, id: usize) -> Json {
+    let (status, j) = request(addr, "GET", &format!("/v1/jobs/{id}"), None).unwrap();
+    assert_eq!(status, 200, "status poll failed: {}", j.dump());
+    j
+}
+
+/// Poll until the job reaches a terminal status (panics after `timeout`).
+fn wait_terminal(addr: &str, id: usize, timeout: Duration) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let j = poll_status(addr, id);
+        if matches!(j.s("status"), "done" | "failed" | "cancelled") {
+            return j;
+        }
+        assert!(t0.elapsed() < timeout, "job {id} not terminal after {timeout:?}: {}", j.dump());
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn shutdown(addr: &str, handle: std::thread::JoinHandle<Result<()>>) {
+    let (status, j) = request(addr, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(status, 200, "shutdown failed: {}", j.dump());
+    assert_eq!(j.req("drained"), &Json::Bool(true));
+    handle.join().unwrap().unwrap();
+}
+
+// ---- stub tier ---------------------------------------------------------------
+
+#[test]
+fn stub_daemon_lifecycle_and_archive_hits() {
+    let archive_path = tmp_archive("lifecycle");
+    let stub = StubRunner::new(2);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(serve_cfg(&archive_path, 2, 8), stub.clone(), archive).unwrap();
+    let (addr, handle) = spawn(server);
+
+    // bad submissions are 400s, unknown jobs are 404s
+    let (s, _) = submit(&addr, r#"{"config": {}}"#);
+    assert_eq!(s, 400);
+    let (s, _) = submit(&addr, r#"{"net": "unknown-net"}"#);
+    assert_eq!(s, 400);
+    let (s, _) = submit(&addr, r#"{"net": "stubnet", "config": {"episodez": 1}}"#);
+    assert_eq!(s, 400);
+    let (s, j) = request(&addr, "GET", "/v1/jobs/999", None).unwrap();
+    assert_eq!(s, 404, "{}", j.dump());
+    let (s, _) = request(&addr, "GET", "/v1/nope", None).unwrap();
+    assert_eq!(s, 404);
+    let (s, _) = request(&addr, "GET", "/v1/shutdown", None).unwrap();
+    assert_eq!(s, 405, "wrong method on a known path is a 405");
+
+    // a real job runs to completion, streaming its tail
+    let (s, j) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 6}}"#);
+    assert_eq!(s, 202, "{}", j.dump());
+    assert_eq!(j.s("source"), "search");
+    let id = j.u("id");
+    let done = wait_terminal(&addr, id, Duration::from_secs(10));
+    assert_eq!(done.s("status"), "done");
+    assert_eq!(done.u("episodes_run"), 6);
+    let tail = done.req("tail").as_arr().unwrap();
+    assert!(!tail.is_empty() && tail.len() <= 4, "bounded tail, got {}", tail.len());
+    assert!(tail[0].get("probs").is_none(), "tail entries must omit probs");
+
+    // result carries the solution + pareto points
+    let (s, result) = request(&addr, "GET", &format!("/v1/jobs/{id}/result"), None).unwrap();
+    assert_eq!(s, 200, "{}", result.dump());
+    assert_eq!(result.f("acc_final"), 0.93);
+    assert_eq!(result.s("source"), "search");
+    assert_eq!(result.req("pareto").as_arr().unwrap().len(), 1);
+    assert_eq!(stub.runs.load(Ordering::SeqCst), 1);
+
+    // identical resubmission: archive answer, no new run
+    let (s, j2) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 6}}"#);
+    assert_eq!(s, 200, "archive answers are complete immediately: {}", j2.dump());
+    assert_eq!(j2.s("source"), "archive");
+    assert_eq!(j2.s("status"), "done");
+    let (s, r2) = request(&addr, "GET", &format!("/v1/jobs/{}/result", j2.u("id")), None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(r2.s("source"), "archive");
+    assert_eq!(r2.f("acc_final"), 0.93);
+    assert_eq!(stub.runs.load(Ordering::SeqCst), 1, "archive hit must not re-run");
+
+    // near-duplicate (different search seed): runs again
+    let (s, _) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 6, "seed": 99}}"#);
+    assert_eq!(s, 202);
+    // stats reflect all of it
+    let (s, stats) = request(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(stats.req("scheduler").u("archive_answers"), 1);
+    assert_eq!(stats.req("archive").u("hits"), 1);
+
+    // drain waits for the in-flight near-duplicate, then persists
+    shutdown(&addr, handle);
+    assert_eq!(stub.runs.load(Ordering::SeqCst), 2, "drain must finish accepted jobs");
+    assert!(archive_path.exists(), "shutdown must persist the archive");
+
+    // restart on the same archive file: the hit survives the process
+    let stub2 = StubRunner::new(2);
+    let archive2 = Arc::new(Archive::open(&archive_path).unwrap());
+    assert_eq!(archive2.len(), 2, "both solutions persisted");
+    let server =
+        Server::bind_with(serve_cfg(&archive_path, 1, 8), stub2.clone(), archive2).unwrap();
+    let (addr, handle) = spawn(server);
+    let (s, j3) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 6}}"#);
+    assert_eq!(s, 200, "{}", j3.dump());
+    assert_eq!(j3.s("source"), "archive");
+    assert_eq!(stub2.runs.load(Ordering::SeqCst), 0, "zero work across restart");
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn stub_daemon_backpressure_cancel_and_deadline() {
+    let archive_path = tmp_archive("backpressure");
+    let stub = StubRunner::new(20);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(serve_cfg(&archive_path, 1, 1), stub.clone(), archive).unwrap();
+    let (addr, handle) = spawn(server);
+
+    // A occupies the single worker; B fills the queue; C bounces with 429
+    let (s, a) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 200, "seed": 1}}"#);
+    assert_eq!(s, 202);
+    // wait until A is actually running so B sits in the queue
+    let t0 = Instant::now();
+    while poll_status(&addr, a.u("id")).s("status") != "running" {
+        assert!(t0.elapsed() < Duration::from_secs(5), "A never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (s, b) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 200, "seed": 2}}"#);
+    assert_eq!(s, 202);
+    let (s, c) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 200, "seed": 3}}"#);
+    assert_eq!(s, 429, "full queue must bounce: {}", c.dump());
+
+    // cancelling queued B is immediate; cancelling running A takes effect
+    // at its next episode boundary
+    let (s, _) = request(&addr, "POST", &format!("/v1/jobs/{}/cancel", b.u("id")), None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(poll_status(&addr, b.u("id")).s("status"), "cancelled");
+    let (s, _) = request(&addr, "POST", &format!("/v1/jobs/{}/cancel", a.u("id")), None).unwrap();
+    assert_eq!(s, 200);
+    let a_done = wait_terminal(&addr, a.u("id"), Duration::from_secs(10));
+    assert_eq!(a_done.s("status"), "cancelled");
+    // a cancelled job has no result
+    let (s, _) = request(&addr, "GET", &format!("/v1/jobs/{}/result", a.u("id")), None).unwrap();
+    assert_eq!(s, 409);
+    // cancelling a job that already reached a terminal state is a 409, not
+    // a false "cancelled: true"
+    let (s, _) = request(&addr, "POST", &format!("/v1/jobs/{}/cancel", a.u("id")), None).unwrap();
+    assert_eq!(s, 409);
+    // cancel of an unknown job is a 404
+    let (s, _) = request(&addr, "POST", "/v1/jobs/424242/cancel", None).unwrap();
+    assert_eq!(s, 404);
+
+    // a 1ms deadline on a long job cancels it cooperatively
+    let (s, d) = submit(
+        &addr,
+        r#"{"net": "stubnet", "config": {"episodes": 200, "seed": 4}, "deadline_ms": 1}"#,
+    );
+    assert_eq!(s, 202);
+    let d_done = wait_terminal(&addr, d.u("id"), Duration::from_secs(10));
+    assert_eq!(d_done.s("status"), "cancelled");
+    assert!(
+        d_done.s("error").contains("deadline"),
+        "expected a deadline error, got {}",
+        d_done.dump()
+    );
+
+    // drain with nothing queued: still clean
+    shutdown(&addr, handle);
+    // the daemon rejects connections once stopped
+    assert!(request(&addr, "GET", "/v1/stats", None).is_err());
+}
+
+#[test]
+fn stub_daemon_rejects_submissions_while_draining() {
+    // a long-running job keeps drain() blocked; submissions during the
+    // drain window must bounce with 503
+    let archive_path = tmp_archive("draining");
+    let stub = StubRunner::new(20);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(serve_cfg(&archive_path, 1, 4), stub, archive).unwrap();
+    let (addr, handle) = spawn(server);
+
+    let (s, a) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 40, "seed": 1}}"#);
+    assert_eq!(s, 202);
+    let addr2 = addr.clone();
+    let shutter = std::thread::spawn(move || {
+        let (s, j) = request(&addr2, "POST", "/v1/shutdown", None).unwrap();
+        assert_eq!(s, 200, "{}", j.dump());
+    });
+    // give the shutdown request time to flip the draining flag
+    let t0 = Instant::now();
+    loop {
+        match submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 5, "seed": 9}}"#) {
+            (503, _) => break,
+            // 202: drain not yet observed; 429: the retry loop filled the
+            // queue first — both just mean "try again"
+            (202, _) | (200, _) | (429, _) => {
+                assert!(t0.elapsed() < Duration::from_secs(5), "draining flag never observed");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            (other, j) => panic!("unexpected submit status {other}: {}", j.dump()),
+        }
+    }
+    shutter.join().unwrap();
+    handle.join().unwrap().unwrap();
+    // the in-flight job completed during the drain
+    let reopened = Archive::open(&archive_path).unwrap();
+    assert!(reopened.len() >= 1, "drained job must be archived");
+    let _ = a;
+}
+
+// ---- artifact tier -----------------------------------------------------------
+
+/// Acceptance criteria: one pretrain across concurrent same-network jobs,
+/// archive answers with zero new accuracy evals (within and across daemon
+/// processes), shutdown drains and persists.
+#[test]
+fn serve_one_pretrain_invariant_with_artifacts() {
+    use releq::runtime::{Engine, Manifest};
+
+    let dir = releq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Arc::new(Engine::new(dir).unwrap());
+    let archive_path = tmp_archive("artifacts");
+
+    let server =
+        Server::bind(serve_cfg(&archive_path, 2, 8), manifest.clone(), engine.clone()).unwrap();
+    let (addr, handle) = spawn(server);
+
+    let job_body = |seed: u64| {
+        format!(
+            r#"{{"net": "lenet", "config": {{"episodes": 8, "pretrain_steps": 60,
+                 "long_retrain_steps": 8, "patience": 0, "seed": {seed}}}}}"#
+        )
+    };
+    let total_execs = |e: &Engine| e.exec_stats().iter().map(|(_, n, _)| *n).sum::<u64>();
+
+    // two simultaneous jobs, same network + env config, different seeds:
+    // the second must NOT pretrain again
+    let (s1, j1) = submit(&addr, &job_body(7));
+    let (s2, j2) = submit(&addr, &job_body(8));
+    assert_eq!((s1, s2), (202, 202), "{} / {}", j1.dump(), j2.dump());
+    let d1 = wait_terminal(&addr, j1.u("id"), Duration::from_secs(300));
+    let d2 = wait_terminal(&addr, j2.u("id"), Duration::from_secs(300));
+    assert_eq!(d1.s("status"), "done", "{}", d1.dump());
+    assert_eq!(d2.s("status"), "done", "{}", d2.dump());
+
+    // ONE EnvCore: the init artifact ran exactly once for both jobs
+    assert_eq!(
+        engine.exe("lenet_init").unwrap().exec_count(),
+        1,
+        "concurrent same-network jobs must share one pretrained core"
+    );
+    let (s, stats) = request(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(stats.req("runner").u("pretrains"), 1);
+
+    // identical resubmission: answered from the archive with ZERO new PJRT
+    // executions (and therefore zero accuracy evaluations)
+    let execs_before = total_execs(&engine);
+    let (s3, j3) = submit(&addr, &job_body(7));
+    assert_eq!(s3, 200, "{}", j3.dump());
+    assert_eq!(j3.s("source"), "archive");
+    let (s, r3) = request(&addr, "GET", &format!("/v1/jobs/{}/result", j3.u("id")), None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(r3.s("source"), "archive");
+    assert_eq!(total_execs(&engine), execs_before, "archive hit must cost zero executions");
+
+    // shutdown drains and persists
+    shutdown(&addr, handle);
+    assert!(archive_path.exists());
+    let persisted = Archive::open(&archive_path).unwrap();
+    assert_eq!(persisted.len(), 2, "both seeds' solutions persisted");
+
+    // a brand-new daemon on the same archive answers the resubmission
+    // without touching the engine at all
+    let manifest2 = Manifest::load(&releq::artifacts_dir()).unwrap();
+    let server2 =
+        Server::bind(serve_cfg(&archive_path, 1, 8), manifest2, engine.clone()).unwrap();
+    let (addr2, handle2) = spawn(server2);
+    let execs_before = total_execs(&engine);
+    let (s4, j4) = submit(&addr2, &job_body(8));
+    assert_eq!(s4, 200, "{}", j4.dump());
+    assert_eq!(j4.s("source"), "archive");
+    assert_eq!(total_execs(&engine), execs_before, "cross-process archive hit");
+    shutdown(&addr2, handle2);
+}
