@@ -9,10 +9,13 @@ fn main() {
     cfg.pretrain_steps = 60;
     cfg.retrain_steps = 10;
     let env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
-    for (name, fused) in [("unfused", false), ("fused", true)] {
+    // accuracy_unfused is memoized now (PR 4): give each probe branch a
+    // disjoint set of bits vectors so both time real executions, not hits
+    for (name, fused, base) in [("unfused", false, 0usize), ("fused", true, 5)] {
         let t0 = std::time::Instant::now();
         let n = 5;
-        for i in 0..n {
+        for j in 0..n {
+            let i = base + j;
             let mut bits = vec![8u32; net.l];
             bits[i % net.l] = 3 + (i as u32 % 4);
             bits[(i + 3) % net.l] = 2 + (i as u32 % 5);

@@ -9,6 +9,10 @@ self-contained afterwards.  Outputs, under ``artifacts/``:
 * ``<net>_retrain_eval.hlo.txt`` — fused k-step quantized retrain + eval with
   a device-resident training set (the coordinator's accuracy-query hot path;
   see EXPERIMENTS.md §Perf)
+* ``<net>_retrain_eval_batch.hlo.txt`` — jax.vmap of the fused retrain+eval
+  over ``EVAL_BATCH_K`` candidate bits lanes sharing one resident train/val
+  set: one PJRT execution scores up to K candidate bitwidth vectors (the
+  megabatch accuracy evaluator; manifest ``eval_batch_k``)
 * ``agent_{lstm,fc}_init.hlo.txt``   (seed)                 -> params
 * ``agent_{lstm,fc}_act.hlo.txt``    (params, s, h, c)      -> (probs, value, h', c')
 * ``agent_{lstm,fc}_act_batch.hlo.txt`` (params, s[B,D], h[B,H], c[B,H])
@@ -41,6 +45,12 @@ TRAIN_BATCH = 32
 EVAL_BATCH = 512
 TRAIN_SIZE = 2048  # resident training set for the fused retrain_eval artifact
 EPISODES_PER_UPDATE = 8  # B: whole episodes per PPO minibatch
+# K: candidate bits lanes per retrain_eval_batch execution. = the lockstep
+# lane width, so one rollout step's worth of distinct candidates fits in one
+# execution even when every lane proposes a different vector. Compile time
+# of the vmapped unrolled graph grows ~K x, which the shallow (fused_k > 0)
+# networks absorb; the deep nets skip the fused family entirely.
+EVAL_BATCH_K = 8
 
 
 def f32(*shape):
@@ -84,12 +94,24 @@ def lower_network(name: str, out_dir: str, manifest: dict) -> None:
             (f32(P), f32(P), f32(TRAIN_SIZE, H, W, C), f32(TRAIN_SIZE), f32(),
              f32(L), f32(), f32(EVAL_BATCH, H, W, C), f32(EVAL_BATCH)),
             os.path.join(out_dir, f"{name}_retrain_eval.hlo.txt"))
+        batched = train.make_batched_retrain_eval(
+            apply_fn, init_fn, fused_k, TRAIN_BATCH, unroll=True)
+        lower_to_file(
+            batched,
+            (f32(P), f32(P), f32(TRAIN_SIZE, H, W, C), f32(TRAIN_SIZE),
+             f32(EVAL_BATCH_K), f32(EVAL_BATCH_K, L), f32(),
+             f32(EVAL_BATCH, H, W, C), f32(EVAL_BATCH)),
+            os.path.join(out_dir, f"{name}_retrain_eval_batch.hlo.txt"))
     dt = time.time() - t0
 
     manifest["networks"][name] = {
         "l": L,
         "p": P,
         "fused_k": fused_k,
+        # lanes baked into <net>_retrain_eval_batch (0 = no batch artifact,
+        # same gate as the fused family; rust falls back to 0 when the key
+        # predates the megabatch evaluator)
+        "eval_batch_k": EVAL_BATCH_K if fused_k > 0 else 0,
         "train_size": TRAIN_SIZE,
         "input": [H, W, C],
         "classes": builder.num_classes,

@@ -109,3 +109,27 @@ def make_fused_retrain_eval(apply_fn, init_fn, k_steps: int, batch: int,
         return evaluate(params, val_x, val_y, bits)
 
     return retrain_eval
+
+
+def make_batched_retrain_eval(apply_fn, init_fn, k_steps: int, batch: int,
+                              unroll: bool = True):
+    """K independent accuracy queries as ONE executable: ``jax.vmap`` of the
+    fused retrain+eval over K candidate ``bits`` lanes (and their per-lane
+    cursors — the retrain start-batch is bits-derived on the Rust side), with
+    the snapshot, momentum, resident training set, lr and validation set
+    broadcast across lanes.
+
+    (params, mom, train_x[N,...], train_y[N], cursor[K], bits[K,L], lr,
+     val_x, val_y) -> (loss[K], n_correct[K])
+
+    Each lane computes exactly the function `make_fused_retrain_eval` lowers
+    for a single query — lanes never interact — so lane ``i``'s ``n_correct``
+    must equal the scalar fused artifact's output for the same bits vector
+    (an integer count of argmax matches; pinned by
+    ``rust/tests/eval_batch_parity.rs`` against the compiled artifacts). The
+    Rust coordinator pays one PJRT dispatch for up to K distinct candidate
+    vectors per rollout step instead of one per candidate, padding short
+    batches by repeating the last candidate (pad lanes are discarded
+    host-side)."""
+    fused = make_fused_retrain_eval(apply_fn, init_fn, k_steps, batch, unroll)
+    return jax.vmap(fused, in_axes=(None, None, None, None, 0, 0, None, None, None))

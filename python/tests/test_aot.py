@@ -53,6 +53,93 @@ def test_agent_act_batch_lowers(rec):
     assert "HloModule" in text
 
 
+def test_batched_retrain_eval_lowers():
+    """The megabatch accuracy evaluator: vmapped fused retrain+eval over K
+    candidate bits lanes (tiny shapes — lowering only)."""
+    apply_fn, init_fn, b = models.build("lenet")
+    P, L = b.param_count, len(b.layers)
+    K, N, BATCH, EB = 3, 32, 8, 16
+    batched = train.make_batched_retrain_eval(apply_fn, init_fn, 2, BATCH)
+    text = lower_text(
+        batched,
+        (f32(P), f32(P), f32(N, 16, 16, 1), f32(N), f32(K), f32(K, L), f32(),
+         f32(EB, 16, 16, 1), f32(EB)))
+    assert "HloModule" in text
+
+
+def test_batched_retrain_eval_matches_scalar_lanes():
+    """Lane i of the vmapped evaluator must reproduce the scalar fused
+    artifact's (loss, n_correct) for the same (cursor, bits) — the contract
+    the Rust memo relies on for schedule-independent cached values
+    (n_correct is an integer count, so it must match exactly)."""
+    apply_fn, init_fn, b = models.build("lenet")
+    P, L = b.param_count, len(b.layers)
+    K, N, BATCH, EB = 4, 32, 8, 16
+    rng = np.random.default_rng(7)
+    params = jnp.asarray(rng.normal(0, 0.1, P), jnp.float32)
+    mom = jnp.zeros(P, jnp.float32)
+    tx = jnp.asarray(rng.normal(0, 1, (N, 16, 16, 1)), jnp.float32)
+    ty = jnp.asarray(rng.integers(0, b.num_classes, N), jnp.float32)
+    vx = jnp.asarray(rng.normal(0, 1, (EB, 16, 16, 1)), jnp.float32)
+    vy = jnp.asarray(rng.integers(0, b.num_classes, EB), jnp.float32)
+    cursors = jnp.asarray([0.0, 1.0, 3.0, 1.0], jnp.float32)
+    bits = jnp.asarray(
+        rng.integers(2, 9, (K, L)), jnp.float32).at[3].set(8.0)
+    lr = jnp.float32(0.05)
+
+    fused = jax.jit(train.make_fused_retrain_eval(apply_fn, init_fn, 2, BATCH))
+    batched = jax.jit(train.make_batched_retrain_eval(apply_fn, init_fn, 2, BATCH))
+    bl, bc = batched(params, mom, tx, ty, cursors, bits, lr, vx, vy)
+    for i in range(K):
+        sl, sc = fused(params, mom, tx, ty, cursors[i], bits[i], lr, vx, vy)
+        assert float(sc) == float(bc[i]), f"lane {i} n_correct diverged"
+        np.testing.assert_allclose(float(sl), float(bl[i]), rtol=1e-6)
+
+
+def test_fused_retrain_eval_matches_per_step_path():
+    """The fused monolith must reproduce the per-step program exactly on
+    n_correct: the Rust runtime memoizes `accuracy_unfused` (per-step
+    train_step executions + evaluate) into the same cache the fused and
+    batched paths read, so a divergence here would let an unfused probe
+    poison fused callers sharing one env core. n_correct is an argmax-match
+    count, which is what makes exact agreement achievable across the two
+    separately compiled programs. (The compiled-artifact version of this
+    tripwire is rust/tests/eval_batch_parity.rs::
+    unfused_path_matches_fused_bit_identical — artifact-gated; this test is
+    the one that runs in CI.)"""
+    apply_fn, init_fn, b = models.build("lenet")
+    P = b.param_count
+    L = len(b.layers)
+    K_STEPS, N, BATCH, EB = 3, 32, 8, 16
+    rng = np.random.default_rng(11)
+    params = jnp.asarray(rng.normal(0, 0.1, P), jnp.float32)
+    mom = jnp.zeros(P, jnp.float32)
+    tx = jnp.asarray(rng.normal(0, 1, (N, 16, 16, 1)), jnp.float32)
+    ty = jnp.asarray(rng.integers(0, b.num_classes, N), jnp.float32)
+    vx = jnp.asarray(rng.normal(0, 1, (EB, 16, 16, 1)), jnp.float32)
+    vy = jnp.asarray(rng.integers(0, b.num_classes, EB), jnp.float32)
+    lr = jnp.float32(0.05)
+
+    _, train_step, evaluate = train.make_fns(apply_fn, init_fn)
+    train_step = jax.jit(train_step)
+    evaluate = jax.jit(evaluate)
+    fused = jax.jit(train.make_fused_retrain_eval(apply_fn, init_fn, K_STEPS, BATCH))
+
+    n_batches = N // BATCH
+    for cursor in (0, 1, 3):
+        bits = jnp.asarray(rng.integers(2, 9, L), jnp.float32)
+        # per-step path: same batch-slicing rule the fused program bakes in
+        p, m = params, mom
+        for i in range(K_STEPS):
+            start = ((cursor + i) % n_batches) * BATCH
+            p, m, _, _ = train_step(
+                p, m, tx[start:start + BATCH], ty[start:start + BATCH], bits, lr)
+        sl, sc = evaluate(p, vx, vy, bits)
+        fl, fc = fused(params, mom, tx, ty, jnp.float32(cursor), bits, lr, vx, vy)
+        assert float(sc) == float(fc), f"cursor {cursor}: n_correct diverged"
+        np.testing.assert_allclose(float(sl), float(fl), rtol=1e-5)
+
+
 def test_hlo_text_parses_back():
     """The HLO text must parse back through XLA's text parser — the exact
     ingestion path the rust `xla` crate uses (`HloModuleProto::from_text_file`).
@@ -88,6 +175,10 @@ def test_manifest_matches_models(manifest):
         assert meta["p"] == b.param_count, name
         assert meta["l"] == len(b.layers), name
         assert meta["input"] == list(b.input_shape), name
+        # the megabatch evaluator rides the fused family: present together
+        # or absent together (rust falls back to 0 for older manifests)
+        ebk = meta.get("eval_batch_k", 0)
+        assert (ebk > 0) == (meta["fused_k"] > 0), name
         for lj, lm in zip(meta["layers"], b.layers):
             assert lj["w_offset"] == lm.w_offset
             assert lj["n_macs"] == lm.n_macs
@@ -111,5 +202,8 @@ def test_artifact_files_exist(manifest):
     for name, meta in manifest["networks"].items():
         p = os.path.join(adir, f"agent_lstm_update_l{meta['l']}.hlo.txt")
         assert os.path.exists(p), p
+        if meta.get("eval_batch_k", 0) > 0:
+            p = os.path.join(adir, f"{name}_retrain_eval_batch.hlo.txt")
+            assert os.path.exists(p), p
     for p in ("agent_lstm_act", "agent_fc_act", "agent_lstm_init", "agent_fc_init"):
         assert os.path.exists(os.path.join(adir, f"{p}.hlo.txt"))

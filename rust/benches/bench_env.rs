@@ -1,5 +1,6 @@
 //! Environment hot-path benchmarks: the quantized short-retrain + eval that
-//! dominates search wall-time, and the memo-cache hit path.
+//! dominates search wall-time, the memo-cache hit path, and the megabatch
+//! evaluator's K-sweep (EXPERIMENTS.md §Perf 7 / BENCH_4.json).
 
 use std::sync::Arc;
 
@@ -13,15 +14,23 @@ fn main() {
     let net = manifest.network("lenet").unwrap();
     let mut cfg = EnvConfig::default();
     cfg.pretrain_steps = 60; // enough for the bench; accuracy itself irrelevant
-    let env = QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
+    let env = QuantEnv::new(
+        engine.clone(),
+        net,
+        manifest.bits_max,
+        manifest.fp_bits,
+        cfg.clone(),
+    )
+    .unwrap();
 
     let mut b = Bench::new("env");
     // §Perf before/after: the same accuracy query through the unfused
     // (per-step literals) path vs the fused single-execution path.
     // The bits odometer spans 7^4 = 2401 distinct vectors — more than the
-    // harness's max_iters — so the fused case never degenerates into
-    // memo-cache hits (which would measure ~400ns lookups, not the PJRT
-    // execution).
+    // harness's max_iters — so neither case degenerates into memo-cache
+    // hits (which would measure ~400ns lookups, not the PJRT execution).
+    // accuracy_unfused is memoized now, so `k` keeps advancing across the
+    // cases instead of resetting: each case times a disjoint key window.
     let mut k = 0u32;
     let fresh_bits = |k: u32| {
         vec![2 + (k % 7), 2 + ((k / 7) % 7), 2 + ((k / 49) % 7), 2 + ((k / 343) % 7)]
@@ -30,7 +39,6 @@ fn main() {
         k += 1;
         let _ = env.accuracy_unfused(&fresh_bits(k)).unwrap();
     });
-    k = 0;
     b.case("accuracy/fused(1 exec, resident operands)", || {
         k += 1;
         let _ = env.accuracy(&fresh_bits(k)).unwrap();
@@ -45,5 +53,45 @@ fn main() {
     });
     b.case("retrain_and_eval/long(120 steps)", || {
         let _ = env.retrain_and_eval(&hot, 120).unwrap();
+    });
+
+    // K-sweep of the megabatch evaluator: one execution scoring `width`
+    // fresh candidates per iteration (short slates pad to the artifact's
+    // baked K — the sweep shows where amortization beats pad-lane waste,
+    // the BENCH_4 crossover). A fresh env per sweep keeps its memo cold
+    // and its odometer inside the 2401-vector space: max_iters is capped
+    // so (3 warmup + iters) * (2 + 4 + 8) stays below 2401.
+    let batch_env =
+        QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap();
+    let kmax = batch_env.eval_batch_width();
+    if kmax <= 1 {
+        // pre-megabatch artifacts: the sweep would only emit duplicate,
+        // mislabeled records timing the scalar path — skip like the
+        // artifact-tier tests do
+        eprintln!("skipping accuracy_batch K-sweep: artifacts predate the megabatch \
+                   evaluator — re-run `make artifacts`");
+        return;
+    }
+    let saved_max_iters = b.max_iters;
+    b.max_iters = 100;
+    let mut j = 0u32;
+    for width in [2usize, 4, 8] {
+        let width = width.min(kmax);
+        b.case(&format!("accuracy_batch/{width}_fresh_per_exec"), || {
+            let slate: Vec<Vec<u32>> = (0..width)
+                .map(|_| {
+                    j += 1;
+                    fresh_bits(j)
+                })
+                .collect();
+            let _ = batch_env.accuracy_batch(&slate).unwrap();
+        });
+    }
+    b.max_iters = saved_max_iters;
+    // the batch-protocol overhead itself: an all-hits slate (no execution)
+    let hot_slate: Vec<Vec<u32>> = (1..=8).map(|i| fresh_bits(i)).collect();
+    let _ = batch_env.accuracy_batch(&hot_slate).unwrap();
+    b.case("accuracy_batch/8_hits_no_exec", || {
+        let _ = batch_env.accuracy_batch(&hot_slate).unwrap();
     });
 }

@@ -120,6 +120,7 @@ fn apply_kv(cfg: &mut SearchConfig, k: &str, v: &Val) -> Result<()> {
         "lr" => cfg.env.lr = v.num(k)? as f32,
         "train_size" => cfg.env.train_size = v.num(k)? as usize,
         "memo_cap" => cfg.env.memo_cap = v.num(k)? as usize,
+        "eval_batch" => cfg.env.eval_batch = v.num(k)? as usize,
         "seed" => cfg.seed = v.num(k)? as u64,
         "clip_eps" => cfg.ppo.clip_eps = v.num(k)? as f32,
         "ent_coef" => cfg.ppo.ent_coef = v.num(k)? as f32,
@@ -200,6 +201,9 @@ pub fn apply_cli(cfg: &mut SearchConfig, args: &Args) -> Result<()> {
     }
     if let Some(v) = flag_num(args, "lanes")? {
         cfg.lanes = v;
+    }
+    if let Some(v) = flag_num(args, "eval-batch")? {
+        cfg.env.eval_batch = v;
     }
     if let Some(v) = flag_num(args, "agent-lr")? {
         cfg.ppo.lr = v;
@@ -430,6 +434,26 @@ mod tests {
         assert_eq!(cfg.rollout, RolloutMode::Batched);
         assert_eq!(cfg.lanes, 4);
         assert_eq!(preset("lenet").rollout, RolloutMode::Serial);
+    }
+
+    #[test]
+    fn eval_batch_resolves_through_every_layer() {
+        // default: 0 = the artifact's baked width
+        assert_eq!(preset("lenet").env.eval_batch, 0);
+        // CLI
+        let cfg = resolve("lenet", &args("search --eval-batch 4")).unwrap();
+        assert_eq!(cfg.env.eval_batch, 4);
+        assert!(resolve("lenet", &args("search --eval-batch lots")).is_err());
+        // TOML and job-JSON share the key table
+        let mut via_toml = preset("lenet");
+        let doc = toml_lite::parse("[search]\neval_batch = 2\n").unwrap();
+        apply_toml(&mut via_toml, doc.get("search").unwrap()).unwrap();
+        assert_eq!(via_toml.env.eval_batch, 2);
+        let spec = job_from_json(
+            &Json::parse(r#"{"net": "lenet", "config": {"eval_batch": 8}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.cfg.env.eval_batch, 8);
     }
 
     #[test]

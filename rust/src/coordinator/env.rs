@@ -21,6 +21,20 @@
 //! rollout, paying the data-generation + pretraining bring-up **once**
 //! instead of once per consumer.
 //!
+//! # Megabatch accuracy evaluation
+//!
+//! [`EnvCore::accuracy_batch`] scores up to `eval_batch_k` candidate bits
+//! vectors with **one** PJRT execution of the vmapped
+//! `<net>_retrain_eval_batch` artifact (per-lane bits + cursor uploaded as
+//! one staged literal, all large operands shared and device-resident).
+//! Batches flow through [`AccMemo::get_or_compute_batch`]: cache hits and
+//! another thread's in-flight keys shrink the batch, a short final chunk
+//! pads by repeating the last candidate (pad lanes are discarded and
+//! counted in `EnvStats::pad_lanes`), and a lone miss takes the scalar
+//! fused path — so a step with `m` uncached candidates costs exactly
+//! `ceil(m / K)` retrain_eval-family executions (`rust/tests/
+//! eval_batch_parity.rs`).
+//!
 //! # Determinism
 //!
 //! Accuracy queries derive their retrain start-batch from the queried bits
@@ -28,19 +42,25 @@
 //! cursor. That makes `accuracy(bits)` a pure function of the core: the
 //! memoized value for a vector is identical no matter which shard, lane, or
 //! schedule computed it, so sharded enumeration and batched search are
-//! bit-reproducible at any concurrency (EXPERIMENTS.md §Determinism).
+//! bit-reproducible at any concurrency (EXPERIMENTS.md §Determinism). The
+//! batch artifact preserves this: each lane is `jax.vmap` of exactly the
+//! scalar fused function and lanes never interact, so a value computed as
+//! lane `i` of a K-batch is bit-identical to the scalar path's — pinned by
+//! `python/tests/test_aot.py` (numeric lane parity) and
+//! `rust/tests/eval_batch_parity.rs` (compiled-artifact parity at any K,
+//! including pad lanes).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 use xla::Literal;
 
 use crate::data::{self, Split};
-use crate::parallel::AccMemo;
+use crate::parallel::{self, AccMemo};
 use crate::quant::CostModel;
 use crate::runtime::{
-    lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, HostLit, NetworkMeta,
+    lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, HostLit, NetworkMeta, Stage,
 };
 
 #[derive(Debug, Clone)]
@@ -59,6 +79,15 @@ pub struct EnvConfig {
     /// long-running `releq serve` session cannot grow without limit
     /// (coarse-LRU eviction, see [`AccMemo`]).
     pub memo_cap: usize,
+    /// candidate lanes per batched accuracy execution: 0 = the artifact's
+    /// baked width (`eval_batch_k`), 1 = disable batching (scalar fused
+    /// path only), 2..=K = narrower effective batches (the K-sweep knob —
+    /// narrower batches still pad to the artifact's fixed shape, so this
+    /// trades pad-lane compute for scheduling granularity; `bench_env`).
+    /// Purely a performance knob: accuracy values are identical at any
+    /// setting, so it is excluded from the serve env fingerprint like
+    /// `memo_cap`.
+    pub eval_batch: usize,
 }
 
 impl Default for EnvConfig {
@@ -71,6 +100,7 @@ impl Default for EnvConfig {
             train_size: 2048,
             seed: 17,
             memo_cap: 65_536,
+            eval_batch: 0,
         }
     }
 }
@@ -85,6 +115,16 @@ pub struct EnvStats {
     pub cache_hits: u64,
     pub train_execs: u64,
     pub eval_execs: u64,
+    /// executions of the vmapped `<net>_retrain_eval_batch` artifact (each
+    /// replaces up to `eval_batch_k` scalar retrain_eval executions — the
+    /// batch-amortization mirror of `act_batch_calls`)
+    pub eval_batch_execs: u64,
+    /// real (non-pad) candidate lanes scored by those executions;
+    /// `batched_candidates / eval_batch_execs` is the realized batch width
+    pub batched_candidates: u64,
+    /// pad lanes executed and discarded (short final chunks repeat their
+    /// last candidate to fill the artifact's fixed K)
+    pub pad_lanes: u64,
     /// finished entries currently resident in the accuracy memo
     pub memo_len: usize,
     /// memo-global hit/miss/eviction counters (shared by every env clone)
@@ -101,6 +141,9 @@ struct EnvStatsAtomic {
     cache_hits: AtomicU64,
     train_execs: AtomicU64,
     eval_execs: AtomicU64,
+    eval_batch_execs: AtomicU64,
+    batched_candidates: AtomicU64,
+    pad_lanes: AtomicU64,
 }
 
 impl EnvStatsAtomic {
@@ -110,6 +153,9 @@ impl EnvStatsAtomic {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             train_execs: self.train_execs.load(Ordering::Relaxed),
             eval_execs: self.eval_execs.load(Ordering::Relaxed),
+            eval_batch_execs: self.eval_batch_execs.load(Ordering::Relaxed),
+            batched_candidates: self.batched_candidates.load(Ordering::Relaxed),
+            pad_lanes: self.pad_lanes.load(Ordering::Relaxed),
             ..EnvStats::default()
         }
     }
@@ -143,6 +189,9 @@ pub struct EnvCore {
     /// fused retrain(k)+eval artifact — the accuracy-query hot path for
     /// shallow networks (None where the per-step path is faster)
     fused_exe: Option<Arc<Exe>>,
+    /// vmapped K-lane retrain(k)+eval artifact — the megabatch evaluator
+    /// (rides the fused family: present iff `net.eval_batch_k > 0`)
+    batch_exe: Option<Arc<Exe>>,
     train: Split,
     /// pretrained full-precision snapshot (the search always retrains from it)
     pub pretrained: Vec<f32>,
@@ -168,8 +217,11 @@ pub struct EnvCore {
     val_y_lit: HostLit,
     // device-resident operands for the fused hot path (uploaded once;
     // EXPERIMENTS.md §Perf): snapshot params, zero momentum, the whole
-    // training set, and the validation set.
+    // training set, the validation set, and the learning rate.
     fused_bufs: Option<FusedBuffers>,
+    /// reusable host staging for the per-execution batch operands (the
+    /// K×L bits matrix and K cursors) — see [`Stage`]
+    stage: Mutex<Stage>,
 }
 
 struct FusedBuffers {
@@ -179,6 +231,7 @@ struct FusedBuffers {
     train_y: DeviceBuf,
     val_x: DeviceBuf,
     val_y: DeviceBuf,
+    lr: DeviceBuf,
 }
 
 impl QuantEnv {
@@ -200,6 +253,14 @@ impl QuantEnv {
         // fused artifact exists only where it wins (manifest fused_k > 0)
         let fused_exe = if net.fused_k > 0 {
             Some(engine.exe(&format!("{}_retrain_eval", net.name))?)
+        } else {
+            None
+        };
+        // the megabatch evaluator rides the fused family; eval_batch_k = 0
+        // (no artifact, or a manifest predating it) degrades to the scalar
+        // paths without demanding a missing file
+        let batch_exe = if net.eval_batch_k > 0 {
+            Some(engine.exe(&format!("{}_retrain_eval_batch", net.name))?)
         } else {
             None
         };
@@ -231,6 +292,7 @@ impl QuantEnv {
             train_exe,
             eval_exe,
             fused_exe,
+            batch_exe,
             train,
             pretrained: params,
             acc_fullp: 0.0,
@@ -242,6 +304,7 @@ impl QuantEnv {
             val_x_lit,
             val_y_lit,
             fused_bufs: None,
+            stage: Mutex::new(Stage::new()),
         };
         core.pretrain()?;
         core.upload_fused_operands(&val)?;
@@ -361,6 +424,7 @@ impl EnvCore {
             train_y: e.buffer_f32(&self.train.labels, &[self.train.n])?,
             val_x: e.buffer_f32(&val.images, &[self.net.eval_batch, h, w, c])?,
             val_y: e.buffer_f32(&val.labels, &[self.net.eval_batch])?,
+            lr: e.buffer_scalar(self.cfg.lr)?,
         });
         Ok(())
     }
@@ -378,7 +442,6 @@ impl EnvCore {
         let e = &self.engine;
         let cursor_buf = e.buffer_scalar(cursor as f32)?;
         let bits_buf = e.buffer_f32(&bits_v, &[self.net.l])?;
-        let lr_buf = e.buffer_scalar(self.cfg.lr)?;
         let args = [
             bufs.params.raw(),
             bufs.mom.raw(),
@@ -386,7 +449,7 @@ impl EnvCore {
             bufs.train_y.raw(),
             cursor_buf.raw(),
             bits_buf.raw(),
-            lr_buf.raw(),
+            bufs.lr.raw(),
             bufs.val_x.raw(),
             bufs.val_y.raw(),
         ];
@@ -397,6 +460,154 @@ impl EnvCore {
         Ok(Some(ncorrect / self.net.eval_batch as f64))
     }
 
+    /// Raw single-candidate accuracy compute — no memo interaction, so it
+    /// is safe to call under a claimed in-flight key (the batch leader's
+    /// fallback and the scalar miss path both land here). Fused when
+    /// available, per-step literals otherwise.
+    fn compute_one(&self, bits: &[u32]) -> Result<f64> {
+        match self.accuracy_fused(bits, self.bits_cursor(bits))? {
+            Some(acc) => Ok(acc),
+            None => self.retrain_and_eval(bits, self.cfg.retrain_steps),
+        }
+    }
+
+    /// Width of one batched accuracy execution on this env: the artifact's
+    /// baked lane count, optionally narrowed by the `eval_batch` config
+    /// knob (0 = artifact width, 1 = batching disabled). 1 whenever the
+    /// batch artifact is unavailable or the fused preconditions (resident
+    /// training set, `retrain_steps == fused_k`) don't hold — callers can
+    /// treat "width 1" as "this env evaluates serially".
+    pub fn eval_batch_width(&self) -> usize {
+        self.eval_batch_width_for(self.cfg.eval_batch)
+    }
+
+    /// Resolve an `eval_batch` knob value against THIS env's artifact and
+    /// fused preconditions — what [`EnvCore::eval_batch_width`] would be if
+    /// the env had been built with that knob. The serve session layer uses
+    /// it to tell a genuinely differing request apart from one that
+    /// resolves to the session's effective width anyway.
+    pub fn eval_batch_width_for(&self, eval_batch: usize) -> usize {
+        if self.batch_exe.is_none()
+            || self.fused_bufs.is_none()
+            || self.cfg.retrain_steps != self.net.fused_k
+        {
+            return 1;
+        }
+        match eval_batch {
+            0 => self.net.eval_batch_k,
+            n => n.min(self.net.eval_batch_k),
+        }
+    }
+
+    /// One execution of the vmapped batch artifact over `chunk` (1..=K real
+    /// candidates). Short chunks pad by repeating the last candidate; pad
+    /// lanes run on the device but their outputs are discarded here and
+    /// they count into `pad_lanes`, not into `train_execs`/`eval_execs`
+    /// (those track *accuracy work*, one fused_k-step retrain + one eval
+    /// per real lane — the same accounting as the scalar paths, so the
+    /// exec-count invariants in `rollout_parity.rs` hold verbatim under
+    /// batching).
+    fn accuracy_lanes(&self, chunk: &[Vec<u32>]) -> Result<Vec<f64>> {
+        let k = self.net.eval_batch_k;
+        let l = self.net.l;
+        anyhow::ensure!(
+            !chunk.is_empty() && chunk.len() <= k,
+            "batch chunk of {} exceeds the artifact's {k} lanes",
+            chunk.len()
+        );
+        let bufs = self.fused_bufs.as_ref().expect("eval_batch_width checked");
+        let exe = self.batch_exe.clone().expect("eval_batch_width checked");
+        let pads = k - chunk.len();
+        let last = chunk.last().expect("non-empty");
+        let e = &self.engine;
+        // stage bits [K, L] then cursors [K] through the reusable buffer
+        // (one upload each; the cursor is bits-derived per lane, so pad
+        // lanes recompute their repeated candidate — and must produce the
+        // identical value, though it is discarded anyway). try_lock: the
+        // common single-driver case reuses the allocation across thousands
+        // of executions; concurrent callers (racing shards, serve jobs)
+        // fall back to a fresh local stage instead of serializing their
+        // uploads on the mutex.
+        let mut local = Stage::new();
+        let mut guard = self.stage.try_lock();
+        let stage: &mut Stage = match guard {
+            Ok(ref mut g) => g,
+            Err(_) => &mut local,
+        };
+        let (bits_buf, cursor_buf) = {
+            let buf = stage.start();
+            for bits in chunk.iter().chain(std::iter::repeat(last).take(pads)) {
+                buf.extend(bits.iter().map(|&b| b as f32));
+            }
+            let bits_buf = stage.upload(e, &[k, l])?;
+            let buf = stage.start();
+            for bits in chunk.iter().chain(std::iter::repeat(last).take(pads)) {
+                buf.push(self.bits_cursor(bits) as f32);
+            }
+            (bits_buf, stage.upload(e, &[k])?)
+        };
+        let args = [
+            bufs.params.raw(),
+            bufs.mom.raw(),
+            bufs.train_x.raw(),
+            bufs.train_y.raw(),
+            cursor_buf.raw(),
+            bits_buf.raw(),
+            bufs.lr.raw(),
+            bufs.val_x.raw(),
+            bufs.val_y.raw(),
+        ];
+        let out = exe.run_b(&args).context("batched retrain_eval")?;
+        let ncorrect = to_vec_f32(&out[1])?;
+        anyhow::ensure!(
+            ncorrect.len() == k,
+            "batch artifact returned {} lanes, expected {k}",
+            ncorrect.len()
+        );
+        let real = chunk.len() as u64;
+        self.stats.eval_batch_execs.fetch_add(1, Ordering::Relaxed);
+        self.stats.batched_candidates.fetch_add(real, Ordering::Relaxed);
+        self.stats.pad_lanes.fetch_add(pads as u64, Ordering::Relaxed);
+        self.stats.train_execs.fetch_add(self.net.fused_k as u64 * real, Ordering::Relaxed);
+        self.stats.eval_execs.fetch_add(real, Ordering::Relaxed);
+        Ok(ncorrect[..chunk.len()]
+            .iter()
+            .map(|&n| n as f64 / self.net.eval_batch as f64)
+            .collect())
+    }
+
+    /// Compute accuracies for a batch of claimed misses (the
+    /// `get_or_compute_batch` leader body — keys are already in flight, so
+    /// everything below stays off the memo). Batch-capable envs chunk the
+    /// misses at `eval_batch_width()` — a lone remainder takes the scalar
+    /// fused path (one execution either way, without K-1 pad lanes of
+    /// compute), so `m` misses cost exactly `ceil(m / width)`
+    /// retrain_eval-family executions. Envs without the artifact keep the
+    /// pre-megabatch behavior: misses fan out across shard threads.
+    fn compute_misses(&self, misses: &[Vec<u32>]) -> Result<Vec<f64>> {
+        let width = self.eval_batch_width();
+        if width > 1 {
+            let mut out = Vec::with_capacity(misses.len());
+            for chunk in misses.chunks(width) {
+                if chunk.len() == 1 {
+                    out.push(self.compute_one(&chunk[0])?);
+                } else {
+                    out.extend(self.accuracy_lanes(chunk)?);
+                }
+            }
+            return Ok(out);
+        }
+        if misses.len() > 1 {
+            let shards = parallel::default_shards(misses.len());
+            let chunks = parallel::chunk_evenly(misses.to_vec(), shards);
+            let per = parallel::run_sharded(chunks, |_, chunk| {
+                chunk.iter().map(|b| self.compute_one(b)).collect::<Result<Vec<f64>>>()
+            })?;
+            return Ok(per.into_iter().flatten().collect());
+        }
+        misses.iter().map(|b| self.compute_one(b)).collect()
+    }
+
     /// Validation accuracy for a bitwidth assignment after a short quantized
     /// retrain from the pretrained snapshot. Memoized and **single-flight**:
     /// concurrent callers for the same uncached vector coalesce onto one
@@ -404,28 +615,63 @@ impl EnvCore {
     /// available.
     pub fn accuracy(&self, bits: &[u32]) -> Result<f64> {
         self.stats.evals.fetch_add(1, Ordering::Relaxed);
-        let (acc, cached) = self.memo.get_or_compute(bits, || {
-            match self.accuracy_fused(bits, self.bits_cursor(bits))? {
-                Some(acc) => Ok(acc),
-                None => self.retrain_and_eval(bits, self.cfg.retrain_steps),
-            }
-        })?;
+        let (acc, cached) = self.memo.get_or_compute(bits, || self.compute_one(bits))?;
         if cached {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
         }
         Ok(acc)
     }
 
+    /// Validation accuracies for a whole slate of candidate bitwidth
+    /// vectors — the megabatch accuracy evaluator. Cache hits and keys
+    /// another thread already has in flight shrink the batch ([`AccMemo::
+    /// get_or_compute_batch`]); the remaining misses run `ceil(m / K)`
+    /// device executions via the vmapped `<net>_retrain_eval_batch`
+    /// artifact (one staged upload of K bits vectors + cursors per
+    /// execution, pad lanes discarded). Values are bit-identical to
+    /// [`EnvCore::accuracy`] on the same vectors (see the module docs), so
+    /// batching is purely a throughput lever.
+    pub fn accuracy_batch(&self, cands: &[Vec<u32>]) -> Result<Vec<f64>> {
+        if cands.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.stats.evals.fetch_add(cands.len() as u64, Ordering::Relaxed);
+        let res = self.memo.get_or_compute_batch(cands, |misses| self.compute_misses(misses))?;
+        let hits = res.iter().filter(|&&(_, cached)| cached).count() as u64;
+        if hits > 0 {
+            self.stats.cache_hits.fetch_add(hits, Ordering::Relaxed);
+        }
+        Ok(res.into_iter().map(|(v, _)| v).collect())
+    }
+
     /// Force the unfused (step-by-step literal) path — used by the perf
     /// benches to measure the before/after of the fused optimization.
     ///
-    /// Deliberately bypasses the memo-cache on both read and write: the bench
-    /// must time the real retrain+eval every iteration, and a stale write
-    /// would poison `accuracy()` callers whose fused path is live. It still
-    /// counts as an eval in `EnvStats` so bench runs are not under-reported.
+    /// Memoized like `accuracy` (PR 4): the old documented read+write
+    /// bypass was tolerable when one driver owned the env, but with
+    /// rollouts, Pareto shards and serve jobs all sharing one core, an
+    /// unmemoized entry point meant concurrent identical queries silently
+    /// duplicated PJRT work and never coalesced with in-flight leaders.
+    /// Benches keep their timings honest by iterating over *distinct* bits
+    /// vectors (disjoint key windows per case — see `bench_env`), so every
+    /// timed iteration still misses and pays the real retrain+eval. The
+    /// published value is valid for every other caller because the final
+    /// accuracy is an argmax-match *count* divided by a constant, which the
+    /// per-step and fused programs agree on exactly — pinned by
+    /// `python/tests/test_aot.py::test_fused_retrain_eval_matches_per_step_path`
+    /// (runs in CI) and by the artifact-gated
+    /// `eval_batch_parity::unfused_path_matches_fused_bit_identical`, the
+    /// tripwires for the memo-poisoning hazard the old bypass guarded
+    /// against.
     pub fn accuracy_unfused(&self, bits: &[u32]) -> Result<f64> {
         self.stats.evals.fetch_add(1, Ordering::Relaxed);
-        self.retrain_and_eval(bits, self.cfg.retrain_steps)
+        let (acc, cached) = self
+            .memo
+            .get_or_compute(bits, || self.retrain_and_eval(bits, self.cfg.retrain_steps))?;
+        if cached {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(acc)
     }
 
     /// Quantized (re)training from the snapshot for `steps` SGD steps, then
@@ -449,7 +695,14 @@ impl EnvCore {
     /// State-of-Relative-Accuracy (paper §2.4): Acc_curr over the reference
     /// (see `acc_ref`).
     pub fn state_acc(&self, bits: &[u32]) -> Result<f64> {
-        Ok(self.accuracy(bits)? / self.acc_ref.max(1e-9))
+        Ok(self.state_acc_of(self.accuracy(bits)?))
+    }
+
+    /// Normalize an already-obtained accuracy (e.g. one lane of an
+    /// [`EnvCore::accuracy_batch`] result) into State_A without a second
+    /// memo round-trip.
+    pub fn state_acc_of(&self, acc: f64) -> f64 {
+        acc / self.acc_ref.max(1e-9)
     }
 
     /// State-of-Quantization (paper §2.4).

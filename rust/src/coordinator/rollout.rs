@@ -5,10 +5,13 @@
 //!
 //! 1. **one** `agent_*_act_batch` PJRT execution for all B lanes (the serial
 //!    driver pays B scalar `act` executions), then
-//! 2. one accuracy query per **distinct uncached** bits vector among the
-//!    lanes: candidates dedup through the single-flight [`AccMemo`], and the
-//!    ≤B misses fan out across shard threads via [`parallel::run_sharded`]
-//!    against the shared env core.
+//! 2. `ceil(misses / K)` accuracy executions for the lanes' **distinct
+//!    uncached** bits vectors: the candidate slate goes through
+//!    `EnvCore::accuracy_batch`, whose batch single-flight protocol shrinks
+//!    it by cache hits and scores the misses K lanes at a time via the
+//!    vmapped `<net>_retrain_eval_batch` artifact (envs without that
+//!    artifact fall back to fanning misses across shard threads inside the
+//!    same call).
 //!
 //! Equivalence with the serial driver: every episode samples from its own
 //! per-episode PCG stream (`Searcher::episode_rng`) and `EnvCore::accuracy`
@@ -25,7 +28,6 @@
 use anyhow::Result;
 
 use crate::metrics::{EpisodeLog, SearchLog};
-use crate::parallel;
 use crate::util::rng::Pcg32;
 
 use super::embedding::{embed, STATE_DIM};
@@ -116,28 +118,22 @@ impl Searcher {
             let last = l + 1 == l_total;
             let mut rewards = vec![0.0f32; n];
             if self.cfg.eval_every_step || last {
-                // dedup the ≤n distinct candidate vectors, then fan only the
-                // uncached ones across shard threads; the single-flight memo
-                // guarantees each distinct vector costs one PJRT evaluation
-                let mut misses: Vec<Vec<u32>> = Vec::new();
+                // dedup the ≤n distinct candidate vectors and score them as
+                // ONE megabatch: hits shrink the batch inside the memo's
+                // batch protocol and the remaining misses cost
+                // ceil(misses / K) device executions (envs without the
+                // batch artifact fan the misses across shard threads
+                // inside `accuracy_batch` — the pre-megabatch behavior)
+                let mut cands: Vec<Vec<u32>> = Vec::with_capacity(n);
                 for b in bits.iter().take(n) {
-                    if !self.env.memo().contains(b) && !misses.contains(b) {
-                        misses.push(b.clone());
+                    if !cands.contains(b) {
+                        cands.push(b.clone());
                     }
                 }
-                if misses.len() > 1 {
-                    let env = &self.env;
-                    let shards = parallel::default_shards(misses.len());
-                    let chunks = parallel::chunk_evenly(misses, shards);
-                    parallel::run_sharded(chunks, |_, chunk| {
-                        for bv in &chunk {
-                            env.accuracy(bv)?;
-                        }
-                        Ok(())
-                    })?;
-                }
+                let accs = self.env.accuracy_batch(&cands)?;
                 for i in 0..n {
-                    state_accs[i] = self.env.state_acc(&bits[i])?;
+                    let pos = cands.iter().position(|c| c == &bits[i]).expect("deduped above");
+                    state_accs[i] = self.env.state_acc_of(accs[pos]);
                     rewards[i] = self.cfg.reward.reward(state_accs[i], state_qs[i]) as f32;
                 }
             }

@@ -145,12 +145,16 @@ pub fn cmd_search(args: &Args) -> Result<()> {
     println!("wall time           : {:.1}s", t0.elapsed().as_secs_f64());
     let stats = searcher.env.stats();
     println!(
-        "env: {} evals, {} cache hits, {} train execs, {} eval execs; \
+        "env: {} evals, {} cache hits, {} train execs, {} eval execs \
+         ({} batched execs scoring {} candidates, {} pad lanes); \
          agent: {} acts, {} batched acts, {} param uploads",
         stats.evals,
         stats.cache_hits,
         stats.train_execs,
         stats.eval_execs,
+        stats.eval_batch_execs,
+        stats.batched_candidates,
+        stats.pad_lanes,
         searcher.agent.act_calls,
         searcher.agent.act_batch_calls,
         searcher.agent.param_uploads

@@ -375,6 +375,175 @@ impl AccMemo {
         }
     }
 
+    /// Batch single-flight lookup-or-compute: the whole-batch extension of
+    /// [`AccMemo::get_or_compute`], the protocol behind
+    /// `EnvCore::accuracy_batch`. Returns one `(value, was_cached)` pair per
+    /// input key, in input order (duplicate keys resolve to the same value).
+    ///
+    /// Under **one** write lock the caller walks every distinct key and
+    /// becomes the leader of *all* currently-unclaimed misses at once —
+    /// `compute` then receives exactly that miss list (cache hits and keys
+    /// another thread already has in flight shrink the batch) and must
+    /// return one value per miss, which lets the computation amortize K
+    /// misses into one device execution. Keys found in flight are waited on
+    /// *after* our own compute finishes (racers coalesce per-key, exactly
+    /// as in the scalar protocol); a failed or panicking leader unpins
+    /// **every** key it claimed and wakes their waiters, so one batch
+    /// failure never wedges any key — a waiter (or a retry loop iteration
+    /// here) re-claims each failed key as a new, possibly smaller, batch.
+    ///
+    /// `compute` must not re-enter the memo for any of the keys it was
+    /// handed: they are claimed in-flight by the current thread and a
+    /// nested lookup would deadlock on itself.
+    ///
+    /// Hit/miss counters tick per *distinct* key per call: each resolved
+    /// distinct key counts one hit (cached/coalesced) or one miss (computed
+    /// here), matching one scalar `get_or_compute` per distinct key.
+    pub fn get_or_compute_batch<F>(&self, keys: &[Vec<u32>], mut compute: F)
+                                   -> Result<Vec<(f64, bool)>>
+    where
+        F: FnMut(&[Vec<u32>]) -> Result<Vec<f64>>,
+    {
+        /// Failure guard for a batch leader: while armed, dropping it
+        /// unpins every claimed key and wakes their waiters with "failed"
+        /// (the batch analogue of the scalar `UnpinOnDrop`).
+        struct UnpinBatchOnDrop<'a> {
+            memo: &'a AccMemo,
+            claimed: &'a [Vec<u32>],
+            armed: bool,
+        }
+        impl Drop for UnpinBatchOnDrop<'_> {
+            fn drop(&mut self) {
+                if !self.armed {
+                    return;
+                }
+                let mut m = self.memo.map.write().unwrap();
+                for k in self.claimed {
+                    // remove only our own in-flight entry; a concurrent
+                    // insert()/extend() may have published a Done value
+                    // (resolving our waiters), which must survive
+                    if matches!(m.get(k.as_slice()), Some(Slot::InFlight(_))) {
+                        if let Some(Slot::InFlight(f)) = m.remove(k.as_slice()) {
+                            f.finish(None);
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut out: Vec<Option<(f64, bool)>> = vec![None; keys.len()];
+        // Each round claims/coalesces every unresolved key; a round leaves
+        // keys unresolved only when another leader's flight failed, so the
+        // loop terminates (some thread makes progress on every failure).
+        while out.iter().any(Option::is_none) {
+            // fast prepass under the shared read lock: the steady state of
+            // a converged search is an all-hits slate and must not contend
+            // on the write lock or clone a single key (mirrors the scalar
+            // fast path). First occurrences only — duplicates copy below.
+            {
+                let m = self.map.read().unwrap();
+                for i in 0..keys.len() {
+                    if out[i].is_some() || keys[..i].contains(&keys[i]) {
+                        continue;
+                    }
+                    if let Some(Slot::Done { v, touched }) = m.get(keys[i].as_slice()) {
+                        self.touch(touched);
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        out[i] = Some((*v, true));
+                    }
+                }
+            }
+            for i in 0..keys.len() {
+                if out[i].is_none() {
+                    if let Some(j) = keys[..i].iter().position(|k| k == &keys[i]) {
+                        out[i] = out[j];
+                    }
+                }
+            }
+            if out.iter().all(Option::is_some) {
+                break;
+            }
+            let mut claimed: Vec<Vec<u32>> = Vec::new();
+            let mut flights: Vec<(usize, Arc<Flight>)> = Vec::new();
+            {
+                let mut m = self.map.write().unwrap();
+                for i in 0..keys.len() {
+                    if out[i].is_some() {
+                        continue;
+                    }
+                    // duplicate of an earlier unresolved key in this batch:
+                    // it resolves with that occurrence (leader or follower)
+                    if keys[..i].iter().enumerate().any(|(j, k)| out[j].is_none() && k == &keys[i])
+                    {
+                        continue;
+                    }
+                    match m.entry(keys[i].clone()) {
+                        std::collections::hash_map::Entry::Occupied(e) => match e.get() {
+                            Slot::Done { v, touched } => {
+                                self.touch(touched);
+                                self.hits.fetch_add(1, Ordering::Relaxed);
+                                out[i] = Some((*v, true));
+                            }
+                            Slot::InFlight(f) => flights.push((i, f.clone())),
+                        },
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            e.insert(Slot::InFlight(Arc::new(Flight::default())));
+                            claimed.push(keys[i].clone());
+                        }
+                    }
+                }
+            }
+            // leader work first: our claims must publish before we block on
+            // anyone else (no cycle — flights we wait on are owned by other
+            // threads that never wait on ours to finish *their* compute)
+            if !claimed.is_empty() {
+                self.misses.fetch_add(claimed.len() as u64, Ordering::Relaxed);
+                let mut guard = UnpinBatchOnDrop { memo: self, claimed: &claimed, armed: true };
+                let vals = compute(&claimed)?;
+                anyhow::ensure!(
+                    vals.len() == claimed.len(),
+                    "batch compute returned {} values for {} misses",
+                    vals.len(),
+                    claimed.len()
+                );
+                guard.armed = false;
+                let mut m = self.map.write().unwrap();
+                for (k, &v) in claimed.iter().zip(&vals) {
+                    if let Some(Slot::InFlight(f)) = m.insert(k.clone(), self.done(v)) {
+                        f.finish(Some(v));
+                    }
+                }
+                self.evict_excess(&mut m);
+                drop(m);
+                for (i, k) in keys.iter().enumerate() {
+                    if out[i].is_none() {
+                        if let Some(pos) = claimed.iter().position(|c| c == k) {
+                            out[i] = Some((vals[pos], false));
+                        }
+                    }
+                }
+            }
+            // followers: coalesce on the other leaders' flights; a failed
+            // flight leaves its key unresolved for the next round
+            for (i, f) in flights {
+                if let Some(v) = f.wait() {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    out[i] = Some((v, true));
+                }
+            }
+            // resolve duplicates against their first occurrence (the one
+            // that claimed or followed); still-None firsts retry next round
+            for i in 0..keys.len() {
+                if out[i].is_none() {
+                    if let Some(j) = keys[..i].iter().position(|k| k == &keys[i]) {
+                        out[i] = out[j];
+                    }
+                }
+            }
+        }
+        Ok(out.into_iter().map(|o| o.expect("all resolved")).collect())
+    }
+
     /// Insert an evaluated accuracy. Replacing another thread's in-flight
     /// entry resolves it with this value so its waiters wake instead of
     /// hanging.
@@ -629,6 +798,141 @@ mod tests {
         assert_eq!(unbounded.len(), 64);
         assert_eq!(unbounded.evictions(), 0);
         assert_eq!(unbounded.capacity(), 0);
+    }
+
+    #[test]
+    fn batch_partial_hits_shrink_the_compute() {
+        let memo = AccMemo::new();
+        memo.insert(&[1], 0.1);
+        memo.insert(&[3], 0.3);
+        // hits ([1], [3]) and an in-batch duplicate ([2] twice) must shrink
+        // the miss list handed to compute to the distinct misses, in order
+        let keys = vec![vec![1u32], vec![2], vec![3], vec![2], vec![4]];
+        let res = memo
+            .get_or_compute_batch(&keys, |misses| {
+                assert_eq!(misses, &[vec![2u32], vec![4]]);
+                Ok(vec![0.2, 0.4])
+            })
+            .unwrap();
+        assert_eq!(
+            res,
+            vec![(0.1, true), (0.2, false), (0.3, true), (0.2, false), (0.4, false)]
+        );
+        // everything is now cached: compute must not run at all
+        let res2 = memo
+            .get_or_compute_batch(&keys, |_| panic!("fully cached batch must not compute"))
+            .unwrap();
+        assert!(res2.iter().all(|&(_, cached)| cached));
+        assert_eq!(res2[4].0, 0.4);
+        assert_eq!(memo.len(), 4);
+    }
+
+    #[test]
+    fn batch_empty_and_singleton() {
+        let memo = AccMemo::new();
+        assert!(memo.get_or_compute_batch(&[], |_| unreachable!()).unwrap().is_empty());
+        let res = memo.get_or_compute_batch(&[vec![9u32]], |m| {
+            assert_eq!(m.len(), 1);
+            Ok(vec![0.9])
+        });
+        assert_eq!(res.unwrap(), vec![(0.9, false)]);
+    }
+
+    #[test]
+    fn batch_failed_leader_unpins_every_claimed_key() {
+        let memo = AccMemo::new();
+        memo.insert(&[1], 0.1);
+        let keys = vec![vec![1u32], vec![5], vec![6]];
+        let err = memo.get_or_compute_batch(&keys, |_| anyhow::bail!("device fell over"));
+        assert!(err.is_err());
+        // every claimed key must be unpinned and retryable; the hit is kept
+        assert!(!memo.contains(&[5]) && !memo.contains(&[6]));
+        assert!(memo.contains(&[1]));
+        let res = memo
+            .get_or_compute_batch(&keys, |misses| {
+                assert_eq!(misses, &[vec![5u32], vec![6]]);
+                Ok(vec![0.5, 0.6])
+            })
+            .unwrap();
+        assert_eq!(res[1], (0.5, false));
+        assert_eq!(res[2], (0.6, false));
+    }
+
+    #[test]
+    fn batch_panicking_leader_unpins_every_claimed_key() {
+        let memo = AccMemo::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = memo.get_or_compute_batch(&[vec![5u32], vec![6]], |_| panic!("boom"));
+        }));
+        assert!(r.is_err());
+        assert!(!memo.contains(&[5]) && !memo.contains(&[6]));
+        let res = memo
+            .get_or_compute_batch(&[vec![5u32], vec![6]], |m| {
+                Ok(m.iter().map(|k| k[0] as f64 / 10.0).collect())
+            })
+            .unwrap();
+        assert_eq!(res, vec![(0.5, false), (0.6, false)]);
+    }
+
+    #[test]
+    fn batch_wrong_compute_arity_is_an_error_not_a_wedge() {
+        let memo = AccMemo::new();
+        let err = memo.get_or_compute_batch(&[vec![5u32], vec![6]], |_| Ok(vec![0.5]));
+        assert!(err.is_err());
+        // the arity-check failure path must unpin like any other failure
+        assert!(!memo.contains(&[5]) && !memo.contains(&[6]));
+        assert!(memo
+            .get_or_compute_batch(&[vec![5u32], vec![6]], |_| Ok(vec![0.5, 0.6]))
+            .is_ok());
+    }
+
+    #[test]
+    fn batch_coalesces_with_scalar_inflight() {
+        // a scalar leader holds [7] in flight; a batch containing [7] must
+        // compute only its own miss and coalesce on the leader's value
+        let memo = Arc::new(AccMemo::new());
+        let m2 = memo.clone();
+        let leader = std::thread::spawn(move || {
+            m2.get_or_compute(&[7], || {
+                std::thread::sleep(std::time::Duration::from_millis(60));
+                Ok(0.7)
+            })
+            .unwrap()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        let res = memo
+            .get_or_compute_batch(&[vec![7u32], vec![8]], |misses| {
+                assert_eq!(misses, &[vec![8u32]], "in-flight key must not be re-claimed");
+                Ok(vec![0.8])
+            })
+            .unwrap();
+        assert_eq!(res, vec![(0.7, true), (0.8, false)]);
+        assert_eq!(leader.join().unwrap(), (0.7, false));
+    }
+
+    #[test]
+    fn concurrent_batches_compute_each_key_once() {
+        use std::sync::atomic::AtomicUsize;
+        let memo = Arc::new(AccMemo::new());
+        let computes = Arc::new(AtomicUsize::new(0));
+        // 8 threads race overlapping 4-key windows over 11 keys; the batch
+        // claims must partition the misses: every key computed exactly once
+        let shards: Vec<u32> = (0..8).collect();
+        run_sharded(shards, |_, s| {
+            let keys: Vec<Vec<u32>> = (s..s + 4).map(|k| vec![k]).collect();
+            let res = memo.get_or_compute_batch(&keys, |misses| {
+                computes.fetch_add(misses.len(), Ordering::Relaxed);
+                Ok(misses.iter().map(|k| k[0] as f64).collect())
+            })?;
+            for (i, (v, _)) in res.iter().enumerate() {
+                assert_eq!(*v, (s + i as u32) as f64);
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(computes.load(Ordering::Relaxed), 11, "each distinct key exactly once");
+        assert_eq!(memo.len(), 11);
+        assert_eq!(memo.misses(), 11);
     }
 
     #[test]

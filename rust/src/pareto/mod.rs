@@ -116,16 +116,45 @@ pub fn assignments(cfg: &EnumConfig, l: usize) -> (Vec<Vec<u32>>, bool) {
     (out, false)
 }
 
+/// Evaluate one contiguous run of assignments against the (shared-core)
+/// env. Batch-capable envs hand the **whole run** to `accuracy_batch` in
+/// one call, so the memo's batch protocol sees every assignment at once
+/// and repacks the actual misses into full-width chunks — pre-chunking
+/// here would pad every group whose hits are scattered through a
+/// partially warm memo (e.g. fig6 follow-up scoring). Width-1 envs keep
+/// per-point scalar queries: `accuracy_batch` would fan their misses
+/// across shard threads, nesting a pool under `enumerate_sharded`'s own
+/// workers. Points come back in assignment order.
+fn eval_points(env: &QuantEnv, assigns: &[Vec<u32>]) -> Result<Vec<Point>> {
+    if env.eval_batch_width() > 1 {
+        let accs = env.accuracy_batch(assigns)?;
+        return Ok(assigns
+            .iter()
+            .zip(accs)
+            .map(|(bits, acc)| Point {
+                state_q: env.state_q(bits),
+                state_acc: env.state_acc_of(acc),
+                bits: bits.clone(),
+            })
+            .collect());
+    }
+    assigns
+        .iter()
+        .map(|bits| {
+            Ok(Point {
+                state_q: env.state_q(bits),
+                state_acc: env.state_acc(bits)?,
+                bits: bits.clone(),
+            })
+        })
+        .collect()
+}
+
 /// Evaluate the space through the environment (short-retrain accuracy).
 /// Returns (points, exhaustive?).
 pub fn enumerate(env: &QuantEnv, cfg: &EnumConfig) -> Result<(Vec<Point>, bool)> {
     let (assigns, exhaustive) = assignments(cfg, env.net.l);
-    let mut points = Vec::with_capacity(assigns.len());
-    for bits in assigns {
-        let state_acc = env.state_acc(&bits)?;
-        points.push(Point { state_q: env.state_q(&bits), state_acc, bits });
-    }
-    Ok((points, exhaustive))
+    Ok((eval_points(env, &assigns)?, exhaustive))
 }
 
 /// Sharded enumeration over a **shared-core env**: split the assignment list
@@ -146,19 +175,20 @@ pub fn enumerate(env: &QuantEnv, cfg: &EnumConfig) -> Result<(Vec<Point>, bool)>
 /// The memo stays warm on the caller's env afterwards — score follow-up
 /// points (e.g. a stored ReLeQ solution, `exp::figs::fig6`) on the same env
 /// without re-running their retrains.
+///
+/// Each shard megabatches its contiguous chunk (`eval_points`): its
+/// uncached assignments repack into full `eval_batch_k`-lane executions —
+/// one device execution per 8 points at the default width instead of one
+/// per point — and the batch single-flight protocol keeps duplicate
+/// sampled assignments racing across shards down to one evaluation each.
+/// Batch size, not shard count, is the first-order throughput lever
+/// (EXPERIMENTS.md §Perf 7).
 pub fn enumerate_sharded(env: &QuantEnv, cfg: &EnumConfig, n_shards: usize)
                          -> Result<(Vec<Point>, bool)> {
     let (assigns, exhaustive) = assignments(cfg, env.net.l);
     let n_shards = n_shards.clamp(1, assigns.len().max(1));
     let chunks = parallel::chunk_evenly(assigns, n_shards);
-    let per_shard = parallel::run_sharded(chunks, |_, chunk| {
-        let mut points = Vec::with_capacity(chunk.len());
-        for bits in chunk {
-            let state_acc = env.state_acc(&bits)?;
-            points.push(Point { state_q: env.state_q(&bits), state_acc, bits });
-        }
-        Ok(points)
-    })?;
+    let per_shard = parallel::run_sharded(chunks, |_, chunk| eval_points(env, &chunk))?;
     Ok((per_shard.into_iter().flatten().collect(), exhaustive))
 }
 

@@ -90,6 +90,7 @@ pub mod tests_support {
             train_batch: 1,
             eval_batch: 1,
             fused_k: 4,
+            eval_batch_k: 0,
             train_size: 64,
             dataset: "none".into(),
             layers,

@@ -121,6 +121,47 @@ impl DeviceBuf {
     }
 }
 
+/// Reusable host-side staging buffer for operands assembled fresh on every
+/// execution — the K×L candidate-bits matrix and K-lane cursor vector of
+/// the batched accuracy query. The allocation survives across executions
+/// (cleared, capacity retained), so the K-ary hot path stages thousands of
+/// uploads with zero steady-state heap churn.
+///
+/// On *device*-side reuse: PJRT input donation (aliasing an input buffer
+/// into an output) is not exposed by the vendored `xla` binding, and the
+/// staged operands here are tiny (K×L f32s) next to the resident train/val
+/// sets, so the per-execution host→device transfer is the whole cost — and
+/// it is negligible against the execution itself (EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct Stage {
+    buf: Vec<f32>,
+}
+
+impl Stage {
+    pub fn new() -> Stage {
+        Stage::default()
+    }
+
+    /// Clear and hand out the staging vector for refilling. Capacity from
+    /// previous executions is retained.
+    pub fn start(&mut self) -> &mut Vec<f32> {
+        self.buf.clear();
+        &mut self.buf
+    }
+
+    /// Upload the staged contents as a device buffer of logical shape
+    /// `dims` (must cover the staged length exactly).
+    pub fn upload(&self, engine: &Engine, dims: &[usize]) -> Result<DeviceBuf> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(
+            n == self.buf.len(),
+            "staged {} f32s but shape {dims:?} wants {n}",
+            self.buf.len()
+        );
+        engine.buffer_f32(&self.buf, dims)
+    }
+}
+
 /// An immutable host literal that may be shared across shard threads (e.g.
 /// the validation-set operands held by the shared env core).
 ///
@@ -279,5 +320,18 @@ mod tests {
         assert_send_sync::<DeviceBuf>();
         assert_send_sync::<Arc<Engine>>();
         assert_send_sync::<Arc<Exe>>();
+        assert_send_sync::<std::sync::Mutex<Stage>>();
+    }
+
+    #[test]
+    fn stage_clears_but_keeps_capacity() {
+        let mut s = Stage::new();
+        s.start().extend_from_slice(&[1.0; 64]);
+        let cap = {
+            let b = s.start();
+            assert!(b.is_empty(), "start() must clear the previous staging");
+            b.capacity()
+        };
+        assert!(cap >= 64, "capacity must survive restaging");
     }
 }

@@ -40,6 +40,12 @@ pub struct NetworkMeta {
     pub eval_batch: usize,
     /// SGD steps baked into the fused `<net>_retrain_eval` artifact
     pub fused_k: usize,
+    /// candidate bits lanes baked into `<net>_retrain_eval_batch` (the
+    /// megabatch accuracy evaluator: one execution scores up to this many
+    /// bitwidth vectors). 0 = no batch artifact; manifests predating the
+    /// batched evaluator fall back to 0, so the runtime degrades to the
+    /// scalar fused path instead of demanding a missing file.
+    pub eval_batch_k: usize,
     /// resident training-set size baked into the fused artifact
     pub train_size: usize,
     pub dataset: String,
@@ -143,6 +149,10 @@ impl Manifest {
                 train_batch: nj.u("train_batch"),
                 eval_batch: nj.u("eval_batch"),
                 fused_k: nj.u("fused_k"),
+                eval_batch_k: nj
+                    .get("eval_batch_k")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0),
                 train_size: nj.u("train_size"),
                 dataset: nj.s("dataset").to_string(),
                 layers,
@@ -206,5 +216,21 @@ mod tests {
         assert!(m.agent.p_lstm > m.agent.p_fc);
         // the AOT compiler bakes the lockstep lane count = the PPO batch
         assert_eq!(m.agent.act_batch, m.agent.episodes_per_update);
+        // the megabatch evaluator rides the fused family: a batch artifact
+        // implies a fused one (holds for stale manifests too, where the
+        // eval_batch_k fallback reads 0 everywhere)
+        for net in &m.networks {
+            assert!(net.eval_batch_k == 0 || net.fused_k > 0, "{}", net.name);
+        }
+        if lenet.eval_batch_k == 0 {
+            // pre-megabatch artifacts are a supported configuration (the
+            // runtime degrades to the scalar paths); only the coupling
+            // above is checkable against them
+            eprintln!("note: artifacts predate the megabatch evaluator — re-run `make artifacts`");
+        } else {
+            for net in &m.networks {
+                assert_eq!(net.eval_batch_k > 0, net.fused_k > 0, "{}", net.name);
+            }
+        }
     }
 }

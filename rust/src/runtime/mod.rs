@@ -4,5 +4,5 @@
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, HostLit};
+pub use engine::{lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, HostLit, Stage};
 pub use manifest::{AgentMeta, LayerMeta, Manifest, NetworkMeta};

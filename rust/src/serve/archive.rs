@@ -53,8 +53,11 @@ pub fn env_fingerprint(net: &str, bits_max: u32, cfg: &EnvConfig) -> u64 {
         .write_f64(cfg.lr as f64)
         .write_u64(cfg.train_size as u64)
         .write_u64(cfg.seed);
-    // memo_cap is deliberately excluded: it bounds the cache, it does not
-    // change any accuracy value.
+    // memo_cap and eval_batch are deliberately excluded: one bounds the
+    // cache, the other shapes execution batches — neither changes any
+    // accuracy value (batched lanes are bit-identical to the scalar path;
+    // rust/tests/eval_batch_parity.rs), so jobs differing only in those
+    // knobs share a session and an archive key.
     h.finish()
 }
 

@@ -16,6 +16,14 @@
 //! archive's records for the same (network, env fingerprint) — accuracy is
 //! a pure function of (env config, bits), so entries computed by an
 //! earlier process are valid verbatim.
+//!
+//! Concurrent jobs on one session also share the **megabatch accuracy
+//! evaluator**: every job's per-step candidate slate goes through the
+//! session memo's batch single-flight protocol, so overlapping candidates
+//! coalesce onto whichever job's batch claimed them first and the distinct
+//! remainder is scored K lanes per device execution
+//! (`EnvCore::accuracy_batch`; amortization visible in `/v1/stats` as
+//! `eval_batch_execs` / `batched_candidates` / `pad_lanes`).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -165,6 +173,9 @@ impl SessionCache {
                             ("cache_hits", Json::Num(s.cache_hits as f64)),
                             ("train_execs", Json::Num(s.train_execs as f64)),
                             ("eval_execs", Json::Num(s.eval_execs as f64)),
+                            ("eval_batch_execs", Json::Num(s.eval_batch_execs as f64)),
+                            ("batched_candidates", Json::Num(s.batched_candidates as f64)),
+                            ("pad_lanes", Json::Num(s.pad_lanes as f64)),
                             ("memo_len", Json::Num(s.memo_len as f64)),
                             ("memo_hits", Json::Num(s.memo_hits as f64)),
                             ("memo_misses", Json::Num(s.memo_misses as f64)),
@@ -236,9 +247,10 @@ impl JobRunner for SessionRunner {
             }
             Ok(env)
         })?;
-        // memo_cap is deliberately outside the env fingerprint (it bounds
-        // the cache, it doesn't change accuracy values), so a job joining
-        // an existing session keeps the session's bound — surface that
+        // memo_cap and eval_batch are deliberately outside the env
+        // fingerprint (one bounds the cache, the other shapes execution
+        // batches; neither changes accuracy values), so a job joining an
+        // existing session keeps the session's settings — surface that
         // instead of silently dropping the request
         if env.memo().capacity() != spec.cfg.env.memo_cap {
             eprintln!(
@@ -247,6 +259,20 @@ impl JobRunner for SessionRunner {
                 job.id,
                 spec.cfg.env.memo_cap,
                 env.memo().capacity()
+            );
+        }
+        // compare *resolved* widths, not raw knob values: eval_batch = 0
+        // and an explicit eval_batch = 8 both resolve to the artifact's
+        // baked width, and warning that 8 was "ignored" in favor of 8
+        // would just confuse the operator
+        if env.eval_batch_width() != env.eval_batch_width_for(spec.cfg.env.eval_batch) {
+            eprintln!(
+                "[serve] job {}: eval_batch {} ignored — session evaluates at width {} \
+                 (set at session creation); concurrent jobs coalesce their accuracy \
+                 misses into that session's shared megabatches regardless",
+                job.id,
+                spec.cfg.env.eval_batch,
+                env.eval_batch_width()
             );
         }
         // a cancel during pretraining stops before the search starts

@@ -45,6 +45,7 @@ fn rand_net(g: &mut releq::testing::Gen) -> NetworkMeta {
         train_batch: 8,
         eval_batch: 8,
         fused_k: 4,
+        eval_batch_k: 0,
         train_size: 64,
         dataset: "cifar_syn".into(),
         layers,

@@ -1,0 +1,329 @@
+//! Parity and accounting tests for the megabatch accuracy evaluator
+//! (ISSUE 4 acceptance criteria):
+//!
+//! * batched accuracy is **bit-identical** to the serial per-candidate path
+//!   for the same bits vectors, at any effective batch width (including
+//!   short final chunks whose pad lanes are discarded);
+//! * the batch single-flight protocol claims whole miss-sets and unpins
+//!   every claimed key on a failed leader (stub tier — runs without
+//!   artifacts);
+//! * a slate of `m` uncached candidates costs exactly `ceil(m / K)`
+//!   retrain_eval-family executions, pinned via the engine's per-artifact
+//!   exec counters — the accuracy_batch call below is precisely what the
+//!   lockstep rollout driver issues once per step with its dedup'd
+//!   candidate slate, so this pins the per-step rollout accounting too;
+//! * a full batched search returns identical results with batching on or
+//!   off (batching is purely a throughput lever).
+//!
+//! Artifact-dependent tests skip themselves (with a note) when the AOT
+//! artifacts are missing, like the other integration suites.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use releq::coordinator::{EnvConfig, QuantEnv, RolloutMode, SearchConfig, Searcher};
+use releq::parallel::{run_sharded, AccMemo};
+use releq::runtime::{Engine, Manifest};
+
+fn bringup() -> Option<(Manifest, Arc<Engine>)> {
+    let dir = releq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    if manifest.network("lenet").unwrap().eval_batch_k == 0 {
+        eprintln!("skipping: artifacts predate the megabatch evaluator — re-run `make artifacts`");
+        return None;
+    }
+    let engine = Arc::new(Engine::new(dir).unwrap());
+    Some((manifest, engine))
+}
+
+fn fast_env_cfg(eval_batch: usize) -> EnvConfig {
+    let mut cfg = EnvConfig::default();
+    cfg.pretrain_steps = 40;
+    cfg.eval_batch = eval_batch;
+    cfg
+}
+
+fn lenet_env(manifest: &Manifest, engine: &Arc<Engine>, eval_batch: usize) -> QuantEnv {
+    let net = manifest.network("lenet").unwrap();
+    QuantEnv::new(
+        engine.clone(),
+        net,
+        manifest.bits_max,
+        manifest.fp_bits,
+        fast_env_cfg(eval_batch),
+    )
+    .unwrap()
+}
+
+/// `n` distinct bits vectors for an L-layer net (odometer over 2..=8).
+fn fresh_vectors(l: usize, n: usize) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|mut i| {
+            (0..l)
+                .map(|_| {
+                    let b = 2 + (i % 7) as u32;
+                    i /= 7;
+                    b
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Stub tier (no artifacts needed): the batch protocol under concurrency.
+/// Racing overlapping batches must compute every distinct key exactly once,
+/// and a failing leader must unpin its whole claimed set so the keys stay
+/// retryable by everyone else.
+#[test]
+fn batch_claims_and_unpins_under_concurrency() {
+    let memo = Arc::new(AccMemo::new());
+    let computes = Arc::new(AtomicUsize::new(0));
+    let failures_left = Arc::new(AtomicUsize::new(3));
+    // 8 threads, each batching an overlapping 5-key window over 12 keys;
+    // the first 3 leader computations fail wholesale
+    run_sharded((0..8u32).collect::<Vec<_>>(), |_, s| {
+        let keys: Vec<Vec<u32>> = (s..s + 5).map(|k| vec![k, k + 1]).collect();
+        // retry until a round of leaders succeeds (failed leaders unpin, so
+        // progress is guaranteed once failures_left drains)
+        loop {
+            let res = memo.get_or_compute_batch(&keys, |misses| {
+                if failures_left
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+                    .is_ok()
+                {
+                    anyhow::bail!("injected batch failure");
+                }
+                computes.fetch_add(misses.len(), Ordering::SeqCst);
+                Ok(misses.iter().map(|k| k[0] as f64).collect())
+            });
+            match res {
+                Ok(vals) => {
+                    for (i, (v, _)) in vals.iter().enumerate() {
+                        assert_eq!(*v, (s + i as u32) as f64);
+                    }
+                    return Ok(());
+                }
+                Err(_) => continue,
+            }
+        }
+    })
+    .unwrap();
+    // every key resolved exactly once across all successful leaders
+    assert_eq!(memo.len(), 12);
+    assert_eq!(computes.load(Ordering::SeqCst), 12, "each distinct key computed once");
+    assert_eq!(failures_left.load(Ordering::SeqCst), 0, "injected failures all fired");
+}
+
+/// Batched accuracy must be bit-identical to the serial per-candidate path
+/// at any effective width — including widths that leave short final chunks
+/// (pad lanes) and in-slate duplicates.
+#[test]
+fn batched_accuracy_bit_identical_to_serial_any_width() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let l = manifest.network("lenet").unwrap().l;
+    let mut slate = fresh_vectors(l, 13);
+    slate.push(slate[2].clone()); // duplicate inside the slate
+
+    // serial reference: eval_batch = 1 disables batching entirely
+    let serial_env = lenet_env(&manifest, &engine, 1);
+    assert_eq!(serial_env.eval_batch_width(), 1);
+    let reference: Vec<f64> =
+        slate.iter().map(|b| serial_env.accuracy(b).unwrap()).collect();
+    assert_eq!(serial_env.stats().eval_batch_execs, 0, "width 1 must never batch");
+
+    for width in [0usize, 2, 3] {
+        let env = lenet_env(&manifest, &engine, width);
+        assert!(env.eval_batch_width() > 1, "lenet must expose the batch artifact");
+        let got = env.accuracy_batch(&slate).unwrap();
+        assert_eq!(got.len(), slate.len());
+        for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+            assert!(
+                g == r,
+                "slate[{i}] diverged at width {width}: batched {g} vs serial {r}"
+            );
+        }
+        let stats = env.stats();
+        assert!(stats.eval_batch_execs > 0, "width {width} must actually batch");
+        // 13 distinct candidates in chunks of `width` (lone remainders take
+        // the scalar path and never pad)
+        let w = env.eval_batch_width();
+        let full = 13 / w;
+        let rem = 13 % w;
+        let expect_batched = full + usize::from(rem > 1);
+        assert_eq!(stats.eval_batch_execs, expect_batched as u64);
+        let expect_pads = if rem > 1 { env.net.eval_batch_k - rem } else { 0 }
+            + (env.net.eval_batch_k - w) * full;
+        assert_eq!(stats.pad_lanes, expect_pads as u64, "width {width}");
+    }
+
+    // and the memoized values replay identically through the scalar entry
+    let env = lenet_env(&manifest, &engine, 0);
+    let batched: Vec<f64> = env.accuracy_batch(&slate).unwrap();
+    for (b, r) in slate.iter().zip(&batched) {
+        assert_eq!(env.accuracy(b).unwrap(), *r);
+    }
+}
+
+/// The unfused (per-step literals) path must agree with the fused monolith
+/// bit-for-bit: `accuracy_unfused` publishes into the same memo that fused
+/// and batched callers read (its pre-megabatch cache bypass is gone), so a
+/// ULP divergence between the two XLA programs would let an unfused probe
+/// poison the "accuracy is a pure function of the bits" invariant. The
+/// final accuracy is an argmax-match *count* over the eval batch divided
+/// by a constant, which is what makes exact equality achievable across
+/// separately compiled programs — this test is the tripwire if XLA ever
+/// breaks that.
+#[test]
+fn unfused_path_matches_fused_bit_identical() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let net = manifest.network("lenet").unwrap();
+    let vectors = fresh_vectors(net.l, 6);
+
+    // separate envs so neither path can serve the other's memoized value
+    let fused_env = lenet_env(&manifest, &engine, 1);
+    let unfused_env = lenet_env(&manifest, &engine, 1);
+    for (i, bits) in vectors.iter().enumerate() {
+        let fused = fused_env.accuracy(bits).unwrap();
+        let unfused = unfused_env.accuracy_unfused(bits).unwrap();
+        assert!(
+            fused == unfused,
+            "vector {i}: fused {fused} vs unfused {unfused} — the memoized-unfused \
+             path would poison fused callers sharing this core"
+        );
+        // the published unfused value is served verbatim to fused callers
+        assert_eq!(unfused_env.accuracy(bits).unwrap(), unfused);
+    }
+}
+
+/// Exec accounting: a slate with `m` uncached candidates costs exactly
+/// `ceil(m / K)` retrain_eval-family executions — pinned via the engine's
+/// per-artifact counters, cross-checked against the env's own
+/// `eval_batch_execs` / `batched_candidates` / `pad_lanes`. This call shape
+/// (one `accuracy_batch` per dedup'd candidate slate) is exactly what the
+/// lockstep rollout driver pays per step.
+#[test]
+fn step_exec_accounting_is_ceil_misses_over_k() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let net = manifest.network("lenet").unwrap();
+    let env = lenet_env(&manifest, &engine, 0);
+    let k = env.eval_batch_width();
+    assert_eq!(k, net.eval_batch_k, "default eval_batch must resolve to the baked width");
+    let scalar_exe = engine.exe("lenet_retrain_eval").unwrap();
+    let batch_exe = engine.exe("lenet_retrain_eval_batch").unwrap();
+    let scalar0 = scalar_exe.exec_count();
+    assert_eq!(batch_exe.exec_count(), 0, "bring-up must not touch the batch artifact");
+
+    let vectors = fresh_vectors(net.l, 3 * k + 5);
+
+    // step 1: m = k misses -> exactly one batched execution, zero pads
+    let step1: Vec<Vec<u32>> = vectors[..k].to_vec();
+    env.accuracy_batch(&step1).unwrap();
+    assert_eq!(batch_exe.exec_count(), 1);
+    assert_eq!(scalar_exe.exec_count(), scalar0);
+    let s = env.stats();
+    assert_eq!((s.eval_batch_execs, s.batched_candidates, s.pad_lanes), (1, k as u64, 0));
+
+    // step 2: m = k + 3 misses, 2 cached hits mixed in -> the hits shrink
+    // the batch and ceil((k+3)/k) = 2 executions (the 3-lane remainder pads)
+    let mut step2: Vec<Vec<u32>> = vectors[k..2 * k + 3].to_vec();
+    step2.insert(1, vectors[0].clone()); // cached
+    step2.insert(5, vectors[2].clone()); // cached
+    env.accuracy_batch(&step2).unwrap();
+    assert_eq!(batch_exe.exec_count(), 3, "k + 3 misses = 1 full + 1 padded execution");
+    assert_eq!(scalar_exe.exec_count(), scalar0);
+    let s = env.stats();
+    assert_eq!(s.eval_batch_execs, 3);
+    assert_eq!(s.batched_candidates, (2 * k + 3) as u64);
+    assert_eq!(s.pad_lanes, (k - 3) as u64);
+
+    // step 3: m = k + 1 -> ceil = 2: one batched + the lone remainder on
+    // the scalar fused path (one execution either way, no pad compute)
+    let step3: Vec<Vec<u32>> = vectors[2 * k + 3..3 * k + 4].to_vec();
+    env.accuracy_batch(&step3).unwrap();
+    assert_eq!(batch_exe.exec_count(), 4);
+    assert_eq!(scalar_exe.exec_count(), scalar0 + 1, "lone remainder takes the scalar path");
+
+    // a fully cached step costs zero executions of either artifact
+    env.accuracy_batch(&step1).unwrap();
+    assert_eq!(batch_exe.exec_count(), 4);
+    assert_eq!(scalar_exe.exec_count(), scalar0 + 1);
+}
+
+/// Concurrent batches over one shared core: racing overlapping slates must
+/// still evaluate every distinct vector exactly once (the batch claims
+/// partition the misses), keeping the train-exec invariant of
+/// `rollout_parity::sharded_enumeration_pretrains_once` under batching.
+#[test]
+fn concurrent_batches_share_one_evaluation_per_vector() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let net = manifest.network("lenet").unwrap();
+    let env = lenet_env(&manifest, &engine, 0);
+    let cfg_retrain = env.cfg.retrain_steps as u64;
+    let bringup_execs = env.stats().train_execs;
+    let distinct0 = env.cache_len() as u64;
+
+    let vectors = fresh_vectors(net.l, 24);
+    let results = run_sharded((0..6usize).collect::<Vec<_>>(), |_, s| {
+        // overlapping windows of 12 over the 24 vectors
+        let slate: Vec<Vec<u32>> = vectors[s * 2..s * 2 + 12].to_vec();
+        env.accuracy_batch(&slate)
+    })
+    .unwrap();
+    // every thread observes identical values for shared vectors
+    for (s, vals) in results.iter().enumerate() {
+        for (i, v) in vals.iter().enumerate() {
+            let serial = env.accuracy(&vectors[s * 2 + i]).unwrap();
+            assert_eq!(*v, serial, "thread {s} lane {i}");
+        }
+    }
+    let distinct = env.cache_len() as u64 - distinct0;
+    assert_eq!(distinct, 22, "6 windows of 12 over 24 vectors touch 22 distinct");
+    assert_eq!(
+        env.stats().train_execs - bringup_execs,
+        distinct * cfg_retrain,
+        "each distinct vector retrained exactly once across all racing batches"
+    );
+}
+
+/// End-to-end: a lockstep batched search is bit-identical with batching on
+/// or off — same episodes, rewards and solution — while the batched run
+/// replaces per-miss executions with megabatches (visible in the counters).
+#[test]
+fn batched_search_invariant_under_eval_batch() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let mut base = SearchConfig::default();
+    base.episodes = 24;
+    base.env.pretrain_steps = 40;
+    base.patience = 0;
+    base.seed = 91;
+    base.rollout = RolloutMode::Batched;
+    let net = manifest.network("lenet").unwrap();
+
+    let run = |eval_batch: usize| {
+        let mut cfg = base.clone();
+        cfg.env.eval_batch = eval_batch;
+        let mut s = Searcher::new(engine.clone(), &manifest, net, cfg).unwrap();
+        let r = s.run().unwrap();
+        (r, s.env.stats())
+    };
+    let (serial, serial_stats) = run(1);
+    let (batched, batched_stats) = run(0);
+
+    assert_eq!(serial.bits, batched.bits, "solutions diverged");
+    assert_eq!(serial.log.rewards(), batched.log.rewards(), "trajectories diverged");
+    for (a, b) in serial.log.episodes.iter().zip(&batched.log.episodes) {
+        assert_eq!(a.bits, b.bits, "episode {} bits diverged", a.episode);
+        assert_eq!(a.state_acc, b.state_acc, "episode {} state_acc diverged", a.episode);
+    }
+    assert!((serial.acc_final - batched.acc_final).abs() == 0.0);
+
+    assert_eq!(serial_stats.eval_batch_execs, 0);
+    assert!(batched_stats.eval_batch_execs > 0, "the batched run must megabatch");
+    // identical accuracy work per real lane no matter the batching
+    assert_eq!(serial_stats.train_execs, batched_stats.train_execs);
+    assert_eq!(serial_stats.eval_execs, batched_stats.eval_execs);
+}
