@@ -47,6 +47,23 @@ fn main() {
         "batched search should spend scalar acts only on greedy rollouts"
     );
 
+    // §Perf 8: the async pipeline. Multi-chunk runs (24 episodes = 3 PPO
+    // batches) so the double-buffered hand-off between chunks actually
+    // fires; depth 0 is the synchronous reference, depths 2/4 overlap the
+    // next chunk's first-layer act_batch + speculative accuracy slate with
+    // this chunk's host work. Same seed everywhere — results are
+    // bit-identical (pipeline_parity.rs); only wall-clock may move.
+    let mut pcfg = cfg.clone();
+    pcfg.rollout = RolloutMode::Batched;
+    pcfg.episodes = 24;
+    for (label, depth) in [("pipeline_off", 0usize), ("pipeline_2", 2), ("pipeline_4", 4)] {
+        pcfg.pipeline = depth;
+        let mut s = Searcher::new(engine.clone(), &manifest, net, pcfg.clone()).unwrap();
+        b.case(&format!("24_episodes_3_updates/{label}"), || {
+            let _ = s.run().unwrap();
+        });
+    }
+
     // §Perf: 4 independent replicas, sequential loop vs the sharded driver
     // over ONE shared pretrained env core; RELEQ_SHARDS=1 on a single-core
     // runner collapses the sharding but keeps the single pretrain

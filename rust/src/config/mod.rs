@@ -136,6 +136,7 @@ fn apply_kv(cfg: &mut SearchConfig, k: &str, v: &Val) -> Result<()> {
         "action_space" => cfg.action_space = ActionSpace::parse(v.str(k)?)?,
         "rollout" => cfg.rollout = RolloutMode::parse(v.str(k)?)?,
         "lanes" => cfg.lanes = v.num(k)? as usize,
+        "pipeline" => cfg.pipeline = v.num(k)? as usize,
         "eval_every_step" => cfg.eval_every_step = v.bool(k)?,
         "min_bits" => cfg.min_bits = v.num(k)? as u32,
         "patience" => cfg.patience = v.num(k)? as usize,
@@ -201,6 +202,9 @@ pub fn apply_cli(cfg: &mut SearchConfig, args: &Args) -> Result<()> {
     }
     if let Some(v) = flag_num(args, "lanes")? {
         cfg.lanes = v;
+    }
+    if let Some(v) = flag_num(args, "pipeline")? {
+        cfg.pipeline = v;
     }
     if let Some(v) = flag_num(args, "eval-batch")? {
         cfg.env.eval_batch = v;
@@ -454,6 +458,26 @@ mod tests {
         )
         .unwrap();
         assert_eq!(spec.cfg.env.eval_batch, 8);
+    }
+
+    #[test]
+    fn pipeline_resolves_through_every_layer() {
+        // default: 0 = fully synchronous, dispatcher bypassed
+        assert_eq!(preset("lenet").pipeline, 0);
+        // CLI
+        let cfg = resolve("lenet", &args("search --rollout batched --pipeline 2")).unwrap();
+        assert_eq!(cfg.pipeline, 2);
+        assert!(resolve("lenet", &args("search --pipeline deep")).is_err());
+        // TOML and job-JSON share the key table
+        let mut via_toml = preset("lenet");
+        let doc = toml_lite::parse("[search]\npipeline = 4\n").unwrap();
+        apply_toml(&mut via_toml, doc.get("search").unwrap()).unwrap();
+        assert_eq!(via_toml.pipeline, 4);
+        let spec = job_from_json(
+            &Json::parse(r#"{"net": "lenet", "config": {"pipeline": 3}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.cfg.pipeline, 3);
     }
 
     #[test]

@@ -57,7 +57,7 @@ use anyhow::{Context, Result};
 use xla::Literal;
 
 use crate::data::{self, Split};
-use crate::parallel::{self, AccMemo};
+use crate::parallel::{self, AccMemo, SpecLedger};
 use crate::quant::CostModel;
 use crate::runtime::{
     lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, HostLit, NetworkMeta, Stage,
@@ -131,6 +131,15 @@ pub struct EnvStats {
     pub memo_hits: u64,
     pub memo_misses: u64,
     pub memo_evictions: u64,
+    /// candidate vectors the pipelined driver prefetched speculatively
+    /// (memo-warming only; see [`SpecLedger`]). Always
+    /// `spec_hits <= spec_submitted`; after a search has finished,
+    /// `spec_hits + spec_wasted == spec_submitted`.
+    pub spec_submitted: u64,
+    /// speculated vectors a rollout step subsequently evaluated for real
+    pub spec_hits: u64,
+    /// speculated vectors no consumer ever asked for
+    pub spec_wasted: u64,
 }
 
 /// Atomic backing store for [`EnvStats`]: the counters are bumped from
@@ -207,6 +216,9 @@ pub struct EnvCore {
     /// bits-vector -> validation accuracy; single-flight, shared by every
     /// clone of the env handle
     memo: Arc<AccMemo>,
+    /// speculative-prefetch bookkeeping (pipelined driver; shared by every
+    /// clone like the memo — counters surface through [`EnvStats`])
+    spec: SpecLedger,
     stats: EnvStatsAtomic,
     /// fp-bits sentinel from the manifest (>= this disables quantization)
     fp_bits: f32,
@@ -298,6 +310,7 @@ impl QuantEnv {
             acc_fullp: 0.0,
             acc_ref: 0.0,
             memo: Arc::new(AccMemo::with_capacity(memo_cap)),
+            spec: SpecLedger::new(),
             stats: EnvStatsAtomic::default(),
             fp_bits,
             bits_max,
@@ -321,15 +334,23 @@ impl EnvCore {
         &self.memo
     }
 
+    /// The speculative-prefetch ledger (shared by all handle clones).
+    pub fn spec(&self) -> &SpecLedger {
+        &self.spec
+    }
+
     /// Snapshot of the perf/cache counters (shared across all clones),
     /// merged with the accuracy memo's occupancy and hit/miss/eviction
-    /// counters.
+    /// counters and the speculation ledger's accounting.
     pub fn stats(&self) -> EnvStats {
         let mut s = self.stats.snapshot();
         s.memo_len = self.memo.len();
         s.memo_hits = self.memo.hits();
         s.memo_misses = self.memo.misses();
         s.memo_evictions = self.memo.evictions();
+        s.spec_submitted = self.spec.submitted();
+        s.spec_hits = self.spec.hits();
+        s.spec_wasted = self.spec.wasted();
         s
     }
 

@@ -5,12 +5,15 @@
 //!   accuracy evaluation through the AOT artifacts
 //! * [`reward`] — asymmetric reward shaping + the two ablation forms (§2.6)
 //! * [`ppo`] — PPO driver: trajectories, GAE, updates through HLO (§2.7)
-//! * [`rollout`] — lockstep batched rollouts over the shared env core
+//! * [`prefetch`] — speculative accuracy memo-warming on the dispatcher
+//! * [`rollout`] — lockstep batched rollouts over the shared env core,
+//!   optionally pipelined over a `runtime::Dispatcher`
 //! * [`search`] — the episode loop, convergence detection, final solution
 
 pub mod embedding;
 pub mod env;
 pub mod ppo;
+pub mod prefetch;
 pub mod reward;
 pub mod rollout;
 pub mod search;
@@ -18,6 +21,7 @@ pub mod search;
 pub use embedding::{embed, StaticFeatures, STATE_DIM};
 pub use env::{EnvConfig, EnvCore, EnvStats, QuantEnv};
 pub use ppo::{AgentKind, PpoAgent, PpoConfig, StepRecord, UpdateStats};
+pub use prefetch::Prefetcher;
 pub use reward::{RewardKind, RewardParams};
 pub use rollout::LaneRollout;
 pub use search::{

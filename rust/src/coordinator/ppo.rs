@@ -21,8 +21,12 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, Manifest};
+use crate::runtime::{
+    lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Dispatcher, Engine, Exe, HostLit,
+    Manifest, Pending,
+};
 use crate::util::rng::Pcg32;
+use xla::Literal;
 
 use super::embedding::STATE_DIM;
 
@@ -134,8 +138,10 @@ pub struct PpoAgent {
     pub params: Vec<f32>,
     /// device-resident copy of `params`; uploaded lazily on the first act
     /// after construction or an update, then reused for every act until the
-    /// next update invalidates it
-    params_buf: Option<DeviceBuf>,
+    /// next update invalidates it. `Arc` so an asynchronously dispatched
+    /// act_batch keeps the buffer alive even if an update invalidates this
+    /// slot while the execution is still in flight.
+    params_buf: Option<Arc<DeviceBuf>>,
     adam_m: Vec<f32>,
     adam_v: Vec<f32>,
     adam_t: f32,
@@ -222,7 +228,7 @@ impl PpoAgent {
     fn ensure_resident_params(&mut self) -> Result<()> {
         if self.params_buf.is_none() {
             self.params_buf =
-                Some(self.engine.buffer_f32(&self.params, &[self.params.len()])?);
+                Some(Arc::new(self.engine.buffer_f32(&self.params, &[self.params.len()])?));
             self.param_uploads += 1;
         }
         Ok(())
@@ -262,6 +268,38 @@ impl PpoAgent {
     /// lane states/hiddens transfer per call.
     pub fn act_batch(&mut self, states: &[f32], h: &[f32], c: &[f32])
                      -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (exe, params_buf, s_buf, h_buf, c_buf) = self.stage_act_batch(states, h, c)?;
+        let args = [params_buf.raw(), s_buf.raw(), h_buf.raw(), c_buf.raw()];
+        let out = exe.run_b(&args).context("agent act_batch")?;
+        self.act_batch_decode(&out)
+    }
+
+    /// Asynchronous [`PpoAgent::act_batch`]: stage the operands, hand the
+    /// execution to `disp`, and return immediately. The pipelined rollout
+    /// driver uses this to double-buffer the next chunk's first-layer
+    /// forward behind the current chunk's host work; decode the joined
+    /// result with [`PpoAgent::act_batch_take`]. Counts as an
+    /// `act_batch_calls` dispatch at submission (a discarded pending still
+    /// executed). Bit-identical to the synchronous call on the same
+    /// operands: same artifact, same device-resident params.
+    pub fn act_batch_submit(&mut self, states: &[f32], h: &[f32], c: &[f32],
+                            disp: &Dispatcher) -> Result<Pending<Vec<HostLit>>> {
+        let (exe, params_buf, s_buf, h_buf, c_buf) = self.stage_act_batch(states, h, c)?;
+        Ok(disp.submit(exe, vec![params_buf, Arc::new(s_buf), Arc::new(h_buf), Arc::new(c_buf)]))
+    }
+
+    /// Decode a joined [`PpoAgent::act_batch_submit`] result.
+    pub fn act_batch_take(&self, parts: &[HostLit])
+                          -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let refs: Vec<&Literal> = parts.iter().map(|l| l.raw()).collect();
+        self.act_batch_decode(&refs)
+    }
+
+    /// Shared staging for the sync and async act_batch paths: validate the
+    /// operand shapes, lazily compile the artifact, ensure the params are
+    /// device-resident, and upload the lane states/hiddens.
+    fn stage_act_batch(&mut self, states: &[f32], h: &[f32], c: &[f32])
+                       -> Result<(Arc<Exe>, Arc<DeviceBuf>, DeviceBuf, DeviceBuf, DeviceBuf)> {
         let b = self.act_lanes;
         anyhow::ensure!(
             states.len() == b * STATE_DIM && h.len() == b * self.hidden
@@ -287,14 +325,24 @@ impl PpoAgent {
         let s_buf = self.engine.buffer_f32(states, &[b, STATE_DIM])?;
         let h_buf = self.engine.buffer_f32(h, &[b, self.hidden])?;
         let c_buf = self.engine.buffer_f32(c, &[b, self.hidden])?;
-        let params_buf = self.params_buf.as_ref().expect("just ensured");
-        let exe = self.act_batch_exe.as_ref().expect("just ensured");
-        let args = [params_buf.raw(), s_buf.raw(), h_buf.raw(), c_buf.raw()];
-        let out = exe.run_b(&args).context("agent act_batch")?;
-        let probs = to_vec_f32(&out[0])?;
-        let values = to_vec_f32(&out[1])?;
-        let h2 = to_vec_f32(&out[2])?;
-        let c2 = to_vec_f32(&out[3])?;
+        Ok((
+            self.act_batch_exe.clone().expect("just ensured"),
+            self.params_buf.clone().expect("just ensured"),
+            s_buf,
+            h_buf,
+            c_buf,
+        ))
+    }
+
+    /// Shared output decode for the sync and async act_batch paths.
+    fn act_batch_decode<L: std::borrow::Borrow<Literal>>(&self, out: &[L])
+                        -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let b = self.act_lanes;
+        anyhow::ensure!(out.len() >= 4, "act_batch artifact returned too few outputs");
+        let probs = to_vec_f32(out[0].borrow())?;
+        let values = to_vec_f32(out[1].borrow())?;
+        let h2 = to_vec_f32(out[2].borrow())?;
+        let c2 = to_vec_f32(out[3].borrow())?;
         anyhow::ensure!(
             probs.len() == b * self.n_actions && values.len() == b,
             "act_batch artifact returned unexpected shapes"

@@ -1,0 +1,97 @@
+//! Speculative accuracy prefetch for the pipelined search driver.
+//!
+//! While the host runs PPO updates, action sampling and episode logging,
+//! the device can already be scoring the bitwidth vectors the *next*
+//! lockstep chunk is most likely to ask for. The [`Prefetcher`] takes a
+//! slate of candidate vectors (the driver derives them from the current
+//! chunk's lane policy probabilities — see
+//! `Searcher::top_prob_step0_candidates`), filters out everything already
+//! memoized or already speculated, and enqueues one
+//! `EnvCore::accuracy_batch` call on the [`Dispatcher`].
+//!
+//! **Memo-warming only.** The prefetch result values are discarded here;
+//! they land in the shared single-flight [`AccMemo`] exactly as a real
+//! evaluation would, and accuracy is a pure function of the bits vector —
+//! so a later real query observes a bit-identical value whether the
+//! speculation won the race, lost it (the real query's leader computes and
+//! the speculative one coalesces, or vice versa), or never happened.
+//! Speculation can waste device work, never change results
+//! (`rust/tests/pipeline_parity.rs`).
+//!
+//! **Budgeted.** The dispatcher's per-artifact in-flight cap bounds how
+//! many speculative batches may be outstanding; a refused dispatch rolls
+//! its ledger marks back and drops the slate (the driving loop must never
+//! stall on speculation). Accounting flows through the env's
+//! [`SpecLedger`]: `spec_submitted`/`spec_hits`/`spec_wasted` in
+//! `EnvStats`, the CLI report and `GET /v1/stats`. The ledger is shared
+//! per env core, so concurrent pipelined searches on one serve session may
+//! attribute each other's speculations (one job's `abandon` can count
+//! another's still-outstanding key as wasted) — hit counts are then
+//! conservative, but `hits <= submitted` and the post-quiescence balance
+//! `hits + wasted == submitted` hold regardless.
+
+use crate::parallel::SpecLedger;
+use crate::runtime::Dispatcher;
+
+use super::env::QuantEnv;
+
+/// Dispatcher tag for speculative accuracy slates (its in-flight cap is
+/// the speculation budget).
+pub const SPEC_TAG: &str = "accuracy_prefetch";
+
+pub struct Prefetcher<'a> {
+    env: QuantEnv,
+    disp: &'a Dispatcher,
+}
+
+impl<'a> Prefetcher<'a> {
+    pub fn new(env: QuantEnv, disp: &'a Dispatcher) -> Prefetcher<'a> {
+        Prefetcher { env, disp }
+    }
+
+    fn ledger(&self) -> &SpecLedger {
+        self.env.spec()
+    }
+
+    /// Enqueue `cands` for memo warming. Already-memoized and
+    /// already-outstanding vectors are skipped; if the dispatcher refuses
+    /// the slate (speculation budget exhausted) the ledger marks are rolled
+    /// back (`begin` counts at mark-time, `cancel` un-counts — a mark a
+    /// concurrent consumer claimed in between stays counted, see
+    /// [`SpecLedger`]). Returns how many vectors were actually submitted.
+    pub fn speculate(&self, cands: Vec<Vec<u32>>) -> usize {
+        let slate: Vec<Vec<u32>> = cands
+            .into_iter()
+            .filter(|c| !self.env.memo().contains(c))
+            .filter(|c| self.ledger().begin(c))
+            .collect();
+        if slate.is_empty() {
+            return 0;
+        }
+        let n = slate.len();
+        let env = self.env.clone();
+        let task_slate = slate.clone();
+        let submitted = self
+            .disp
+            .try_submit_with(SPEC_TAG, move || {
+                // values discarded: this call's only job is to publish into
+                // the shared memo (or coalesce with whoever beat us to it)
+                env.accuracy_batch(&task_slate).map(|_| ())
+            })
+            .is_some();
+        if submitted {
+            n
+        } else {
+            for c in &slate {
+                self.ledger().cancel(c);
+            }
+            0
+        }
+    }
+
+    /// End of the pipelined search: everything speculated but never claimed
+    /// is wasted.
+    pub fn abandon(&self) {
+        self.ledger().abandon();
+    }
+}

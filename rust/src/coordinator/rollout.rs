@@ -13,6 +13,31 @@
 //!    artifact fall back to fanning misses across shard threads inside the
 //!    same call).
 //!
+//! # Pipelining (`SearchConfig::pipeline` > 0)
+//!
+//! The synchronous driver leaves the device idle during every PPO update,
+//! greedy-convergence probe and episode-logging pass. The pipelined driver
+//! overlaps them through a `runtime::Dispatcher`:
+//!
+//! * **double-buffered chunks** — a fresh chunk's first-layer act_batch
+//!   operands are a pure function of the agent params (every lane starts at
+//!   uniform `bits_max`, `State_A = 1`, zero hidden state), so as soon as
+//!   the current chunk's *last* PPO update has run, the next chunk's
+//!   first-layer forward is submitted to the dispatcher and executes while
+//!   the host finishes logging and the greedy-convergence probe;
+//! * **speculative accuracy prefetch** — the current chunk's first-layer
+//!   policy probabilities nominate the top-`pipeline` most probable
+//!   first-step candidate vectors for the next chunk; a `Prefetcher`
+//!   enqueues them as one `accuracy_batch` memo-warming call (budgeted by
+//!   the dispatcher's in-flight cap, accounted in
+//!   `EnvStats::spec_{submitted,hits,wasted}`).
+//!
+//! Both are result-invariant: the act_batch is the same program on the same
+//! operands, and accuracy is a pure function of the bits vector published
+//! through the single-flight memo — so `pipeline = N` is bit-identical to
+//! `pipeline = 0` (enforced by `rust/tests/pipeline_parity.rs`), and
+//! `pipeline = 0` bypasses the dispatcher entirely.
+//!
 //! Equivalence with the serial driver: every episode samples from its own
 //! per-episode PCG stream (`Searcher::episode_rng`) and `EnvCore::accuracy`
 //! is a pure function of the bits vector, so a lanes=1 run replays the
@@ -25,13 +50,17 @@
 //! ~1e-5, so parity tests compare converged solutions, not raw
 //! trajectories: `rust/tests/rollout_parity.rs`).
 
+use std::collections::HashMap;
+
 use anyhow::Result;
 
 use crate::metrics::{EpisodeLog, SearchLog};
+use crate::runtime::{Dispatcher, HostLit, Pending};
 use crate::util::rng::Pcg32;
 
 use super::embedding::{embed, STATE_DIM};
 use super::ppo::{PpoAgent, StepRecord};
+use super::prefetch::Prefetcher;
 use super::search::{SearchCtl, SearchResult, Searcher};
 
 /// One episode lane's finished rollout.
@@ -41,11 +70,24 @@ pub struct LaneRollout {
     pub records: Vec<StepRecord>,
 }
 
+/// A pre-submitted first-layer act_batch for an upcoming chunk (the
+/// double-buffering handle): the lane count it was staged for plus the
+/// in-flight execution. Dropped unused (size mismatch, early convergence)
+/// it simply wastes one dispatch; the lockstep driver recomputes
+/// synchronously and results are unchanged.
+pub(super) struct ActPending {
+    n: usize,
+    pending: Pending<Vec<HostLit>>,
+}
+
 impl Searcher {
     /// Roll out `rngs.len()` training episodes in lockstep (lane `i` samples
     /// from `rngs[i]`). Lane count must not exceed the act_batch artifact's
     /// baked width; a single active lane takes the scalar `act` path.
-    pub(super) fn rollout_lockstep(&mut self, rngs: &mut [Pcg32]) -> Result<Vec<LaneRollout>> {
+    /// `pending0`, if provided and staged for exactly this lane count, is
+    /// joined in place of the layer-0 act_batch execution.
+    pub(super) fn rollout_lockstep(&mut self, rngs: &mut [Pcg32],
+                                   mut pending0: Option<ActPending>) -> Result<Vec<LaneRollout>> {
         let n = rngs.len();
         let l_total = self.env.net.l;
         let lanes = self.agent.act_lanes;
@@ -88,15 +130,39 @@ impl Searcher {
                 let (p, v, h2, c2) = self.agent.act(&lane_states[0], &hs[0], &cs[0])?;
                 (vec![p], vec![v], vec![h2], vec![c2])
             } else {
-                let mut states = vec![0.0f32; lanes * STATE_DIM];
-                let mut hcat = vec![0.0f32; lanes * hidden];
-                let mut ccat = vec![0.0f32; lanes * hidden];
-                for i in 0..n {
-                    states[i * STATE_DIM..(i + 1) * STATE_DIM].copy_from_slice(&lane_states[i]);
-                    hcat[i * hidden..(i + 1) * hidden].copy_from_slice(&hs[i]);
-                    ccat[i * hidden..(i + 1) * hidden].copy_from_slice(&cs[i]);
-                }
-                let (pf, vf, hf, cf) = self.agent.act_batch(&states, &hcat, &ccat)?;
+                // the double-buffered first-layer forward: join the
+                // pre-submitted execution if it was staged for exactly this
+                // chunk shape; its operands equal the ones packed below
+                // (layer-0 states are params-independent constants), so the
+                // result is bit-identical to the synchronous dispatch
+                let prefetched = match pending0.take() {
+                    Some(p) if l == 0 && p.n == n => match p.pending.wait() {
+                        Ok(parts) => Some(self.agent.act_batch_take(&parts)?),
+                        Err(e) => {
+                            // a failed speculative dispatch must not fail the
+                            // search: recompute synchronously (same values)
+                            eprintln!("[pipeline] prefetched act_batch failed ({e:#}); \
+                                       recomputing synchronously");
+                            None
+                        }
+                    },
+                    _ => None,
+                };
+                let (pf, vf, hf, cf) = match prefetched {
+                    Some(r) => r,
+                    None => {
+                        let mut states = vec![0.0f32; lanes * STATE_DIM];
+                        let mut hcat = vec![0.0f32; lanes * hidden];
+                        let mut ccat = vec![0.0f32; lanes * hidden];
+                        for i in 0..n {
+                            states[i * STATE_DIM..(i + 1) * STATE_DIM]
+                                .copy_from_slice(&lane_states[i]);
+                            hcat[i * hidden..(i + 1) * hidden].copy_from_slice(&hs[i]);
+                            ccat[i * hidden..(i + 1) * hidden].copy_from_slice(&cs[i]);
+                        }
+                        self.agent.act_batch(&states, &hcat, &ccat)?
+                    }
+                };
                 (
                     (0..n).map(|i| pf[i * n_actions..(i + 1) * n_actions].to_vec()).collect(),
                     vf[..n].to_vec(),
@@ -123,17 +189,31 @@ impl Searcher {
                 // batch protocol and the remaining misses cost
                 // ceil(misses / K) device executions (envs without the
                 // batch artifact fan the misses across shard threads
-                // inside `accuracy_batch` — the pre-megabatch behavior)
+                // inside `accuracy_batch` — the pre-megabatch behavior).
+                // First-occurrence order, indexed by a hash map so the
+                // dedup is O(n·L), not the old O(n²·L) linear rescans.
                 let mut cands: Vec<Vec<u32>> = Vec::with_capacity(n);
+                let mut pos_of: HashMap<Vec<u32>, usize> = HashMap::with_capacity(n);
+                let mut lane_pos: Vec<usize> = Vec::with_capacity(n);
                 for b in bits.iter().take(n) {
-                    if !cands.contains(b) {
+                    let next = cands.len();
+                    let pos = *pos_of.entry(b.clone()).or_insert(next);
+                    if pos == next {
                         cands.push(b.clone());
+                    }
+                    lane_pos.push(pos);
+                }
+                if self.cfg.pipeline > 0 {
+                    // speculation accounting: a speculated vector the search
+                    // actually evaluates is a hit (value served warm — or
+                    // coalesced with the still-in-flight speculative leader)
+                    for c in &cands {
+                        self.env.spec().claim(c);
                     }
                 }
                 let accs = self.env.accuracy_batch(&cands)?;
                 for i in 0..n {
-                    let pos = cands.iter().position(|c| c == &bits[i]).expect("deduped above");
-                    state_accs[i] = self.env.state_acc_of(accs[pos]);
+                    state_accs[i] = self.env.state_acc_of(accs[lane_pos[i]]);
                     rewards[i] = self.cfg.reward.reward(state_accs[i], state_qs[i]) as f32;
                 }
             }
@@ -161,6 +241,13 @@ impl Searcher {
     /// logging, update cadence, and greedy convergence detection as the
     /// serial driver. `ctl` is checked once per lockstep chunk (the batched
     /// equivalent of the serial driver's per-episode boundary).
+    ///
+    /// `cfg.pipeline = 0` runs fully synchronously (no dispatcher is ever
+    /// constructed); `pipeline > 0` runs the same episode loop with the
+    /// double-buffering hooks armed, plus ledger/pool cleanup on every exit
+    /// — success, error, or cancellation — so a shared serve-session ledger
+    /// is never left unbalanced and no device work outlives the search.
+    /// Results are bit-identical either way.
     pub(super) fn run_batched(&mut self, ctl: &SearchCtl) -> Result<SearchResult> {
         let lanes = if self.cfg.lanes == 0 {
             self.agent.act_lanes.min(self.cfg.ppo.episodes_per_update)
@@ -173,18 +260,80 @@ impl Searcher {
             self.agent.act_lanes
         );
         let mut log = SearchLog::default();
+        let mut episodes_run = 0usize;
+        if self.cfg.pipeline == 0 {
+            self.batched_episodes(ctl, lanes, None, &mut log, &mut episodes_run)?;
+        } else {
+            // two workers: one lane for the double-buffered act_batch, one
+            // for the speculative accuracy slate; the depth caps each
+            // artifact's in-flight dispatches (the speculation budget)
+            let disp = Dispatcher::new(2, self.cfg.pipeline);
+            let prefetcher = Prefetcher::new(self.env.clone(), &disp);
+            let looped = self.batched_episodes(
+                ctl,
+                lanes,
+                Some((&disp, &prefetcher)),
+                &mut log,
+                &mut episodes_run,
+            );
+            // tally never-claimed speculations as wasted and quiesce the
+            // pool on EVERY exit (a dropped pending's execution still
+            // completes under drain)
+            prefetcher.abandon();
+            disp.drain();
+            looped?;
+        }
+        ctl.check()?;
+        self.finalize(log, episodes_run)
+    }
+
+    /// The one episode-loop body behind both `pipeline` modes. The per-lane
+    /// processing (episode logging, `ctl` notification, `finish_episode`,
+    /// greedy-convergence breaks) is shared verbatim — the parity contract
+    /// between `pipeline = 0` and `pipeline = N` rests on there being
+    /// exactly one copy of it — and `pipeline` arms the only two additions:
+    /// joining a pre-submitted first-layer act_batch and handing the next
+    /// chunk's work to the dispatcher once this chunk's last PPO update has
+    /// run.
+    fn batched_episodes(&mut self, ctl: &SearchCtl, lanes: usize,
+                        pipeline: Option<(&Dispatcher, &Prefetcher)>, log: &mut SearchLog,
+                        episodes_run: &mut usize) -> Result<()> {
+        let epu = self.cfg.ppo.episodes_per_update;
         let mut stable_updates = 0usize;
         let mut last_greedy: Option<Vec<u32>> = None;
-        let mut episodes_run = 0usize;
+        let mut pending0: Option<ActPending> = None;
 
         let mut ep = 0usize;
         'episodes: while ep < self.cfg.episodes {
             ctl.check()?;
             let n = lanes.min(self.cfg.episodes - ep);
             let mut rngs: Vec<Pcg32> = (ep..ep + n).map(|e| self.episode_rng(e)).collect();
-            let batch = self.rollout_lockstep(&mut rngs)?;
+            let batch = self.rollout_lockstep(&mut rngs, pending0.take())?;
+            // the chunk's first-layer policy probabilities nominate the
+            // speculative candidates for the NEXT chunk's first step
+            // (collected up front — the lane loop consumes `batch`)
+            let probs0: Vec<Vec<f32>> = match pipeline {
+                Some(_) => {
+                    batch.iter().filter_map(|lane| lane.probs.first().cloned()).collect()
+                }
+                None => Vec::new(),
+            };
+            // the last lane whose finish_episode triggers a PPO update in
+            // this chunk (updates land exactly when the total number of
+            // finished episodes is a multiple of episodes_per_update);
+            // after it the params are final for the next chunk
+            let last_update_lane = (0..n).rev().find(|i| (ep + i + 1) % epu == 0);
+            let mut next_submitted = false;
+            if let Some((disp, prefetcher)) = pipeline {
+                if last_update_lane.is_none() {
+                    // no update this chunk: params are already final, so the
+                    // whole chunk's host work overlaps next-chunk device work
+                    pending0 = self.submit_next_chunk(disp, prefetcher, lanes, ep + n, &probs0)?;
+                    next_submitted = true;
+                }
+            }
             for (i, lane) in batch.into_iter().enumerate() {
-                episodes_run = ep + i + 1;
+                *episodes_run = ep + i + 1;
                 let reward_sum: f64 = lane.records.iter().map(|r| r.reward as f64).sum();
                 let state_acc = self.env.state_acc(&lane.bits)?;
                 let state_q = self.env.state_q(&lane.bits);
@@ -199,6 +348,17 @@ impl Searcher {
                 ctl.notify(&entry);
                 log.push(entry);
                 let updated = self.agent.finish_episode(lane.records)?.is_some();
+                if let Some((disp, prefetcher)) = pipeline {
+                    if updated && Some(i) == last_update_lane && !next_submitted {
+                        // the chunk's final update just ran: overlap the
+                        // greedy probe and the remaining lanes' logging with
+                        // the next chunk's first-layer forward + speculative
+                        // accuracies
+                        pending0 =
+                            self.submit_next_chunk(disp, prefetcher, lanes, ep + n, &probs0)?;
+                        next_submitted = true;
+                    }
+                }
                 if updated
                     && self.cfg.patience > 0
                     && self.greedy_converged(&mut last_greedy, &mut stable_updates)?
@@ -208,8 +368,81 @@ impl Searcher {
             }
             ep += n;
         }
+        Ok(())
+    }
 
-        ctl.check()?;
-        self.finalize(log, episodes_run)
+    /// Hand the next chunk's device work to the dispatcher: the speculative
+    /// first-step accuracy slate (memo warming, from the current chunk's
+    /// layer-0 policy) and the double-buffered first-layer act_batch.
+    /// Returns the act pending, or `None` when there is no next chunk or it
+    /// would take the scalar act path.
+    fn submit_next_chunk(&mut self, disp: &Dispatcher, prefetcher: &Prefetcher, lanes: usize,
+                         next_ep: usize, probs0: &[Vec<f32>]) -> Result<Option<ActPending>> {
+        if next_ep >= self.cfg.episodes {
+            return Ok(None);
+        }
+        // speculative accuracy prefetch is only useful when the next chunk
+        // evaluates its first step (terminal-only nets skip it)
+        if self.cfg.eval_every_step && !probs0.is_empty() {
+            let cands = self.top_prob_step0_candidates(probs0, self.cfg.pipeline);
+            prefetcher.speculate(cands);
+        }
+        let n_next = lanes.min(self.cfg.episodes - next_ep);
+        if n_next <= 1 {
+            // a single lane dispatches through the scalar act artifact
+            return Ok(None);
+        }
+        let (states, h, c) = self.layer0_operands(n_next);
+        let pending = self.agent.act_batch_submit(&states, &h, &c, disp)?;
+        Ok(Some(ActPending { n: n_next, pending }))
+    }
+
+    /// The act_batch operands of a fresh chunk's first layer, packed exactly
+    /// as [`Searcher::rollout_lockstep`] would pack them: every lane starts
+    /// at uniform `bits_max` with `State_A = 1` and zero hidden state, so
+    /// the lane states are identical params-independent constants and the
+    /// whole stage is computable before the chunk exists.
+    fn layer0_operands(&self, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let lanes = self.agent.act_lanes;
+        let (h0, _) = self.agent.initial_hidden();
+        let hidden = h0.len();
+        let bits = vec![self.bits_max; self.env.net.l];
+        let state_q = self.env.state_q(&bits);
+        let mut s = [0.0f32; STATE_DIM];
+        embed(&self.statics, 0, &bits, self.bits_max, 1.0, state_q, &mut s);
+        let mut states = vec![0.0f32; lanes * STATE_DIM];
+        for i in 0..n {
+            states[i * STATE_DIM..(i + 1) * STATE_DIM].copy_from_slice(&s);
+        }
+        // h0/c0 are zero vectors, matching the zero-filled packing
+        (states, vec![0.0f32; lanes * hidden], vec![0.0f32; lanes * hidden])
+    }
+
+    /// Nominate up to `budget` speculative first-step candidate vectors for
+    /// the next chunk from this chunk's layer-0 lane probabilities: rank
+    /// actions by mean probability across lanes, map each to the bits
+    /// vector the next chunk would evaluate after taking it at layer 0
+    /// (uniform `bits_max` elsewhere), dedup (the action space may clamp
+    /// several actions onto one bitwidth).
+    fn top_prob_step0_candidates(&self, probs0: &[Vec<f32>], budget: usize) -> Vec<Vec<u32>> {
+        let n_actions = self.agent.n_actions;
+        let mut mean = vec![0.0f64; n_actions];
+        for p in probs0 {
+            for (a, &v) in p.iter().enumerate().take(n_actions) {
+                mean[a] += v as f64;
+            }
+        }
+        let mut order: Vec<usize> = (0..n_actions).collect();
+        order.sort_by(|&a, &b| mean[b].total_cmp(&mean[a]).then(a.cmp(&b)));
+        let l = self.env.net.l;
+        let mut out: Vec<Vec<u32>> = Vec::with_capacity(budget);
+        for &a in order.iter().take(budget) {
+            let mut bits = vec![self.bits_max; l];
+            bits[0] = self.action_to_bits(a, self.bits_max);
+            if !out.contains(&bits) {
+                out.push(bits);
+            }
+        }
+        out
     }
 }

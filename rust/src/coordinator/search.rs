@@ -158,6 +158,15 @@ pub struct SearchConfig {
     /// serial trajectory exactly; values that divide episodes_per_update
     /// keep PPO updates on the same episode boundaries as the serial driver.
     pub lanes: usize,
+    /// async pipeline depth for the batched driver (0 = off: the fully
+    /// synchronous path, no dispatcher). N > 0 double-buffers lockstep
+    /// chunks through a `runtime::Dispatcher` (the next chunk's first-layer
+    /// act_batch executes while this chunk's PPO update / logging run on
+    /// the host), speculatively warms the accuracy memo with the top-N
+    /// most-probable next-chunk candidates, and caps each artifact at N
+    /// in-flight dispatches. Purely a throughput lever: results are
+    /// bit-identical at any depth (`rust/tests/pipeline_parity.rs`).
+    pub pipeline: usize,
     /// evaluate accuracy (and reward) at every layer step; when false, only
     /// the terminal step is evaluated (paper §3: "for deeper networks ... we
     /// perform this phase after all the bitwidths are selected")
@@ -182,6 +191,7 @@ impl Default for SearchConfig {
             action_space: ActionSpace::Flexible,
             rollout: RolloutMode::Serial,
             lanes: 0,
+            pipeline: 0,
             eval_every_step: true,
             min_bits: 2,
             seed: 23,

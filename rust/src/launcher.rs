@@ -159,6 +159,21 @@ pub fn cmd_search(args: &Args) -> Result<()> {
         searcher.agent.act_batch_calls,
         searcher.agent.param_uploads
     );
+    if searcher.cfg.pipeline > 0 {
+        println!(
+            "pipeline (depth {}): {} speculated, {} hits, {} wasted",
+            searcher.cfg.pipeline, stats.spec_submitted, stats.spec_hits, stats.spec_wasted
+        );
+    }
+    // per-artifact timing, device-exec vs result-download split (the
+    // attribution the pipelined driver's wins are measured against)
+    println!("{:<28} {:>8} {:>12} {:>12}", "artifact", "execs", "exec ms", "download ms");
+    for s in engine.exec_stats() {
+        println!(
+            "{:<28} {:>8} {:>12.3} {:>12.3}",
+            s.name, s.execs, s.mean_exec_ms, s.mean_download_ms
+        );
+    }
     let dir = out_dir(args)?;
     result.log.write_csv(&dir.join(format!("search_{net_name}.csv")))?;
     result.log.write_json(&dir.join(format!("search_{net_name}.json")))?;

@@ -46,6 +46,8 @@ fn print_help() {
          \x20 search    --net <name> [--episodes N] [--seed S] [--reward proposed|ratio|diff]\n\
          \x20           [--agent lstm|fc] [--action-space flexible|restricted] [--out dir]\n\
          \x20           [--rollout batched|serial] [--lanes N]  (lockstep batched rollouts)\n\
+         \x20           [--pipeline N]   (async depth: double-buffered chunks + speculative\n\
+         \x20                             accuracy prefetch; 0 = synchronous)\n\
          \x20           [--replicas N]   (N parallel multi-seed searches; best wins)\n\
          \x20 pretrain  --net <name> [--steps N] [--lr F] [--verbose]\n\
          \x20 pareto    --net <name> [--samples N] [--shards N] [--out dir]\n\

@@ -23,7 +23,7 @@
 //! * shard count comes from `RELEQ_SHARDS` when set, else
 //!   `available_parallelism` clamped to the number of work units.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
@@ -670,6 +670,106 @@ impl AccMemo {
     }
 }
 
+/// Speculation bookkeeping for the prefetching pipeline
+/// (`coordinator::rollout`, `pipeline > 0`): which bits vectors were
+/// enqueued speculatively and are still awaiting a real consumer, plus the
+/// submitted/hit/wasted accounting `EnvStats` reports.
+///
+/// Protocol (all methods are `&self`; the ledger is shared through the env
+/// core like [`AccMemo`]):
+///
+/// 1. the producer marks a candidate with [`SpecLedger::begin`] (refused if
+///    already outstanding — no double speculation; a successful begin
+///    counts into `submitted` *immediately*), and rolls a mark back with
+///    [`SpecLedger::cancel`] if its dispatch was refused;
+/// 2. the consuming rollout step [`SpecLedger::claim`]s every candidate it
+///    actually evaluates — a claim of an outstanding key counts one hit;
+/// 3. at the end of the search, [`SpecLedger::abandon`] counts everything
+///    still outstanding as wasted.
+///
+/// Counting `submitted` at begin-time (not after the dispatch succeeds) is
+/// what keeps the accounting race-free when producers and consumers share
+/// one ledger: a key claimed in the begin→dispatch window has already been
+/// counted, so `hits` can never outrun `submitted`, and a `cancel` that
+/// loses that race (the key is gone) leaves the begin's count in place —
+/// the key resolves as submitted+hit, exactly as if the dispatch had won.
+///
+/// Invariant (enforced in `rust/tests/pipeline_parity.rs` and the CI serve
+/// smoke): `hits <= submitted` always, and `hits + wasted == submitted`
+/// once the producer has abandoned. The values themselves are never stored
+/// here — speculation is memo-warming only; the [`AccMemo`] stays the one
+/// source of accuracy truth.
+#[derive(Default)]
+pub struct SpecLedger {
+    outstanding: Mutex<HashSet<Vec<u32>>>,
+    submitted: AtomicU64,
+    hits: AtomicU64,
+    wasted: AtomicU64,
+}
+
+impl SpecLedger {
+    pub fn new() -> SpecLedger {
+        SpecLedger::default()
+    }
+
+    /// Mark `bits` as speculated-outstanding and count it into `submitted`.
+    /// `false` (no mark, no count) when it already is outstanding — the
+    /// caller must then skip the duplicate.
+    pub fn begin(&self, bits: &[u32]) -> bool {
+        let inserted = self.outstanding.lock().unwrap().insert(bits.to_vec());
+        if inserted {
+            self.submitted.fetch_add(1, Ordering::Relaxed);
+        }
+        inserted
+    }
+
+    /// Roll back a [`SpecLedger::begin`] whose dispatch was refused (e.g.
+    /// the in-flight cap): un-counts the key if it is still ours. If a
+    /// concurrent [`SpecLedger::claim`] got there first, the begin's count
+    /// stands (that key already resolved as submitted+hit) — see the
+    /// race-freedom note in the type docs.
+    pub fn cancel(&self, bits: &[u32]) {
+        if self.outstanding.lock().unwrap().remove(bits) {
+            self.submitted.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A real consumer is evaluating `bits`: if it was outstanding, count a
+    /// hit and clear it. Harmless no-op (returns false) otherwise.
+    pub fn claim(&self, bits: &[u32]) -> bool {
+        if self.outstanding.lock().unwrap().remove(bits) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// No consumer is coming: count everything still outstanding as wasted
+    /// and clear the ledger (end of the pipelined search).
+    pub fn abandon(&self) {
+        let mut g = self.outstanding.lock().unwrap();
+        self.wasted.fetch_add(g.len() as u64, Ordering::Relaxed);
+        g.clear();
+    }
+
+    /// Speculated keys not yet claimed or abandoned.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.lock().unwrap().len()
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn wasted(&self) -> u64 {
+        self.wasted.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -971,5 +1071,53 @@ mod tests {
         assert_eq!(default_shards(1), 1);
         assert!(default_shards(1024) >= 1);
         assert!(default_shards(2) <= 2);
+    }
+
+    #[test]
+    fn spec_ledger_accounting_balances() {
+        let l = SpecLedger::new();
+        // begin twice: the duplicate is refused and counted once
+        assert!(l.begin(&[4, 4]));
+        assert!(!l.begin(&[4, 4]));
+        assert!(l.begin(&[2, 8]));
+        assert!(l.begin(&[8, 2]));
+        assert_eq!(l.submitted(), 3, "each successful begin counts immediately");
+        l.cancel(&[8, 2]); // [8,2]'s dispatch was refused: un-counted
+        assert_eq!((l.outstanding(), l.submitted()), (2, 2));
+        // a consumer claims one (hit) and an unspeculated key (no-op)
+        assert!(l.claim(&[4, 4]));
+        assert!(!l.claim(&[6, 6]));
+        assert!(!l.claim(&[4, 4]), "a claim clears the key");
+        // a cancel that lost the race to a claim must NOT un-count: the
+        // key already resolved as submitted+hit
+        l.cancel(&[4, 4]);
+        assert_eq!(l.submitted(), 2);
+        // end of search: the unclaimed remainder is wasted
+        l.abandon();
+        assert_eq!(l.outstanding(), 0);
+        assert_eq!((l.submitted(), l.hits(), l.wasted()), (2, 1, 1));
+        assert!(l.hits() <= l.submitted());
+        assert_eq!(l.hits() + l.wasted(), l.submitted());
+    }
+
+    #[test]
+    fn spec_ledger_is_concurrency_safe() {
+        let l = Arc::new(SpecLedger::new());
+        // 8 threads race begin/claim/cancel on overlapping keys; every
+        // surviving begin resolves as exactly one hit or one wasted
+        run_sharded((0..8u32).collect::<Vec<_>>(), |_, s| {
+            for k in s..s + 4 {
+                l.begin(&[k]);
+            }
+            for k in s..s + 2 {
+                l.claim(&[k]);
+            }
+            l.cancel(&[s + 3]); // may race another window's claim of s+3
+            Ok(())
+        })
+        .unwrap();
+        l.abandon();
+        assert_eq!(l.hits() + l.wasted(), l.submitted());
+        assert!(l.hits() <= l.submitted());
     }
 }

@@ -1,0 +1,390 @@
+//! Asynchronous PJRT execution: a dispatcher worker pool over the shared
+//! engine, so the host thread can submit device work and keep running.
+//!
+//! The synchronous hot paths (`Exe::run_b` → `to_literal_sync`) block the
+//! coordinator for the full device-exec + download round trip, and the
+//! device idles whenever the host is busy (PPO bookkeeping, sampling,
+//! episode logging). A [`Dispatcher`] turns an execution into a
+//! [`Pending`]: `submit` enqueues and returns immediately, a small worker
+//! pool drives the blocking PJRT calls, and `Pending::wait` joins the
+//! result when the host actually needs it. The pipelined search driver
+//! (`coordinator::rollout`, `pipeline > 0`) uses this to double-buffer
+//! lockstep chunks and to warm the accuracy memo speculatively.
+//!
+//! Properties:
+//!
+//! * **Per-artifact in-flight caps** — at most `inflight_cap` submissions
+//!   per artifact tag may be queued or running; [`Dispatcher::submit`]
+//!   blocks until a slot frees, the `try_*` variants refuse instead (the
+//!   speculation budget check). The cap bounds how far a speculative
+//!   producer can run ahead of the consumer.
+//! * **Never-wedging pendings** — a panicking task resolves its `Pending`
+//!   with an error (the panic message preserved) instead of hanging the
+//!   waiter, mirroring `run_sharded`'s panic handling.
+//! * **Drain/shutdown** — [`Dispatcher::drain`] blocks until every
+//!   submitted task has completed (the quiesce point before a final greedy
+//!   rollout); dropping the dispatcher drains the queue and joins the
+//!   workers, so in-flight device work never outlives the owner.
+//!
+//! Determinism: the dispatcher only *schedules* executions; the programs it
+//! runs are pure functions of their operands, so a result obtained through
+//! a `Pending` is bit-identical to the synchronous call it replaces
+//! (`rust/tests/pipeline_parity.rs`).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::engine::{DeviceBuf, Exe, HostLit};
+
+/// A one-shot rendezvous for a dispatched task's result. Obtained from the
+/// `submit` family; `wait` consumes it. Dropping a `Pending` without
+/// waiting is fine — the task still runs to completion (its side effects,
+/// e.g. memo inserts, land) and the result is discarded.
+pub struct Pending<T> {
+    slot: Arc<Slot<T>>,
+}
+
+struct Slot<T> {
+    result: Mutex<Option<Result<T>>>,
+    cv: Condvar,
+}
+
+impl<T> Pending<T> {
+    fn new() -> (Pending<T>, Arc<Slot<T>>) {
+        let slot = Arc::new(Slot { result: Mutex::new(None), cv: Condvar::new() });
+        (Pending { slot: slot.clone() }, slot)
+    }
+
+    /// Block until the task completes and take its result.
+    pub fn wait(self) -> Result<T> {
+        let mut g = self.slot.result.lock().unwrap();
+        while g.is_none() {
+            g = self.slot.cv.wait(g).unwrap();
+        }
+        g.take().expect("checked above")
+    }
+
+    /// Has the task completed (successfully or not)?
+    pub fn is_ready(&self) -> bool {
+        self.slot.result.lock().unwrap().is_some()
+    }
+}
+
+impl<T> Slot<T> {
+    fn fulfill(&self, r: Result<T>) {
+        *self.result.lock().unwrap() = Some(r);
+        self.cv.notify_all();
+    }
+}
+
+type Task = Box<dyn FnOnce() + Send>;
+
+struct State {
+    queue: VecDeque<Task>,
+    /// queued + running submissions per artifact tag (the cap accounting)
+    inflight: HashMap<String, usize>,
+    /// queued + running tasks in total (the drain condition)
+    active: usize,
+    shutdown: bool,
+}
+
+struct Core {
+    state: Mutex<State>,
+    /// workers wait here for queue items (and the shutdown signal)
+    work_cv: Condvar,
+    /// cap-blocked submitters and `drain` wait here for completions
+    idle_cv: Condvar,
+    cap: usize,
+}
+
+impl Core {
+    /// Account one finished task (runs on the worker, after the task body).
+    fn finish(&self, tag: &str) {
+        let mut g = self.state.lock().unwrap();
+        if let Some(n) = g.inflight.get_mut(tag) {
+            *n -= 1;
+            if *n == 0 {
+                g.inflight.remove(tag);
+            }
+        }
+        g.active -= 1;
+        drop(g);
+        self.idle_cv.notify_all();
+    }
+
+    fn worker_loop(self: Arc<Self>) {
+        loop {
+            let task = {
+                let mut g = self.state.lock().unwrap();
+                loop {
+                    if let Some(t) = g.queue.pop_front() {
+                        break t;
+                    }
+                    if g.shutdown {
+                        return;
+                    }
+                    g = self.work_cv.wait(g).unwrap();
+                }
+            };
+            task();
+        }
+    }
+}
+
+/// A small worker pool executing submitted tasks over the shared engine.
+/// Owned (not `Arc`) by the driving loop; dropping it drains outstanding
+/// work and joins the workers.
+pub struct Dispatcher {
+    core: Arc<Core>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Dispatcher {
+    /// `workers` threads, at most `inflight_cap` queued-or-running
+    /// submissions per artifact tag (the pipeline depth knob; >= 1).
+    pub fn new(workers: usize, inflight_cap: usize) -> Dispatcher {
+        let core = Arc::new(Core {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                inflight: HashMap::new(),
+                active: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+            cap: inflight_cap.max(1),
+        });
+        let workers = (0..workers.max(1))
+            .map(|i| {
+                let core = core.clone();
+                std::thread::Builder::new()
+                    .name(format!("releq-dispatch-{i}"))
+                    .spawn(move || core.worker_loop())
+                    .expect("spawning dispatcher worker")
+            })
+            .collect();
+        Dispatcher { core, workers }
+    }
+
+    /// Enqueue `f` under `tag`, blocking while the tag is at its in-flight
+    /// cap. Returns immediately once queued; `Pending::wait` joins the
+    /// result.
+    pub fn submit_with<T, F>(&self, tag: &str, f: F) -> Pending<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> Result<T> + Send + 'static,
+    {
+        self.enqueue(tag, f, true).expect("blocking submit always succeeds")
+    }
+
+    /// Non-blocking [`Dispatcher::submit_with`]: `None` when `tag` is at
+    /// its in-flight cap — the speculation-budget refusal, so a producer at
+    /// the cap drops work instead of stalling the driving loop.
+    pub fn try_submit_with<T, F>(&self, tag: &str, f: F) -> Option<Pending<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> Result<T> + Send + 'static,
+    {
+        self.enqueue(tag, f, false)
+    }
+
+    /// Asynchronous `Exe::run_b`: one device execution with owned
+    /// device-resident operands (the `Arc`s keep the buffers alive until
+    /// the execution completes), tagged by the artifact name for the
+    /// in-flight cap. Blocks while the artifact is at its cap.
+    pub fn submit(&self, exe: Arc<Exe>, args: Vec<Arc<DeviceBuf>>) -> Pending<Vec<HostLit>> {
+        let tag = exe.name.clone();
+        self.submit_with(&tag, move || {
+            let refs: Vec<&xla::PjRtBuffer> = args.iter().map(|b| b.raw()).collect();
+            let parts = exe.run_b(&refs)?;
+            Ok(parts.into_iter().map(HostLit::new).collect())
+        })
+    }
+
+    fn enqueue<T, F>(&self, tag: &str, f: F, block: bool) -> Option<Pending<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> Result<T> + Send + 'static,
+    {
+        let (pending, slot) = Pending::new();
+        let core = self.core.clone();
+        let tag_owned = tag.to_string();
+        {
+            let mut g = self.core.state.lock().unwrap();
+            while g.inflight.get(tag).copied().unwrap_or(0) >= self.core.cap {
+                if !block {
+                    return None;
+                }
+                g = self.core.idle_cv.wait(g).unwrap();
+            }
+            *g.inflight.entry(tag_owned.clone()).or_insert(0) += 1;
+            g.active += 1;
+            let task_slot = slot;
+            g.queue.push_back(Box::new(move || {
+                // a panicking task must resolve its pending (a wedged waiter
+                // would hang the driving loop) and must not kill the worker
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                let out = match r {
+                    Ok(out) => out,
+                    Err(panic) => {
+                        let msg = panic
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| panic.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".to_string());
+                        Err(anyhow::anyhow!("dispatched task panicked: {msg}"))
+                    }
+                };
+                task_slot.fulfill(out);
+                core.finish(&tag_owned);
+            }));
+        }
+        self.core.work_cv.notify_one();
+        Some(pending)
+    }
+
+    /// Block until every submitted task has completed (queue empty, nothing
+    /// running). The quiesce point before work that must observe all
+    /// speculative side effects — or before measuring.
+    pub fn drain(&self) {
+        let mut g = self.core.state.lock().unwrap();
+        while g.active > 0 {
+            g = self.core.idle_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Tasks currently queued or running (diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.core.state.lock().unwrap().active
+    }
+}
+
+impl Drop for Dispatcher {
+    /// Graceful shutdown: workers finish everything already queued (their
+    /// pendings resolve), then exit and are joined.
+    fn drop(&mut self) {
+        {
+            let mut g = self.core.state.lock().unwrap();
+            g.shutdown = true;
+        }
+        self.core.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn submit_returns_immediately_and_wait_joins() {
+        let d = Dispatcher::new(2, 4);
+        let p = d.submit_with("t", || {
+            std::thread::sleep(Duration::from_millis(20));
+            Ok(41 + 1)
+        });
+        let q = d.submit_with("t", || Ok("side".to_string()));
+        assert_eq!(q.wait().unwrap(), "side");
+        assert_eq!(p.wait().unwrap(), 42);
+    }
+
+    #[test]
+    fn per_tag_cap_refuses_try_submissions() {
+        let d = Dispatcher::new(1, 2);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let open = |g: &Arc<(Mutex<bool>, Condvar)>| {
+            *g.0.lock().unwrap() = true;
+            g.1.notify_all();
+        };
+        let hold = {
+            let gate = gate.clone();
+            move || {
+                let (m, cv) = &*gate;
+                let mut open = m.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                Ok(0u32)
+            }
+        };
+        // fill the tag's cap: one running (blocked on the gate), one queued
+        let p1 = d.submit_with("acc", hold.clone());
+        let p2 = d.try_submit_with("acc", hold.clone());
+        assert!(p2.is_some(), "second submission fits the cap of 2");
+        // at the cap: refused without blocking…
+        assert!(d.try_submit_with("acc", hold.clone()).is_none());
+        // …but an unrelated tag still has budget (queued behind the gate)
+        let other = d.try_submit_with("act", || Ok(7u32));
+        assert!(other.is_some());
+        open(&gate);
+        assert_eq!(p1.wait().unwrap(), 0);
+        assert_eq!(p2.unwrap().wait().unwrap(), 0);
+        assert_eq!(other.unwrap().wait().unwrap(), 7);
+        // slots freed: the tag accepts again
+        assert!(d.try_submit_with("acc", || Ok(1u32)).is_some());
+        d.drain();
+    }
+
+    #[test]
+    fn drain_waits_for_all_side_effects() {
+        let d = Dispatcher::new(2, 8);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..6 {
+            let hits = hits.clone();
+            // dropped pendings: tasks still run and their effects land
+            let _ = d.submit_with("fx", move || {
+                std::thread::sleep(Duration::from_millis(5));
+                hits.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            });
+        }
+        d.drain();
+        assert_eq!(hits.load(Ordering::SeqCst), 6);
+        assert_eq!(d.in_flight(), 0);
+    }
+
+    #[test]
+    fn panicking_task_resolves_err_and_keeps_the_worker() {
+        let d = Dispatcher::new(1, 4);
+        let p = d.submit_with::<u32, _>("boom", || panic!("kapow"));
+        let err = p.wait().unwrap_err();
+        assert!(err.to_string().contains("kapow"), "{err}");
+        // the single worker survived the panic
+        let q = d.submit_with("boom", || Ok(5u32));
+        assert_eq!(q.wait().unwrap(), 5);
+    }
+
+    #[test]
+    fn drop_joins_after_finishing_queued_work() {
+        let done = Arc::new(AtomicUsize::new(0));
+        {
+            let d = Dispatcher::new(1, 8);
+            for _ in 0..4 {
+                let done = done.clone();
+                let _ = d.submit_with("q", move || {
+                    std::thread::sleep(Duration::from_millis(3));
+                    done.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                });
+            }
+            // drop without drain: queued tasks must still complete
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn is_ready_flips_after_completion() {
+        let d = Dispatcher::new(1, 1);
+        let p = d.submit_with("r", || Ok(1u8));
+        d.drain();
+        assert!(p.is_ready());
+        assert_eq!(p.wait().unwrap(), 1);
+    }
+}

@@ -26,11 +26,20 @@ use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
 ///
 /// Counters are atomics so `&Exe` can be shared across shard threads; the
 /// relaxed ordering is fine because they are only read for reporting.
+///
+/// Timing is split into two components so the async dispatcher's wins are
+/// attributable: `exec_ns` covers the PJRT `Execute` call (device work and
+/// its dispatch), `download_ns` covers `to_literal_sync` + tuple
+/// decomposition (the device→host result download, which is also where an
+/// asynchronous backend's completion wait would land).
 pub struct Exe {
     pub name: String,
     inner: PjRtLoadedExecutable,
     pub exec_count: AtomicU64,
+    /// device-exec component (the `Execute` call itself)
     pub exec_ns: AtomicU64,
+    /// literal-download component (`to_literal_sync` + `to_tuple`)
+    pub download_ns: AtomicU64,
 }
 
 // SAFETY: `PjRtLoadedExecutable` wraps an immutable compiled program; the
@@ -48,10 +57,13 @@ unsafe impl Send for Exe {}
 unsafe impl Sync for Exe {}
 
 impl Exe {
-    fn record(&self, t0: Instant) {
+    /// `t0` = execute start, `t1` = execute returned / download started.
+    fn record(&self, t0: Instant, t1: Instant) {
         self.exec_count.fetch_add(1, Ordering::Relaxed);
         self.exec_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            .fetch_add(t1.duration_since(t0).as_nanos() as u64, Ordering::Relaxed);
+        self.download_ns
+            .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 
     /// Execute with host literals; returns the decomposed output tuple.
@@ -66,9 +78,10 @@ impl Exe {
             .first_mut()
             .and_then(|d| d.pop())
             .with_context(|| format!("`{}` returned no outputs", self.name))?;
+        let t1 = Instant::now();
         let lit = buf.to_literal_sync()?;
         let parts = lit.to_tuple()?;
-        self.record(t0);
+        self.record(t0, t1);
         Ok(parts)
     }
 
@@ -85,9 +98,10 @@ impl Exe {
             .first_mut()
             .and_then(|d| d.pop())
             .with_context(|| format!("`{}` returned no outputs", self.name))?;
+        let t1 = Instant::now();
         let lit = buf.to_literal_sync()?;
         let parts = lit.to_tuple()?;
-        self.record(t0);
+        self.record(t0, t1);
         Ok(parts)
     }
 
@@ -95,6 +109,7 @@ impl Exe {
         self.exec_count.load(Ordering::Relaxed)
     }
 
+    /// Mean device-exec time per execution (the `Execute` call only).
     pub fn mean_exec_ms(&self) -> f64 {
         let n = self.exec_count.load(Ordering::Relaxed);
         if n == 0 {
@@ -102,6 +117,27 @@ impl Exe {
         }
         self.exec_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
     }
+
+    /// Mean result-download time per execution (`to_literal_sync` + tuple
+    /// decomposition). `mean_exec_ms + mean_download_ms` reproduces the
+    /// pre-split conflated per-exec mean.
+    pub fn mean_download_ms(&self) -> f64 {
+        let n = self.exec_count.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.download_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+    }
+}
+
+/// One row of [`Engine::exec_stats`]: per-artifact execution count and the
+/// split per-exec means (device-exec vs result-download).
+#[derive(Debug, Clone)]
+pub struct ExeStat {
+    pub name: String,
+    pub execs: u64,
+    pub mean_exec_ms: f64,
+    pub mean_download_ms: f64,
 }
 
 /// A device-resident operand. Wraps `PjRtBuffer` so persistent operands can
@@ -234,6 +270,7 @@ impl Engine {
             inner: exe,
             exec_count: AtomicU64::new(0),
             exec_ns: AtomicU64::new(0),
+            download_ns: AtomicU64::new(0),
         });
         let e = self
             .cache
@@ -249,16 +286,21 @@ impl Engine {
         Ok(e)
     }
 
-    /// Per-executable timing summary (perf instrumentation).
-    pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
-        let mut v: Vec<(String, u64, f64)> = self
+    /// Per-executable timing summary (perf instrumentation), name-sorted.
+    pub fn exec_stats(&self) -> Vec<ExeStat> {
+        let mut v: Vec<ExeStat> = self
             .cache
             .read()
             .unwrap()
             .values()
-            .map(|e| (e.name.clone(), e.exec_count(), e.mean_exec_ms()))
+            .map(|e| ExeStat {
+                name: e.name.clone(),
+                execs: e.exec_count(),
+                mean_exec_ms: e.mean_exec_ms(),
+                mean_download_ms: e.mean_download_ms(),
+            })
             .collect();
-        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v.sort_by(|a, b| a.name.cmp(&b.name));
         v
     }
 

@@ -1,8 +1,13 @@
-//! PJRT runtime: artifact loading/compilation/execution (engine) and the
-//! Python↔Rust contract (manifest).
+//! PJRT runtime: artifact loading/compilation/execution (engine), the
+//! asynchronous dispatcher worker pool (dispatch), and the Python↔Rust
+//! contract (manifest).
 
+pub mod dispatch;
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, HostLit, Stage};
+pub use dispatch::{Dispatcher, Pending};
+pub use engine::{
+    lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, ExeStat, HostLit, Stage,
+};
 pub use manifest::{AgentMeta, LayerMeta, Manifest, NetworkMeta};

@@ -180,6 +180,9 @@ impl SessionCache {
                             ("memo_hits", Json::Num(s.memo_hits as f64)),
                             ("memo_misses", Json::Num(s.memo_misses as f64)),
                             ("memo_evictions", Json::Num(s.memo_evictions as f64)),
+                            ("spec_submitted", Json::Num(s.spec_submitted as f64)),
+                            ("spec_hits", Json::Num(s.spec_hits as f64)),
+                            ("spec_wasted", Json::Num(s.spec_wasted as f64)),
                         ]),
                     ))
                 }
@@ -332,11 +335,12 @@ impl JobRunner for SessionRunner {
                     self.engine
                         .exec_stats()
                         .into_iter()
-                        .map(|(name, execs, mean_ms)| {
+                        .map(|s| {
                             Json::obj(vec![
-                                ("artifact", Json::Str(name)),
-                                ("execs", Json::Num(execs as f64)),
-                                ("mean_exec_ms", Json::Num(mean_ms)),
+                                ("artifact", Json::Str(s.name)),
+                                ("execs", Json::Num(s.execs as f64)),
+                                ("mean_exec_ms", Json::Num(s.mean_exec_ms)),
+                                ("mean_download_ms", Json::Num(s.mean_download_ms)),
                             ])
                         })
                         .collect(),

@@ -1,0 +1,251 @@
+//! Determinism-under-speculation and accounting tests for the async
+//! pipelined execution layer (ISSUE 5 acceptance criteria):
+//!
+//! * a pipelined batched search (`pipeline = N`, double-buffered chunks +
+//!   speculative accuracy prefetch) produces **bit-identical** converged
+//!   bits, accuracies and episode logs to the synchronous `pipeline = 0`
+//!   path — speculation is memo-warming only;
+//! * speculation never double-evaluates a vector: the single-flight memo
+//!   holds under dispatcher concurrency, pinned by exact train/eval exec
+//!   accounting (every extra execution of a pipelined run is exactly one
+//!   wasted speculation);
+//! * the `Prefetcher` warms the memo with values bit-identical to the real
+//!   path and its ledger balances (`spec_hits <= spec_submitted`,
+//!   `spec_hits + spec_wasted == spec_submitted` once abandoned);
+//! * stub tier (no artifacts needed): the dispatcher's cap/claim machinery
+//!   composed with a memo-like workload.
+//!
+//! Artifact-dependent tests skip themselves (with a note) when the AOT
+//! artifacts are missing, like the other integration suites.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use releq::coordinator::{Prefetcher, QuantEnv, RolloutMode, SearchConfig, Searcher};
+use releq::parallel::AccMemo;
+use releq::runtime::{Dispatcher, Engine, Manifest};
+
+fn bringup() -> Option<(Manifest, Arc<Engine>)> {
+    let dir = releq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Arc::new(Engine::new(dir).unwrap());
+    Some((manifest, engine))
+}
+
+fn base_cfg(pipeline: usize) -> SearchConfig {
+    let mut cfg = SearchConfig::default();
+    cfg.episodes = 24; // 3 lockstep chunks: two double-buffer hand-offs
+    cfg.env.pretrain_steps = 40;
+    cfg.env.long_retrain_steps = 8;
+    cfg.patience = 0;
+    cfg.seed = 91;
+    cfg.rollout = RolloutMode::Batched;
+    cfg.pipeline = pipeline;
+    cfg
+}
+
+fn lenet_env(manifest: &Manifest, engine: &Arc<Engine>) -> QuantEnv {
+    let net = manifest.network("lenet").unwrap();
+    let mut env_cfg = releq::coordinator::EnvConfig::default();
+    env_cfg.pretrain_steps = 40;
+    QuantEnv::new(engine.clone(), net, manifest.bits_max, manifest.fp_bits, env_cfg).unwrap()
+}
+
+/// `n` distinct bits vectors for an L-layer net (odometer over 2..=8).
+fn fresh_vectors(l: usize, n: usize) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|mut i| {
+            (0..l)
+                .map(|_| {
+                    let b = 2 + (i % 7) as u32;
+                    i /= 7;
+                    b
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Stub tier: the dispatcher driving a single-flight memo — the exact
+/// composition the speculative prefetch uses — must evaluate each key once
+/// no matter how speculative and "real" lookups interleave.
+#[test]
+fn dispatched_speculation_coalesces_with_real_lookups() {
+    let memo = Arc::new(AccMemo::new());
+    let computes = Arc::new(AtomicUsize::new(0));
+    let disp = Dispatcher::new(2, 4);
+    let keys: Vec<Vec<u32>> = (0..12u32).map(|k| vec![k, k + 1]).collect();
+    // speculative producer: batches of 4 through the dispatcher
+    let mut pendings = Vec::new();
+    for chunk in keys.chunks(4) {
+        let memo = memo.clone();
+        let computes = computes.clone();
+        let chunk: Vec<Vec<u32>> = chunk.to_vec();
+        pendings.push(disp.submit_with("spec", move || {
+            memo.get_or_compute_batch(&chunk, |misses| {
+                computes.fetch_add(misses.len(), Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                Ok(misses.iter().map(|k| k[0] as f64).collect())
+            })
+            .map(|_| ())
+        }));
+    }
+    // "real" consumer racing the speculation on the same keys
+    for k in &keys {
+        let (v, _) = memo
+            .get_or_compute(k, || {
+                computes.fetch_add(1, Ordering::SeqCst);
+                Ok(k[0] as f64)
+            })
+            .unwrap();
+        assert_eq!(v, k[0] as f64);
+    }
+    for p in pendings {
+        p.wait().unwrap();
+    }
+    disp.drain();
+    assert_eq!(
+        computes.load(Ordering::SeqCst),
+        keys.len(),
+        "each key computed exactly once across speculative and real lookups"
+    );
+}
+
+/// The prefetcher warms the memo with values bit-identical to the real
+/// accuracy path, skips already-memoized work, and its ledger balances.
+#[test]
+fn prefetcher_warms_memo_bit_identically_and_balances() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let l = manifest.network("lenet").unwrap().l;
+    let env = lenet_env(&manifest, &engine);
+    let reference = lenet_env(&manifest, &engine); // independent core
+    let slate = fresh_vectors(l, 3);
+
+    let disp = Dispatcher::new(2, 4);
+    let pf = Prefetcher::new(env.clone(), &disp);
+    assert_eq!(pf.speculate(slate.clone()), 3);
+    disp.drain();
+    let stats = env.stats();
+    assert_eq!(stats.spec_submitted, 3);
+    assert_eq!((stats.spec_hits, stats.spec_wasted), (0, 0), "nothing claimed yet");
+
+    for v in &slate {
+        assert!(env.memo().contains(v), "speculation must land in the memo");
+        assert_eq!(
+            env.accuracy(v).unwrap(),
+            reference.accuracy(v).unwrap(),
+            "warmed value must be bit-identical to an unspeculated core's"
+        );
+    }
+
+    // a consumer claims two; the third is abandoned as wasted
+    assert!(env.spec().claim(&slate[0]));
+    assert!(env.spec().claim(&slate[1]));
+    env.spec().abandon();
+    let stats = env.stats();
+    assert_eq!((stats.spec_submitted, stats.spec_hits, stats.spec_wasted), (3, 2, 1));
+    assert!(stats.spec_hits <= stats.spec_submitted);
+
+    // re-speculating memoized vectors is a no-op (no new submissions)
+    assert_eq!(pf.speculate(slate), 0);
+    disp.drain();
+    assert_eq!(env.stats().spec_submitted, 3);
+}
+
+/// Speculation racing the real evaluator on the same slate: the
+/// single-flight memo must keep every distinct vector at exactly one
+/// evaluation (`retrain_steps` train execs each), dispatcher or not.
+#[test]
+fn speculation_never_double_evaluates_under_races() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let l = manifest.network("lenet").unwrap().l;
+    let env = lenet_env(&manifest, &engine);
+    let retrain = env.cfg.retrain_steps as u64;
+    let pre_execs = env.stats().train_execs;
+    let len0 = env.cache_len();
+
+    let disp = Dispatcher::new(2, 4);
+    let pf = Prefetcher::new(env.clone(), &disp);
+    let slate = fresh_vectors(l, 10);
+    // speculate the slate and immediately evaluate it for real: the real
+    // batch coalesces with the in-flight speculative leader per key
+    pf.speculate(slate.clone());
+    let real = env.accuracy_batch(&slate).unwrap();
+    disp.drain();
+    for (v, acc) in slate.iter().zip(&real) {
+        assert_eq!(env.accuracy(v).unwrap(), *acc);
+    }
+
+    let distinct = (env.cache_len() - len0) as u64;
+    assert_eq!(distinct, 10);
+    assert_eq!(
+        env.stats().train_execs - pre_execs,
+        distinct * retrain,
+        "each distinct vector must retrain exactly once despite the race"
+    );
+}
+
+/// End-to-end acceptance: with `pipeline = N` + prefetch on, the converged
+/// bits/accuracy and the full episode log are bit-identical to
+/// `pipeline = 0`; every extra device execution is exactly one wasted
+/// speculation; and the spec counters balance.
+#[test]
+fn pipelined_search_bit_identical_to_sync() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let net = manifest.network("lenet").unwrap();
+
+    let run = |pipeline: usize| {
+        let mut s = Searcher::new(engine.clone(), &manifest, net, base_cfg(pipeline)).unwrap();
+        let r = s.run().unwrap();
+        (r, s.env.stats())
+    };
+    let (sync, sync_stats) = run(0);
+    assert_eq!(
+        (sync_stats.spec_submitted, sync_stats.spec_hits, sync_stats.spec_wasted),
+        (0, 0, 0),
+        "pipeline = 0 must never touch the speculation machinery"
+    );
+
+    for depth in [2usize, 4] {
+        let (piped, stats) = run(depth);
+        assert_eq!(sync.bits, piped.bits, "depth {depth}: converged bits diverged");
+        assert_eq!(sync.episodes_run, piped.episodes_run);
+        assert!(
+            (sync.acc_final - piped.acc_final).abs() == 0.0,
+            "depth {depth}: final accuracy diverged"
+        );
+        assert_eq!(sync.log.rewards(), piped.log.rewards(), "depth {depth}: rewards diverged");
+        for (a, b) in sync.log.episodes.iter().zip(&piped.log.episodes) {
+            assert_eq!(a.episode, b.episode);
+            assert_eq!(a.bits, b.bits, "episode {} bits diverged", a.episode);
+            assert_eq!(a.state_acc, b.state_acc, "episode {} state_acc diverged", a.episode);
+            assert_eq!(a.state_q, b.state_q, "episode {} state_q diverged", a.episode);
+            assert_eq!(a.probs, b.probs, "episode {} probs diverged", a.episode);
+        }
+
+        // speculation accounting: after a finished run the ledger balances,
+        // and every execution beyond the synchronous run's is exactly one
+        // wasted speculation (hits would have been evaluated anyway)
+        assert!(stats.spec_hits <= stats.spec_submitted, "depth {depth}");
+        assert_eq!(
+            stats.spec_hits + stats.spec_wasted,
+            stats.spec_submitted,
+            "depth {depth}: ledger must balance after abandon"
+        );
+        let retrain = base_cfg(depth).env.retrain_steps as u64;
+        assert_eq!(
+            stats.train_execs - sync_stats.train_execs,
+            stats.spec_wasted * retrain,
+            "depth {depth}: extra train execs must be wasted speculations only"
+        );
+        assert_eq!(
+            stats.eval_execs - sync_stats.eval_execs,
+            stats.spec_wasted,
+            "depth {depth}: extra eval execs must be wasted speculations only"
+        );
+    }
+}

@@ -350,7 +350,7 @@ fn serve_one_pretrain_invariant_with_artifacts() {
                  "long_retrain_steps": 8, "patience": 0, "seed": {seed}}}}}"#
         )
     };
-    let total_execs = |e: &Engine| e.exec_stats().iter().map(|(_, n, _)| *n).sum::<u64>();
+    let total_execs = |e: &Engine| e.exec_stats().iter().map(|s| s.execs).sum::<u64>();
 
     // two simultaneous jobs, same network + env config, different seeds:
     // the second must NOT pretrain again
