@@ -137,6 +137,7 @@ fn apply_kv(cfg: &mut SearchConfig, k: &str, v: &Val) -> Result<()> {
         "rollout" => cfg.rollout = RolloutMode::parse(v.str(k)?)?,
         "lanes" => cfg.lanes = v.num(k)? as usize,
         "pipeline" => cfg.pipeline = v.num(k)? as usize,
+        "watchdog_ms" => cfg.watchdog_ms = v.num(k)? as u64,
         "eval_every_step" => cfg.eval_every_step = v.bool(k)?,
         "min_bits" => cfg.min_bits = v.num(k)? as u32,
         "patience" => cfg.patience = v.num(k)? as usize,
@@ -205,6 +206,9 @@ pub fn apply_cli(cfg: &mut SearchConfig, args: &Args) -> Result<()> {
     }
     if let Some(v) = flag_num(args, "pipeline")? {
         cfg.pipeline = v;
+    }
+    if let Some(v) = flag_num(args, "watchdog-ms")? {
+        cfg.watchdog_ms = v;
     }
     if let Some(v) = flag_num(args, "eval-batch")? {
         cfg.env.eval_batch = v;
@@ -360,6 +364,17 @@ pub struct ServeConfig {
     /// accuracy-memo entries persisted per archive record for warm-starts
     /// (`--memo-persist`)
     pub memo_persist: usize,
+    /// per-job retry budget for transient execution failures
+    /// (`--job-retries`; 0 disables retries)
+    pub job_retries: u32,
+    /// consecutive failures on one session key before the cached env is
+    /// quarantined: evicted and rebuilt once, then poisoned
+    /// (`--quarantine-k`; 0 disables quarantine)
+    pub quarantine_k: u32,
+    /// consecutive job failures across the scheduler before the circuit
+    /// breaker opens and submissions shed with 503 until a job completes
+    /// (`--breaker-fails`; 0 disables the breaker)
+    pub breaker_fails: u32,
 }
 
 impl Default for ServeConfig {
@@ -371,6 +386,9 @@ impl Default for ServeConfig {
             archive: PathBuf::from("archive.json"),
             log_tail: 32,
             memo_persist: 256,
+            job_retries: 2,
+            quarantine_k: 3,
+            breaker_fails: 8,
         }
     }
 }
@@ -396,6 +414,15 @@ pub fn serve_config(args: &Args) -> Result<ServeConfig> {
     }
     if let Some(v) = flag_num(args, "memo-persist")? {
         c.memo_persist = v;
+    }
+    if let Some(v) = flag_num(args, "job-retries")? {
+        c.job_retries = v;
+    }
+    if let Some(v) = flag_num(args, "quarantine-k")? {
+        c.quarantine_k = v;
+    }
+    if let Some(v) = flag_num(args, "breaker-fails")? {
+        c.breaker_fails = v;
     }
     Ok(c)
 }
@@ -481,6 +508,26 @@ mod tests {
     }
 
     #[test]
+    fn watchdog_resolves_through_every_layer() {
+        // default: 0 = no watchdog
+        assert_eq!(preset("lenet").watchdog_ms, 0);
+        // CLI
+        let cfg = resolve("lenet", &args("search --pipeline 2 --watchdog-ms 5000")).unwrap();
+        assert_eq!(cfg.watchdog_ms, 5000);
+        assert!(resolve("lenet", &args("search --watchdog-ms soon")).is_err());
+        // TOML and job-JSON share the key table
+        let mut via_toml = preset("lenet");
+        let doc = toml_lite::parse("[search]\nwatchdog_ms = 750\n").unwrap();
+        apply_toml(&mut via_toml, doc.get("search").unwrap()).unwrap();
+        assert_eq!(via_toml.watchdog_ms, 750);
+        let spec = job_from_json(
+            &Json::parse(r#"{"net": "lenet", "config": {"watchdog_ms": 250}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.cfg.watchdog_ms, 250);
+    }
+
+    #[test]
     fn json_and_toml_share_the_key_table() {
         // same overrides through both layers must produce the same config
         let mut via_toml = preset("lenet");
@@ -559,16 +606,24 @@ mod tests {
         let c = serve_config(&args("serve")).unwrap();
         assert_eq!(c.addr, "127.0.0.1:7463");
         assert_eq!(c.workers, 2);
+        assert_eq!(c.job_retries, 2);
+        assert_eq!(c.quarantine_k, 3);
+        assert_eq!(c.breaker_fails, 8);
         let c = serve_config(&args(
-            "serve --addr 127.0.0.1:0 --workers 4 --queue-cap 2 --archive /tmp/a.json",
+            "serve --addr 127.0.0.1:0 --workers 4 --queue-cap 2 --archive /tmp/a.json \
+             --job-retries 0 --quarantine-k 1 --breaker-fails 3",
         ))
         .unwrap();
         assert_eq!(c.addr, "127.0.0.1:0");
         assert_eq!(c.workers, 4);
         assert_eq!(c.queue_cap, 2);
         assert_eq!(c.archive, std::path::PathBuf::from("/tmp/a.json"));
+        assert_eq!(c.job_retries, 0);
+        assert_eq!(c.quarantine_k, 1);
+        assert_eq!(c.breaker_fails, 3);
         assert!(serve_config(&args("serve --workers 0")).is_err());
         assert!(serve_config(&args("serve --queue-cap zero")).is_err());
+        assert!(serve_config(&args("serve --job-retries lots")).is_err());
     }
 
     #[test]

@@ -329,6 +329,13 @@ impl QuantEnv {
 }
 
 impl EnvCore {
+    /// The execution engine backing this env (shared by all handle clones).
+    /// Drivers use it to reach the engine's health flag and retry counters
+    /// when wiring watchdogs around dispatched accuracy queries.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
     /// The memo-cache this env reads/writes (shared by all handle clones).
     pub fn memo(&self) -> &Arc<AccMemo> {
         &self.memo

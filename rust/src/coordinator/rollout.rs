@@ -85,8 +85,12 @@ impl Searcher {
     /// from `rngs[i]`). Lane count must not exceed the act_batch artifact's
     /// baked width; a single active lane takes the scalar `act` path.
     /// `pending0`, if provided and staged for exactly this lane count, is
-    /// joined in place of the layer-0 act_batch execution.
-    pub(super) fn rollout_lockstep(&mut self, rngs: &mut [Pcg32],
+    /// joined in place of the layer-0 act_batch execution. `ctl` is
+    /// consulted at every per-step chunk boundary (each layer costs an
+    /// act_batch plus up to one accuracy megabatch), so a cancellation or
+    /// deadline bounds wall-clock within one step, not one whole episode
+    /// chunk.
+    pub(super) fn rollout_lockstep(&mut self, ctl: &SearchCtl, rngs: &mut [Pcg32],
                                    mut pending0: Option<ActPending>) -> Result<Vec<LaneRollout>> {
         let n = rngs.len();
         let l_total = self.env.net.l;
@@ -115,6 +119,7 @@ impl Searcher {
             .collect();
 
         for l in 0..l_total {
+            ctl.check()?;
             let mut lane_states: Vec<[f32; STATE_DIM]> = Vec::with_capacity(n);
             for i in 0..n {
                 let mut s = [0.0f32; STATE_DIM];
@@ -239,8 +244,10 @@ impl Searcher {
     /// The batched search loop: lockstep rollouts in chunks of `cfg.lanes`
     /// (default: episodes_per_update, one PPO batch per chunk), with the same
     /// logging, update cadence, and greedy convergence detection as the
-    /// serial driver. `ctl` is checked once per lockstep chunk (the batched
-    /// equivalent of the serial driver's per-episode boundary).
+    /// serial driver. `ctl` is checked at every chunk boundary and again at
+    /// every per-step (per-layer) boundary inside the lockstep rollout, so a
+    /// deadline bounds wall-clock to one step's device work, not one whole
+    /// chunk of episodes.
     ///
     /// `cfg.pipeline = 0` runs fully synchronously (no dispatcher is ever
     /// constructed); `pipeline > 0` runs the same episode loop with the
@@ -267,7 +274,16 @@ impl Searcher {
             // two workers: one lane for the double-buffered act_batch, one
             // for the speculative accuracy slate; the depth caps each
             // artifact's in-flight dispatches (the speculation budget)
-            let disp = Dispatcher::new(2, self.cfg.pipeline);
+            let disp = if self.cfg.watchdog_ms > 0 {
+                Dispatcher::with_watchdog(
+                    2,
+                    self.cfg.pipeline,
+                    std::time::Duration::from_millis(self.cfg.watchdog_ms),
+                    self.env.engine().health(),
+                )
+            } else {
+                Dispatcher::new(2, self.cfg.pipeline)
+            };
             let prefetcher = Prefetcher::new(self.env.clone(), &disp);
             let looped = self.batched_episodes(
                 ctl,
@@ -308,7 +324,7 @@ impl Searcher {
             ctl.check()?;
             let n = lanes.min(self.cfg.episodes - ep);
             let mut rngs: Vec<Pcg32> = (ep..ep + n).map(|e| self.episode_rng(e)).collect();
-            let batch = self.rollout_lockstep(&mut rngs, pending0.take())?;
+            let batch = self.rollout_lockstep(ctl, &mut rngs, pending0.take())?;
             // the chunk's first-layer policy probabilities nominate the
             // speculative candidates for the NEXT chunk's first step
             // (collected up front — the lane loop consumes `batch`)

@@ -167,6 +167,13 @@ pub struct SearchConfig {
     /// in-flight dispatches. Purely a throughput lever: results are
     /// bit-identical at any depth (`rust/tests/pipeline_parity.rs`).
     pub pipeline: usize,
+    /// per-execution wall-clock budget (ms) for the pipelined driver's
+    /// dispatcher (0 = no watchdog). A dispatched execution that exceeds the
+    /// budget fails fast with a transient `watchdog` error and flips the
+    /// engine's health flag instead of wedging the worker pool; the next
+    /// completed execution clears it. Only the `pipeline > 0` driver
+    /// dispatches to worker threads, so the knob is inert elsewhere.
+    pub watchdog_ms: u64,
     /// evaluate accuracy (and reward) at every layer step; when false, only
     /// the terminal step is evaluated (paper §3: "for deeper networks ... we
     /// perform this phase after all the bitwidths are selected")
@@ -192,6 +199,7 @@ impl Default for SearchConfig {
             rollout: RolloutMode::Serial,
             lanes: 0,
             pipeline: 0,
+            watchdog_ms: 0,
             eval_every_step: true,
             min_bits: 2,
             seed: 23,

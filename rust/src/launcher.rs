@@ -268,7 +268,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     println!("releq serve: listening on http://{}", server.local_addr());
     println!("  workers: {workers}, archive: {}", archive.display());
     println!("  POST /v1/jobs | GET /v1/jobs/<id>[/result] | POST /v1/jobs/<id>/cancel");
-    println!("  GET /v1/stats | POST /v1/shutdown (drains + persists)");
+    println!("  GET /v1/stats | GET /v1/health | POST /v1/shutdown (drains + persists)");
     server.run()?;
     println!("releq serve: drained and stopped");
     Ok(())

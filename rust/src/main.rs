@@ -49,12 +49,17 @@ fn print_help() {
          \x20           [--pipeline N]   (async depth: double-buffered chunks + speculative\n\
          \x20                             accuracy prefetch; 0 = synchronous)\n\
          \x20           [--replicas N]   (N parallel multi-seed searches; best wins)\n\
+         \x20           [--watchdog-ms N] (per-execution wall-clock budget for the pipelined\n\
+         \x20                             dispatcher; 0 = no watchdog)\n\
          \x20 pretrain  --net <name> [--steps N] [--lr F] [--verbose]\n\
          \x20 pareto    --net <name> [--samples N] [--shards N] [--out dir]\n\
          \x20 hw-eval   --net <name> --bits 8,4,4,8\n\
          \x20 admm      --net <name> [--target-bits F]\n\
          \x20 serve     [--addr host:port] [--workers N] [--queue-cap N] [--archive file.json]\n\
          \x20           [--log-tail N] [--memo-persist N]   (see examples/serve_client.rs)\n\
+         \x20           [--job-retries N] [--quarantine-k N] [--breaker-fails N]\n\
+         \x20                             (transient-failure retries per job; consecutive env\n\
+         \x20                             failures before quarantine; failures to open breaker)\n\
          \x20 exp       <table2|table4|table5|fig5|fig6|fig7|fig8|fig9|fig10|ablation-action|ablation-lstm|all>\n\
          \x20 stats\n"
     );

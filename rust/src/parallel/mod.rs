@@ -29,6 +29,8 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use anyhow::Result;
 
+use crate::util::lock::{lock_recover, write_recover};
+
 /// Number of shards to use for `n_units` independent units of work:
 /// `RELEQ_SHARDS` if set (>= 1), else `available_parallelism`, clamped to
 /// `n_units` so no shard is empty.
@@ -172,15 +174,21 @@ struct Flight {
 }
 
 impl Flight {
+    /// Poison-tolerant on both sides: `finish` runs from Drop guards during
+    /// panic unwinds (an `unwrap` there would double-panic and abort) and
+    /// `wait` must keep serving followers after such a leader death.
     fn finish(&self, outcome: Option<f64>) {
-        *self.result.lock().unwrap() = Some(outcome);
+        *lock_recover(&self.result) = Some(outcome);
         self.cv.notify_all();
     }
 
     fn wait(&self) -> Option<f64> {
-        let mut g = self.result.lock().unwrap();
+        let mut g = lock_recover(&self.result);
         while g.is_none() {
-            g = self.cv.wait(g).unwrap();
+            g = match self.cv.wait(g) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
         g.unwrap()
     }
@@ -299,7 +307,9 @@ impl AccMemo {
                 if !self.armed {
                     return;
                 }
-                let mut m = self.memo.map.write().unwrap();
+                // poison-tolerant: this runs during panic unwinds, where an
+                // unwrap would double-panic and abort the worker's process
+                let mut m = write_recover(&self.memo.map);
                 // remove only if the slot is still this leader's in-flight
                 // entry — a concurrent insert()/extend() may have replaced
                 // it with a Done value (resolving our waiters), which must
@@ -417,7 +427,8 @@ impl AccMemo {
                 if !self.armed {
                     return;
                 }
-                let mut m = self.memo.map.write().unwrap();
+                // poison-tolerant: runs during panic unwinds (see UnpinOnDrop)
+                let mut m = write_recover(&self.memo.map);
                 for k in self.claimed {
                     // remove only our own in-flight entry; a concurrent
                     // insert()/extend() may have published a Done value

@@ -25,6 +25,15 @@
 //!   submitted task has completed (the quiesce point before a final greedy
 //!   rollout); dropping the dispatcher drains the queue and joins the
 //!   workers, so in-flight device work never outlives the owner.
+//! * **Execution watchdog** ([`Dispatcher::with_watchdog`]) — every running
+//!   task gets a wall-clock budget. A task that overruns it has its
+//!   `Pending` resolved with a transient `watchdog` error (the waiter fails
+//!   fast instead of wedging behind a hung PJRT call) and the shared
+//!   [`Health`] flag flips unhealthy — `releq serve`'s circuit breaker
+//!   sheds load until a later execution completes and clears it. The hung
+//!   worker thread itself cannot be cancelled (PJRT has no cancellation
+//!   API); it rejoins the pool if the call ever returns, and a dispatcher
+//!   drop while a task is truly stuck will wait on it.
 //!
 //! Determinism: the dispatcher only *schedules* executions; the programs it
 //! runs are pure functions of their operands, so a result obtained through
@@ -32,12 +41,15 @@
 //! (`rust/tests/pipeline_parity.rs`).
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::engine::{DeviceBuf, Exe, HostLit};
+use super::faults::{FaultError, Health};
 
 /// A one-shot rendezvous for a dispatched task's result. Obtained from the
 /// `submit` family; `wait` consumes it. Dropping a `Pending` without
@@ -80,10 +92,31 @@ impl<T> Slot<T> {
     }
 }
 
-type Task = Box<dyn FnOnce() + Send>;
+/// A queued unit of work: the task body plus (under a watchdog) the
+/// fail-fast handle that resolves the task's `Pending` with a timeout
+/// error without waiting for the body to return.
+struct Job {
+    run: Box<dyn FnOnce() + Send>,
+    abort: Option<Box<dyn FnOnce() + Send>>,
+}
+
+/// Watchdog configuration: the per-task wall-clock budget and the health
+/// flag tripped on an overrun.
+struct Watchdog {
+    budget: Duration,
+    health: Arc<Health>,
+}
+
+/// A running task's watchdog registration. `abort` is taken by whichever
+/// side settles the task first: the watchdog (overrun → fail fast) or the
+/// worker (completion → entry removed, handle dropped).
+struct WatchEntry {
+    deadline: Instant,
+    abort: Option<Box<dyn FnOnce() + Send>>,
+}
 
 struct State {
-    queue: VecDeque<Task>,
+    queue: VecDeque<Job>,
     /// queued + running submissions per artifact tag (the cap accounting)
     inflight: HashMap<String, usize>,
     /// queued + running tasks in total (the drain condition)
@@ -98,6 +131,10 @@ struct Core {
     /// cap-blocked submitters and `drain` wait here for completions
     idle_cv: Condvar,
     cap: usize,
+    watchdog: Option<Watchdog>,
+    /// running tasks under watchdog observation, keyed by a fresh id
+    watch: Mutex<HashMap<u64, WatchEntry>>,
+    next_watch_id: AtomicU64,
 }
 
 impl Core {
@@ -117,7 +154,7 @@ impl Core {
 
     fn worker_loop(self: Arc<Self>) {
         loop {
-            let task = {
+            let mut job = {
                 let mut g = self.state.lock().unwrap();
                 loop {
                     if let Some(t) = g.queue.pop_front() {
@@ -129,7 +166,51 @@ impl Core {
                     g = self.work_cv.wait(g).unwrap();
                 }
             };
-            task();
+            let watch_id = self.watchdog.as_ref().map(|w| {
+                let id = self.next_watch_id.fetch_add(1, Ordering::Relaxed);
+                self.watch.lock().unwrap().insert(
+                    id,
+                    WatchEntry { deadline: Instant::now() + w.budget, abort: job.abort.take() },
+                );
+                id
+            });
+            (job.run)();
+            if let Some(id) = watch_id {
+                // dropping an un-taken abort handle; a taken one means the
+                // watchdog already failed this task fast
+                self.watch.lock().unwrap().remove(&id);
+            }
+        }
+    }
+
+    /// The watchdog monitor loop: periodically fail-fast every running task
+    /// that overran its budget and trip the shared health flag. Exits with
+    /// the pool's shutdown signal.
+    fn watchdog_loop(self: Arc<Self>) {
+        let w = self.watchdog.as_ref().expect("watchdog loop without config");
+        let tick = (w.budget / 4).clamp(Duration::from_millis(5), Duration::from_millis(100));
+        loop {
+            std::thread::sleep(tick);
+            if self.state.lock().unwrap().shutdown {
+                return;
+            }
+            let now = Instant::now();
+            let expired: Vec<Box<dyn FnOnce() + Send>> = {
+                let mut g = self.watch.lock().unwrap();
+                g.values_mut()
+                    .filter(|e| now >= e.deadline)
+                    .filter_map(|e| e.abort.take())
+                    .collect()
+            };
+            for abort in expired {
+                w.health.trip();
+                eprintln!(
+                    "[watchdog] execution exceeded its {:?} budget; failing the waiter \
+                     fast and marking the engine unhealthy",
+                    w.budget
+                );
+                abort();
+            }
         }
     }
 }
@@ -146,6 +227,23 @@ impl Dispatcher {
     /// `workers` threads, at most `inflight_cap` queued-or-running
     /// submissions per artifact tag (the pipeline depth knob; >= 1).
     pub fn new(workers: usize, inflight_cap: usize) -> Dispatcher {
+        Dispatcher::build(workers, inflight_cap, None)
+    }
+
+    /// Like [`Dispatcher::new`], with an execution watchdog: any task
+    /// running longer than `budget` has its `Pending` resolved with a
+    /// transient `watchdog` error and trips `health` unhealthy.
+    pub fn with_watchdog(
+        workers: usize,
+        inflight_cap: usize,
+        budget: Duration,
+        health: Arc<Health>,
+    ) -> Dispatcher {
+        Dispatcher::build(workers, inflight_cap, Some(Watchdog { budget, health }))
+    }
+
+    fn build(workers: usize, inflight_cap: usize, watchdog: Option<Watchdog>) -> Dispatcher {
+        let watched = watchdog.is_some();
         let core = Arc::new(Core {
             state: Mutex::new(State {
                 queue: VecDeque::new(),
@@ -156,8 +254,11 @@ impl Dispatcher {
             work_cv: Condvar::new(),
             idle_cv: Condvar::new(),
             cap: inflight_cap.max(1),
+            watchdog,
+            watch: Mutex::new(HashMap::new()),
+            next_watch_id: AtomicU64::new(0),
         });
-        let workers = (0..workers.max(1))
+        let mut workers: Vec<JoinHandle<()>> = (0..workers.max(1))
             .map(|i| {
                 let core = core.clone();
                 std::thread::Builder::new()
@@ -166,6 +267,15 @@ impl Dispatcher {
                     .expect("spawning dispatcher worker")
             })
             .collect();
+        if watched {
+            let core = core.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name("releq-watchdog".to_string())
+                    .spawn(move || core.watchdog_loop())
+                    .expect("spawning dispatcher watchdog"),
+            );
+        }
         Dispatcher { core, workers }
     }
 
@@ -222,8 +332,22 @@ impl Dispatcher {
             }
             *g.inflight.entry(tag_owned.clone()).or_insert(0) += 1;
             g.active += 1;
+            // under a watchdog, the job carries a fail-fast handle: resolve
+            // the pending with a typed transient error while the (possibly
+            // hung) body keeps running
+            let abort = self.core.watchdog.as_ref().map(|w| {
+                let abort_slot = slot.clone();
+                let abort_tag = tag_owned.clone();
+                let budget = w.budget;
+                Box::new(move || {
+                    abort_slot.fulfill(Err(FaultError::Transient(format!(
+                        "watchdog: `{abort_tag}` exceeded its {budget:?} execution budget"
+                    ))
+                    .into()));
+                }) as Box<dyn FnOnce() + Send>
+            });
             let task_slot = slot;
-            g.queue.push_back(Box::new(move || {
+            let run = Box::new(move || {
                 // a panicking task must resolve its pending (a wedged waiter
                 // would hang the driving loop) and must not kill the worker
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
@@ -240,7 +364,8 @@ impl Dispatcher {
                 };
                 task_slot.fulfill(out);
                 core.finish(&tag_owned);
-            }));
+            });
+            g.queue.push_back(Job { run, abort });
         }
         self.core.work_cv.notify_one();
         Some(pending)
@@ -377,6 +502,38 @@ mod tests {
             // drop without drain: queued tasks must still complete
         }
         assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn watchdog_fails_fast_and_trips_health() {
+        let health = Arc::new(Health::new());
+        let d = Dispatcher::with_watchdog(1, 4, Duration::from_millis(40), health.clone());
+        let t0 = Instant::now();
+        let p = d.submit_with::<u32, _>("hang", || {
+            std::thread::sleep(Duration::from_millis(400));
+            Ok(7)
+        });
+        let err = p.wait().unwrap_err();
+        assert!(
+            t0.elapsed() < Duration::from_millis(350),
+            "the waiter must fail fast, not wait out the hang"
+        );
+        assert!(format!("{err:#}").contains("watchdog"), "{err}");
+        assert!(!health.is_healthy(), "a hung exec must trip the health flag");
+        // the worker rejoins the pool once the hang resolves
+        let q = d.submit_with("after", || Ok(1u8));
+        assert_eq!(q.wait().unwrap(), 1);
+    }
+
+    #[test]
+    fn watchdog_leaves_fast_tasks_alone() {
+        let health = Arc::new(Health::new());
+        let d = Dispatcher::with_watchdog(2, 4, Duration::from_millis(500), health.clone());
+        for i in 0..8u32 {
+            let p = d.submit_with("quick", move || Ok(i));
+            assert_eq!(p.wait().unwrap(), i);
+        }
+        assert!(health.is_healthy());
     }
 
     #[test]

@@ -22,6 +22,8 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+use super::faults::{retry_transient, FaultPlan, Health, RetryPolicy};
+
 /// A compiled artifact plus execution statistics.
 ///
 /// Counters are atomics so `&Exe` can be shared across shard threads; the
@@ -40,6 +42,15 @@ pub struct Exe {
     pub exec_ns: AtomicU64,
     /// literal-download component (`to_literal_sync` + `to_tuple`)
     pub download_ns: AtomicU64,
+    /// the engine's fault-injection plan (`None` — the common case — is a
+    /// single branch on the hot path)
+    faults: Option<Arc<FaultPlan>>,
+    /// transient-failure retry policy shared with the owning engine
+    retry: RetryPolicy,
+    /// engine health flag: completed executions clear it
+    health: Arc<Health>,
+    /// engine-wide retry counter (shared across all `Exe`s)
+    retries: Arc<AtomicU64>,
 }
 
 // SAFETY: `PjRtLoadedExecutable` wraps an immutable compiled program; the
@@ -68,7 +79,20 @@ impl Exe {
 
     /// Execute with host literals; returns the decomposed output tuple.
     /// Accepts `&[&Literal]` (or owned) so callers can reuse cached operands.
+    /// Transient failures (injected or backend-reported) are retried per the
+    /// engine's [`RetryPolicy`]; the programs are pure functions of their
+    /// operands, so a retried execution returns bit-identical results.
     pub fn run<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
+        if self.retry.max_retries == 0 {
+            return self.attempt(args);
+        }
+        retry_transient(&self.retry, &self.name, Some(&self.retries), || self.attempt(args))
+    }
+
+    fn attempt<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
+        if let Some(f) = &self.faults {
+            f.on_exec(&self.name)?;
+        }
         let t0 = Instant::now();
         let mut out = self
             .inner
@@ -82,13 +106,25 @@ impl Exe {
         let lit = buf.to_literal_sync()?;
         let parts = lit.to_tuple()?;
         self.record(t0, t1);
+        self.health.ok();
         Ok(parts)
     }
 
     /// Execute with device-resident buffers (perf hot path: persistent
     /// operands like the training set or agent parameters are uploaded once
-    /// and reused across thousands of executions).
+    /// and reused across thousands of executions). Same retry semantics as
+    /// [`Exe::run`].
     pub fn run_b<B: std::borrow::Borrow<PjRtBuffer>>(&self, args: &[B]) -> Result<Vec<Literal>> {
+        if self.retry.max_retries == 0 {
+            return self.attempt_b(args);
+        }
+        retry_transient(&self.retry, &self.name, Some(&self.retries), || self.attempt_b(args))
+    }
+
+    fn attempt_b<B: std::borrow::Borrow<PjRtBuffer>>(&self, args: &[B]) -> Result<Vec<Literal>> {
+        if let Some(f) = &self.faults {
+            f.on_exec(&self.name)?;
+        }
         let t0 = Instant::now();
         let mut out = self
             .inner
@@ -102,6 +138,7 @@ impl Exe {
         let lit = buf.to_literal_sync()?;
         let parts = lit.to_tuple()?;
         self.record(t0, t1);
+        self.health.ok();
         Ok(parts)
     }
 
@@ -231,6 +268,15 @@ pub struct Engine {
     pub client: PjRtClient,
     pub dir: PathBuf,
     cache: RwLock<HashMap<String, Arc<Exe>>>,
+    /// fault-injection plan handed to every compiled `Exe` (`None` = no
+    /// fault checks on the hot path)
+    faults: Option<Arc<FaultPlan>>,
+    /// transient-failure retry policy handed to every compiled `Exe`
+    retry: RetryPolicy,
+    /// healthy/unhealthy flag shared with the dispatch watchdog and serve
+    health: Arc<Health>,
+    /// total transient-failure retries across all artifacts
+    exec_retries: Arc<AtomicU64>,
 }
 
 // SAFETY: `PjRtClient` (CPU) is thread-safe per the PJRT API contract —
@@ -240,9 +286,44 @@ unsafe impl Send for Engine {}
 unsafe impl Sync for Engine {}
 
 impl Engine {
+    /// Standard constructor: fault plan from `$RELEQ_FAULTS` (usually none)
+    /// and retry policy from `$RELEQ_EXEC_RETRIES`/`$RELEQ_RETRY_BASE_MS`.
     pub fn new(artifacts_dir: PathBuf) -> Result<Engine> {
+        Engine::with_faults(artifacts_dir, FaultPlan::from_env()?, RetryPolicy::from_env()?)
+    }
+
+    /// Constructor with an explicit fault plan and retry policy (chaos
+    /// tests and the `--faults` CLI seam).
+    pub fn with_faults(
+        artifacts_dir: PathBuf,
+        faults: Option<Arc<FaultPlan>>,
+        retry: RetryPolicy,
+    ) -> Result<Engine> {
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, dir: artifacts_dir, cache: RwLock::new(HashMap::new()) })
+        Ok(Engine {
+            client,
+            dir: artifacts_dir,
+            cache: RwLock::new(HashMap::new()),
+            faults: faults.filter(|f| !f.is_empty()),
+            retry,
+            health: Arc::new(Health::new()),
+            exec_retries: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// The engine's healthy/unhealthy flag (shared with watchdogs + serve).
+    pub fn health(&self) -> Arc<Health> {
+        self.health.clone()
+    }
+
+    /// Transient-failure retries spent across all artifacts.
+    pub fn exec_retries(&self) -> u64 {
+        self.exec_retries.load(Ordering::Relaxed)
+    }
+
+    /// Faults injected by the active plan (0 without a plan).
+    pub fn faults_injected(&self) -> u64 {
+        self.faults.as_ref().map_or(0, |f| f.injected())
     }
 
     /// Fetch (compiling on first use) the executable for `artifacts/<name>.hlo.txt`.
@@ -271,6 +352,10 @@ impl Engine {
             exec_count: AtomicU64::new(0),
             exec_ns: AtomicU64::new(0),
             download_ns: AtomicU64::new(0),
+            faults: self.faults.clone(),
+            retry: self.retry.clone(),
+            health: self.health.clone(),
+            retries: self.exec_retries.clone(),
         });
         let e = self
             .cache

@@ -1,0 +1,639 @@
+//! Deterministic fault injection, typed failure classification, and bounded
+//! retry — the robustness seam under every execution path.
+//!
+//! ReLeQ searches are long loops of device executions; a single transient
+//! PJRT failure used to kill the whole job. This module provides the three
+//! primitives the runtime and serve layers build fault tolerance from:
+//!
+//! * [`FaultPlan`] — a deterministic, PCG-seeded fault injector configured
+//!   via `$RELEQ_FAULTS` (inline DSL or a rules file). A plan makes the Nth
+//!   execution of a named artifact fail, stall, or delay, so every retry /
+//!   watchdog / quarantine behavior is exercised in the always-run stub
+//!   tier. An absent plan is an `Option::None` check on the hot path —
+//!   nothing else.
+//! * [`FaultError`] / [`classify`] — typed transient / permanent
+//!   classification. Errors injected by a plan carry their class; real PJRT
+//!   errors are classified by status-code heuristics (conservatively:
+//!   unknown errors are permanent, so retry never loops on a programming
+//!   bug). The third class, cancellation, stays where it always was — the
+//!   `Cancelled` downcast in `coordinator::search` — and the serve
+//!   scheduler folds both sources into one verdict.
+//! * [`RetryPolicy`] / [`retry_transient`] — bounded exponential backoff
+//!   with deterministic jitter (per-callsite PCG stream) around any
+//!   fallible operation; only transient failures are retried.
+//! * [`Health`] — a shared healthy/unhealthy flag with a trip counter. The
+//!   dispatch watchdog trips it on a hung execution; a completed execution
+//!   clears it; `releq serve` surfaces it through `GET /v1/health` and the
+//!   circuit breaker sheds load while it is tripped.
+//!
+//! # Fault DSL
+//!
+//! A plan is a comma-separated rule list; each rule is
+//! `artifact:trigger:action`:
+//!
+//! ```text
+//! seed=7,lenet_retrain_eval:nth=3:fail,*:prob=0.01:delay=5
+//! ```
+//!
+//! * `artifact` — exact name, `*` (all), or a `prefix*` glob;
+//! * trigger — `nth=N` (exactly the Nth matching execution, 1-based),
+//!   `every=N` (every Nth), or `prob=P` (each execution with probability
+//!   `P`, drawn from the rule's own PCG stream derived from `seed`);
+//! * action — `fail` (transient error), `perm` (permanent error),
+//!   `delay=MS` (sleep, then proceed normally), or `stall=MS` (sleep — a
+//!   hang, as the watchdog sees it — then fail transient).
+//!
+//! `$RELEQ_FAULTS` may also name a file: one rule (or `seed=N`) per line,
+//! `#` comments allowed.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::fnv::Fnv;
+use crate::util::rng::Pcg32;
+
+/// Name of the environment variable holding a fault plan (inline DSL or a
+/// path to a rules file).
+pub const FAULTS_ENV: &str = "RELEQ_FAULTS";
+
+// ---- typed classification ----------------------------------------------------
+
+/// A typed execution failure. Injected faults carry their class explicitly;
+/// [`classify`] recovers it from an `anyhow` chain.
+#[derive(Debug, Clone)]
+pub enum FaultError {
+    /// Worth retrying: the same operation may well succeed (injected
+    /// transient faults, PJRT UNAVAILABLE/RESOURCE_EXHAUSTED, watchdog
+    /// timeouts).
+    Transient(String),
+    /// Retrying is pointless: the operation will fail the same way again.
+    Permanent(String),
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultError::Transient(m) => write!(f, "transient failure: {m}"),
+            FaultError::Permanent(m) => write!(f, "permanent failure: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// The retry verdict for a failure. `Cancelled` is never produced by
+/// [`classify`] itself (cancellation is a coordinator-level concept — the
+/// `Cancelled` type in `coordinator::search`); the serve scheduler folds
+/// the two sources into this one enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    Transient,
+    Permanent,
+    Cancelled,
+}
+
+/// Patterns in real backend error messages that indicate a retryable
+/// condition (PJRT/absl status codes + the dispatch watchdog's marker).
+const TRANSIENT_MARKERS: [&str; 4] =
+    ["UNAVAILABLE", "RESOURCE_EXHAUSTED", "ABORTED", "watchdog"];
+
+/// Classify an execution error as transient or permanent. A typed
+/// [`FaultError`] anywhere in the chain wins; otherwise the rendered chain
+/// is scanned for transient status markers, and anything unrecognized is
+/// permanent — retry must never loop on a deterministic bug.
+pub fn classify(err: &anyhow::Error) -> FaultClass {
+    for cause in err.chain() {
+        if let Some(f) = cause.downcast_ref::<FaultError>() {
+            return match f {
+                FaultError::Transient(_) => FaultClass::Transient,
+                FaultError::Permanent(_) => FaultClass::Permanent,
+            };
+        }
+    }
+    let msg = format!("{err:#}");
+    if TRANSIENT_MARKERS.iter().any(|m| msg.contains(m)) {
+        return FaultClass::Transient;
+    }
+    FaultClass::Permanent
+}
+
+// ---- fault plan --------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum Trigger {
+    /// exactly the Nth matching execution (1-based)
+    Nth(u64),
+    /// every Nth matching execution
+    Every(u64),
+    /// each matching execution independently, with this probability
+    Prob(f64),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Action {
+    /// fail with a transient error
+    Fail,
+    /// fail with a permanent error
+    Perm,
+    /// sleep this many ms, then proceed normally (added latency)
+    Delay(u64),
+    /// sleep this many ms (a hang, as the watchdog sees it), then fail
+    /// transient
+    Stall(u64),
+}
+
+struct Rule {
+    pat: String,
+    trigger: Trigger,
+    action: Action,
+    /// matching executions seen (drives `nth`/`every`)
+    count: AtomicU64,
+    /// faults this rule has injected
+    fired: AtomicU64,
+    /// the rule's own PCG stream (drives `prob`)
+    rng: Mutex<Pcg32>,
+}
+
+fn pat_matches(pat: &str, name: &str) -> bool {
+    pat == "*"
+        || pat == name
+        || pat.strip_suffix('*').is_some_and(|p| name.starts_with(p))
+}
+
+/// A deterministic fault-injection plan: an ordered rule list evaluated on
+/// every execution of a named artifact. Empty plans never exist — the
+/// engine holds `Option<Arc<FaultPlan>>` and the no-plan hot path is a
+/// single `None` check.
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    /// Parse an inline DSL spec (see the module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed: u64 = 0x5eed_f417;
+        let mut raw: Vec<(String, Trigger, Action)> = Vec::new();
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some((k, v)) = item.split_once('=') {
+                if k.trim() == "seed" {
+                    seed = v
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("fault seed `{v}` is not a u64"))?;
+                    continue;
+                }
+            }
+            let mut parts = item.splitn(3, ':');
+            let (pat, trig, act) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(p), Some(t), Some(a)) => (p.trim(), t.trim(), a.trim()),
+                _ => anyhow::bail!(
+                    "fault rule `{item}` is not `artifact:trigger:action`"
+                ),
+            };
+            let trigger = match trig.split_once('=') {
+                Some(("nth", n)) => Trigger::Nth(
+                    n.parse().with_context(|| format!("bad nth in `{item}`"))?,
+                ),
+                Some(("every", n)) => Trigger::Every(
+                    n.parse().with_context(|| format!("bad every in `{item}`"))?,
+                ),
+                Some(("prob", p)) => {
+                    let p: f64 =
+                        p.parse().with_context(|| format!("bad prob in `{item}`"))?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&p),
+                        "prob {p} outside [0, 1] in `{item}`"
+                    );
+                    Trigger::Prob(p)
+                }
+                _ => anyhow::bail!(
+                    "fault trigger `{trig}` is not nth=N | every=N | prob=P"
+                ),
+            };
+            let action = match (act, act.split_once('=')) {
+                ("fail", _) => Action::Fail,
+                ("perm", _) => Action::Perm,
+                (_, Some(("delay", ms))) => Action::Delay(
+                    ms.parse().with_context(|| format!("bad delay in `{item}`"))?,
+                ),
+                (_, Some(("stall", ms))) => Action::Stall(
+                    ms.parse().with_context(|| format!("bad stall in `{item}`"))?,
+                ),
+                _ => anyhow::bail!(
+                    "fault action `{act}` is not fail | perm | delay=MS | stall=MS"
+                ),
+            };
+            raw.push((pat.to_string(), trigger, action));
+        }
+        // seed the rule streams only once the (position-independent) seed is
+        // known: rule i draws from stream i+1 of the plan seed
+        let rules = raw
+            .into_iter()
+            .enumerate()
+            .map(|(i, (pat, trigger, action))| Rule {
+                pat,
+                trigger,
+                action,
+                count: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+                rng: Mutex::new(Pcg32::new(seed).derive(i as u64 + 1)),
+            })
+            .collect();
+        Ok(FaultPlan { rules })
+    }
+
+    /// Parse an inline spec, or — when the string names an existing file —
+    /// a rules file (one rule or `seed=N` per line, `#` comments).
+    pub fn load(spec_or_path: &str) -> Result<FaultPlan> {
+        let p = Path::new(spec_or_path);
+        if p.is_file() {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading fault plan {p:?}"))?;
+            let spec: Vec<String> = text
+                .lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                .map(|l| l.to_string())
+                .collect();
+            return FaultPlan::parse(&spec.join(","));
+        }
+        FaultPlan::parse(spec_or_path)
+    }
+
+    /// The process-wide plan from `$RELEQ_FAULTS`, if any. `None` (the
+    /// overwhelmingly common case) keeps fault checks off the decision
+    /// path entirely.
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>> {
+        match std::env::var(FAULTS_ENV) {
+            Ok(s) if !s.trim().is_empty() => {
+                Ok(Some(Arc::new(FaultPlan::load(s.trim()).with_context(
+                    || format!("parsing ${FAULTS_ENV}"),
+                )?)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Consult the plan for one execution of `name`. Returns `Ok(())` to
+    /// proceed (possibly after an injected delay) or the injected typed
+    /// error. The first firing fail/stall rule wins; delay rules compose.
+    pub fn on_exec(&self, name: &str) -> Result<()> {
+        for r in &self.rules {
+            if !pat_matches(&r.pat, name) {
+                continue;
+            }
+            let n = r.count.fetch_add(1, Ordering::Relaxed) + 1;
+            let fire = match r.trigger {
+                Trigger::Nth(k) => n == k,
+                Trigger::Every(k) => k > 0 && n % k == 0,
+                Trigger::Prob(p) => {
+                    let mut g = match r.rng.lock() {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    g.next_f64() < p
+                }
+            };
+            if !fire {
+                continue;
+            }
+            r.fired.fetch_add(1, Ordering::Relaxed);
+            match r.action {
+                Action::Delay(ms) => std::thread::sleep(Duration::from_millis(ms)),
+                Action::Stall(ms) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                    return Err(FaultError::Transient(format!(
+                        "injected stall ({ms} ms) on `{name}` (matching exec #{n})"
+                    ))
+                    .into());
+                }
+                Action::Fail => {
+                    return Err(FaultError::Transient(format!(
+                        "injected transient fault on `{name}` (matching exec #{n})"
+                    ))
+                    .into())
+                }
+                Action::Perm => {
+                    return Err(FaultError::Permanent(format!(
+                        "injected permanent fault on `{name}` (matching exec #{n})"
+                    ))
+                    .into())
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total faults injected so far (fail + perm + delay + stall firings),
+    /// for the balance assertions in stats/chaos tests.
+    pub fn injected(&self) -> u64 {
+        self.rules.iter().map(|r| r.fired.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+// ---- retry -------------------------------------------------------------------
+
+/// Bounded exponential backoff with deterministic jitter. The delay before
+/// retry `k` (0-based) is `min(cap_ms, base_ms << k)`, scaled by a jitter
+/// factor in `[0.5, 1.0)` drawn from a PCG stream seeded by
+/// `seed ^ fnv(callsite name)` — so a retry schedule replays bit-exactly.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// retries after the first attempt (0 disables retrying)
+    pub max_retries: u32,
+    pub base_ms: u64,
+    pub cap_ms: u64,
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_retries: 3, base_ms: 25, cap_ms: 1000, seed: 0x0b5e_55ed }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries (failures propagate on the first attempt).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_retries: 0, ..RetryPolicy::default() }
+    }
+
+    /// The default policy, overridable via `$RELEQ_EXEC_RETRIES` and
+    /// `$RELEQ_RETRY_BASE_MS`.
+    pub fn from_env() -> Result<RetryPolicy> {
+        let mut p = RetryPolicy::default();
+        if let Ok(v) = std::env::var("RELEQ_EXEC_RETRIES") {
+            p.max_retries =
+                v.parse().with_context(|| format!("$RELEQ_EXEC_RETRIES=`{v}`"))?;
+        }
+        if let Ok(v) = std::env::var("RELEQ_RETRY_BASE_MS") {
+            p.base_ms =
+                v.parse().with_context(|| format!("$RELEQ_RETRY_BASE_MS=`{v}`"))?;
+        }
+        Ok(p)
+    }
+
+    /// Backoff before retry `attempt` (0-based), jittered from `rng`.
+    pub fn backoff(&self, attempt: u32, rng: &mut Pcg32) -> Duration {
+        let exp = self.base_ms.saturating_shl(attempt).min(self.cap_ms.max(1));
+        let jittered = (exp as f64 * (0.5 + 0.5 * rng.next_f64())) as u64;
+        Duration::from_millis(jittered.max(1))
+    }
+}
+
+trait SatShl {
+    fn saturating_shl(self, k: u32) -> u64;
+}
+
+impl SatShl for u64 {
+    fn saturating_shl(self, k: u32) -> u64 {
+        if k >= 63 {
+            return u64::MAX;
+        }
+        self.checked_shl(k).unwrap_or(u64::MAX)
+    }
+}
+
+/// Run `op`, retrying transient failures per `policy` with jittered
+/// backoff. Permanent and unclassified failures propagate immediately;
+/// each retry bumps `counter` (when given). `what` names the operation in
+/// logs and seeds the jitter stream.
+pub fn retry_transient<T>(
+    policy: &RetryPolicy,
+    what: &str,
+    counter: Option<&AtomicU64>,
+    mut op: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let mut rng = Pcg32::new(policy.seed ^ Fnv::new().write_str(what).finish());
+    let mut attempt: u32 = 0;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                if attempt >= policy.max_retries
+                    || classify(&e) != FaultClass::Transient
+                {
+                    return Err(e);
+                }
+                let d = policy.backoff(attempt, &mut rng);
+                eprintln!(
+                    "[retry] `{what}` failed transiently (attempt {}/{}): {e:#}; \
+                     backing off {d:?}",
+                    attempt + 1,
+                    policy.max_retries + 1,
+                );
+                if let Some(c) = counter {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+                std::thread::sleep(d);
+                attempt += 1;
+            }
+        }
+    }
+}
+
+// ---- health ------------------------------------------------------------------
+
+/// A shared healthy/unhealthy flag with a trip counter. The dispatch
+/// watchdog trips it when an execution hangs past its budget; a completed
+/// execution clears it (the backend demonstrably works again). The serve
+/// circuit breaker and `GET /v1/health` read it.
+#[derive(Default)]
+pub struct Health {
+    unhealthy: AtomicBool,
+    trips: AtomicU64,
+}
+
+impl Health {
+    pub fn new() -> Health {
+        Health::default()
+    }
+
+    /// Mark the backend unhealthy (one watchdog trip).
+    pub fn trip(&self) {
+        self.unhealthy.store(true, Ordering::Relaxed);
+        self.trips.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record evidence of a working backend (a completed execution). The
+    /// load-before-store keeps the healthy hot path read-only.
+    pub fn ok(&self) {
+        if self.unhealthy.load(Ordering::Relaxed) {
+            self.unhealthy.store(false, Ordering::Relaxed);
+        }
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        !self.unhealthy.load(Ordering::Relaxed)
+    }
+
+    /// Total watchdog trips over the process lifetime (monotonic).
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let p = FaultPlan::parse("op:nth=3:fail").unwrap();
+        assert!(p.on_exec("op").is_ok());
+        assert!(p.on_exec("op").is_ok());
+        let err = p.on_exec("op").unwrap_err();
+        assert_eq!(classify(&err), FaultClass::Transient);
+        assert!(p.on_exec("op").is_ok(), "nth fires once, not from N on");
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn every_fires_periodically_and_only_on_matches() {
+        let p = FaultPlan::parse("net_*:every=2:perm").unwrap();
+        assert!(p.on_exec("agent_act").is_ok()); // no match, no count
+        assert!(p.on_exec("net_train").is_ok());
+        let err = p.on_exec("net_eval").unwrap_err();
+        assert_eq!(classify(&err), FaultClass::Permanent);
+        assert!(p.on_exec("net_train").is_ok());
+        assert!(p.on_exec("net_train").is_err());
+        assert_eq!(p.injected(), 2);
+    }
+
+    #[test]
+    fn prob_is_deterministic_across_identical_plans() {
+        let spec = "seed=99,*:prob=0.5:fail";
+        let a = FaultPlan::parse(spec).unwrap();
+        let b = FaultPlan::parse(spec).unwrap();
+        let run = |p: &FaultPlan| -> Vec<bool> {
+            (0..64).map(|_| p.on_exec("x").is_err()).collect()
+        };
+        let ra = run(&a);
+        assert_eq!(ra, run(&b), "same seed must inject the same schedule");
+        assert!(ra.iter().any(|&f| f) && !ra.iter().all(|&f| f));
+    }
+
+    #[test]
+    fn seed_position_does_not_matter() {
+        let a = FaultPlan::parse("seed=5,*:prob=0.3:fail").unwrap();
+        let b = FaultPlan::parse("*:prob=0.3:fail,seed=5").unwrap();
+        let run = |p: &FaultPlan| -> Vec<bool> {
+            (0..32).map(|_| p.on_exec("x").is_err()).collect()
+        };
+        assert_eq!(run(&a), run(&b));
+    }
+
+    #[test]
+    fn delay_injects_latency_but_no_error() {
+        let p = FaultPlan::parse("op:every=1:delay=10").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(p.on_exec("op").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn bad_specs_are_loud() {
+        assert!(FaultPlan::parse("op:nth=3").is_err());
+        assert!(FaultPlan::parse("op:sometimes:fail").is_err());
+        assert!(FaultPlan::parse("op:nth=3:explode").is_err());
+        assert!(FaultPlan::parse("op:prob=1.5:fail").is_err());
+        assert!(FaultPlan::parse("seed=xyzzy,op:nth=1:fail").is_err());
+    }
+
+    #[test]
+    fn rules_file_round_trips() {
+        let dir = std::env::temp_dir().join("releq_fault_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.txt");
+        std::fs::write(&path, "# chaos plan\nseed=3\nop:nth=1:fail\n").unwrap();
+        let p = FaultPlan::load(path.to_str().unwrap()).unwrap();
+        assert!(p.on_exec("op").is_err());
+        assert!(p.on_exec("op").is_ok());
+    }
+
+    #[test]
+    fn classify_typed_and_heuristic() {
+        let t: anyhow::Error = FaultError::Transient("x".into()).into();
+        let p: anyhow::Error = FaultError::Permanent("x".into()).into();
+        assert_eq!(classify(&t), FaultClass::Transient);
+        assert_eq!(classify(&p), FaultClass::Permanent);
+        // typed errors win through context wrapping
+        assert_eq!(classify(&t.context("executing `lenet_train`")), FaultClass::Transient);
+        let real = anyhow::anyhow!("UNAVAILABLE: backend channel reset");
+        assert_eq!(classify(&real), FaultClass::Transient);
+        let bug = anyhow::anyhow!("shape mismatch: [4] vs [8]");
+        assert_eq!(classify(&bug), FaultClass::Permanent);
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_deterministic() {
+        let pol = RetryPolicy { max_retries: 8, base_ms: 10, cap_ms: 80, seed: 1 };
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for k in 0..8 {
+            let da = pol.backoff(k, &mut a);
+            assert_eq!(da, pol.backoff(k, &mut b));
+            assert!(da <= Duration::from_millis(80), "cap violated at retry {k}");
+            assert!(da >= Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn retry_recovers_transient_and_propagates_permanent() {
+        let pol = RetryPolicy { max_retries: 3, base_ms: 1, cap_ms: 2, seed: 7 };
+        let counter = AtomicU64::new(0);
+        let mut calls = 0u32;
+        let out = retry_transient(&pol, "t", Some(&counter), || {
+            calls += 1;
+            if calls < 3 {
+                Err(FaultError::Transient("flaky".into()).into())
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(out.unwrap(), 3);
+        assert_eq!(counter.load(Ordering::Relaxed), 2);
+
+        let mut calls = 0u32;
+        let out: Result<u32> = retry_transient(&pol, "p", None, || {
+            calls += 1;
+            Err(FaultError::Permanent("broken".into()).into())
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 1, "permanent failures must fail fast");
+    }
+
+    #[test]
+    fn retry_budget_is_bounded() {
+        let pol = RetryPolicy { max_retries: 2, base_ms: 1, cap_ms: 1, seed: 7 };
+        let mut calls = 0u32;
+        let out: Result<u32> = retry_transient(&pol, "b", None, || {
+            calls += 1;
+            Err(FaultError::Transient("always".into()).into())
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 3, "1 attempt + 2 retries");
+    }
+
+    #[test]
+    fn health_trips_and_recovers() {
+        let h = Health::new();
+        assert!(h.is_healthy());
+        h.trip();
+        assert!(!h.is_healthy());
+        assert_eq!(h.trips(), 1);
+        h.ok();
+        assert!(h.is_healthy());
+        assert_eq!(h.trips(), 1, "trip count is monotonic across recovery");
+    }
+}

@@ -1,13 +1,16 @@
 //! PJRT runtime: artifact loading/compilation/execution (engine), the
-//! asynchronous dispatcher worker pool (dispatch), and the Python↔Rust
+//! asynchronous dispatcher worker pool (dispatch), deterministic fault
+//! injection + typed retry/health primitives (faults), and the Python↔Rust
 //! contract (manifest).
 
 pub mod dispatch;
 pub mod engine;
+pub mod faults;
 pub mod manifest;
 
 pub use dispatch::{Dispatcher, Pending};
 pub use engine::{
     lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, ExeStat, HostLit, Stage,
 };
+pub use faults::{classify, retry_transient, FaultClass, FaultError, FaultPlan, Health, RetryPolicy};
 pub use manifest::{AgentMeta, LayerMeta, Manifest, NetworkMeta};

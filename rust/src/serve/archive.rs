@@ -199,6 +199,44 @@ impl Record {
             && self.memo.iter().all(|(_, a)| a.is_finite())
     }
 
+    /// FNV-1a digest over the payload fields — everything except the
+    /// mutable `hits` bookkeeping (and the digest itself), so a lookup
+    /// bumping a record's hit counter does not churn its checksum.
+    /// Floats fold via `to_bits`, which is safe across the JSON round-trip
+    /// because the serializer emits shortest-round-trip representations;
+    /// the one bit pattern that does NOT survive (`-0.0` dumps as `0`) is
+    /// canonicalized before hashing.
+    fn checksum(&self) -> u64 {
+        // IEEE: -0.0 + 0.0 == +0.0, every other value is unchanged
+        let canon = |x: f64| x + 0.0;
+        let s = &self.solution;
+        let mut h = Fnv::new();
+        h.write_str(&self.net)
+            .write_u64(self.env_fp)
+            .write_u64(self.search_fp)
+            .write_u64(s.bits.len() as u64)
+            .write_u32_words(&s.bits)
+            .write_f64(canon(s.avg_bits))
+            .write_f64(canon(s.acc_fullp))
+            .write_f64(canon(s.acc_final))
+            .write_f64(canon(s.acc_loss_pct))
+            .write_f64(canon(s.state_q))
+            .write_f64(canon(s.reward))
+            .write_u64(s.episodes_run as u64)
+            .write_u64(s.pareto.len() as u64);
+        for (q, a, b) in &s.pareto {
+            h.write_f64(canon(*q))
+                .write_f64(canon(*a))
+                .write_u64(b.len() as u64)
+                .write_u32_words(b);
+        }
+        h.write_u64(self.memo.len() as u64);
+        for (b, a) in &self.memo {
+            h.write_u64(b.len() as u64).write_u32_words(b).write_f64(canon(*a));
+        }
+        h.finish()
+    }
+
     fn to_json(&self) -> Json {
         Json::obj(vec![
             ("net", Json::Str(self.net.clone())),
@@ -215,6 +253,7 @@ impl Record {
                 ),
             ),
             ("hits", Json::Num(self.hits as f64)),
+            ("checksum", Json::Str(format!("{:016x}", self.checksum()))),
         ])
     }
 
@@ -236,14 +275,27 @@ impl Record {
                 ))
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(Record {
+        let rec = Record {
             net: j.get("net").and_then(Json::as_str).context("record net")?.to_string(),
             env_fp: fp("env_fp")?,
             search_fp: fp("search_fp")?,
             solution: Solution::from_json(j.req("solution")).context("record solution")?,
             memo,
             hits: j.get("hits").and_then(Json::as_f64).unwrap_or(0.0) as u64,
-        })
+        };
+        // a record without a checksum predates PR 6 — accepted as-is; a
+        // record WITH one must verify, or a flipped bit in a stored
+        // accuracy would silently poison warm-started memos
+        if let Some(s) = j.get("checksum").and_then(Json::as_str) {
+            let want =
+                u64::from_str_radix(s, 16).with_context(|| format!("record checksum `{s}`"))?;
+            let got = rec.checksum();
+            anyhow::ensure!(
+                got == want,
+                "record checksum mismatch (stored {want:016x}, computed {got:016x})"
+            );
+        }
+        Ok(rec)
     }
 }
 
@@ -264,6 +316,8 @@ pub struct Archive {
     /// completion time of the last save, for [`Archive::save_throttled`]
     last_save: Mutex<Option<Instant>>,
     hits: AtomicU64,
+    /// records dropped at open for failing decode or checksum validation
+    skipped: AtomicU64,
 }
 
 impl Archive {
@@ -274,18 +328,32 @@ impl Archive {
 
     /// Open (or start empty at) `path`. A missing file is an empty archive;
     /// a malformed file is an error — silently discarding accumulated
-    /// solutions would be worse than refusing to start.
+    /// solutions would be worse than refusing to start. An individual
+    /// record that fails to decode or fails its checksum is skipped (and
+    /// counted in [`Archive::skipped`], surfaced through `/v1/stats`): one
+    /// flipped bit must cost one record, not brick the daemon's restart or
+    /// wipe everything the other records accumulated.
     pub fn open(path: &Path) -> Result<Archive> {
         let mut records = BTreeMap::new();
+        let mut skipped = 0u64;
         if path.exists() {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading archive {}", path.display()))?;
             let j = Json::parse(&text)
                 .map_err(|e| anyhow::anyhow!("archive {}: {e}", path.display()))?;
             for (k, v) in j.as_obj().context("archive root must be an object")? {
-                let rec = Record::from_json(v)
-                    .with_context(|| format!("archive record `{k}`"))?;
-                records.insert(k.clone(), rec);
+                match Record::from_json(v) {
+                    Ok(rec) => {
+                        records.insert(k.clone(), rec);
+                    }
+                    Err(e) => {
+                        skipped += 1;
+                        eprintln!(
+                            "[serve] archive {}: skipping corrupted record `{k}`: {e:#}",
+                            path.display()
+                        );
+                    }
+                }
             }
         }
         Ok(Archive {
@@ -294,6 +362,7 @@ impl Archive {
             save_lock: Mutex::new(()),
             last_save: Mutex::new(None),
             hits: AtomicU64::new(0),
+            skipped: AtomicU64::new(skipped),
         })
     }
 
@@ -422,6 +491,11 @@ impl Archive {
     /// Resubmissions served from the archive since this process started.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Corrupted records dropped at [`Archive::open`].
+    pub fn skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
     }
 
     pub fn path(&self) -> &Path {
@@ -563,6 +637,64 @@ mod tests {
         let path = tmp_path("corrupt.json");
         std::fs::write(&path, "{not json").unwrap();
         assert!(Archive::open(&path).is_err());
+    }
+
+    #[test]
+    fn tampered_record_is_skipped_not_fatal() {
+        let path = tmp_path("tamper.json");
+        let _ = std::fs::remove_file(&path);
+        let a = Archive::open(&path).unwrap();
+        a.insert(record("lenet", 0x1, 0x2));
+        a.insert(record("mobilenet", 0x3, 0x4));
+        a.save().unwrap();
+
+        // flip one stored accuracy in the lenet record only; its checksum
+        // no longer matches while the mobilenet record stays intact
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"checksum\":"), "records persist a checksum field");
+        let i = text.find("lenet").unwrap();
+        let j = text[i..].find("\"acc_final\":0.97").map(|k| i + k).unwrap();
+        let tampered = format!(
+            "{}{}{}",
+            &text[..j],
+            "\"acc_final\":0.87",
+            &text[j + "\"acc_final\":0.97".len()..]
+        );
+        std::fs::write(&path, tampered).unwrap();
+
+        let b = Archive::open(&path).unwrap();
+        assert_eq!(b.len(), 1, "only the tampered record is dropped");
+        assert_eq!(b.skipped(), 1, "the drop is counted");
+        assert!(b.lookup("lenet", 0x1, 0x2).is_none());
+        assert!(b.lookup("mobilenet", 0x3, 0x4).is_some(), "intact records survive");
+
+        // saving the repaired view writes a clean archive again
+        b.save().unwrap();
+        let c = Archive::open(&path).unwrap();
+        assert_eq!((c.len(), c.skipped()), (1, 0));
+    }
+
+    #[test]
+    fn legacy_records_without_checksum_are_accepted() {
+        let path = tmp_path("legacy.json");
+        let _ = std::fs::remove_file(&path);
+        let a = Archive::open(&path).unwrap();
+        a.insert(record("lenet", 0x5, 0x6));
+        a.save().unwrap();
+        // strip the checksum field, emulating a pre-PR-6 archive (objects
+        // dump with sorted keys, so `checksum` leads the record and its
+        // trailing comma goes with it: `"checksum":"<16 hex>",`)
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stripped = {
+            let i = text.find("\"checksum\":\"").unwrap();
+            let end = i + "\"checksum\":\"0000000000000000\",".len();
+            format!("{}{}", &text[..i], &text[end..])
+        };
+        assert!(!stripped.contains("checksum"));
+        std::fs::write(&path, stripped).unwrap();
+        let b = Archive::open(&path).unwrap();
+        assert_eq!((b.len(), b.skipped()), (1, 0));
+        assert!(b.lookup("lenet", 0x5, 0x6).is_some());
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! | GET    | `/v1/jobs/{id}/result`| bits, accuracy, reward, Pareto points     |
 //! | POST   | `/v1/jobs/{id}/cancel`| cooperative cancellation                  |
 //! | GET    | `/v1/stats`           | queue/session/engine/archive counters     |
+//! | GET    | `/v1/health`          | engine/session/queue/breaker health (503 when degraded) |
 //! | POST   | `/v1/shutdown`        | drain in-flight jobs, persist, exit       |
 
 pub mod archive;
@@ -48,6 +49,7 @@ use anyhow::{Context, Result};
 use crate::config::{self, ServeConfig};
 use crate::runtime::{Engine, Manifest};
 use crate::util::json::Json;
+use crate::util::lock_recover;
 
 use http::{read_request, Request, Response};
 
@@ -74,8 +76,13 @@ impl Server {
     /// [`SessionRunner`].
     pub fn bind(cfg: ServeConfig, manifest: Manifest, engine: Arc<Engine>) -> Result<Server> {
         let archive = Arc::new(Archive::open(&cfg.archive)?);
-        let runner =
-            Arc::new(SessionRunner::new(manifest, engine, archive.clone(), cfg.memo_persist));
+        let runner = Arc::new(SessionRunner::new(
+            manifest,
+            engine,
+            archive.clone(),
+            cfg.memo_persist,
+            cfg.quarantine_k,
+        ));
         Server::bind_with(cfg, runner, archive)
     }
 
@@ -157,6 +164,7 @@ pub fn route(d: &Daemon, req: &Request) -> (Response, bool) {
         ("GET", ["v1", "jobs", id, "result"]) => (with_job(d, id, job_result), false),
         ("POST", ["v1", "jobs", id, "cancel"]) => (cancel_job(d, id), false),
         ("GET", ["v1", "stats"]) => (stats(d), false),
+        ("GET", ["v1", "health"]) => (health(d), false),
         ("POST", ["v1", "shutdown"]) => shutdown(d),
         _ => {
             // a known path with the wrong method is a 405, not a
@@ -168,6 +176,7 @@ pub fn route(d: &Daemon, req: &Request) -> (Response, bool) {
                     | ["v1", "jobs", _, "result"]
                     | ["v1", "jobs", _, "cancel"]
                     | ["v1", "stats"]
+                    | ["v1", "health"]
                     | ["v1", "shutdown"]
             );
             if known {
@@ -191,7 +200,7 @@ fn post_job(d: &Daemon, req: &Request) -> Response {
     match d.sched.submit(spec) {
         Ok(job) => {
             let (status, from_archive) = {
-                let s = job.state.lock().unwrap();
+                let s = lock_recover(&job.state);
                 (s.status, s.from_archive)
             };
             // an archive answer is complete right now (200); a queued job
@@ -211,6 +220,7 @@ fn post_job(d: &Daemon, req: &Request) -> Response {
         }
         Err(SubmitError::Full) => Response::error(429, "job queue is full; retry later"),
         Err(SubmitError::Draining) => Response::error(503, "daemon is draining"),
+        Err(SubmitError::Unavailable(msg)) => Response::error(503, &msg),
         Err(SubmitError::Invalid(e)) => Response::error(400, &format!("{e:#}")),
     }
 }
@@ -226,14 +236,14 @@ fn with_job(d: &Daemon, id: &str, f: impl FnOnce(&Job) -> Response) -> Response 
 }
 
 fn job_result(job: &Job) -> Response {
-    let status = job.state.lock().unwrap().status;
+    let status = lock_recover(&job.state).status;
     match status {
         JobStatus::Done => match job.result_json() {
             Some(j) => Response::ok(j),
             None => Response::error(500, "done job has no solution"),
         },
         JobStatus::Failed => {
-            let err = job.state.lock().unwrap().error.clone().unwrap_or_default();
+            let err = lock_recover(&job.state).error.clone().unwrap_or_default();
             Response::error(500, &format!("job failed: {err}"))
         }
         JobStatus::Cancelled => Response::error(409, "job was cancelled"),
@@ -271,6 +281,31 @@ fn stats(d: &Daemon) -> Response {
         ),
         ("runner", d.runner.stats()),
     ]))
+}
+
+/// `GET /v1/health`: 200 while the daemon can make progress, 503 when it
+/// is degraded — engine watchdog tripped or circuit breaker open. Load
+/// balancers and the chaos smoke key off the status code; the body carries
+/// the per-component detail for humans.
+fn health(d: &Daemon) -> Response {
+    let engine_healthy = d.sched.runner_healthy();
+    let breaker_open = d.sched.breaker_open();
+    let degraded = !engine_healthy || breaker_open;
+    let status = if degraded { "degraded" } else { "ok" };
+    let body = Json::obj(vec![
+        ("status", Json::Str(status.to_string())),
+        ("engine_healthy", Json::Bool(engine_healthy)),
+        ("breaker_open", Json::Bool(breaker_open)),
+        ("draining", Json::Bool(d.sched.is_draining())),
+        ("queue_depth", Json::Num(d.sched.queue_depth() as f64)),
+        ("running", Json::Num(d.sched.running() as f64)),
+        ("runner", d.runner.stats()),
+    ]);
+    if degraded {
+        Response::status(503, body)
+    } else {
+        Response::ok(body)
+    }
 }
 
 fn shutdown(d: &Daemon) -> (Response, bool) {

@@ -9,7 +9,7 @@
 //! the real backend is `session::SessionRunner`.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -18,7 +18,10 @@ use anyhow::Result;
 use crate::config::{JobSpec, ServeConfig};
 use crate::coordinator::{Cancelled, SearchCtl};
 use crate::metrics::{episodes_json, EpisodeLog};
+use crate::runtime::{classify, FaultClass, FaultError, RetryPolicy};
 use crate::util::json::Json;
+use crate::util::lock::lock_recover;
+use crate::util::rng::Pcg32;
 
 use super::archive::{Archive, Record, Solution};
 
@@ -84,7 +87,7 @@ impl Job {
     /// `GET /v1/jobs/{id}` body: status + live `SearchLog` tail (without
     /// the per-layer probability payloads).
     pub fn status_json(&self) -> Json {
-        let s = self.state.lock().unwrap();
+        let s = lock_recover(&self.state);
         let tail: Vec<EpisodeLog> = s.tail.iter().cloned().collect();
         let mut fields = vec![
             ("id", Json::Num(self.id as f64)),
@@ -106,7 +109,7 @@ impl Job {
 
     /// `GET /v1/jobs/{id}/result` body, once the job is done.
     pub fn result_json(&self) -> Option<Json> {
-        let s = self.state.lock().unwrap();
+        let s = lock_recover(&self.state);
         let sol = s.solution.as_ref()?;
         let mut obj = match sol.to_json() {
             Json::Obj(m) => m,
@@ -140,6 +143,13 @@ pub trait JobRunner: Send + Sync {
     fn stats(&self) -> Json {
         Json::Null
     }
+
+    /// Is the execution backend healthy? The real runner reports the
+    /// engine's watchdog health flag; stubs default to healthy. Feeds the
+    /// circuit breaker and `GET /v1/health`.
+    fn healthy(&self) -> bool {
+        true
+    }
 }
 
 /// What a cancel request actually did (mapped to HTTP statuses by the
@@ -165,6 +175,9 @@ pub enum SubmitError {
     Full,
     /// bad job spec — 400
     Invalid(anyhow::Error),
+    /// backend degraded: circuit breaker open, engine unhealthy, or the
+    /// job's session poisoned by quarantine — 503, retry later
+    Unavailable(String),
 }
 
 struct Sched {
@@ -184,6 +197,10 @@ struct Totals {
     cancelled: AtomicU64,
     /// submissions answered instantly from the archive
     archived: AtomicU64,
+    /// job attempts re-run after a transient failure
+    retries: AtomicU64,
+    /// times the circuit breaker opened
+    breaker_trips: AtomicU64,
 }
 
 pub struct Scheduler {
@@ -192,6 +209,15 @@ pub struct Scheduler {
     queue_cap: usize,
     log_tail: usize,
     memo_persist: usize,
+    /// per-job retry budget for transiently failing attempts (0 = off)
+    job_retries: u32,
+    /// consecutive-failure threshold opening the circuit breaker (0 = off)
+    breaker_fails: u32,
+    /// consecutive job failures across the scheduler (any success resets)
+    consec_failures: AtomicU64,
+    /// breaker state: while open, submissions shed with 503 as long as
+    /// jobs are still in flight (an idle daemon always accepts one probe)
+    breaker_open: AtomicBool,
     next_id: AtomicU64,
     totals: Totals,
     inner: Mutex<Sched>,
@@ -208,6 +234,10 @@ impl Scheduler {
             queue_cap: cfg.queue_cap,
             log_tail: cfg.log_tail,
             memo_persist: cfg.memo_persist,
+            job_retries: cfg.job_retries,
+            breaker_fails: cfg.breaker_fails,
+            consec_failures: AtomicU64::new(0),
+            breaker_open: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
             totals: Totals::default(),
             inner: Mutex::new(Sched {
@@ -223,7 +253,7 @@ impl Scheduler {
     }
 
     pub fn spawn_workers(self: &Arc<Self>, n: usize) {
-        let mut handles = self.workers.lock().unwrap();
+        let mut handles = lock_recover(&self.workers);
         for i in 0..n {
             let me = self.clone();
             handles.push(
@@ -245,7 +275,14 @@ impl Scheduler {
     /// episode work; job-level single-flight (parking the duplicate on the
     /// first job's completion) is deliberately deferred.
     pub fn submit(&self, spec: JobSpec) -> Result<Arc<Job>, SubmitError> {
-        let (env_fp, search_fp) = self.runner.prepare(&spec).map_err(SubmitError::Invalid)?;
+        let (env_fp, search_fp) = self.runner.prepare(&spec).map_err(|e| {
+            // a typed permanent fault from prepare (a quarantine-poisoned
+            // session) is a backend condition, not a bad request: 503
+            match e.downcast_ref::<FaultError>() {
+                Some(FaultError::Permanent(_)) => SubmitError::Unavailable(format!("{e:#}")),
+                _ => SubmitError::Invalid(e),
+            }
+        })?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
 
         let state = Arc::new(Mutex::new(JobState {
@@ -259,7 +296,7 @@ impl Scheduler {
         let tail_cap = self.log_tail;
         let st = state.clone();
         let mut ctl = SearchCtl::new().with_progress(move |ep| {
-            let mut s = st.lock().unwrap();
+            let mut s = lock_recover(&st);
             s.episodes_run = s.episodes_run.max(ep.episode + 1);
             if tail_cap > 0 {
                 if s.tail.len() == tail_cap {
@@ -283,16 +320,35 @@ impl Scheduler {
         // hit counters, and precedes the enqueue so drain() can never miss
         // a submission. (Lock order inner -> archive/state is safe: no
         // path acquires them in the reverse order while holding either.)
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if g.draining {
             return Err(SubmitError::Draining);
+        }
+        // graceful degradation: while the breaker is open or the backend
+        // reports unhealthy, shed new work — but only while jobs are still
+        // in flight. An idle daemon always accepts (the natural half-open
+        // probe: its success closes the breaker, and a completed execution
+        // clears the engine health flag).
+        let busy = g.running > 0 || !g.queue.is_empty();
+        if busy {
+            if self.breaker_open.load(Ordering::Relaxed) {
+                return Err(SubmitError::Unavailable(format!(
+                    "circuit breaker open after {} consecutive job failures",
+                    self.consec_failures.load(Ordering::Relaxed)
+                )));
+            }
+            if !self.runner.healthy() {
+                return Err(SubmitError::Unavailable(
+                    "execution backend unhealthy (watchdog tripped)".to_string(),
+                ));
+            }
         }
 
         // exact archive hit: the whole point of the archive — answered
         // without a queue slot, a session, or a single accuracy evaluation
         if let Some(sol) = self.archive.lookup(&job.spec.net, env_fp, search_fp) {
             {
-                let mut s = job.state.lock().unwrap();
+                let mut s = lock_recover(&job.state);
                 s.status = JobStatus::Done;
                 s.episodes_run = sol.episodes_run;
                 s.solution = Some(sol);
@@ -320,7 +376,7 @@ impl Scheduler {
     }
 
     pub fn job(&self, id: u64) -> Option<Arc<Job>> {
-        self.inner.lock().unwrap().jobs.get(&id).cloned()
+        lock_recover(&self.inner).jobs.get(&id).cloned()
     }
 
     /// Cancel a job: a queued job flips to `Cancelled` immediately and is
@@ -330,7 +386,7 @@ impl Scheduler {
     pub fn cancel(&self, id: u64) -> CancelOutcome {
         let Some(job) = self.job(id) else { return CancelOutcome::Unknown };
         let was_queued = {
-            let mut s = job.state.lock().unwrap();
+            let mut s = lock_recover(&job.state);
             if s.status.is_terminal() {
                 return CancelOutcome::AlreadyFinished;
             }
@@ -345,7 +401,7 @@ impl Scheduler {
             }
         };
         if was_queued {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = lock_recover(&self.inner);
             let before = g.queue.len();
             g.queue.retain(|j| j.id != id);
             // push to finished_order only if we actually removed it — when
@@ -374,7 +430,7 @@ impl Scheduler {
     fn worker_loop(self: Arc<Self>) {
         loop {
             let job = {
-                let mut g = self.inner.lock().unwrap();
+                let mut g = lock_recover(&self.inner);
                 loop {
                     if let Some(j) = g.queue.pop_front() {
                         g.running += 1;
@@ -383,7 +439,10 @@ impl Scheduler {
                     if g.draining {
                         return;
                     }
-                    g = self.cv.wait(g).unwrap();
+                    g = match self.cv.wait(g) {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
                 }
             };
             // a panic anywhere in the job path (runner, archive) must not
@@ -394,16 +453,19 @@ impl Scheduler {
             }));
             if ran.is_err() {
                 eprintln!("[serve] job {} panicked in the runner", job.id);
-                // the state mutex may be poisoned by the panic; best-effort
-                if let Ok(mut s) = job.state.lock() {
-                    if !s.status.is_terminal() {
-                        s.status = JobStatus::Failed;
-                        s.error = Some("job execution panicked".to_string());
-                        self.totals.failed.fetch_add(1, Ordering::Relaxed);
-                    }
+                // the state mutex is likely poisoned by the panic — recover
+                // the guard (the state is a plain field record, valid
+                // across any panic) instead of silently skipping the
+                // failure bookkeeping
+                let mut s = lock_recover(&job.state);
+                if !s.status.is_terminal() {
+                    s.status = JobStatus::Failed;
+                    s.error = Some("job execution panicked".to_string());
+                    self.totals.failed.fetch_add(1, Ordering::Relaxed);
+                    self.note_failure();
                 }
             }
-            let mut g = self.inner.lock().unwrap();
+            let mut g = lock_recover(&self.inner);
             g.running -= 1;
             g.finished_order.push_back(job.id);
             Self::prune_finished(&mut g);
@@ -413,9 +475,65 @@ impl Scheduler {
         }
     }
 
+    /// One job attempt failed for a non-cancellation reason: advance the
+    /// consecutive-failure streak and open the breaker at the threshold.
+    fn note_failure(&self) {
+        let consec = self.consec_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.breaker_fails > 0
+            && consec >= self.breaker_fails as u64
+            && !self.breaker_open.swap(true, Ordering::Relaxed)
+        {
+            self.totals.breaker_trips.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "[serve] circuit breaker open: {consec} consecutive job failures \
+                 (new submissions shed with 503 until a job completes)"
+            );
+        }
+    }
+
+    /// A job completed: clear the streak and close the breaker.
+    fn note_success(&self) {
+        self.consec_failures.store(0, Ordering::Relaxed);
+        if self.breaker_open.swap(false, Ordering::Relaxed) {
+            eprintln!("[serve] circuit breaker closed: job completed");
+        }
+    }
+
+    /// Run the job with a bounded retry budget for transient failures.
+    /// Cancellation and permanent failures surface immediately; a
+    /// transient attempt backs off (exponential + jitter, same policy
+    /// family as the engine's exec-level retries) and re-runs as long as
+    /// budget remains and the job was not cancelled in between.
+    fn run_with_retries(&self, job: &Arc<Job>) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+        let policy = RetryPolicy { max_retries: self.job_retries, ..RetryPolicy::default() };
+        let mut rng = Pcg32::new(policy.seed ^ job.id);
+        let mut attempt = 0u32;
+        loop {
+            let err = match self.runner.run(job) {
+                Ok(out) => return Ok(out),
+                Err(e) => e,
+            };
+            let transient = err.downcast_ref::<Cancelled>().is_none()
+                && classify(&err) == FaultClass::Transient;
+            if !transient || attempt >= policy.max_retries || job.ctl.is_cancelled() {
+                return Err(err);
+            }
+            let wait = policy.backoff(attempt, &mut rng);
+            attempt += 1;
+            self.totals.retries.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "[serve] job {} failed transiently (attempt {attempt}/{}); retrying in \
+                 {wait:?}: {err:#}",
+                job.id,
+                policy.max_retries + 1
+            );
+            std::thread::sleep(wait);
+        }
+    }
+
     fn execute(&self, job: &Arc<Job>) {
         {
-            let mut s = job.state.lock().unwrap();
+            let mut s = lock_recover(&job.state);
             if s.status.is_terminal() {
                 return; // cancelled while queued
             }
@@ -428,15 +546,16 @@ impl Scheduler {
             }
             s.status = JobStatus::Running;
         }
-        match self.runner.run(job) {
+        match self.run_with_retries(job) {
             Ok((sol, mut memo)) => {
                 {
-                    let mut s = job.state.lock().unwrap();
+                    let mut s = lock_recover(&job.state);
                     s.episodes_run = sol.episodes_run;
                     s.solution = Some(sol.clone());
                     s.status = JobStatus::Done;
                 }
                 self.totals.done.fetch_add(1, Ordering::Relaxed);
+                self.note_success();
                 memo.truncate(self.memo_persist);
                 self.archive.insert(Record {
                     net: job.spec.net.clone(),
@@ -453,7 +572,7 @@ impl Scheduler {
                 }
             }
             Err(e) => {
-                let mut s = job.state.lock().unwrap();
+                let mut s = lock_recover(&job.state);
                 if let Some(c) = e.downcast_ref::<Cancelled>() {
                     s.status = JobStatus::Cancelled;
                     s.error = Some(c.0.to_string());
@@ -462,6 +581,7 @@ impl Scheduler {
                     s.status = JobStatus::Failed;
                     s.error = Some(format!("{e:#}"));
                     self.totals.failed.fetch_add(1, Ordering::Relaxed);
+                    self.note_failure();
                 }
             }
         }
@@ -472,31 +592,48 @@ impl Scheduler {
     /// Idempotent; blocks until the pool is quiet.
     pub fn drain(&self) {
         {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = lock_recover(&self.inner);
             g.draining = true;
             self.cv.notify_all();
             while !g.queue.is_empty() || g.running > 0 {
-                g = self.cv.wait(g).unwrap();
+                g = match self.cv.wait(g) {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
             }
         }
-        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        let handles = std::mem::take(&mut *lock_recover(&self.workers));
         for h in handles {
             let _ = h.join();
         }
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        lock_recover(&self.inner).queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        lock_recover(&self.inner).running
     }
 
     pub fn is_draining(&self) -> bool {
-        self.inner.lock().unwrap().draining
+        lock_recover(&self.inner).draining
+    }
+
+    /// Is the circuit breaker currently shedding submissions?
+    pub fn breaker_open(&self) -> bool {
+        self.breaker_open.load(Ordering::Relaxed)
+    }
+
+    /// Does the execution backend report healthy?
+    pub fn runner_healthy(&self) -> bool {
+        self.runner.healthy()
     }
 
     /// `GET /v1/stats` scheduler fragment.
     pub fn stats_json(&self) -> Json {
         let (queue_depth, running, retained) = {
-            let g = self.inner.lock().unwrap();
+            let g = lock_recover(&self.inner);
             (g.queue.len(), g.running, g.jobs.len())
         };
         Json::obj(vec![
@@ -508,6 +645,12 @@ impl Scheduler {
             ("failed", Json::Num(self.totals.failed.load(Ordering::Relaxed) as f64)),
             ("cancelled", Json::Num(self.totals.cancelled.load(Ordering::Relaxed) as f64)),
             ("archive_answers", Json::Num(self.totals.archived.load(Ordering::Relaxed) as f64)),
+            ("retries", Json::Num(self.totals.retries.load(Ordering::Relaxed) as f64)),
+            (
+                "breaker_trips",
+                Json::Num(self.totals.breaker_trips.load(Ordering::Relaxed) as f64),
+            ),
+            ("breaker_open", Json::Bool(self.breaker_open())),
         ])
     }
 }

@@ -26,16 +26,17 @@
 //! `eval_batch_execs` / `batched_candidates` / `pad_lanes`).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::config::JobSpec;
 use crate::coordinator::{QuantEnv, Searcher};
 use crate::pareto;
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{Engine, FaultError, Manifest};
 use crate::util::json::Json;
+use crate::util::lock::lock_recover;
 
 use super::archive::{env_fingerprint, search_fingerprint, Archive, Solution};
 use super::scheduler::{Job, JobRunner};
@@ -46,34 +47,77 @@ pub struct SessionKey {
     pub env_fp: u64,
 }
 
-enum Slot {
+enum Slot<V> {
+    /// no live env: either never built, or evicted by quarantine — the
+    /// next caller becomes the build leader (entry bookkeeping survives)
+    Vacant,
     /// a leader is pretraining; followers wait on the condvar
     Building,
-    Ready(QuantEnv),
+    Ready(V),
+    /// quarantined for good: the env failed K consecutive jobs, was
+    /// rebuilt once, and the rebuild failed K more — every new job gets
+    /// this typed permanent error immediately instead of burning its
+    /// retry budget on a dead environment
+    Poisoned(String),
 }
 
-/// Single-flight map of live sessions.
-pub struct SessionCache {
-    slots: Mutex<HashMap<SessionKey, Slot>>,
+struct Entry<V> {
+    slot: Slot<V>,
+    /// consecutive job failures on the CURRENT Ready env (reset by any
+    /// success, and on eviction)
+    consec: u32,
+    /// quarantine evictions this key has absorbed (the rebuild-once bound)
+    rebuilds: u32,
+}
+
+/// What a recorded failure did to the session (see
+/// [`SessionCache::record_failure`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Quarantine {
+    /// below the threshold (or quarantine disabled): env retained
+    Retained,
+    /// threshold hit for the first time: env evicted, next job rebuilds
+    Evicted,
+    /// threshold hit again after the one rebuild: key poisoned for good
+    Poisoned,
+}
+
+/// Single-flight map of live sessions, generic over the session value so
+/// the quarantine protocol is testable without PJRT (`SessionCache<u32>`
+/// in the stub tiers; the daemon runs `SessionCache<QuantEnv>`).
+pub struct SessionCache<V = QuantEnv> {
+    slots: Mutex<HashMap<SessionKey, Entry<V>>>,
     cv: Condvar,
     /// environment bring-ups actually paid (the across-jobs invariant
     /// counter: stays at 1 no matter how many jobs share a network)
     pretrains: AtomicU64,
+    /// consecutive-failure threshold (0 disables quarantine)
+    quarantine_k: u32,
+    /// quarantine actions taken (evictions + poisonings)
+    quarantines: AtomicU64,
 }
 
-impl Default for SessionCache {
-    fn default() -> SessionCache {
+impl<V> Default for SessionCache<V> {
+    fn default() -> SessionCache<V> {
+        SessionCache::with_quarantine(0)
+    }
+}
+
+impl<V: Clone> SessionCache<V> {
+    pub fn new() -> SessionCache<V> {
+        SessionCache::default()
+    }
+
+    /// A cache that quarantines a session after `k` consecutive job
+    /// failures: evicted and rebuilt once, poisoned the second time.
+    pub fn with_quarantine(k: u32) -> SessionCache<V> {
         SessionCache {
             slots: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
             pretrains: AtomicU64::new(0),
+            quarantine_k: k,
+            quarantines: AtomicU64::new(0),
         }
-    }
-}
-
-impl SessionCache {
-    pub fn new() -> SessionCache {
-        SessionCache::default()
     }
 
     /// Get the session for `key`, building it with `build` if absent.
@@ -81,40 +125,55 @@ impl SessionCache {
     /// leader instead of each pretraining. A failed build unpins the key
     /// and one waiter retries as the new leader; a *panicking* build does
     /// the same via a drop guard — a wedged `Building` slot would block
-    /// every future job for that network forever.
-    pub fn get_or_create<F>(&self, key: SessionKey, build: F) -> Result<QuantEnv>
+    /// every future job for that network forever. A poisoned key fails
+    /// immediately with a typed [`FaultError::Permanent`].
+    pub fn get_or_create<F>(&self, key: SessionKey, build: F) -> Result<V>
     where
-        F: FnOnce() -> Result<QuantEnv>,
+        F: FnOnce() -> Result<V>,
     {
-        /// Unwind guard for the leader: while armed, dropping it removes
+        /// Unwind guard for the leader: while armed, dropping it vacates
         /// the `Building` slot and wakes waiters so one can retry as the
         /// new leader (same protocol as `AccMemo`'s `UnpinOnDrop`).
-        struct ClearOnDrop<'a> {
-            cache: &'a SessionCache,
+        struct ClearOnDrop<'a, V> {
+            cache: &'a SessionCache<V>,
             key: &'a SessionKey,
             armed: bool,
         }
-        impl Drop for ClearOnDrop<'_> {
+        impl<V> Drop for ClearOnDrop<'_, V> {
             fn drop(&mut self) {
                 if !self.armed {
                     return;
                 }
-                let mut m = self.cache.slots.lock().unwrap();
-                if matches!(m.get(self.key), Some(Slot::Building)) {
-                    m.remove(self.key);
+                let mut m = lock_recover(&self.cache.slots);
+                if let Some(e) = m.get_mut(self.key) {
+                    if matches!(e.slot, Slot::Building) {
+                        e.slot = Slot::Vacant;
+                    }
                 }
                 self.cache.cv.notify_all();
             }
         }
 
         {
-            let mut m = self.slots.lock().unwrap();
+            let mut m = lock_recover(&self.slots);
             loop {
-                match m.get(&key) {
-                    Some(Slot::Ready(env)) => return Ok(env.clone()),
-                    Some(Slot::Building) => m = self.cv.wait(m).unwrap(),
+                match m.get_mut(&key) {
+                    Some(e) => match &mut e.slot {
+                        Slot::Ready(env) => return Ok(env.clone()),
+                        Slot::Building => m = lock_recover_wait(&self.cv, m),
+                        Slot::Poisoned(msg) => {
+                            return Err(FaultError::Permanent(msg.clone()).into())
+                        }
+                        Slot::Vacant => {
+                            e.slot = Slot::Building;
+                            break;
+                        }
+                    },
                     None => {
-                        m.insert(key.clone(), Slot::Building);
+                        m.insert(
+                            key.clone(),
+                            Entry { slot: Slot::Building, consec: 0, rebuilds: 0 },
+                        );
                         break;
                     }
                 }
@@ -125,20 +184,94 @@ impl SessionCache {
         let built = build();
         guard.armed = false;
         drop(guard);
-        let mut m = self.slots.lock().unwrap();
+        let mut m = lock_recover(&self.slots);
         match built {
             Ok(env) => {
                 self.pretrains.fetch_add(1, Ordering::Relaxed);
-                m.insert(key, Slot::Ready(env.clone()));
+                if let Some(e) = m.get_mut(&key) {
+                    e.slot = Slot::Ready(env.clone());
+                    e.consec = 0;
+                }
                 self.cv.notify_all();
                 Ok(env)
             }
             Err(e) => {
-                m.remove(&key);
+                if let Some(entry) = m.get_mut(&key) {
+                    entry.slot = Slot::Vacant;
+                }
                 self.cv.notify_all();
                 Err(e)
             }
         }
+    }
+
+    /// A job on this session succeeded: clear its failure streak.
+    pub fn record_success(&self, key: &SessionKey) {
+        let mut m = lock_recover(&self.slots);
+        if let Some(e) = m.get_mut(key) {
+            e.consec = 0;
+        }
+    }
+
+    /// A job on this session failed (for a non-cancellation reason).
+    /// Counts the failure against the key's streak; at `quarantine_k`
+    /// consecutive failures the cached env is evicted (first offense —
+    /// the next job rebuilds it from scratch) or poisoned (the rebuilt
+    /// env ALSO failed K straight: a deterministic fault, not bad luck).
+    pub fn record_failure(&self, key: &SessionKey, reason: &str) -> Quarantine {
+        if self.quarantine_k == 0 {
+            return Quarantine::Retained;
+        }
+        let mut m = lock_recover(&self.slots);
+        let Some(e) = m.get_mut(key) else { return Quarantine::Retained };
+        if !matches!(e.slot, Slot::Ready(_)) {
+            return Quarantine::Retained;
+        }
+        e.consec += 1;
+        if e.consec < self.quarantine_k {
+            return Quarantine::Retained;
+        }
+        e.consec = 0;
+        self.quarantines.fetch_add(1, Ordering::Relaxed);
+        if e.rebuilds == 0 {
+            e.rebuilds += 1;
+            e.slot = Slot::Vacant;
+            eprintln!(
+                "[serve] session {}:{:016x} quarantined after {} consecutive failures \
+                 ({reason}); will rebuild once",
+                key.net, key.env_fp, self.quarantine_k
+            );
+            Quarantine::Evicted
+        } else {
+            let msg = format!(
+                "session {}:{:016x} poisoned: rebuilt env failed {} more consecutive \
+                 jobs ({reason})",
+                key.net, key.env_fp, self.quarantine_k
+            );
+            eprintln!("[serve] {msg}");
+            e.slot = Slot::Poisoned(msg);
+            Quarantine::Poisoned
+        }
+    }
+
+    /// The poison message for `key`, if it has been quarantined for good.
+    pub fn poisoned(&self, key: &SessionKey) -> Option<String> {
+        let m = lock_recover(&self.slots);
+        match m.get(key).map(|e| &e.slot) {
+            Some(Slot::Poisoned(msg)) => Some(msg.clone()),
+            _ => None,
+        }
+    }
+
+    /// Number of keys poisoned for good.
+    pub fn poisoned_count(&self) -> usize {
+        let m = lock_recover(&self.slots);
+        m.values().filter(|e| matches!(e.slot, Slot::Poisoned(_))).count()
+    }
+
+    /// Quarantine actions taken (evictions + poisonings) since start.
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
     }
 
     /// Environment bring-ups paid since process start.
@@ -146,21 +279,36 @@ impl SessionCache {
         self.pretrains.load(Ordering::Relaxed)
     }
 
+    /// Live (Ready) sessions — vacated and poisoned keys don't count.
     pub fn len(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        let m = lock_recover(&self.slots);
+        m.values().filter(|e| matches!(e.slot, Slot::Ready(_))).count()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
 
+/// Condvar wait that recovers a poisoned guard (same rationale as
+/// [`crate::util::lock`]: the slot map stays valid across a panic).
+fn lock_recover_wait<'a, T>(
+    cv: &Condvar, g: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+impl SessionCache<QuantEnv> {
     /// Per-session stats fragment for `GET /v1/stats` (key-ordered — the
     /// rows collect into `Json::Obj`'s BTreeMap).
     pub fn stats_json(&self) -> Json {
-        let m = self.slots.lock().unwrap();
+        let m = lock_recover(&self.slots);
         let rows: Vec<(String, Json)> = m
             .iter()
-            .filter_map(|(k, slot)| match slot {
+            .filter_map(|(k, entry)| match &entry.slot {
                 Slot::Ready(env) => {
                     let s = env.stats();
                     Some((
@@ -186,7 +334,7 @@ impl SessionCache {
                         ]),
                     ))
                 }
-                Slot::Building => None,
+                _ => None,
             })
             .collect();
         Json::Obj(rows.into_iter().collect())
@@ -207,31 +355,28 @@ pub struct SessionRunner {
 
 impl SessionRunner {
     pub fn new(manifest: Manifest, engine: Arc<Engine>, archive: Arc<Archive>,
-               memo_persist: usize) -> SessionRunner {
-        SessionRunner { manifest, engine, sessions: SessionCache::new(), archive, memo_persist }
+               memo_persist: usize, quarantine_k: u32) -> SessionRunner {
+        SessionRunner {
+            manifest,
+            engine,
+            sessions: SessionCache::with_quarantine(quarantine_k),
+            archive,
+            memo_persist,
+        }
     }
 
     pub fn sessions(&self) -> &SessionCache {
         &self.sessions
     }
-}
 
-impl JobRunner for SessionRunner {
-    fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
-        self.manifest.network(&spec.net)?;
-        anyhow::ensure!(spec.cfg.episodes >= 1, "job needs episodes >= 1");
-        let bits_max = self.manifest.bits_max;
-        Ok((
-            env_fingerprint(&spec.net, bits_max, &spec.cfg.env),
-            search_fingerprint(&spec.net, bits_max, &spec.cfg),
-        ))
-    }
-
-    fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+    /// The search body: session resolution + the ReLeQ search. Split from
+    /// [`JobRunner::run`] so the success/failure outcome can drive the
+    /// session's quarantine bookkeeping in exactly one place.
+    fn run_inner(&self, job: &Job, key: &SessionKey)
+                 -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
         let spec = &job.spec;
         let net = self.manifest.network(&spec.net)?;
-        let key = SessionKey { net: spec.net.clone(), env_fp: job.env_fp };
-        let env = self.sessions.get_or_create(key, || {
+        let env = self.sessions.get_or_create(key.clone(), || {
             let env = QuantEnv::new(
                 self.engine.clone(),
                 net,
@@ -324,10 +469,53 @@ impl JobRunner for SessionRunner {
         // revisiting, already bounded to what the archive will persist
         Ok((solution, env.memo().entries_by_recency(self.memo_persist)))
     }
+}
+
+impl JobRunner for SessionRunner {
+    fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
+        self.manifest.network(&spec.net)?;
+        anyhow::ensure!(spec.cfg.episodes >= 1, "job needs episodes >= 1");
+        let bits_max = self.manifest.bits_max;
+        let env_fp = env_fingerprint(&spec.net, bits_max, &spec.cfg.env);
+        // a poisoned session 503s at submission — don't queue a job whose
+        // environment is known-dead
+        let key = SessionKey { net: spec.net.clone(), env_fp };
+        if let Some(msg) = self.sessions.poisoned(&key) {
+            return Err(FaultError::Permanent(msg).into());
+        }
+        Ok((env_fp, search_fingerprint(&spec.net, bits_max, &spec.cfg)))
+    }
+
+    fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+        let key = SessionKey { net: job.spec.net.clone(), env_fp: job.env_fp };
+        match self.run_inner(job, &key) {
+            Ok(out) => {
+                self.sessions.record_success(&key);
+                Ok(out)
+            }
+            Err(e) => {
+                // a cancellation says nothing about the env's health; any
+                // other failure counts against the session's streak
+                if e.downcast_ref::<crate::coordinator::Cancelled>().is_none() {
+                    self.sessions.record_failure(&key, &format!("{e:#}"));
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn healthy(&self) -> bool {
+        self.engine.health().is_healthy()
+    }
 
     fn stats(&self) -> Json {
         Json::obj(vec![
             ("pretrains", Json::Num(self.sessions.pretrains() as f64)),
+            ("quarantines", Json::Num(self.sessions.quarantines() as f64)),
+            ("poisoned_sessions", Json::Num(self.sessions.poisoned_count() as f64)),
+            ("exec_retries", Json::Num(self.engine.exec_retries() as f64)),
+            ("faults_injected", Json::Num(self.engine.faults_injected() as f64)),
+            ("engine_healthy", Json::Bool(self.engine.health().is_healthy())),
             ("sessions", self.sessions.stats_json()),
             (
                 "engine",
@@ -355,13 +543,13 @@ mod tests {
     use super::*;
     use crate::parallel::run_sharded;
 
-    /// The single-flight protocol is testable without PJRT: a counter-typed
-    /// "env" is impossible here (build returns QuantEnv), so race the
-    /// leader election itself with a build that fails — every caller must
-    /// observe the error, the key must unpin, and no slot may leak.
+    /// The single-flight protocol is testable without PJRT now that the
+    /// cache is generic: race the leader election with a build that fails —
+    /// every caller must observe the error, the key must unpin, and no
+    /// slot may leak.
     #[test]
     fn failed_builds_unpin_the_key() {
-        let cache = SessionCache::new();
+        let cache: SessionCache<u32> = SessionCache::new();
         let key = SessionKey { net: "lenet".to_string(), env_fp: 7 };
         let r = cache.get_or_create(key.clone(), || anyhow::bail!("no artifacts"));
         assert!(r.is_err());
@@ -375,7 +563,7 @@ mod tests {
 
     #[test]
     fn panicking_build_unpins_the_key() {
-        let cache = SessionCache::new();
+        let cache: SessionCache<u32> = SessionCache::new();
         let key = SessionKey { net: "lenet".to_string(), env_fp: 3 };
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let _ = cache.get_or_create(key.clone(), || panic!("boom"));
@@ -389,7 +577,7 @@ mod tests {
 
     #[test]
     fn concurrent_failed_builds_never_wedge() {
-        let cache = std::sync::Arc::new(SessionCache::new());
+        let cache = std::sync::Arc::new(SessionCache::<u32>::new());
         let results = run_sharded(vec![(); 8], |i, _| {
             let key = SessionKey { net: "lenet".to_string(), env_fp: 1 };
             let r = cache.get_or_create(key, || anyhow::bail!("build {i} failed"));
@@ -398,5 +586,63 @@ mod tests {
         .unwrap();
         assert!(results.into_iter().all(|failed| failed));
         assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn quarantine_evicts_then_rebuilds_then_poisons() {
+        use crate::runtime::{classify, FaultClass};
+
+        let cache: SessionCache<u32> = SessionCache::with_quarantine(2);
+        let key = SessionKey { net: "lenet".to_string(), env_fp: 9 };
+        assert_eq!(cache.get_or_create(key.clone(), || Ok(1)).unwrap(), 1);
+        assert_eq!(cache.pretrains(), 1);
+
+        // below the threshold: retained, and success clears the streak
+        assert_eq!(cache.record_failure(&key, "exec died"), Quarantine::Retained);
+        cache.record_success(&key);
+        assert_eq!(cache.record_failure(&key, "exec died"), Quarantine::Retained);
+
+        // hit the threshold: first offense evicts, the env rebuilds once
+        assert_eq!(cache.record_failure(&key, "exec died"), Quarantine::Evicted);
+        assert_eq!(cache.len(), 0, "evicted env is gone");
+        assert_eq!(cache.quarantines(), 1);
+        assert_eq!(cache.get_or_create(key.clone(), || Ok(2)).unwrap(), 2, "rebuild happens");
+        assert_eq!(cache.pretrains(), 2);
+
+        // the rebuilt env failing K more times poisons the key for good
+        assert_eq!(cache.record_failure(&key, "exec died"), Quarantine::Retained);
+        assert_eq!(cache.record_failure(&key, "exec died"), Quarantine::Poisoned);
+        assert_eq!(cache.poisoned_count(), 1);
+        assert_eq!(cache.quarantines(), 2);
+        let err = cache.get_or_create(key.clone(), || Ok(3)).unwrap_err();
+        assert_eq!(classify(&err), FaultClass::Permanent, "poisoned key is a typed error");
+        assert!(err.to_string().contains("poisoned"));
+        assert_eq!(cache.pretrains(), 2, "no rebuild after poisoning");
+        assert!(cache.poisoned(&key).is_some());
+    }
+
+    #[test]
+    fn quarantine_zero_disables_the_protocol() {
+        let cache: SessionCache<u32> = SessionCache::with_quarantine(0);
+        let key = SessionKey { net: "lenet".to_string(), env_fp: 1 };
+        cache.get_or_create(key.clone(), || Ok(5)).unwrap();
+        for _ in 0..32 {
+            assert_eq!(cache.record_failure(&key, "exec died"), Quarantine::Retained);
+        }
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.quarantines(), 0);
+    }
+
+    #[test]
+    fn failure_streaks_are_per_key() {
+        let cache: SessionCache<u32> = SessionCache::with_quarantine(1);
+        let a = SessionKey { net: "lenet".to_string(), env_fp: 1 };
+        let b = SessionKey { net: "vgg11".to_string(), env_fp: 2 };
+        cache.get_or_create(a.clone(), || Ok(1)).unwrap();
+        cache.get_or_create(b.clone(), || Ok(2)).unwrap();
+        assert_eq!(cache.record_failure(&a, "exec died"), Quarantine::Evicted);
+        assert_eq!(cache.len(), 1, "only the failing key is evicted");
+        assert!(cache.get_or_create(b, || Ok(9)).is_ok());
+        assert_eq!(cache.pretrains(), 2, "the healthy key never rebuilt");
     }
 }

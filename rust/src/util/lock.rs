@@ -1,0 +1,83 @@
+//! Poison-tolerant mutex acquisition.
+//!
+//! A thread panicking while holding a `std::sync::Mutex` poisons it, and
+//! every later `lock().unwrap()` propagates the panic — one crashed job
+//! could wedge every status read in the serve scheduler. All the state
+//! guarded that way here is kept consistent by construction (each critical
+//! section is a small field update with no tearable multi-step invariant),
+//! so the right response to poison is to keep going with the data, not to
+//! cascade the panic.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked. Use this
+/// instead of `lock().unwrap()` wherever the protected state stays valid
+/// across a panic (single-field updates, monotonic counters, status maps).
+pub fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// [`lock_recover`] for `RwLock` readers.
+pub fn read_recover<T: ?Sized>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// [`lock_recover`] for `RwLock` writers. Drop guards that must run during
+/// a panic unwind (e.g. the memo's in-flight unpinning) use this: an
+/// `unwrap` there would double-panic and abort the process.
+pub fn write_recover<T: ?Sized>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        // poison it: panic while holding the guard
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(m.lock().is_err(), "precondition: the mutex is poisoned");
+        assert_eq!(*lock_recover(&m), 7, "the data survives the panic");
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn plain_lock_passes_through() {
+        let m = Mutex::new(String::from("x"));
+        lock_recover(&m).push('y');
+        assert_eq!(*lock_recover(&m), "xy");
+    }
+
+    #[test]
+    fn recovers_a_poisoned_rwlock() {
+        let l = Arc::new(RwLock::new(3u32));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(l.read().is_err(), "precondition: the rwlock is poisoned");
+        assert_eq!(*read_recover(&l), 3);
+        *write_recover(&l) = 4;
+        assert_eq!(*read_recover(&l), 4);
+    }
+}

@@ -5,4 +5,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod fnv;
 pub mod json;
+pub mod lock;
 pub mod rng;
+
+pub use lock::{lock_recover, read_recover, write_recover};

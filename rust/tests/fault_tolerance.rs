@@ -1,0 +1,504 @@
+//! Fault-tolerance integration tests: deterministic fault injection, typed
+//! retry, execution watchdogs, and graceful degradation in `releq serve`.
+//!
+//! Two tiers, like `serve_daemon.rs`:
+//!
+//! * **stub tier** (always runs, no PJRT, names start with `stub_`): chaos
+//!   backends drive the real scheduler/session/HTTP machinery — transient
+//!   failures are retried with backoff and succeed, permanent failures fail
+//!   fast and typed, a hung execution trips the watchdog and the waiter
+//!   fails fast, K consecutive session failures quarantine the env (rebuild
+//!   once, then poison → 503 at submission), a dead memo leader is
+//!   re-elected exactly once per key, and the circuit breaker opens / sheds
+//!   while busy / closes on success with `/v1/health` tracking it all.
+//! * **artifact tier** (skipped without `artifacts/manifest.json`): an
+//!   engine with an injected fault plan must produce bit-identical results
+//!   to a fault-free engine — retries re-run pure programs.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use releq::config::{JobSpec, ServeConfig};
+use releq::metrics::EpisodeLog;
+use releq::parallel::AccMemo;
+use releq::runtime::{
+    classify, retry_transient, Dispatcher, FaultClass, FaultError, Health, RetryPolicy,
+};
+use releq::serve::http::request;
+use releq::serve::{
+    env_fingerprint, search_fingerprint, Archive, Job, JobRunner, Server, SessionCache,
+    SessionKey, Solution,
+};
+use releq::util::json::Json;
+
+// ---- chaos backends ----------------------------------------------------------
+
+fn solution(eps: usize) -> (Solution, Vec<(Vec<u32>, f64)>) {
+    let s = Solution {
+        bits: vec![4, 4],
+        avg_bits: 4.0,
+        acc_fullp: 0.95,
+        acc_final: 0.93,
+        acc_loss_pct: 2.0,
+        state_q: 0.5,
+        reward: eps.saturating_sub(1) as f64,
+        episodes_run: eps,
+        pareto: vec![(0.5, 0.98, vec![4, 4])],
+    };
+    (s, vec![(vec![4, 4], 0.93)])
+}
+
+/// Fake search backend with switchable failure modes: the next N runs fail
+/// transiently, or every run fails permanently (typed) / plainly (untyped,
+/// classified permanent by the conservative default).
+struct ChaosRunner {
+    episode_ms: u64,
+    runs: AtomicU64,
+    fail_transient: AtomicU64,
+    fail_permanent: AtomicBool,
+    fail_plain: AtomicBool,
+}
+
+impl ChaosRunner {
+    fn new(episode_ms: u64) -> Arc<ChaosRunner> {
+        Arc::new(ChaosRunner {
+            episode_ms,
+            runs: AtomicU64::new(0),
+            fail_transient: AtomicU64::new(0),
+            fail_permanent: AtomicBool::new(false),
+            fail_plain: AtomicBool::new(false),
+        })
+    }
+}
+
+impl JobRunner for ChaosRunner {
+    fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
+        Ok((
+            env_fingerprint(&spec.net, 8, &spec.cfg.env),
+            search_fingerprint(&spec.net, 8, &spec.cfg),
+        ))
+    }
+
+    fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        let eps = job.spec.cfg.episodes;
+        for e in 0..eps {
+            job.ctl.check()?;
+            std::thread::sleep(Duration::from_millis(self.episode_ms));
+            job.ctl.notify(&EpisodeLog {
+                episode: e,
+                reward: e as f64,
+                state_acc: 0.9,
+                state_q: 0.5,
+                bits: vec![4, 4],
+                probs: vec![],
+            });
+        }
+        if self.fail_transient.load(Ordering::SeqCst) > 0 {
+            self.fail_transient.fetch_sub(1, Ordering::SeqCst);
+            return Err(FaultError::Transient("injected backend blip".into()).into());
+        }
+        if self.fail_permanent.load(Ordering::SeqCst) {
+            return Err(FaultError::Permanent("injected permanent backend fault".into()).into());
+        }
+        if self.fail_plain.load(Ordering::SeqCst) {
+            anyhow::bail!("simulated backend fault");
+        }
+        Ok(solution(eps))
+    }
+}
+
+/// Backend mirroring `SessionRunner`'s quarantine protocol over a
+/// PJRT-free `SessionCache<u32>`: a switchable failure mode exercises
+/// evict-rebuild-poison end to end through the daemon.
+struct QuarantineRunner {
+    sessions: SessionCache<u32>,
+    builds: AtomicU64,
+    failing: AtomicBool,
+    health: Arc<Health>,
+}
+
+impl QuarantineRunner {
+    fn new(quarantine_k: u32) -> Arc<QuarantineRunner> {
+        Arc::new(QuarantineRunner {
+            sessions: SessionCache::with_quarantine(quarantine_k),
+            builds: AtomicU64::new(0),
+            failing: AtomicBool::new(false),
+            health: Arc::new(Health::new()),
+        })
+    }
+}
+
+impl JobRunner for QuarantineRunner {
+    fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
+        let env_fp = env_fingerprint(&spec.net, 8, &spec.cfg.env);
+        let key = SessionKey { net: spec.net.clone(), env_fp };
+        if let Some(msg) = self.sessions.poisoned(&key) {
+            return Err(FaultError::Permanent(msg).into());
+        }
+        Ok((env_fp, search_fingerprint(&spec.net, 8, &spec.cfg)))
+    }
+
+    fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+        let key = SessionKey { net: job.spec.net.clone(), env_fp: job.env_fp };
+        let _env = self.sessions.get_or_create(key.clone(), || {
+            self.builds.fetch_add(1, Ordering::SeqCst);
+            Ok(7u32)
+        })?;
+        if self.failing.load(Ordering::SeqCst) {
+            self.health.trip();
+            self.sessions.record_failure(&key, "simulated env fault");
+            anyhow::bail!("simulated env fault");
+        }
+        self.sessions.record_success(&key);
+        self.health.ok();
+        Ok(solution(job.spec.cfg.episodes))
+    }
+
+    fn healthy(&self) -> bool {
+        self.health.is_healthy()
+    }
+}
+
+// ---- helpers -----------------------------------------------------------------
+
+fn tmp_archive(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("releq_fault_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.json"));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+fn cfg(archive: &PathBuf, workers: usize, queue_cap: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.addr = "127.0.0.1:0".to_string();
+    cfg.workers = workers;
+    cfg.queue_cap = queue_cap;
+    cfg.archive = archive.clone();
+    cfg.log_tail = 4;
+    cfg
+}
+
+fn spawn(server: Server) -> (String, std::thread::JoinHandle<Result<()>>) {
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn submit(addr: &str, body: &str) -> (u16, Json) {
+    request(addr, "POST", "/v1/jobs", Some(&Json::parse(body).unwrap())).unwrap()
+}
+
+fn poll_status(addr: &str, id: usize) -> Json {
+    let (status, j) = request(addr, "GET", &format!("/v1/jobs/{id}"), None).unwrap();
+    assert_eq!(status, 200, "status poll failed: {}", j.dump());
+    j
+}
+
+fn wait_terminal(addr: &str, id: usize, timeout: Duration) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let j = poll_status(addr, id);
+        if matches!(j.s("status"), "done" | "failed" | "cancelled") {
+            return j;
+        }
+        assert!(t0.elapsed() < timeout, "job {id} not terminal after {timeout:?}: {}", j.dump());
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn health(addr: &str) -> (u16, Json) {
+    request(addr, "GET", "/v1/health", None).unwrap()
+}
+
+fn stats(addr: &str) -> Json {
+    let (s, j) = request(addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(s, 200, "{}", j.dump());
+    j
+}
+
+fn shutdown(addr: &str, handle: std::thread::JoinHandle<Result<()>>) {
+    let (status, j) = request(addr, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(status, 200, "shutdown failed: {}", j.dump());
+    handle.join().unwrap().unwrap();
+}
+
+// ---- stub tier ---------------------------------------------------------------
+
+#[test]
+fn stub_transient_failure_is_retried_and_succeeds() {
+    let archive_path = tmp_archive("retry");
+    let runner = ChaosRunner::new(2);
+    runner.fail_transient.store(1, Ordering::SeqCst);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(cfg(&archive_path, 1, 4), runner.clone(), archive).unwrap();
+    let (addr, handle) = spawn(server);
+
+    let (s, j) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 2}}"#);
+    assert_eq!(s, 202, "{}", j.dump());
+    let done = wait_terminal(&addr, j.u("id"), Duration::from_secs(10));
+    assert_eq!(done.s("status"), "done", "retried job must complete: {}", done.dump());
+    assert_eq!(runner.runs.load(Ordering::SeqCst), 2, "one failed attempt + one retry");
+
+    let st = stats(&addr);
+    assert_eq!(st.req("scheduler").u("retries"), 1);
+    assert_eq!(st.req("scheduler").u("breaker_trips"), 0);
+    let (s, h) = health(&addr);
+    assert_eq!(s, 200, "{}", h.dump());
+    assert_eq!(h.s("status"), "ok");
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn stub_permanent_failure_fails_fast_and_typed() {
+    let archive_path = tmp_archive("permanent");
+    let runner = ChaosRunner::new(2);
+    runner.fail_permanent.store(true, Ordering::SeqCst);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(cfg(&archive_path, 1, 4), runner.clone(), archive).unwrap();
+    let (addr, handle) = spawn(server);
+
+    let (s, j) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 1}}"#);
+    assert_eq!(s, 202, "{}", j.dump());
+    let done = wait_terminal(&addr, j.u("id"), Duration::from_secs(10));
+    assert_eq!(done.s("status"), "failed", "{}", done.dump());
+    assert!(
+        done.s("error").contains("permanent failure"),
+        "the typed class must reach the client: {}",
+        done.dump()
+    );
+    assert_eq!(runner.runs.load(Ordering::SeqCst), 1, "permanent failures must not be retried");
+    assert_eq!(stats(&addr).req("scheduler").u("retries"), 0);
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn stub_watchdog_timeout_is_transient_and_retry_recovers() {
+    // the watchdog's typed error is retryable by both routes: the marker…
+    let marked = anyhow::anyhow!("watchdog: `acc` exceeded its budget");
+    assert_eq!(classify(&marked), FaultClass::Transient);
+
+    // …and end to end: a hung execution fails its waiter fast (well before
+    // the hang resolves), trips the health flag, and one retry succeeds
+    let health = Arc::new(Health::new());
+    let d = Dispatcher::with_watchdog(2, 4, Duration::from_millis(30), health.clone());
+    let pol = RetryPolicy { max_retries: 2, base_ms: 1, cap_ms: 2, seed: 9 };
+    let attempts = AtomicU64::new(0);
+    let t0 = Instant::now();
+    let out = retry_transient(&pol, "acc-query", None, || {
+        let n = attempts.fetch_add(1, Ordering::SeqCst);
+        let p = d.submit_with("acc", move || {
+            if n == 0 {
+                std::thread::sleep(Duration::from_millis(300));
+            }
+            Ok(42u32)
+        });
+        let v = p.wait()?;
+        health.ok(); // what `Exe` does after any completed execution
+        Ok(v)
+    });
+    assert_eq!(out.unwrap(), 42);
+    assert!(
+        t0.elapsed() < Duration::from_millis(280),
+        "the retry must not wait out the hang"
+    );
+    assert_eq!(attempts.load(Ordering::SeqCst), 2);
+    assert_eq!(health.trips(), 1, "the hung exec must trip the watchdog exactly once");
+    assert!(health.is_healthy(), "the completed retry clears the flag");
+}
+
+#[test]
+fn stub_session_quarantine_rebuilds_once_then_poisons() {
+    let archive_path = tmp_archive("quarantine");
+    let runner = QuarantineRunner::new(2);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(cfg(&archive_path, 1, 4), runner.clone(), archive).unwrap();
+    let (addr, handle) = spawn(server);
+    let body = |seed: u64| {
+        format!(r#"{{"net": "stubnet", "config": {{"episodes": 1, "seed": {seed}}}}}"#)
+    };
+    let fail_job = |seed: u64| {
+        let (s, j) = submit(&addr, &body(seed));
+        assert_eq!(s, 202, "{}", j.dump());
+        let done = wait_terminal(&addr, j.u("id"), Duration::from_secs(10));
+        assert_eq!(done.s("status"), "failed", "{}", done.dump());
+    };
+
+    // K = 2 consecutive env failures: quarantined (evicted, to be rebuilt)
+    runner.failing.store(true, Ordering::SeqCst);
+    fail_job(1);
+    fail_job(2);
+    assert_eq!(runner.sessions.quarantines(), 1);
+    assert_eq!(runner.sessions.poisoned_count(), 0);
+    let (s, h) = health(&addr);
+    assert_eq!(s, 503, "a failing backend must degrade /v1/health: {}", h.dump());
+    assert_eq!(h.s("status"), "degraded");
+
+    // the next job rebuilds the env once and succeeds: healthy again
+    runner.failing.store(false, Ordering::SeqCst);
+    let (s, j) = submit(&addr, &body(3));
+    assert_eq!(s, 202, "{}", j.dump());
+    let done = wait_terminal(&addr, j.u("id"), Duration::from_secs(10));
+    assert_eq!(done.s("status"), "done", "{}", done.dump());
+    assert_eq!(runner.builds.load(Ordering::SeqCst), 2, "exactly one rebuild");
+    let (s, h) = health(&addr);
+    assert_eq!(s, 200, "{}", h.dump());
+    assert_eq!(h.s("status"), "ok");
+
+    // K more consecutive failures on the rebuilt env: poisoned for good,
+    // and new submissions for the key 503 at the door
+    runner.failing.store(true, Ordering::SeqCst);
+    fail_job(4);
+    fail_job(5);
+    assert_eq!(runner.sessions.quarantines(), 2);
+    assert_eq!(runner.sessions.poisoned_count(), 1);
+    let (s, j) = submit(&addr, &body(6));
+    assert_eq!(s, 503, "a poisoned session must shed at submission: {}", j.dump());
+    assert!(j.dump().contains("poisoned"), "{}", j.dump());
+    assert_eq!(runner.builds.load(Ordering::SeqCst), 2, "no rebuild after poisoning");
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn stub_memo_leader_death_reelects_exactly_once_per_key() {
+    let memo = Arc::new(AccMemo::new());
+    let calls = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(std::sync::Barrier::new(4));
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let (memo, calls, barrier) = (memo.clone(), calls.clone(), barrier.clone());
+            std::thread::spawn(move || {
+                barrier.wait();
+                memo.get_or_compute(&[4, 8], || {
+                    let n = calls.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(10));
+                    if n == 0 {
+                        anyhow::bail!("leader died: UNAVAILABLE")
+                    }
+                    Ok(0.75)
+                })
+            })
+        })
+        .collect();
+    let results: Vec<Result<(f64, bool)>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let errs = results.iter().filter(|r| r.is_err()).count();
+    assert_eq!(errs, 1, "only the dead leader's caller sees the failure");
+    for r in results.into_iter().flatten() {
+        assert_eq!(r.0, 0.75);
+    }
+    assert_eq!(
+        calls.load(Ordering::SeqCst),
+        2,
+        "the failed key is re-claimed by exactly one new leader"
+    );
+    assert_eq!(memo.get(&[4, 8]), Some(0.75), "the re-elected leader's value is cached");
+}
+
+#[test]
+fn stub_breaker_opens_sheds_while_busy_and_closes_on_success() {
+    let archive_path = tmp_archive("breaker");
+    let runner = ChaosRunner::new(10);
+    runner.fail_plain.store(true, Ordering::SeqCst);
+    let mut c = cfg(&archive_path, 1, 4);
+    c.job_retries = 0;
+    c.breaker_fails = 2;
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(c, runner.clone(), archive).unwrap();
+    let (addr, handle) = spawn(server);
+    let body = |eps: usize, seed: u64| {
+        format!(r#"{{"net": "stubnet", "config": {{"episodes": {eps}, "seed": {seed}}}}}"#)
+    };
+
+    // two consecutive failures open the breaker
+    for seed in [1u64, 2] {
+        let (s, j) = submit(&addr, &body(1, seed));
+        assert_eq!(s, 202, "{}", j.dump());
+        let done = wait_terminal(&addr, j.u("id"), Duration::from_secs(10));
+        assert_eq!(done.s("status"), "failed", "{}", done.dump());
+    }
+    let st = stats(&addr);
+    assert_eq!(st.req("scheduler").u("breaker_trips"), 1);
+    let (s, h) = health(&addr);
+    assert_eq!(s, 503, "{}", h.dump());
+    assert_eq!(h.req("breaker_open"), &Json::Bool(true));
+
+    // an idle daemon still accepts one submission — the half-open probe
+    let (s, probe) = submit(&addr, &body(200, 3));
+    assert_eq!(s, 202, "idle daemon must accept a probe: {}", probe.dump());
+    let t0 = Instant::now();
+    while poll_status(&addr, probe.u("id")).s("status") != "running" {
+        assert!(t0.elapsed() < Duration::from_secs(5), "probe never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // …but while it is busy, the open breaker sheds further load
+    let (s, j) = submit(&addr, &body(1, 4));
+    assert_eq!(s, 503, "open breaker + busy daemon must shed: {}", j.dump());
+    assert!(j.dump().contains("circuit breaker"), "{}", j.dump());
+
+    // cancellation must not feed the failure streak
+    let (s, _) =
+        request(&addr, "POST", &format!("/v1/jobs/{}/cancel", probe.u("id")), None).unwrap();
+    assert_eq!(s, 200);
+    let done = wait_terminal(&addr, probe.u("id"), Duration::from_secs(10));
+    assert_eq!(done.s("status"), "cancelled", "{}", done.dump());
+
+    // a completed job closes the breaker
+    runner.fail_plain.store(false, Ordering::SeqCst);
+    let (s, ok) = submit(&addr, &body(1, 5));
+    assert_eq!(s, 202, "{}", ok.dump());
+    let done = wait_terminal(&addr, ok.u("id"), Duration::from_secs(10));
+    assert_eq!(done.s("status"), "done", "{}", done.dump());
+    let st = stats(&addr);
+    assert_eq!(st.req("scheduler").req("breaker_open"), &Json::Bool(false));
+    let (s, h) = health(&addr);
+    assert_eq!(s, 200, "{}", h.dump());
+    assert_eq!(h.s("status"), "ok");
+    shutdown(&addr, handle);
+}
+
+// ---- artifact tier -----------------------------------------------------------
+
+/// Retries re-run pure programs: an engine with an injected transient-fault
+/// plan must produce results bit-identical to a fault-free engine, with
+/// every injected fault absorbed by exactly one retry.
+#[test]
+fn faulty_engine_results_are_bit_identical_with_artifacts() {
+    use releq::coordinator::{EnvConfig, QuantEnv};
+    use releq::runtime::{Engine, FaultPlan, Manifest};
+
+    let dir = releq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let net = manifest.network("lenet").unwrap();
+    let mk_env = |engine: Arc<Engine>| {
+        let mut cfg = EnvConfig::default();
+        cfg.pretrain_steps = 40;
+        QuantEnv::new(engine, net, manifest.bits_max, manifest.fp_bits, cfg).unwrap()
+    };
+
+    let clean = Arc::new(Engine::with_faults(dir.clone(), None, RetryPolicy::none()).unwrap());
+    let plan = Arc::new(FaultPlan::parse("seed=11,*:every=5:fail").unwrap());
+    let pol = RetryPolicy { max_retries: 4, base_ms: 1, cap_ms: 2, seed: 3 };
+    let faulty = Arc::new(Engine::with_faults(dir, Some(plan), pol).unwrap());
+
+    let env_a = mk_env(clean);
+    let env_b = mk_env(faulty.clone());
+    let bits = vec![4u32; net.l];
+    let a = env_a.accuracy(&bits).unwrap();
+    let b = env_b.accuracy(&bits).unwrap();
+    assert_eq!(a.to_bits(), b.to_bits(), "retried executions must be bit-identical: {a} vs {b}");
+    assert!(faulty.faults_injected() > 0, "the every=5 plan must have fired");
+    assert_eq!(
+        faulty.exec_retries(),
+        faulty.faults_injected(),
+        "every injected transient fault costs exactly one retry"
+    );
+}
