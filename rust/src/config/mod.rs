@@ -137,6 +137,11 @@ fn apply_kv(cfg: &mut SearchConfig, k: &str, v: &Val) -> Result<()> {
         "rollout" => cfg.rollout = RolloutMode::parse(v.str(k)?)?,
         "lanes" => cfg.lanes = v.num(k)? as usize,
         "pipeline" => cfg.pipeline = v.num(k)? as usize,
+        "devices" => {
+            let n = v.num(k)? as usize;
+            anyhow::ensure!(n >= 1, "config key `devices` must be >= 1");
+            cfg.devices = n;
+        }
         "watchdog_ms" => cfg.watchdog_ms = v.num(k)? as u64,
         "eval_every_step" => cfg.eval_every_step = v.bool(k)?,
         "min_bits" => cfg.min_bits = v.num(k)? as u32,
@@ -206,6 +211,10 @@ pub fn apply_cli(cfg: &mut SearchConfig, args: &Args) -> Result<()> {
     }
     if let Some(v) = flag_num(args, "pipeline")? {
         cfg.pipeline = v;
+    }
+    if let Some(v) = flag_num(args, "devices")? {
+        anyhow::ensure!(v >= 1, "--devices must be >= 1");
+        cfg.devices = v;
     }
     if let Some(v) = flag_num(args, "watchdog-ms")? {
         cfg.watchdog_ms = v;
@@ -505,6 +514,29 @@ mod tests {
         )
         .unwrap();
         assert_eq!(spec.cfg.pipeline, 3);
+    }
+
+    #[test]
+    fn devices_resolves_through_every_layer() {
+        // default: 1 = single-device pool, byte-identical to the pre-pool path
+        assert_eq!(preset("lenet").devices, 1);
+        // CLI
+        let cfg = resolve("lenet", &args("search --devices 4")).unwrap();
+        assert_eq!(cfg.devices, 4);
+        assert!(resolve("lenet", &args("search --devices many")).is_err());
+        assert!(resolve("lenet", &args("search --devices 0")).is_err(), "0 devices rejected");
+        // TOML and job-JSON share the key table
+        let mut via_toml = preset("lenet");
+        let doc = toml_lite::parse("[search]\ndevices = 2\n").unwrap();
+        apply_toml(&mut via_toml, doc.get("search").unwrap()).unwrap();
+        assert_eq!(via_toml.devices, 2);
+        let doc = toml_lite::parse("[search]\ndevices = 0\n").unwrap();
+        assert!(apply_toml(&mut via_toml, doc.get("search").unwrap()).is_err());
+        let spec = job_from_json(
+            &Json::parse(r#"{"net": "lenet", "config": {"devices": 3}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.cfg.devices, 3);
     }
 
     #[test]

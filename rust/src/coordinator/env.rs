@@ -49,9 +49,24 @@
 //! `python/tests/test_aot.py` (numeric lane parity) and
 //! `rust/tests/eval_batch_parity.rs` (compiled-artifact parity at any K,
 //! including pad lanes).
+//!
+//! # Device striping
+//!
+//! When the engine's pool holds more than one device, `compute_misses`
+//! stripes megabatch chunks across it: chunk `i` always runs on device
+//! `i % N` (a pure function of the miss list, not of pool load), each
+//! device lazily builds its own replica of the fused residency ([`DevRes`])
+//! on the first chunk placed there, and results merge back in chunk order.
+//! Because accuracy is a pure function of the bits vector, striping — like
+//! batching — is purely a throughput lever: values are bit-identical at any
+//! device count, and a 1-device pool takes the exact pre-pool serial path
+//! (`rust/tests/device_pool_parity.rs`). Threads pinned to a device
+//! (`run_replicas`, Pareto shards) keep all their chunks on their own
+//! device instead.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{Context, Result};
 use xla::Literal;
@@ -231,6 +246,14 @@ pub struct EnvCore {
     // EXPERIMENTS.md §Perf): snapshot params, zero momentum, the whole
     // training set, the validation set, and the learning rate.
     fused_bufs: Option<FusedBuffers>,
+    /// retained validation split: devices > 0 rebuild their resident
+    /// operand replicas from this host data on first use
+    val: Split,
+    /// per-device replicas of the fused hot path (executables + resident
+    /// operands), built lazily by [`EnvCore::dev_res`]. Device 0 is NOT in
+    /// this map — it lives in the plain fields above, untouched, which is
+    /// what keeps `--devices 1` byte-identical to the pre-pool env.
+    replicas: RwLock<HashMap<usize, Arc<DevRes>>>,
     /// reusable host staging for the per-execution batch operands (the
     /// K×L bits matrix and K cursors) — see [`Stage`]
     stage: Mutex<Stage>,
@@ -244,6 +267,16 @@ struct FusedBuffers {
     val_x: DeviceBuf,
     val_y: DeviceBuf,
     lr: DeviceBuf,
+}
+
+/// Device-`d` replica of the fused accuracy path (`d > 0`): the fused and
+/// batch executables compiled for that device plus the resident operand set
+/// uploaded to it. Built on the first megabatch chunk striped to the device
+/// and cached for the env's lifetime.
+struct DevRes {
+    fused_exe: Arc<Exe>,
+    batch_exe: Option<Arc<Exe>>,
+    bufs: FusedBuffers,
 }
 
 impl QuantEnv {
@@ -317,10 +350,12 @@ impl QuantEnv {
             val_x_lit,
             val_y_lit,
             fused_bufs: None,
+            val,
+            replicas: RwLock::new(HashMap::new()),
             stage: Mutex::new(Stage::new()),
         };
         core.pretrain()?;
-        core.upload_fused_operands(&val)?;
+        core.upload_fused_operands()?;
         let base = core.accuracy(&vec![bits_max; core.net.l])?;
         core.acc_ref = core.acc_fullp.max(base);
         Ok(QuantEnv { core: Arc::new(core) })
@@ -436,40 +471,89 @@ impl EnvCore {
 
     /// Upload the persistent operands of the fused artifact (called once
     /// after pretraining; the snapshot never changes during a search).
-    fn upload_fused_operands(&mut self, val: &Split) -> Result<()> {
+    fn upload_fused_operands(&mut self) -> Result<()> {
         if self.fused_exe.is_none() || self.train.n != self.net.train_size {
             // training split doesn't match the AOT-baked resident set; the
             // unfused fallback still works, so just skip the fast path.
             self.fused_bufs = None;
             return Ok(());
         }
+        self.fused_bufs = Some(self.build_fused_bufs(0)?);
+        Ok(())
+    }
+
+    /// Upload the fused-path resident operand set to pool device `dev` from
+    /// the retained host data — device 0 at bring-up, devices > 0 lazily on
+    /// their first striped chunk. The upload order matches the original
+    /// single-device bring-up exactly.
+    fn build_fused_bufs(&self, dev: usize) -> Result<FusedBuffers> {
         let [h, w, c] = self.net.input;
         let e = &self.engine;
-        self.fused_bufs = Some(FusedBuffers {
-            params: e.buffer_f32(&self.pretrained, &[self.net.p])?,
-            mom: e.buffer_f32(&vec![0.0; self.net.p], &[self.net.p])?,
-            train_x: e.buffer_f32(&self.train.images, &[self.train.n, h, w, c])?,
-            train_y: e.buffer_f32(&self.train.labels, &[self.train.n])?,
-            val_x: e.buffer_f32(&val.images, &[self.net.eval_batch, h, w, c])?,
-            val_y: e.buffer_f32(&val.labels, &[self.net.eval_batch])?,
-            lr: e.buffer_scalar(self.cfg.lr)?,
-        });
-        Ok(())
+        Ok(FusedBuffers {
+            params: e.buffer_f32_on(&self.pretrained, &[self.net.p], dev)?,
+            mom: e.buffer_f32_on(&vec![0.0; self.net.p], &[self.net.p], dev)?,
+            train_x: e.buffer_f32_on(&self.train.images, &[self.train.n, h, w, c], dev)?,
+            train_y: e.buffer_f32_on(&self.train.labels, &[self.train.n], dev)?,
+            val_x: e.buffer_f32_on(&self.val.images, &[self.net.eval_batch, h, w, c], dev)?,
+            val_y: e.buffer_f32_on(&self.val.labels, &[self.net.eval_batch], dev)?,
+            lr: e.buffer_scalar_on(self.cfg.lr, dev)?,
+        })
+    }
+
+    /// Fetch (building on first use) the device-`dev` replica of the fused
+    /// accuracy path. Only for `dev > 0` — device 0's residency is the env
+    /// core's own fields. Requires the fused path to be live (striped
+    /// callers guarantee it: chunks only fan out when
+    /// `eval_batch_width() > 1`).
+    fn dev_res(&self, dev: usize) -> Result<Arc<DevRes>> {
+        anyhow::ensure!(dev > 0, "device 0 residency lives in the env core fields");
+        if let Some(r) = self.replicas.read().unwrap().get(&dev) {
+            return Ok(r.clone());
+        }
+        anyhow::ensure!(
+            self.fused_bufs.is_some(),
+            "per-device residency requires the fused path (resident training set)"
+        );
+        // build outside the lock (compilation + uploads are slow); a racing
+        // thread may build the same replica — the first insert wins, same
+        // protocol as the engine's compile cache
+        let fused_exe = self.engine.exe_on(&format!("{}_retrain_eval", self.net.name), dev)?;
+        let batch_exe = if self.net.eval_batch_k > 0 {
+            Some(self.engine.exe_on(&format!("{}_retrain_eval_batch", self.net.name), dev)?)
+        } else {
+            None
+        };
+        let bufs = self.build_fused_bufs(dev)?;
+        let res = Arc::new(DevRes { fused_exe, batch_exe, bufs });
+        Ok(self.replicas.write().unwrap().entry(dev).or_insert(res).clone())
     }
 
     /// Fused accuracy query: one PJRT execution covering the k-step quantized
     /// retrain and the validation eval, with all large operands resident on
     /// the device. Per query only the bits vector, cursor and lr transfer.
-    fn accuracy_fused(&self, bits: &[u32], cursor: usize) -> Result<Option<f64>> {
+    /// Runs on pool device `dev` (device 0 uses the core's own residency;
+    /// devices > 0 use their lazily built replica).
+    fn accuracy_fused_on(&self, bits: &[u32], cursor: usize, dev: usize) -> Result<Option<f64>> {
         if self.cfg.retrain_steps != self.net.fused_k {
             return Ok(None);
         }
-        let Some(bufs) = &self.fused_bufs else { return Ok(None) };
-        let Some(fused_exe) = self.fused_exe.clone() else { return Ok(None) };
+        if self.fused_bufs.is_none() || self.fused_exe.is_none() {
+            return Ok(None);
+        }
+        let res; // keeps the dev > 0 replica alive across the execution
+        let (bufs, fused_exe): (&FusedBuffers, Arc<Exe>) = if dev == 0 {
+            (
+                self.fused_bufs.as_ref().expect("checked above"),
+                self.fused_exe.clone().expect("checked above"),
+            )
+        } else {
+            res = self.dev_res(dev)?;
+            (&res.bufs, res.fused_exe.clone())
+        };
         let bits_v: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
         let e = &self.engine;
-        let cursor_buf = e.buffer_scalar(cursor as f32)?;
-        let bits_buf = e.buffer_f32(&bits_v, &[self.net.l])?;
+        let cursor_buf = e.buffer_scalar_on(cursor as f32, dev)?;
+        let bits_buf = e.buffer_f32_on(&bits_v, &[self.net.l], dev)?;
         let args = [
             bufs.params.raw(),
             bufs.mom.raw(),
@@ -493,7 +577,14 @@ impl EnvCore {
     /// fallback and the scalar miss path both land here). Fused when
     /// available, per-step literals otherwise.
     fn compute_one(&self, bits: &[u32]) -> Result<f64> {
-        match self.accuracy_fused(bits, self.bits_cursor(bits))? {
+        self.compute_one_on(bits, 0)
+    }
+
+    /// [`EnvCore::compute_one`] on pool device `dev`. The unfused fallback
+    /// stays on device 0 (per-step literal path); striped callers only pick
+    /// `dev > 0` when the fused path is live, so it never triggers there.
+    fn compute_one_on(&self, bits: &[u32], dev: usize) -> Result<f64> {
+        match self.accuracy_fused_on(bits, self.bits_cursor(bits), dev)? {
             Some(acc) => Ok(acc),
             None => self.retrain_and_eval(bits, self.cfg.retrain_steps),
         }
@@ -534,8 +625,10 @@ impl EnvCore {
     /// (those track *accuracy work*, one fused_k-step retrain + one eval
     /// per real lane — the same accounting as the scalar paths, so the
     /// exec-count invariants in `rollout_parity.rs` hold verbatim under
-    /// batching).
-    fn accuracy_lanes(&self, chunk: &[Vec<u32>]) -> Result<Vec<f64>> {
+    /// batching). Runs on pool device `dev`: the megabatch chunk executes
+    /// against that device's residency replica, staging its per-execution
+    /// operands to the same device.
+    fn accuracy_lanes_on(&self, chunk: &[Vec<u32>], dev: usize) -> Result<Vec<f64>> {
         let k = self.net.eval_batch_k;
         let l = self.net.l;
         anyhow::ensure!(
@@ -543,8 +636,17 @@ impl EnvCore {
             "batch chunk of {} exceeds the artifact's {k} lanes",
             chunk.len()
         );
-        let bufs = self.fused_bufs.as_ref().expect("eval_batch_width checked");
-        let exe = self.batch_exe.clone().expect("eval_batch_width checked");
+        let res; // keeps the dev > 0 replica alive across the execution
+        let (bufs, exe): (&FusedBuffers, Arc<Exe>) = if dev == 0 {
+            (
+                self.fused_bufs.as_ref().expect("eval_batch_width checked"),
+                self.batch_exe.clone().expect("eval_batch_width checked"),
+            )
+        } else {
+            res = self.dev_res(dev)?;
+            let batch = res.batch_exe.clone().expect("eval_batch_width checked");
+            (&res.bufs, batch)
+        };
         let pads = k - chunk.len();
         let last = chunk.last().expect("non-empty");
         let e = &self.engine;
@@ -567,12 +669,12 @@ impl EnvCore {
             for bits in chunk.iter().chain(std::iter::repeat(last).take(pads)) {
                 buf.extend(bits.iter().map(|&b| b as f32));
             }
-            let bits_buf = stage.upload(e, &[k, l])?;
+            let bits_buf = stage.upload_on(e, &[k, l], dev)?;
             let buf = stage.start();
             for bits in chunk.iter().chain(std::iter::repeat(last).take(pads)) {
                 buf.push(self.bits_cursor(bits) as f32);
             }
-            (bits_buf, stage.upload(e, &[k])?)
+            (bits_buf, stage.upload_on(e, &[k], dev)?)
         };
         let args = [
             bufs.params.raw(),
@@ -610,17 +712,48 @@ impl EnvCore {
     /// misses at `eval_batch_width()` — a lone remainder takes the scalar
     /// fused path (one execution either way, without K-1 pad lanes of
     /// compute), so `m` misses cost exactly `ceil(m / width)`
-    /// retrain_eval-family executions. Envs without the artifact keep the
-    /// pre-megabatch behavior: misses fan out across shard threads.
+    /// retrain_eval-family executions *regardless of device count*. Envs
+    /// without the artifact keep the pre-megabatch behavior: misses fan out
+    /// across shard threads.
+    ///
+    /// Device placement: on a multi-device pool, an unpinned caller stripes
+    /// the chunks — chunk `i` on device `i % N`, one lane thread per device,
+    /// merged back in chunk order (deterministic at any pool size). A
+    /// pinned caller (replica / Pareto shard) keeps every chunk on its own
+    /// device; a 1-device pool is the pre-pool serial loop, byte for byte.
     fn compute_misses(&self, misses: &[Vec<u32>]) -> Result<Vec<f64>> {
         let width = self.eval_batch_width();
         if width > 1 {
+            let n_dev = self.engine.n_devices();
+            let pin = crate::runtime::thread_pin();
+            if n_dev > 1 && pin.is_none() && misses.len() > width {
+                let chunks: Vec<Vec<Vec<u32>>> =
+                    misses.chunks(width).map(|c| c.to_vec()).collect();
+                let lanes = parallel::stripe_evenly(chunks, n_dev);
+                let per = parallel::run_sharded(lanes, |_, lane| {
+                    lane.into_iter()
+                        .map(|(i, chunk)| {
+                            let dev = self.engine.place_chunk(i);
+                            let vals = if chunk.len() == 1 {
+                                vec![self.compute_one_on(&chunk[0], dev)?]
+                            } else {
+                                self.accuracy_lanes_on(&chunk, dev)?
+                            };
+                            Ok((i, vals))
+                        })
+                        .collect::<Result<Vec<(usize, Vec<f64>)>>>()
+                })?;
+                let mut indexed: Vec<(usize, Vec<f64>)> = per.into_iter().flatten().collect();
+                indexed.sort_by_key(|&(i, _)| i);
+                return Ok(indexed.into_iter().flat_map(|(_, v)| v).collect());
+            }
+            let dev = pin.filter(|&d| d < n_dev).unwrap_or(0);
             let mut out = Vec::with_capacity(misses.len());
             for chunk in misses.chunks(width) {
                 if chunk.len() == 1 {
-                    out.push(self.compute_one(&chunk[0])?);
+                    out.push(self.compute_one_on(&chunk[0], dev)?);
                 } else {
-                    out.extend(self.accuracy_lanes(chunk)?);
+                    out.extend(self.accuracy_lanes_on(chunk, dev)?);
                 }
             }
             return Ok(out);

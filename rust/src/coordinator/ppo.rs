@@ -16,6 +16,13 @@
 //! per call. The recurrent h'/c' come back to the host because PJRT returns
 //! the output tuple as a single host literal; re-uploading them costs
 //! `2*hidden` floats, negligible next to the param vector this path saves.
+//!
+//! Device pool: an agent is bound at construction to the constructing
+//! thread's pinned device (device 0 when unpinned — the default, identical
+//! to the pre-pool behavior). Every executable it compiles and every
+//! operand it uploads lands on that one device, so `run_replicas`' pinned
+//! shard threads get whole per-replica agents resident on their own
+//! devices instead of serializing act/update traffic through device 0.
 
 use std::sync::Arc;
 
@@ -130,6 +137,9 @@ pub struct PpoAgent {
     /// episode length this agent instance is bound to (the network's L)
     pub episode_len: usize,
     engine: Arc<Engine>,
+    /// pool device this agent's executables and resident operands live on
+    /// (the constructing thread's pin, else 0)
+    device: usize,
     act_exe: Arc<Exe>,
     /// vectorized act artifact (`agent_*_act_batch`), compiled lazily on the
     /// first `act_batch` call so serial-only runs never pay for it
@@ -178,13 +188,14 @@ impl PpoAgent {
             cfg.episodes_per_update,
             manifest.agent.episodes_per_update
         );
-        let act_exe = engine.exe(&format!("agent_{}_act", kind.tag()))?;
+        let device = engine.current_device();
+        let act_exe = engine.exe_on(&format!("agent_{}_act", kind.tag()), device)?;
         let update_exe = engine
-            .exe(&format!("agent_{}_update_l{}", kind.tag(), episode_len))
+            .exe_on(&format!("agent_{}_update_l{}", kind.tag(), episode_len), device)
             .with_context(|| {
                 format!("no update artifact for {} episode length {episode_len}", kind.tag())
             })?;
-        let init_exe = engine.exe(&format!("agent_{}_init", kind.tag()))?;
+        let init_exe = engine.exe_on(&format!("agent_{}_init", kind.tag()), device)?;
         let out = init_exe.run(&[lit_scalar(seed as f32)])?;
         let params = to_vec_f32(&out[0])?;
         let p = params.len();
@@ -198,6 +209,7 @@ impl PpoAgent {
             cfg,
             episode_len,
             engine,
+            device,
             act_exe,
             act_batch_exe: None,
             update_exe,
@@ -227,8 +239,11 @@ impl PpoAgent {
     /// device on the act path.
     fn ensure_resident_params(&mut self) -> Result<()> {
         if self.params_buf.is_none() {
-            self.params_buf =
-                Some(Arc::new(self.engine.buffer_f32(&self.params, &[self.params.len()])?));
+            self.params_buf = Some(Arc::new(self.engine.buffer_f32_on(
+                &self.params,
+                &[self.params.len()],
+                self.device,
+            )?));
             self.param_uploads += 1;
         }
         Ok(())
@@ -243,9 +258,9 @@ impl PpoAgent {
                -> Result<(Vec<f32>, f32, Vec<f32>, Vec<f32>)> {
         self.act_calls += 1;
         self.ensure_resident_params()?;
-        let s_buf = self.engine.buffer_f32(state, &[STATE_DIM])?;
-        let h_buf = self.engine.buffer_f32(h, &[self.hidden])?;
-        let c_buf = self.engine.buffer_f32(c, &[self.hidden])?;
+        let s_buf = self.engine.buffer_f32_on(state, &[STATE_DIM], self.device)?;
+        let h_buf = self.engine.buffer_f32_on(h, &[self.hidden], self.device)?;
+        let c_buf = self.engine.buffer_f32_on(c, &[self.hidden], self.device)?;
         let params_buf = self.params_buf.as_ref().expect("just ensured");
         let args = [params_buf.raw(), s_buf.raw(), h_buf.raw(), c_buf.raw()];
         let out = self.act_exe.run_b(&args).context("agent act")?;
@@ -309,7 +324,7 @@ impl PpoAgent {
         if self.act_batch_exe.is_none() {
             let exe = self
                 .engine
-                .exe(&format!("agent_{}_act_batch", self.kind.tag()))
+                .exe_on(&format!("agent_{}_act_batch", self.kind.tag()), self.device)
                 .with_context(|| {
                     format!(
                         "no act_batch artifact for `{}` — re-run `make artifacts` \
@@ -322,9 +337,9 @@ impl PpoAgent {
         }
         self.act_batch_calls += 1;
         self.ensure_resident_params()?;
-        let s_buf = self.engine.buffer_f32(states, &[b, STATE_DIM])?;
-        let h_buf = self.engine.buffer_f32(h, &[b, self.hidden])?;
-        let c_buf = self.engine.buffer_f32(c, &[b, self.hidden])?;
+        let s_buf = self.engine.buffer_f32_on(states, &[b, STATE_DIM], self.device)?;
+        let h_buf = self.engine.buffer_f32_on(h, &[b, self.hidden], self.device)?;
+        let c_buf = self.engine.buffer_f32_on(c, &[b, self.hidden], self.device)?;
         Ok((
             self.act_batch_exe.clone().expect("just ensured"),
             self.params_buf.clone().expect("just ensured"),
@@ -430,26 +445,28 @@ impl PpoAgent {
             *a = ((*a as f64 - mean) / std) as f32;
         }
 
-        // per-update resident operands (constant across epochs)
+        // per-update resident operands (constant across epochs), on this
+        // agent's bound device like every other operand it stages
         let e = &self.engine;
-        let states_buf = e.buffer_f32(&states, &[b, l, d])?;
-        let actions_buf = e.buffer_f32(&actions, &[b, l])?;
-        let old_logp_buf = e.buffer_f32(&old_logp, &[b, l])?;
-        let advs_buf = e.buffer_f32(&advs, &[b, l])?;
-        let rets_buf = e.buffer_f32(&rets, &[b, l])?;
-        let clip_buf = e.buffer_scalar(self.cfg.clip_eps)?;
-        let ent_buf = e.buffer_scalar(self.cfg.ent_coef)?;
-        let lr_buf = e.buffer_scalar(self.cfg.lr)?;
+        let dev = self.device;
+        let states_buf = e.buffer_f32_on(&states, &[b, l, d], dev)?;
+        let actions_buf = e.buffer_f32_on(&actions, &[b, l], dev)?;
+        let old_logp_buf = e.buffer_f32_on(&old_logp, &[b, l], dev)?;
+        let advs_buf = e.buffer_f32_on(&advs, &[b, l], dev)?;
+        let rets_buf = e.buffer_f32_on(&rets, &[b, l], dev)?;
+        let clip_buf = e.buffer_scalar_on(self.cfg.clip_eps, dev)?;
+        let ent_buf = e.buffer_scalar_on(self.cfg.ent_coef, dev)?;
+        let lr_buf = e.buffer_scalar_on(self.cfg.lr, dev)?;
 
         let p = self.params.len();
         let mut stats = UpdateStats::default();
         for _ in 0..self.cfg.epochs {
             // evolving state: PJRT hands these back as host literals each
             // epoch, so they re-upload per epoch (small next to the batch)
-            let params_buf = e.buffer_f32(&self.params, &[p])?;
-            let m_buf = e.buffer_f32(&self.adam_m, &[p])?;
-            let v_buf = e.buffer_f32(&self.adam_v, &[p])?;
-            let t_buf = e.buffer_scalar(self.adam_t)?;
+            let params_buf = e.buffer_f32_on(&self.params, &[p], dev)?;
+            let m_buf = e.buffer_f32_on(&self.adam_m, &[p], dev)?;
+            let v_buf = e.buffer_f32_on(&self.adam_v, &[p], dev)?;
+            let t_buf = e.buffer_scalar_on(self.adam_t, dev)?;
             let args = [
                 params_buf.raw(),
                 m_buf.raw(),

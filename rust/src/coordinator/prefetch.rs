@@ -74,6 +74,13 @@ impl<'a> Prefetcher<'a> {
         let submitted = self
             .disp
             .try_submit_with(SPEC_TAG, move || {
+                // least-loaded placement: pin the worker thread for the
+                // duration of this slate so its chunks land on the idlest
+                // healthy device instead of competing with the rollout's
+                // round-robin stripe (values are device-independent, so
+                // placement is purely a throughput choice; on a 1-device
+                // pool the pin is Some(0) and changes nothing)
+                let _pin = env.engine().pin_least_loaded();
                 // values discarded: this call's only job is to publish into
                 // the shared memo (or coalesce with whoever beat us to it)
                 env.accuracy_batch(&task_slate).map(|_| ())

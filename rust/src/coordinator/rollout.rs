@@ -271,18 +271,24 @@ impl Searcher {
         if self.cfg.pipeline == 0 {
             self.batched_episodes(ctl, lanes, None, &mut log, &mut episodes_run)?;
         } else {
-            // two workers: one lane for the double-buffered act_batch, one
-            // for the speculative accuracy slate; the depth caps each
-            // artifact's in-flight dispatches (the speculation budget)
+            // at least two workers: one lane for the double-buffered
+            // act_batch, one for the speculative accuracy slate; the depth
+            // caps each artifact's in-flight dispatches (the speculation
+            // budget). On a multi-device pool, one worker per device so
+            // speculative slates pinned to different devices can overlap
+            // (a 1-device pool keeps exactly the pre-pool two workers). The
+            // watchdog trips the pool health AND — for `submit`ted exes —
+            // the hung device's own health, quarantining it from placement.
+            let workers = 2.max(self.env.engine().n_devices());
             let disp = if self.cfg.watchdog_ms > 0 {
                 Dispatcher::with_watchdog(
-                    2,
+                    workers,
                     self.cfg.pipeline,
                     std::time::Duration::from_millis(self.cfg.watchdog_ms),
                     self.env.engine().health(),
                 )
             } else {
-                Dispatcher::new(2, self.cfg.pipeline)
+                Dispatcher::new(workers, self.cfg.pipeline)
             };
             let prefetcher = Prefetcher::new(self.env.clone(), &disp);
             let looped = self.batched_episodes(

@@ -185,6 +185,14 @@ pub struct SearchConfig {
     /// stop early when the greedy policy is stable this many updates in a row
     /// (0 disables early stopping)
     pub patience: usize,
+    /// PJRT device-pool size the search should have available (grow-only:
+    /// the launcher/serve session calls `Engine::ensure_devices` with it
+    /// before the search starts). On CPU each device is its own forced
+    /// host client, so N > 1 is testable anywhere. Purely a throughput
+    /// lever — results are bit-identical at any count, and 1 (the default)
+    /// replays the single-engine path byte for byte — so like `memo_cap`
+    /// and `eval_batch` it is excluded from the serve env fingerprint.
+    pub devices: usize,
 }
 
 impl Default for SearchConfig {
@@ -204,6 +212,7 @@ impl Default for SearchConfig {
             min_bits: 2,
             seed: 23,
             patience: 12,
+            devices: 1,
         }
     }
 }
@@ -478,7 +487,13 @@ pub fn run_replicas(engine: &Arc<Engine>, manifest: &Manifest, net: &NetworkMeta
             c
         })
         .collect();
-    parallel::run_sharded(cfgs, |_, cfg| {
+    parallel::run_sharded(cfgs, |i, cfg| {
+        // one replica per pool device (round-robin beyond the pool size):
+        // the pin routes this replica's agent residency AND all its striped
+        // accuracy chunks to its own device for the whole search. At
+        // `devices == 1` every pin is Some(0) — byte-identical to the
+        // unpinned single-engine run.
+        let _pin = engine.pin_thread(i);
         let mut searcher = Searcher::with_env(env.clone(), engine.clone(), manifest, cfg)?;
         searcher.run()
     })

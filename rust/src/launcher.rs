@@ -108,6 +108,13 @@ pub fn cmd_search(args: &Args) -> Result<()> {
     let (manifest, engine) = bringup()?;
     let net = manifest.network(&net_name)?;
     let cfg = config::resolve(&net_name, args)?;
+    // grow the engine's device pool before any residency is built so every
+    // placement decision below sees the full pool (grow-only; devices=1 is
+    // the pre-pool single-engine path, byte-for-byte)
+    engine.ensure_devices(cfg.devices)?;
+    if engine.n_devices() > 1 {
+        println!("device pool: {} devices", engine.n_devices());
+    }
     let replicas = args.usize_of("replicas", 1);
     let t0 = std::time::Instant::now();
 
@@ -165,13 +172,17 @@ pub fn cmd_search(args: &Args) -> Result<()> {
             searcher.cfg.pipeline, stats.spec_submitted, stats.spec_hits, stats.spec_wasted
         );
     }
-    // per-artifact timing, device-exec vs result-download split (the
-    // attribution the pipelined driver's wins are measured against)
-    println!("{:<28} {:>8} {:>12} {:>12}", "artifact", "execs", "exec ms", "download ms");
+    // per-(artifact, device) timing, device-exec vs result-download split
+    // (the attribution the pipelined driver's wins are measured against);
+    // on a 1-device pool every row is device 0
+    println!(
+        "{:<28} {:>6} {:>8} {:>12} {:>12}",
+        "artifact", "device", "execs", "exec ms", "download ms"
+    );
     for s in engine.exec_stats() {
         println!(
-            "{:<28} {:>8} {:>12.3} {:>12.3}",
-            s.name, s.execs, s.mean_exec_ms, s.mean_download_ms
+            "{:<28} {:>6} {:>8} {:>12.3} {:>12.3}",
+            s.name, s.device, s.execs, s.mean_exec_ms, s.mean_download_ms
         );
     }
     let dir = out_dir(args)?;

@@ -51,6 +51,11 @@ fn print_help() {
          \x20           [--replicas N]   (N parallel multi-seed searches; best wins)\n\
          \x20           [--watchdog-ms N] (per-execution wall-clock budget for the pipelined\n\
          \x20                             dispatcher; 0 = no watchdog)\n\
+         \x20           [--devices N]    (PJRT device pool size; rollout lanes, megabatch eval\n\
+         \x20                             chunks and replicas stripe across devices. On CPU the\n\
+         \x20                             pool forces N host devices, one client per slot, so\n\
+         \x20                             N>1 is testable anywhere; RELEQ_DEVICES=N presizes\n\
+         \x20                             the pool at bring-up; 1 = exact pre-pool behavior)\n\
          \x20 pretrain  --net <name> [--steps N] [--lr F] [--verbose]\n\
          \x20 pareto    --net <name> [--samples N] [--shards N] [--out dir]\n\
          \x20 hw-eval   --net <name> --bits 8,4,4,8\n\

@@ -66,6 +66,23 @@ pub fn chunk_evenly<T>(items: Vec<T>, n: usize) -> Vec<Vec<T>> {
     out
 }
 
+/// Round-robin-stripe `items` across `n` lanes, tagging each item with its
+/// original index: lane `d` receives items `d, d+n, d+2n, ...` in order.
+/// This is the device-pool work distribution — chunk `i` of a megabatch
+/// always lands on device `i % n` regardless of pool load, so the lane
+/// contents (and therefore which device executes which chunk) are a pure
+/// function of the item count. The retained indices let the caller merge
+/// per-lane results back into original order deterministically. Empty lanes
+/// are kept (the result always has exactly `n` lanes).
+pub fn stripe_evenly<T>(items: Vec<T>, n: usize) -> Vec<Vec<(usize, T)>> {
+    let n = n.max(1);
+    let mut lanes: Vec<Vec<(usize, T)>> = (0..n).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        lanes[i % n].push((i, item));
+    }
+    lanes
+}
+
 /// Fan `shards` out across scoped worker threads and merge the results in
 /// shard-index order. `worker(shard_index, shard)` runs on its own thread;
 /// the merge is deterministic: element `i` of the returned vec is shard `i`'s
@@ -796,6 +813,27 @@ mod tests {
         assert_eq!(chunks[2], vec![7, 8, 9]);
         let flat: Vec<usize> = chunks.into_iter().flatten().collect();
         assert_eq!(flat, items);
+    }
+
+    #[test]
+    fn stripes_are_round_robin_and_index_tagged() {
+        let lanes = stripe_evenly(vec!["a", "b", "c", "d", "e"], 2);
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0], vec![(0, "a"), (2, "c"), (4, "e")]);
+        assert_eq!(lanes[1], vec![(1, "b"), (3, "d")]);
+        // merging by the retained indices reproduces original order exactly
+        let mut merged: Vec<(usize, &str)> = lanes.into_iter().flatten().collect();
+        merged.sort_by_key(|(i, _)| *i);
+        assert_eq!(merged.iter().map(|(_, s)| *s).collect::<Vec<_>>(), ["a", "b", "c", "d", "e"]);
+    }
+
+    #[test]
+    fn stripes_keep_empty_lanes_and_n_one_is_identity() {
+        let lanes = stripe_evenly(vec![10, 20], 4);
+        assert_eq!(lanes.len(), 4, "empty lanes are kept");
+        assert!(lanes[2].is_empty() && lanes[3].is_empty());
+        let one = stripe_evenly(vec![1, 2, 3], 1);
+        assert_eq!(one, vec![vec![(0, 1), (1, 2), (2, 3)]]);
     }
 
     #[test]

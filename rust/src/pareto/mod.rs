@@ -188,7 +188,13 @@ pub fn enumerate_sharded(env: &QuantEnv, cfg: &EnumConfig, n_shards: usize)
     let (assigns, exhaustive) = assignments(cfg, env.net.l);
     let n_shards = n_shards.clamp(1, assigns.len().max(1));
     let chunks = parallel::chunk_evenly(assigns, n_shards);
-    let per_shard = parallel::run_sharded(chunks, |_, chunk| eval_points(env, &chunk))?;
+    let per_shard = parallel::run_sharded(chunks, |i, chunk| {
+        // pin shard i to device i % N so shards spread over the engine pool;
+        // accuracy values are device-independent, so this is placement only
+        // (on a 1-device pool every shard pins to device 0, unchanged)
+        let _pin = env.engine().pin_thread(i);
+        eval_points(env, &chunk)
+    })?;
     Ok((per_shard.into_iter().flatten().collect(), exhaustive))
 }
 

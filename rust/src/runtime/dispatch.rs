@@ -33,7 +33,16 @@
 //!   sheds load until a later execution completes and clears it. The hung
 //!   worker thread itself cannot be cancelled (PJRT has no cancellation
 //!   API); it rejoins the pool if the call ever returns, and a dispatcher
-//!   drop while a task is truly stuck will wait on it.
+//!   drop while a task is truly stuck will wait on it. Under a device pool,
+//!   [`Dispatcher::submit`] additionally trips the hung exe's *device*
+//!   health flag, so the least-loaded placement quarantines the sick device
+//!   while the rest of the pool keeps serving.
+//! * **Least-loaded device placement** — [`pick_device`] is the pool's
+//!   placement policy (least in-flight healthy device, deterministic ties,
+//!   degrade-not-deadlock when every device is sick); `Engine` wires it to
+//!   the live per-device in-flight counters, and speculative producers pin
+//!   their task's thread to the pick (`Engine::pin_least_loaded`) before
+//!   striping work.
 //!
 //! Determinism: the dispatcher only *schedules* executions; the programs it
 //! runs are pure functions of their operands, so a result obtained through
@@ -50,6 +59,32 @@ use anyhow::Result;
 
 use super::engine::{DeviceBuf, Exe, HostLit};
 use super::faults::{FaultError, Health};
+
+/// Least-loaded device placement policy (pure, so the stub tier can pin it
+/// without PJRT): given per-device in-flight depths and health flags, pick
+/// the device new work should land on.
+///
+/// * unhealthy devices are skipped (sick-device quarantine);
+/// * devices at `cap` in-flight are skipped when `cap > 0` (0 = uncapped);
+/// * among the remaining, the least-loaded wins, ties breaking toward the
+///   lowest index (deterministic picks);
+/// * if every device is excluded (all sick and/or saturated), fall back to
+///   the least-loaded device overall — the pool degrades instead of
+///   deadlocking, and a completed execution on a sick device clears its
+///   health flag again.
+///
+/// An empty pool returns device 0 (callers guarantee >= 1 slot).
+pub fn pick_device(loads: &[u64], healthy: &[bool], cap: u64) -> usize {
+    let eligible = |i: usize| {
+        healthy.get(i).copied().unwrap_or(true) && (cap == 0 || loads[i] < cap)
+    };
+    let best = |it: &mut dyn Iterator<Item = usize>| -> Option<usize> {
+        it.min_by_key(|&i| (loads[i], i))
+    };
+    best(&mut (0..loads.len()).filter(|&i| eligible(i)))
+        .or_else(|| best(&mut (0..loads.len())))
+        .unwrap_or(0)
+}
 
 /// A one-shot rendezvous for a dispatched task's result. Obtained from the
 /// `submit` family; `wait` consumes it. Dropping a `Pending` without
@@ -287,7 +322,7 @@ impl Dispatcher {
         T: Send + 'static,
         F: FnOnce() -> Result<T> + Send + 'static,
     {
-        self.enqueue(tag, f, true).expect("blocking submit always succeeds")
+        self.enqueue(tag, f, true, None).expect("blocking submit always succeeds")
     }
 
     /// Non-blocking [`Dispatcher::submit_with`]: `None` when `tag` is at
@@ -298,23 +333,38 @@ impl Dispatcher {
         T: Send + 'static,
         F: FnOnce() -> Result<T> + Send + 'static,
     {
-        self.enqueue(tag, f, false)
+        self.enqueue(tag, f, false, None)
     }
 
     /// Asynchronous `Exe::run_b`: one device execution with owned
     /// device-resident operands (the `Arc`s keep the buffers alive until
     /// the execution completes), tagged by the artifact name for the
-    /// in-flight cap. Blocks while the artifact is at its cap.
+    /// in-flight cap. Blocks while the artifact is at its cap. Under a
+    /// watchdog, an overrun additionally trips the exe's *device* health —
+    /// placement quarantines the wedged device, the pool keeps serving.
     pub fn submit(&self, exe: Arc<Exe>, args: Vec<Arc<DeviceBuf>>) -> Pending<Vec<HostLit>> {
         let tag = exe.name.clone();
-        self.submit_with(&tag, move || {
-            let refs: Vec<&xla::PjRtBuffer> = args.iter().map(|b| b.raw()).collect();
-            let parts = exe.run_b(&refs)?;
-            Ok(parts.into_iter().map(HostLit::new).collect())
-        })
+        let dev_health = exe.device_health();
+        self.enqueue(
+            &tag,
+            move || {
+                let refs: Vec<&xla::PjRtBuffer> = args.iter().map(|b| b.raw()).collect();
+                let parts = exe.run_b(&refs)?;
+                Ok(parts.into_iter().map(HostLit::new).collect())
+            },
+            true,
+            Some(Box::new(move || dev_health.trip())),
+        )
+        .expect("blocking submit always succeeds")
     }
 
-    fn enqueue<T, F>(&self, tag: &str, f: F, block: bool) -> Option<Pending<T>>
+    fn enqueue<T, F>(
+        &self,
+        tag: &str,
+        f: F,
+        block: bool,
+        on_abort: Option<Box<dyn FnOnce() + Send>>,
+    ) -> Option<Pending<T>>
     where
         T: Send + 'static,
         F: FnOnce() -> Result<T> + Send + 'static,
@@ -334,12 +384,17 @@ impl Dispatcher {
             g.active += 1;
             // under a watchdog, the job carries a fail-fast handle: resolve
             // the pending with a typed transient error while the (possibly
-            // hung) body keeps running
+            // hung) body keeps running; `on_abort` lets `submit` also trip
+            // the wedged exe's device health for placement quarantine
             let abort = self.core.watchdog.as_ref().map(|w| {
                 let abort_slot = slot.clone();
                 let abort_tag = tag_owned.clone();
                 let budget = w.budget;
+                let hook = on_abort;
                 Box::new(move || {
+                    if let Some(h) = hook {
+                        h();
+                    }
                     abort_slot.fulfill(Err(FaultError::Transient(format!(
                         "watchdog: `{abort_tag}` exceeded its {budget:?} execution budget"
                     ))
@@ -534,6 +589,32 @@ mod tests {
             assert_eq!(p.wait().unwrap(), i);
         }
         assert!(health.is_healthy());
+    }
+
+    #[test]
+    fn pick_device_prefers_least_loaded_with_deterministic_ties() {
+        let all_ok = [true, true, true, true];
+        assert_eq!(pick_device(&[3, 1, 2, 1], &all_ok, 0), 1, "least loaded, lowest index wins");
+        assert_eq!(pick_device(&[0, 0, 0, 0], &all_ok, 0), 0, "full tie breaks to device 0");
+        assert_eq!(pick_device(&[5], &[true], 0), 0, "single-device pool is always 0");
+    }
+
+    #[test]
+    fn pick_device_quarantines_sick_and_saturated_devices() {
+        // the least-loaded device is sick: skip it
+        assert_eq!(pick_device(&[0, 2, 1], &[false, true, true], 0), 2);
+        // cap excludes saturated devices (cap=0 means uncapped)
+        assert_eq!(pick_device(&[2, 2, 1], &[true, true, true], 2), 2);
+        assert_eq!(pick_device(&[2, 2, 2], &[true, true, true], 3), 0);
+    }
+
+    #[test]
+    fn pick_device_degrades_instead_of_deadlocking() {
+        // every device sick: fall back to the least-loaded overall
+        assert_eq!(pick_device(&[4, 1, 3], &[false, false, false], 0), 1);
+        // every healthy device saturated: same fallback
+        assert_eq!(pick_device(&[2, 2, 1], &[true, true, false], 2), 2);
+        assert_eq!(pick_device(&[], &[], 0), 0, "empty pool defaults to 0");
     }
 
     #[test]

@@ -7,12 +7,36 @@
 //! Every artifact is lowered with `return_tuple=True`, so execution returns a
 //! single tuple literal that [`Exe::run`] decomposes.
 //!
-//! The engine is `Send + Sync`: the compile cache sits behind an `RwLock`,
-//! execution counters are atomics, and one `Engine` is shared across the
-//! sharded drivers in `crate::parallel` (PJRT clients serialize access to
-//! their internal state; concurrent `Execute` calls on a CPU client are part
-//! of the PJRT API contract).
+//! # Device pool
+//!
+//! The engine is a pool of N PJRT devices. On the CPU backend each pool slot
+//! is its own `PjRtClient::cpu()` instance — the Rust-side analogue of
+//! forcing `xla_force_host_platform_device_count=N`, so N > 1 is testable on
+//! any host. Each slot owns its compile cache (an executable and its buffers
+//! are bound to the client that created them, so the cache is effectively
+//! keyed by `(artifact, device)`), an in-flight counter and a health flag;
+//! the fault-injection plan, retry policy, `exec_retries` counter and the
+//! aggregate health flag are **pool-global** — one `$RELEQ_FAULTS` plan
+//! drives every device, so `every=N` triggers count executions across the
+//! whole pool and the `exec_retries == faults_injected` invariant from the
+//! fault-tolerance suite holds at any device count.
+//!
+//! Device 0 is the default: `exe`/`buffer_f32` are exactly the pre-pool
+//! single-client paths, which is what makes `--devices 1` replay the
+//! single-engine behavior byte for byte. Placement helpers
+//! ([`Engine::place_chunk`], [`Engine::least_loaded_device`],
+//! [`Engine::pin_thread`]) let the megabatch evaluator stripe chunks across
+//! devices, `run_replicas`/Pareto shards pin one device per shard thread,
+//! and the dispatcher's speculative work land on the least-loaded healthy
+//! device.
+//!
+//! The engine is `Send + Sync`: caches sit behind `RwLock`s, execution
+//! counters are atomics, and one `Engine` is shared across the sharded
+//! drivers in `crate::parallel` (PJRT clients serialize access to their
+//! internal state; concurrent `Execute` calls on a CPU client are part of
+//! the PJRT API contract).
 
+use std::cell::Cell;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,6 +47,61 @@ use anyhow::{Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::faults::{retry_transient, FaultPlan, Health, RetryPolicy};
+
+/// Environment knob for the pool size (`releq --devices` overrides upward
+/// via [`Engine::ensure_devices`]). The CPU analogue of JAX's
+/// `xla_force_host_platform_device_count`.
+pub const DEVICES_ENV: &str = "RELEQ_DEVICES";
+
+fn devices_from_env() -> usize {
+    std::env::var(DEVICES_ENV)
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+thread_local! {
+    /// Per-thread device pin (see [`Engine::pin_thread`]). `None` = unpinned:
+    /// chunk placement round-robins across the pool.
+    static DEVICE_PIN: Cell<Option<usize>> = Cell::new(None);
+}
+
+/// The thread's currently pinned device, if any.
+pub fn thread_pin() -> Option<usize> {
+    DEVICE_PIN.with(|p| p.get())
+}
+
+/// RAII guard from [`Engine::pin_thread`]: restores the previous pin (usually
+/// `None`) on drop, so dispatcher worker threads and shard pools can borrow a
+/// pin for one task without leaking it into the next.
+pub struct DevicePin {
+    prev: Option<usize>,
+}
+
+impl Drop for DevicePin {
+    fn drop(&mut self) {
+        DEVICE_PIN.with(|p| p.set(self.prev));
+    }
+}
+
+/// Decrement-on-drop in-flight guard: covers the whole execution attempt
+/// (including injected stalls), so a wedged device keeps its depth elevated
+/// and the least-loaded placement routes around it.
+struct InflightGuard<'a>(&'a AtomicU64);
+
+impl<'a> InflightGuard<'a> {
+    fn enter(counter: &'a AtomicU64) -> InflightGuard<'a> {
+        counter.fetch_add(1, Ordering::Relaxed);
+        InflightGuard(counter)
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
 
 /// A compiled artifact plus execution statistics.
 ///
@@ -37,19 +116,27 @@ use super::faults::{retry_transient, FaultPlan, Health, RetryPolicy};
 pub struct Exe {
     pub name: String,
     inner: PjRtLoadedExecutable,
+    /// pool device this executable (and every buffer passed to it) lives on
+    device: usize,
     pub exec_count: AtomicU64,
     /// device-exec component (the `Execute` call itself)
     pub exec_ns: AtomicU64,
     /// literal-download component (`to_literal_sync` + `to_tuple`)
     pub download_ns: AtomicU64,
     /// the engine's fault-injection plan (`None` — the common case — is a
-    /// single branch on the hot path)
+    /// single branch on the hot path). Pool-global: every device's `Exe`s
+    /// hold the SAME `Arc`, so rule counters fire across the whole pool.
     faults: Option<Arc<FaultPlan>>,
     /// transient-failure retry policy shared with the owning engine
     retry: RetryPolicy,
-    /// engine health flag: completed executions clear it
+    /// pool-aggregate health flag: completed executions clear it
     health: Arc<Health>,
-    /// engine-wide retry counter (shared across all `Exe`s)
+    /// this device's health flag (watchdog aborts trip it; completions
+    /// clear it) — a sick device degrades placement, not the whole pool
+    device_health: Arc<Health>,
+    /// this device's in-flight execution depth (shared by the device's exes)
+    inflight: Arc<AtomicU64>,
+    /// pool-global retry counter (shared across all `Exe`s on all devices)
     retries: Arc<AtomicU64>,
 }
 
@@ -86,10 +173,13 @@ impl Exe {
         if self.retry.max_retries == 0 {
             return self.attempt(args);
         }
-        retry_transient(&self.retry, &self.name, Some(&self.retries), || self.attempt(args))
+        retry_transient(&self.retry, &self.name, Some(&*self.retries), || self.attempt(args))
     }
 
     fn attempt<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
+        // the guard spans the fault hook too: an injected stall models a
+        // wedged execution and must keep the device's in-flight depth up
+        let _load = InflightGuard::enter(&self.inflight);
         if let Some(f) = &self.faults {
             f.on_exec(&self.name)?;
         }
@@ -107,21 +197,25 @@ impl Exe {
         let parts = lit.to_tuple()?;
         self.record(t0, t1);
         self.health.ok();
+        self.device_health.ok();
         Ok(parts)
     }
 
     /// Execute with device-resident buffers (perf hot path: persistent
     /// operands like the training set or agent parameters are uploaded once
     /// and reused across thousands of executions). Same retry semantics as
-    /// [`Exe::run`].
+    /// [`Exe::run`]. Buffers must live on this exe's device (they do by
+    /// construction: every `buffer_*_on` caller uses the device it compiled
+    /// for).
     pub fn run_b<B: std::borrow::Borrow<PjRtBuffer>>(&self, args: &[B]) -> Result<Vec<Literal>> {
         if self.retry.max_retries == 0 {
             return self.attempt_b(args);
         }
-        retry_transient(&self.retry, &self.name, Some(&self.retries), || self.attempt_b(args))
+        retry_transient(&self.retry, &self.name, Some(&*self.retries), || self.attempt_b(args))
     }
 
     fn attempt_b<B: std::borrow::Borrow<PjRtBuffer>>(&self, args: &[B]) -> Result<Vec<Literal>> {
+        let _load = InflightGuard::enter(&self.inflight);
         if let Some(f) = &self.faults {
             f.on_exec(&self.name)?;
         }
@@ -139,11 +233,23 @@ impl Exe {
         let parts = lit.to_tuple()?;
         self.record(t0, t1);
         self.health.ok();
+        self.device_health.ok();
         Ok(parts)
     }
 
     pub fn exec_count(&self) -> u64 {
         self.exec_count.load(Ordering::Relaxed)
+    }
+
+    /// Pool device index this executable is compiled for.
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    /// The owning device's health flag (the dispatcher's watchdog trips it
+    /// on a hung dispatched execution; any completed execution clears it).
+    pub fn device_health(&self) -> Arc<Health> {
+        self.device_health.clone()
     }
 
     /// Mean device-exec time per execution (the `Execute` call only).
@@ -167,11 +273,16 @@ impl Exe {
     }
 }
 
-/// One row of [`Engine::exec_stats`]: per-artifact execution count and the
-/// split per-exec means (device-exec vs result-download).
+/// One row of [`Engine::exec_stats`]: per-`(artifact, device)` execution
+/// count and the split per-exec means (device-exec vs result-download).
+/// Summing `execs` over rows gives the pool total (each execution is
+/// counted on exactly one device) — the accounting
+/// `rust/tests/serve_daemon.rs` and `device_pool_parity.rs` pin.
 #[derive(Debug, Clone)]
 pub struct ExeStat {
     pub name: String,
+    /// pool device the executions ran on
+    pub device: usize,
     pub execs: u64,
     pub mean_exec_ms: f64,
     pub mean_download_ms: f64,
@@ -223,15 +334,20 @@ impl Stage {
     }
 
     /// Upload the staged contents as a device buffer of logical shape
-    /// `dims` (must cover the staged length exactly).
+    /// `dims` (must cover the staged length exactly). Device 0.
     pub fn upload(&self, engine: &Engine, dims: &[usize]) -> Result<DeviceBuf> {
+        self.upload_on(engine, dims, 0)
+    }
+
+    /// Upload the staged contents to pool device `dev`.
+    pub fn upload_on(&self, engine: &Engine, dims: &[usize], dev: usize) -> Result<DeviceBuf> {
         let n: usize = dims.iter().product();
         anyhow::ensure!(
             n == self.buf.len(),
             "staged {} f32s but shape {dims:?} wants {n}",
             self.buf.len()
         );
-        engine.buffer_f32(&self.buf, dims)
+        engine.buffer_f32_on(&self.buf, dims, dev)
     }
 }
 
@@ -257,53 +373,105 @@ impl HostLit {
     }
 }
 
-/// Engine: one PJRT CPU client + a compile-once executable cache keyed by
-/// artifact name (`lenet_train`, `agent_lstm_act`, ...).
-///
-/// `Send + Sync`: share it as `Arc<Engine>` across shard threads. Two threads
-/// racing on the same uncached artifact may both compile it; the first insert
-/// wins and both receive the same cached `Arc<Exe>` (see the compile-cache
-/// race test in `rust/tests/parallel_concurrency.rs`).
-pub struct Engine {
-    pub client: PjRtClient,
-    pub dir: PathBuf,
+/// One pool slot: a PJRT CPU client plus everything bound to it — the
+/// compile-once executable cache (client-bound, so the pool's caches are
+/// jointly keyed by `(artifact, device)`), the device's in-flight counter,
+/// and its health flag.
+struct DeviceSlot {
+    client: PjRtClient,
     cache: RwLock<HashMap<String, Arc<Exe>>>,
-    /// fault-injection plan handed to every compiled `Exe` (`None` = no
-    /// fault checks on the hot path)
-    faults: Option<Arc<FaultPlan>>,
-    /// transient-failure retry policy handed to every compiled `Exe`
-    retry: RetryPolicy,
-    /// healthy/unhealthy flag shared with the dispatch watchdog and serve
     health: Arc<Health>,
-    /// total transient-failure retries across all artifacts
-    exec_retries: Arc<AtomicU64>,
+    inflight: Arc<AtomicU64>,
 }
 
 // SAFETY: `PjRtClient` (CPU) is thread-safe per the PJRT API contract —
 // compilation and buffer creation take the client's internal lock. The cache
-// is behind an `RwLock`.
+// is behind an `RwLock`; the rest is atomics. Same vendored-binding
+// requirement as `Exe` above.
+unsafe impl Send for DeviceSlot {}
+unsafe impl Sync for DeviceSlot {}
+
+impl DeviceSlot {
+    fn new() -> Result<DeviceSlot> {
+        Ok(DeviceSlot {
+            client: PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: RwLock::new(HashMap::new()),
+            health: Arc::new(Health::new()),
+            inflight: Arc::new(AtomicU64::new(0)),
+        })
+    }
+}
+
+/// Engine: a pool of PJRT CPU devices with per-device compile caches keyed
+/// by artifact name (`lenet_train`, `agent_lstm_act`, ...). See the module
+/// docs for the pool/placement model; device 0 is the default and replays
+/// the pre-pool single-client engine exactly.
+///
+/// `Send + Sync`: share it as `Arc<Engine>` across shard threads. Two threads
+/// racing on the same uncached `(artifact, device)` may both compile it; the
+/// first insert wins and both receive the same cached `Arc<Exe>` (see the
+/// compile-cache race test in `rust/tests/parallel_concurrency.rs`).
+pub struct Engine {
+    /// pool slots; grows monotonically via [`Engine::ensure_devices`]
+    devices: RwLock<Vec<Arc<DeviceSlot>>>,
+    pub dir: PathBuf,
+    /// fault-injection plan handed to every compiled `Exe` on every device
+    /// (`None` = no fault checks on the hot path). POOL-GLOBAL on purpose:
+    /// one plan's rule counters observe the execution stream of the whole
+    /// pool, so `every=N`/`nth=N` triggers and the `injected()` total behave
+    /// identically at any device count.
+    faults: Option<Arc<FaultPlan>>,
+    /// transient-failure retry policy handed to every compiled `Exe`
+    retry: RetryPolicy,
+    /// pool-aggregate healthy/unhealthy flag shared with the dispatch
+    /// watchdog and serve
+    health: Arc<Health>,
+    /// total transient-failure retries across all artifacts and devices
+    exec_retries: Arc<AtomicU64>,
+}
+
+// SAFETY: all fields are locks, atomics, `Arc`s and plain data; `DeviceSlot`
+// carries its own justification above.
 unsafe impl Send for Engine {}
 unsafe impl Sync for Engine {}
 
 impl Engine {
-    /// Standard constructor: fault plan from `$RELEQ_FAULTS` (usually none)
-    /// and retry policy from `$RELEQ_EXEC_RETRIES`/`$RELEQ_RETRY_BASE_MS`.
+    /// Standard constructor: fault plan from `$RELEQ_FAULTS` (usually none),
+    /// retry policy from `$RELEQ_EXEC_RETRIES`/`$RELEQ_RETRY_BASE_MS`, pool
+    /// size from `$RELEQ_DEVICES` (default 1; `--devices` grows it later
+    /// through [`Engine::ensure_devices`]).
     pub fn new(artifacts_dir: PathBuf) -> Result<Engine> {
         Engine::with_faults(artifacts_dir, FaultPlan::from_env()?, RetryPolicy::from_env()?)
     }
 
+    /// Constructor with an explicit pool size (parity tests and drivers that
+    /// resolve `--devices` before bring-up); fault plan/retry still come
+    /// from the environment like [`Engine::new`].
+    pub fn with_devices(artifacts_dir: PathBuf, devices: usize) -> Result<Engine> {
+        let e =
+            Engine::with_faults(artifacts_dir, FaultPlan::from_env()?, RetryPolicy::from_env()?)?;
+        e.ensure_devices(devices)?;
+        Ok(e)
+    }
+
     /// Constructor with an explicit fault plan and retry policy (chaos
-    /// tests and the `--faults` CLI seam).
+    /// tests and the `--faults` CLI seam). The ONE plan passed here is
+    /// shared by every device the pool ever grows to — per-device plans
+    /// would silently split `every=N` rule counters and break the
+    /// `exec_retries == faults_injected` invariant.
     pub fn with_faults(
         artifacts_dir: PathBuf,
         faults: Option<Arc<FaultPlan>>,
         retry: RetryPolicy,
     ) -> Result<Engine> {
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let n = devices_from_env();
+        let mut slots = Vec::with_capacity(n);
+        for _ in 0..n {
+            slots.push(Arc::new(DeviceSlot::new()?));
+        }
         Ok(Engine {
-            client,
+            devices: RwLock::new(slots),
             dir: artifacts_dir,
-            cache: RwLock::new(HashMap::new()),
             faults: faults.filter(|f| !f.is_empty()),
             retry,
             health: Arc::new(Health::new()),
@@ -311,29 +479,147 @@ impl Engine {
         })
     }
 
-    /// The engine's healthy/unhealthy flag (shared with watchdogs + serve).
+    /// Grow the pool to at least `n` devices (never shrinks — compiled
+    /// executables and resident buffers on existing devices stay valid).
+    /// `--devices`/job-config `devices` land here after config resolution.
+    pub fn ensure_devices(&self, n: usize) -> Result<()> {
+        anyhow::ensure!(n >= 1, "device pool needs at least 1 device");
+        let mut slots = self.devices.write().unwrap();
+        while slots.len() < n {
+            slots.push(Arc::new(DeviceSlot::new()?));
+        }
+        Ok(())
+    }
+
+    /// Current pool size.
+    pub fn n_devices(&self) -> usize {
+        self.devices.read().unwrap().len()
+    }
+
+    fn slot(&self, dev: usize) -> Result<Arc<DeviceSlot>> {
+        let slots = self.devices.read().unwrap();
+        slots
+            .get(dev)
+            .cloned()
+            .with_context(|| format!("device {dev} not in pool (size {})", slots.len()))
+    }
+
+    /// The pool-aggregate healthy/unhealthy flag (shared with watchdogs +
+    /// serve).
     pub fn health(&self) -> Arc<Health> {
         self.health.clone()
     }
 
-    /// Transient-failure retries spent across all artifacts.
+    /// Device `dev`'s own health flag (sick-device quarantine: the
+    /// least-loaded placement skips unhealthy devices).
+    pub fn device_health(&self, dev: usize) -> Result<Arc<Health>> {
+        Ok(self.slot(dev)?.health.clone())
+    }
+
+    /// Per-device in-flight execution depth snapshot.
+    pub fn device_loads(&self) -> Vec<u64> {
+        self.devices
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| s.inflight.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Per-device health snapshot (same order as [`Engine::device_loads`]).
+    pub fn devices_healthy(&self) -> Vec<bool> {
+        self.devices
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| s.health.is_healthy())
+            .collect()
+    }
+
+    /// The device a deterministic work chunk `idx` belongs on: the calling
+    /// thread's pin when one is set (replica / Pareto shards), else
+    /// round-robin striping — at `n_devices == 1` this is always 0, which
+    /// is what keeps `--devices 1` byte-for-byte identical.
+    pub fn place_chunk(&self, idx: usize) -> usize {
+        let n = self.n_devices().max(1);
+        match thread_pin() {
+            Some(d) if d < n => d,
+            _ => idx % n,
+        }
+    }
+
+    /// Least-loaded healthy device (ties break toward the lowest index;
+    /// when every device is sick, fall back to the least-loaded overall so
+    /// the pool degrades instead of deadlocking). See
+    /// [`super::dispatch::pick_device`] for the policy itself.
+    pub fn least_loaded_device(&self) -> usize {
+        let (loads, healthy) = {
+            let slots = self.devices.read().unwrap();
+            (
+                slots
+                    .iter()
+                    .map(|s| s.inflight.load(Ordering::Relaxed))
+                    .collect::<Vec<u64>>(),
+                slots.iter().map(|s| s.health.is_healthy()).collect::<Vec<bool>>(),
+            )
+        };
+        super::dispatch::pick_device(&loads, &healthy, 0)
+    }
+
+    /// Pin the calling thread to device `dev % n_devices` until the returned
+    /// guard drops. Pinned threads route all their chunk placement (and any
+    /// device-defaulting compiles/uploads done through `current_device`) to
+    /// that device — `run_replicas` pins shard `i` to device `i % N`.
+    pub fn pin_thread(&self, dev: usize) -> DevicePin {
+        let n = self.n_devices().max(1);
+        let prev = DEVICE_PIN.with(|p| p.replace(Some(dev % n)));
+        DevicePin { prev }
+    }
+
+    /// Pin the calling thread to the least-loaded healthy device (the
+    /// dispatcher's speculative-prefetch placement).
+    pub fn pin_least_loaded(&self) -> DevicePin {
+        let d = self.least_loaded_device();
+        self.pin_thread(d)
+    }
+
+    /// The device new compiles/uploads should default to on this thread:
+    /// the thread's pin, else device 0.
+    pub fn current_device(&self) -> usize {
+        let n = self.n_devices().max(1);
+        thread_pin().filter(|&d| d < n).unwrap_or(0)
+    }
+
+    /// Transient-failure retries spent across all artifacts and devices
+    /// (pool-global counter).
     pub fn exec_retries(&self) -> u64 {
         self.exec_retries.load(Ordering::Relaxed)
     }
 
-    /// Faults injected by the active plan (0 without a plan).
+    /// Faults injected by the active plan across the whole pool (0 without
+    /// a plan).
     pub fn faults_injected(&self) -> u64 {
         self.faults.as_ref().map_or(0, |f| f.injected())
     }
 
-    /// Fetch (compiling on first use) the executable for `artifacts/<name>.hlo.txt`.
+    /// Fetch (compiling on first use) the executable for
+    /// `artifacts/<name>.hlo.txt` on device 0 — the pre-pool path, byte
+    /// compatible with the single-engine behavior.
     pub fn exe(&self, name: &str) -> Result<Arc<Exe>> {
-        if let Some(e) = self.cache.read().unwrap().get(name) {
+        self.exe_on(name, 0)
+    }
+
+    /// Fetch (compiling on first use) the executable for
+    /// `artifacts/<name>.hlo.txt` on pool device `dev`. The compile cache is
+    /// per-slot, so each artifact compiles at most once per device.
+    pub fn exe_on(&self, name: &str, dev: usize) -> Result<Arc<Exe>> {
+        let slot = self.slot(dev)?;
+        if let Some(e) = slot.cache.read().unwrap().get(name) {
             return Ok(e.clone());
         }
         // Compile outside the lock: compilation can take seconds and must not
         // serialize unrelated shards. A concurrent thread may compile the
-        // same artifact; `entry().or_insert_with` below keeps exactly one.
+        // same artifact; `entry().or_insert` below keeps exactly one.
         let path = self.dir.join(format!("{name}.hlo.txt"));
         let path_str = path
             .to_str()
@@ -342,22 +628,25 @@ impl Engine {
         let proto = HloModuleProto::from_text_file(path_str)
             .with_context(|| format!("loading {path:?} — run `make artifacts`"))?;
         let comp = XlaComputation::from_proto(&proto);
-        let exe = self
+        let exe = slot
             .client
             .compile(&comp)
-            .with_context(|| format!("compiling `{name}`"))?;
+            .with_context(|| format!("compiling `{name}` for device {dev}"))?;
         let e = Arc::new(Exe {
             name: name.to_string(),
             inner: exe,
+            device: dev,
             exec_count: AtomicU64::new(0),
             exec_ns: AtomicU64::new(0),
             download_ns: AtomicU64::new(0),
             faults: self.faults.clone(),
             retry: self.retry.clone(),
             health: self.health.clone(),
+            device_health: slot.health.clone(),
+            inflight: slot.inflight.clone(),
             retries: self.exec_retries.clone(),
         });
-        let e = self
+        let e = slot
             .cache
             .write()
             .unwrap()
@@ -366,44 +655,97 @@ impl Engine {
             .clone();
         let dt = t0.elapsed().as_secs_f64();
         if dt > 0.5 {
-            eprintln!("[engine] compiled `{name}` in {dt:.1}s");
+            eprintln!("[engine] compiled `{name}` for device {dev} in {dt:.1}s");
         }
         Ok(e)
     }
 
-    /// Per-executable timing summary (perf instrumentation), name-sorted.
+    /// Per-executable timing summary (perf instrumentation): one row per
+    /// `(artifact, device)` that has been compiled, sorted by name then
+    /// device. Summing `execs` over rows is the pool-total execution count.
     pub fn exec_stats(&self) -> Vec<ExeStat> {
-        let mut v: Vec<ExeStat> = self
-            .cache
-            .read()
-            .unwrap()
-            .values()
-            .map(|e| ExeStat {
+        let slots: Vec<Arc<DeviceSlot>> = self.devices.read().unwrap().clone();
+        let mut v: Vec<ExeStat> = Vec::new();
+        for (dev, slot) in slots.iter().enumerate() {
+            v.extend(slot.cache.read().unwrap().values().map(|e| ExeStat {
                 name: e.name.clone(),
+                device: dev,
                 execs: e.exec_count(),
                 mean_exec_ms: e.mean_exec_ms(),
                 mean_download_ms: e.mean_download_ms(),
+            }));
+        }
+        v.sort_by(|a, b| a.name.cmp(&b.name).then(a.device.cmp(&b.device)));
+        v
+    }
+
+    /// Per-artifact stats aggregated across devices (execs summed, means
+    /// exec-weighted): the rows whose `execs` sum is the same total a
+    /// single-device engine would report — `/v1/stats` keeps its `engine`
+    /// rows on this aggregate so `total_execs` accounting is unchanged by
+    /// the pool.
+    pub fn exec_stats_agg(&self) -> Vec<ExeStat> {
+        let slots: Vec<Arc<DeviceSlot>> = self.devices.read().unwrap().clone();
+        let mut agg: HashMap<String, (u64, u64, u64)> = HashMap::new();
+        for slot in &slots {
+            for e in slot.cache.read().unwrap().values() {
+                let a = agg.entry(e.name.clone()).or_insert((0, 0, 0));
+                a.0 += e.exec_count.load(Ordering::Relaxed);
+                a.1 += e.exec_ns.load(Ordering::Relaxed);
+                a.2 += e.download_ns.load(Ordering::Relaxed);
+            }
+        }
+        let mut v: Vec<ExeStat> = agg
+            .into_iter()
+            .map(|(name, (execs, exec_ns, download_ns))| ExeStat {
+                name,
+                device: 0,
+                execs,
+                mean_exec_ms: if execs == 0 { 0.0 } else { exec_ns as f64 / execs as f64 / 1e6 },
+                mean_download_ms: if execs == 0 {
+                    0.0
+                } else {
+                    download_ns as f64 / execs as f64 / 1e6
+                },
             })
             .collect();
         v.sort_by(|a, b| a.name.cmp(&b.name));
         v
     }
 
-    /// Number of compiled artifacts currently cached.
+    /// Number of compiled `(artifact, device)` entries currently cached
+    /// across the pool.
     pub fn cached_exes(&self) -> usize {
-        self.cache.read().unwrap().len()
+        self.devices
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| s.cache.read().unwrap().len())
+            .sum()
     }
 }
 
 impl Engine {
-    /// Upload an f32 tensor to the device (persistent operand).
+    /// Upload an f32 tensor to device 0 (persistent operand).
     pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuf> {
-        Ok(DeviceBuf(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?))
+        self.buffer_f32_on(data, dims, 0)
     }
 
-    /// Upload an f32 scalar to the device.
+    /// Upload an f32 scalar to device 0.
     pub fn buffer_scalar(&self, x: f32) -> Result<DeviceBuf> {
         self.buffer_f32(&[x], &[])
+    }
+
+    /// Upload an f32 tensor to pool device `dev` (per-device residency:
+    /// callers replicate persistent operands on first use per device).
+    pub fn buffer_f32_on(&self, data: &[f32], dims: &[usize], dev: usize) -> Result<DeviceBuf> {
+        let slot = self.slot(dev)?;
+        Ok(DeviceBuf(slot.client.buffer_from_host_buffer::<f32>(data, dims, None)?))
+    }
+
+    /// Upload an f32 scalar to pool device `dev`.
+    pub fn buffer_scalar_on(&self, x: f32, dev: usize) -> Result<DeviceBuf> {
+        self.buffer_f32_on(&[x], &[], dev)
     }
 }
 
@@ -460,5 +802,22 @@ mod tests {
             b.capacity()
         };
         assert!(cap >= 64, "capacity must survive restaging");
+    }
+
+    /// The pin guard is purely thread-local bookkeeping (no PJRT needed):
+    /// nesting restores the outer pin, dropping restores None.
+    #[test]
+    fn device_pin_nests_and_restores() {
+        assert_eq!(thread_pin(), None);
+        {
+            let _outer = DevicePin { prev: DEVICE_PIN.with(|p| p.replace(Some(1))) };
+            assert_eq!(thread_pin(), Some(1));
+            {
+                let _inner = DevicePin { prev: DEVICE_PIN.with(|p| p.replace(Some(0))) };
+                assert_eq!(thread_pin(), Some(0));
+            }
+            assert_eq!(thread_pin(), Some(1), "inner guard must restore the outer pin");
+        }
+        assert_eq!(thread_pin(), None, "outer guard must restore unpinned");
     }
 }

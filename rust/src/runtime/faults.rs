@@ -169,6 +169,13 @@ fn pat_matches(pat: &str, name: &str) -> bool {
 /// every execution of a named artifact. Empty plans never exist — the
 /// engine holds `Option<Arc<FaultPlan>>` and the no-plan hot path is a
 /// single `None` check.
+///
+/// Pool scope: the engine hands ONE `Arc<FaultPlan>` to every `Exe` on
+/// every device, so each rule's execution counter observes the pool-wide
+/// execution stream — `every=N`/`nth=N` triggers and [`FaultPlan::injected`]
+/// totals are identical at any device count, which is what keeps the
+/// chaos-tier `exec_retries == faults_injected` invariant device-agnostic.
+/// A per-device plan clone would silently split the counters; don't.
 pub struct FaultPlan {
     rules: Vec<Rule>,
 }

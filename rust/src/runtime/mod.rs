@@ -8,9 +8,10 @@ pub mod engine;
 pub mod faults;
 pub mod manifest;
 
-pub use dispatch::{Dispatcher, Pending};
+pub use dispatch::{pick_device, Dispatcher, Pending};
 pub use engine::{
-    lit_f32, lit_scalar, to_f32, to_vec_f32, DeviceBuf, Engine, Exe, ExeStat, HostLit, Stage,
+    lit_f32, lit_scalar, thread_pin, to_f32, to_vec_f32, DeviceBuf, DevicePin, Engine, Exe,
+    ExeStat, HostLit, Stage, DEVICES_ENV,
 };
 pub use faults::{classify, retry_transient, FaultClass, FaultError, FaultPlan, Health, RetryPolicy};
 pub use manifest::{AgentMeta, LayerMeta, Manifest, NetworkMeta};

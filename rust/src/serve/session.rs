@@ -376,6 +376,11 @@ impl SessionRunner {
                  -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
         let spec = &job.spec;
         let net = self.manifest.network(&spec.net)?;
+        // grow the shared engine's device pool to this job's request before
+        // any session residency is built (grow-only and cheap when already
+        // big enough; like memo_cap/eval_batch, `devices` is outside the env
+        // fingerprint — a job never shrinks the pool under a concurrent job)
+        self.engine.ensure_devices(spec.cfg.devices)?;
         let env = self.sessions.get_or_create(key.clone(), || {
             let env = QuantEnv::new(
                 self.engine.clone(),
@@ -509,19 +514,36 @@ impl JobRunner for SessionRunner {
     }
 
     fn stats(&self) -> Json {
+        let loads = self.engine.device_loads();
+        let healthy = self.engine.devices_healthy();
         Json::obj(vec![
             ("pretrains", Json::Num(self.sessions.pretrains() as f64)),
             ("quarantines", Json::Num(self.sessions.quarantines() as f64)),
             ("poisoned_sessions", Json::Num(self.sessions.poisoned_count() as f64)),
+            // pool-global counters: one fault plan / retry ledger shared by
+            // every per-device client, so `exec_retries == faults_injected`
+            // holds at any pool size (see `runtime::faults`)
             ("exec_retries", Json::Num(self.engine.exec_retries() as f64)),
             ("faults_injected", Json::Num(self.engine.faults_injected() as f64)),
             ("engine_healthy", Json::Bool(self.engine.health().is_healthy())),
+            ("devices", Json::Num(self.engine.n_devices() as f64)),
+            (
+                "device_inflight",
+                Json::Arr(loads.iter().map(|&l| Json::Num(l as f64)).collect()),
+            ),
+            (
+                "device_healthy",
+                Json::Arr(healthy.iter().map(|&h| Json::Bool(h)).collect()),
+            ),
             ("sessions", self.sessions.stats_json()),
+            // aggregate per-artifact rows: execs summed over devices, means
+            // exec-weighted — so `total_execs`-style consumers keep summing
+            // this array unchanged at any device count
             (
                 "engine",
                 Json::Arr(
                     self.engine
-                        .exec_stats()
+                        .exec_stats_agg()
                         .into_iter()
                         .map(|s| {
                             Json::obj(vec![
@@ -529,6 +551,29 @@ impl JobRunner for SessionRunner {
                                 ("execs", Json::Num(s.execs as f64)),
                                 ("mean_exec_ms", Json::Num(s.mean_exec_ms)),
                                 ("mean_download_ms", Json::Num(s.mean_download_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            // per-(artifact, device) split; `in_flight` is the row's
+            // device-level in-flight depth at snapshot time (placement
+            // signal, not a per-artifact queue)
+            (
+                "engine_devices",
+                Json::Arr(
+                    self.engine
+                        .exec_stats()
+                        .into_iter()
+                        .map(|s| {
+                            let inflight = loads.get(s.device).copied().unwrap_or(0);
+                            Json::obj(vec![
+                                ("artifact", Json::Str(s.name)),
+                                ("device", Json::Num(s.device as f64)),
+                                ("execs", Json::Num(s.execs as f64)),
+                                ("mean_exec_ms", Json::Num(s.mean_exec_ms)),
+                                ("mean_download_ms", Json::Num(s.mean_download_ms)),
+                                ("in_flight", Json::Num(inflight as f64)),
                             ])
                         })
                         .collect(),
