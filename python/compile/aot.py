@@ -29,6 +29,7 @@ Usage: ``python -m compile.aot --out-dir ../artifacts [--only lenet,agent]``
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import os
 import sys
@@ -52,6 +53,12 @@ EPISODES_PER_UPDATE = 8  # B: whole episodes per PPO minibatch
 # networks absorb; the deep nets skip the fused family entirely.
 EVAL_BATCH_K = 8
 
+# manifest.json format: schema 1 adds per-network `version` (monotonic,
+# bumped when any artifact digest changes) and `sha256` (per-file digests,
+# verified by the Rust loader and the serve registry). Versionless
+# manifests load with digest checks skipped (legacy fallback).
+SCHEMA_VERSION = 1
+
 
 def f32(*shape):
     return jax.ShapeDtypeStruct(shape, jnp.float32)
@@ -68,7 +75,27 @@ FUSED_K = {
 }
 
 
-def lower_network(name: str, out_dir: str, manifest: dict) -> None:
+def artifact_files(name: str, fused_k: int) -> list:
+    """The HLO artifacts a network emits (mirrors rust registry::expected_files)."""
+    files = [f"{name}_init.hlo.txt", f"{name}_train.hlo.txt", f"{name}_eval.hlo.txt"]
+    if fused_k > 0:
+        files.append(f"{name}_retrain_eval.hlo.txt")
+        files.append(f"{name}_retrain_eval_batch.hlo.txt")
+    return files
+
+
+def _digests(name: str, out_dir: str, fused_k: int) -> dict:
+    out = {}
+    for fname in artifact_files(name, fused_k):
+        h = hashlib.sha256()
+        with open(os.path.join(out_dir, fname), "rb") as f:
+            h.update(f.read())
+        out[fname] = h.hexdigest()
+    return out
+
+
+def lower_network(name: str, out_dir: str, manifest: dict,
+                  old_networks: dict) -> None:
     apply_fn, init_fn, builder = models.build(name)
     init, train_step, evaluate = train.make_fns(apply_fn, init_fn)
     P = builder.param_count
@@ -104,9 +131,21 @@ def lower_network(name: str, out_dir: str, manifest: dict) -> None:
             os.path.join(out_dir, f"{name}_retrain_eval_batch.hlo.txt"))
     dt = time.time() - t0
 
+    digests = _digests(name, out_dir, fused_k)
+    old = old_networks.get(name, {})
+    old_version = int(old.get("version", 1))
+    if not old.get("sha256"):
+        version = 1  # first stamped emit (or legacy predecessor)
+    elif old["sha256"] == digests:
+        version = old_version  # bit-identical re-emit keeps its version
+    else:
+        version = old_version + 1  # the registry enforces monotonic upgrades
+
     manifest["networks"][name] = {
         "l": L,
         "p": P,
+        "version": version,
+        "sha256": digests,
         "fused_k": fused_k,
         # lanes baked into <net>_retrain_eval_batch (0 = no batch artifact,
         # same gate as the fused family; rust falls back to 0 when the key
@@ -193,6 +232,7 @@ def main() -> None:
 
     manifest_path = os.path.join(args.out_dir, "manifest.json")
     manifest = {
+        "schema_version": SCHEMA_VERSION,
         "fp_bits": 9.0,
         "bits_max": 8,
         "state_dim": agent_mod.STATE_DIM,
@@ -206,18 +246,22 @@ def main() -> None:
         "networks": {},
         "agent": {},
     }
-    if only and os.path.exists(manifest_path):
-        # incremental: keep previously lowered entries
+    old_networks = {}
+    if os.path.exists(manifest_path):
         with open(manifest_path) as f:
             old = json.load(f)
-        manifest["networks"].update(old.get("networks", {}))
-        manifest["agent"].update(old.get("agent", {}))
+        # prior entries feed version-bump detection on every run...
+        old_networks = old.get("networks", {})
+        if only:
+            # ...and survive verbatim on incremental runs
+            manifest["networks"].update(old_networks)
+            manifest["agent"].update(old.get("agent", {}))
 
     t0 = time.time()
     for name in models.REGISTRY:
         if only and name not in only:
             continue
-        lower_network(name, args.out_dir, manifest)
+        lower_network(name, args.out_dir, manifest, old_networks)
 
     lengths = [net["l"] for net in manifest["networks"].values()]
     if not only or "agent" in only:

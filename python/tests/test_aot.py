@@ -2,6 +2,7 @@
 integrity, and executability of the lowered modules on the CPU PJRT client
 (the exact compile path the Rust runtime uses)."""
 
+import hashlib
 import json
 import os
 
@@ -207,3 +208,24 @@ def test_artifact_files_exist(manifest):
             assert os.path.exists(p), p
     for p in ("agent_lstm_act", "agent_fc_act", "agent_lstm_init", "agent_fc_init"):
         assert os.path.exists(os.path.join(adir, f"{p}.hlo.txt"))
+
+
+def test_manifest_sha256_matches_files(manifest):
+    """Schema-1 manifests must carry per-artifact sha256 digests that match
+    the emitted files byte-for-byte — the serve registry and the Rust
+    loader verify installs against exactly these values."""
+    if "schema_version" not in manifest:
+        pytest.skip("legacy manifest (pre-schema); digests not stamped")
+    assert manifest["schema_version"] >= 1
+    adir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    from compile.aot import artifact_files
+
+    for name, meta in manifest["networks"].items():
+        assert meta.get("version", 0) >= 1, name
+        digests = meta.get("sha256", {})
+        expected = artifact_files(name, meta["fused_k"])
+        assert set(digests) == set(expected), name
+        for fname, want in digests.items():
+            with open(os.path.join(adir, fname), "rb") as f:
+                got = hashlib.sha256(f.read()).hexdigest()
+            assert got == want, f"{fname}: digest mismatch"

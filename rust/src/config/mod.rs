@@ -269,6 +269,28 @@ pub fn resolve(net: &str, args: &Args) -> Result<SearchConfig> {
     Ok(cfg)
 }
 
+// ---- network names ----------------------------------------------------------
+
+/// Validate a client-supplied network name — the one gate shared by job JSON
+/// (`POST /v1/jobs`) and registry manifests (`POST /v1/networks`). Names
+/// become path components (registry source/install dirs) and artifact-name
+/// prefixes, so the charset is a strict identifier alphabet: path separators,
+/// `.` (and with it `..`), and `@` (reserved for the registry's
+/// digest-qualified names) are all structurally impossible.
+pub fn validate_net_name(name: &str) -> Result<()> {
+    anyhow::ensure!(!name.is_empty(), "network name must be non-empty");
+    anyhow::ensure!(
+        name.len() <= 64,
+        "network name too long ({} chars, max 64)",
+        name.len()
+    );
+    anyhow::ensure!(
+        name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-'),
+        "network name `{name}` may only contain [A-Za-z0-9_-]"
+    );
+    Ok(())
+}
+
 // ---- bitwidth lists ---------------------------------------------------------
 
 /// Validate a bitwidth list — the one gate shared by CLI `--bits`, archive
@@ -341,6 +363,7 @@ pub fn job_from_json(j: &Json) -> Result<JobSpec> {
         .and_then(Json::as_str)
         .context("job needs a string `net` field")?
         .to_string();
+    validate_net_name(&net)?;
     let mut cfg = preset(&net);
     if let Some(c) = j.get("config") {
         let obj = c.as_obj().context("job `config` must be an object")?;
@@ -384,6 +407,10 @@ pub struct ServeConfig {
     /// breaker opens and submissions shed with 503 until a job completes
     /// (`--breaker-fails`; 0 disables the breaker)
     pub breaker_fails: u32,
+    /// content-addressed install cache for `POST /v1/networks`
+    /// (`--registry-dir`; absent = registration disabled, resolution still
+    /// serves the startup manifest)
+    pub registry_dir: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -398,6 +425,7 @@ impl Default for ServeConfig {
             job_retries: 2,
             quarantine_k: 3,
             breaker_fails: 8,
+            registry_dir: None,
         }
     }
 }
@@ -432,6 +460,9 @@ pub fn serve_config(args: &Args) -> Result<ServeConfig> {
     }
     if let Some(v) = flag_num(args, "breaker-fails")? {
         c.breaker_fails = v;
+    }
+    if let Some(v) = args.opt_str("registry-dir") {
+        c.registry_dir = Some(PathBuf::from(v));
     }
     Ok(c)
 }
@@ -634,6 +665,24 @@ mod tests {
     }
 
     #[test]
+    fn net_name_validation() {
+        for good in ["lenet", "unknown-net", "mobilenet_v1", "Net3", &"a".repeat(64)] {
+            assert!(validate_net_name(good).is_ok(), "{good}");
+        }
+        for bad in ["", "../lenet", "a/b", "a\\b", "a.b", "net@v2", "a b", &"a".repeat(65)] {
+            assert!(validate_net_name(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn job_from_json_rejects_traversal_names() {
+        for bad in ["../../etc/passwd", "a/b", "", "a.b"] {
+            let j = Json::obj(vec![("net", Json::Str(bad.to_string()))]);
+            assert!(job_from_json(&j).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
     fn serve_config_flags_resolve() {
         let c = serve_config(&args("serve")).unwrap();
         assert_eq!(c.addr, "127.0.0.1:7463");
@@ -641,9 +690,10 @@ mod tests {
         assert_eq!(c.job_retries, 2);
         assert_eq!(c.quarantine_k, 3);
         assert_eq!(c.breaker_fails, 8);
+        assert_eq!(c.registry_dir, None);
         let c = serve_config(&args(
             "serve --addr 127.0.0.1:0 --workers 4 --queue-cap 2 --archive /tmp/a.json \
-             --job-retries 0 --quarantine-k 1 --breaker-fails 3",
+             --job-retries 0 --quarantine-k 1 --breaker-fails 3 --registry-dir /tmp/reg",
         ))
         .unwrap();
         assert_eq!(c.addr, "127.0.0.1:0");
@@ -653,6 +703,7 @@ mod tests {
         assert_eq!(c.job_retries, 0);
         assert_eq!(c.quarantine_k, 1);
         assert_eq!(c.breaker_fails, 3);
+        assert_eq!(c.registry_dir, Some(std::path::PathBuf::from("/tmp/reg")));
         assert!(serve_config(&args("serve --workers 0")).is_err());
         assert!(serve_config(&args("serve --queue-cap zero")).is_err());
         assert!(serve_config(&args("serve --job-retries lots")).is_err());

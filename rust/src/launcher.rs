@@ -275,11 +275,16 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let (manifest, engine) = bringup()?;
     let workers = cfg.workers;
     let archive = cfg.archive.clone();
+    let registry_dir = cfg.registry_dir.clone();
     let server = crate::serve::Server::bind(cfg, manifest, engine)?;
     println!("releq serve: listening on http://{}", server.local_addr());
     println!("  workers: {workers}, archive: {}", archive.display());
+    match &registry_dir {
+        Some(d) => println!("  registry: {} (POST /v1/networks accepts installs)", d.display()),
+        None => println!("  registry: disabled (start with --registry-dir to enable POST /v1/networks)"),
+    }
     println!("  POST /v1/jobs | GET /v1/jobs/<id>[/result] | POST /v1/jobs/<id>/cancel");
-    println!("  GET /v1/stats | GET /v1/health | POST /v1/shutdown (drains + persists)");
+    println!("  POST /v1/networks | GET /v1/stats | GET /v1/health | POST /v1/shutdown (drains + persists)");
     server.run()?;
     println!("releq serve: drained and stopped");
     Ok(())

@@ -28,6 +28,7 @@ pub mod metrics;
 pub mod parallel;
 pub mod pareto;
 pub mod quant;
+pub mod registry;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

@@ -65,6 +65,8 @@ fn print_help() {
          \x20           [--job-retries N] [--quarantine-k N] [--breaker-fails N]\n\
          \x20                             (transient-failure retries per job; consecutive env\n\
          \x20                             failures before quarantine; failures to open breaker)\n\
+         \x20           [--registry-dir dir] (content-addressed install cache; enables hot\n\
+         \x20                             network registration via POST /v1/networks)\n\
          \x20 exp       <table2|table4|table5|fig5|fig6|fig7|fig8|fig9|fig10|ablation-action|ablation-lstm|all>\n\
          \x20 stats\n"
     );

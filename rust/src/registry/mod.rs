@@ -1,0 +1,721 @@
+//! Versioned artifact registry: content-addressed, digest-verified network
+//! installs into a *running* daemon.
+//!
+//! The base `artifacts/manifest.json` is read once at startup; without this
+//! module a long-running `releq serve` can never gain a network (or pick up a
+//! recompiled one) short of a restart. The registry adds:
+//!
+//! * **Per-network registry manifests** — `registry.json` in a source dir, or
+//!   the inline body of `POST /v1/networks`: schema version, the network's
+//!   metadata (the same shape as a `manifest.json` `networks.<name>` entry,
+//!   parsed by the shared [`NetworkMeta::from_json`]), a monotonically
+//!   increasing `version`, and per-artifact-file sha256 digests.
+//! * **Digest-verified, atomic installs** — every artifact file is verified
+//!   against its stamped sha256 while being staged ([`crate::util::sha256`],
+//!   dependency-free), then the staging dir is `rename`d into a
+//!   content-addressed cache slot keyed by the manifest digest (the archive's
+//!   tmp + rename idiom: an injected mid-install failure leaves no partial
+//!   final state). Manifests without digests are **legacy**: accepted, checks
+//!   skipped, counted in the `legacy_manifests` stat — the `eval_batch_k: 0`
+//!   degradation pattern.
+//! * **Version isolation through qualified names** — an installed version's
+//!   [`NetworkMeta.name`] is `<net>@<digest12>`. Every artifact execution in
+//!   the coordinator derives names from `net.name` (`<name>_train`, ...),
+//!   while data generation keys on the separate `net.dataset` field, so a
+//!   qualified name routes all artifact lookups through per-version
+//!   [`Engine::alias`] entries (and per-version compile-cache keys, and
+//!   per-version `exec_stats` rows) with zero changes to the env/searcher —
+//!   and bit-identical data.
+//! * **Pinned sessions across upgrades** — serve sessions are keyed by
+//!   `(net, manifest_version, env fingerprint)`; a job in flight when an
+//!   upgrade lands keeps its pinned [`NetVersion`] (its aliases and compiled
+//!   executables stay valid through the `Arc`), and a retired version's
+//!   aliases are evicted only when its last session drops
+//!   ([`Registry::unpin`]).
+//!
+//! The registry works without an engine (stub tier: install/verify/version
+//! bookkeeping only) and without a base manifest (`bind_with` stub daemons).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{Context, Result};
+
+use crate::config::validate_net_name;
+use crate::runtime::faults::FaultPlan;
+use crate::runtime::manifest::MANIFEST_SCHEMA_VERSION;
+use crate::runtime::{Engine, Manifest, NetworkMeta};
+use crate::util::json::Json;
+use crate::util::sha256;
+use crate::util::{read_recover, write_recover};
+
+/// Hex prefix length of the manifest digest used for install-dir names and
+/// qualified artifact names. 48 bits of content address is plenty for the
+/// handful of versions a daemon holds, and keeps artifact names readable in
+/// `exec_stats` rows.
+const DIGEST12: usize = 12;
+
+/// Fault-injection artifact name for the atomic-install seam: the plan hook
+/// fires after staging (files fetched, verified, written) and before the
+/// final rename — the window an atomicity bug would leave partial state in.
+pub const INSTALL_FAULT: &str = "registry_install";
+
+/// Why a registration was refused, typed so the HTTP route can map it:
+/// `Invalid` → 400, `Conflict` → 409, `Internal` → 500.
+#[derive(Debug)]
+pub enum RegisterError {
+    /// malformed manifest, bad name, or a digest mismatch
+    Invalid(String),
+    /// version not monotonically increasing (or digest clash on a version)
+    Conflict(String),
+    /// I/O or injected failure during install
+    Internal(anyhow::Error),
+}
+
+impl std::fmt::Display for RegisterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegisterError::Invalid(m) => write!(f, "invalid registration: {m}"),
+            RegisterError::Conflict(m) => write!(f, "version conflict: {m}"),
+            RegisterError::Internal(e) => write!(f, "install failed: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for RegisterError {}
+
+/// One installed (or baseline) version of a network.
+///
+/// `digest` is empty for **baseline** versions — networks resolved straight
+/// from the startup manifest, whose artifacts live unqualified in the base
+/// artifacts dir. Installed versions carry the manifest digest, the
+/// content-addressed install dir, and a digest-qualified `meta.name`.
+pub struct NetVersion {
+    /// the client-facing network name (`lenet2`)
+    pub logical: String,
+    /// metadata handed to sessions; `name` is `<logical>@<digest12>` for
+    /// installed versions, `logical` for baseline ones
+    pub meta: NetworkMeta,
+    pub version: u64,
+    /// full manifest sha256 (empty = baseline)
+    pub digest: String,
+    /// where the artifact files live
+    pub dir: PathBuf,
+    /// sessions currently pinned to this version
+    refs: AtomicU64,
+}
+
+impl NetVersion {
+    pub fn refs(&self) -> u64 {
+        self.refs.load(Ordering::Relaxed)
+    }
+
+    /// Installed via the registry (as opposed to baseline-from-startup)?
+    pub fn is_installed(&self) -> bool {
+        !self.digest.is_empty()
+    }
+
+    fn qualified_prefix(&self) -> String {
+        format!("{}@{}", self.logical, &self.digest[..DIGEST12.min(self.digest.len())])
+    }
+}
+
+/// Successful registration summary (the `POST /v1/networks` response body).
+#[derive(Debug)]
+pub struct Installed {
+    pub name: String,
+    pub version: u64,
+    pub digest: String,
+    /// false when the exact same manifest (same digest) was already
+    /// installed — idempotent re-registration
+    pub installed: bool,
+}
+
+/// Parsed + validated registry manifest (`registry.json` / inline body).
+struct RegManifest {
+    schema_version: u32,
+    name: String,
+    version: u64,
+    /// raw `networks.<name>`-shaped entry (validated before NetworkMeta
+    /// parsing, which panics on missing keys by design for the trusted base
+    /// manifest)
+    network: Json,
+    sha256: BTreeMap<String, String>,
+}
+
+impl RegManifest {
+    fn parse(j: &Json) -> Result<RegManifest, RegisterError> {
+        let inv = |m: String| RegisterError::Invalid(m);
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| inv("manifest needs a string `name`".into()))?
+            .to_string();
+        validate_net_name(&name).map_err(|e| inv(format!("{e:#}")))?;
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_f64())
+            .filter(|v| *v >= 1.0 && v.fract() == 0.0)
+            .ok_or_else(|| inv("manifest needs an integer `version` >= 1".into()))?
+            as u64;
+        let schema_version = j
+            .get("schema_version")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0) as u32;
+        if schema_version > MANIFEST_SCHEMA_VERSION {
+            return Err(inv(format!(
+                "manifest schema_version {schema_version} is newer than this daemon \
+                 supports ({MANIFEST_SCHEMA_VERSION})"
+            )));
+        }
+        let network = j
+            .get("network")
+            .cloned()
+            .ok_or_else(|| inv("manifest needs a `network` object".into()))?;
+        validate_network_body(&network).map_err(inv)?;
+        let mut sha = BTreeMap::new();
+        if let Some(sj) = j.get("sha256") {
+            let m = sj
+                .as_obj()
+                .ok_or_else(|| inv("`sha256` must be an object".into()))?;
+            for (file, hexj) in m {
+                let hex = hexj
+                    .as_str()
+                    .ok_or_else(|| inv(format!("sha256[{file}] must be a hex string")))?;
+                validate_artifact_file(&name, file).map_err(inv)?;
+                sha.insert(file.clone(), hex.to_ascii_lowercase());
+            }
+        }
+        Ok(RegManifest { schema_version, name, version, network, sha256: sha })
+    }
+
+    /// Canonical serialization hashed into the manifest digest. `Json::Obj`
+    /// is a `BTreeMap`, so `dump()` is already key-sorted and deterministic.
+    /// Inline `files` payloads are excluded: content identity is the digest
+    /// map (legacy inline uploads — no digests — are addressed by metadata
+    /// alone, which is as strong as legacy gets).
+    fn canonical(&self) -> String {
+        let sha = Json::Obj(
+            self.sha256.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        Json::obj(vec![
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("version", Json::Num(self.version as f64)),
+            ("network", self.network.clone()),
+            ("sha256", sha),
+        ])
+        .dump()
+    }
+
+    /// The artifact files this manifest ships: the digest map's keys, or —
+    /// legacy — the standard AOT layout derived from the network metadata.
+    fn files(&self) -> Vec<String> {
+        if !self.sha256.is_empty() {
+            return self.sha256.keys().cloned().collect();
+        }
+        let fused = self.network.get("fused_k").and_then(|v| v.as_usize()).unwrap_or(0);
+        let ebk = self.network.get("eval_batch_k").and_then(|v| v.as_usize()).unwrap_or(0);
+        expected_files(&self.name, fused, ebk)
+    }
+}
+
+/// The standard artifact-file layout the AOT emitter writes for a network.
+pub fn expected_files(name: &str, fused_k: usize, eval_batch_k: usize) -> Vec<String> {
+    let mut v = vec![
+        format!("{name}_init.hlo.txt"),
+        format!("{name}_train.hlo.txt"),
+        format!("{name}_eval.hlo.txt"),
+    ];
+    if fused_k > 0 {
+        v.push(format!("{name}_retrain_eval.hlo.txt"));
+    }
+    if eval_batch_k > 0 {
+        v.push(format!("{name}_retrain_eval_batch.hlo.txt"));
+    }
+    v
+}
+
+/// An artifact filename in a manifest must be `<net>_<suffix>.hlo.txt` with a
+/// plain-identifier suffix — path traversal through a crafted filename is
+/// structurally impossible.
+fn validate_artifact_file(net: &str, file: &str) -> Result<(), String> {
+    let rest = file
+        .strip_prefix(net)
+        .and_then(|r| r.strip_prefix('_'))
+        .and_then(|r| r.strip_suffix(".hlo.txt"))
+        .ok_or_else(|| format!("artifact file `{file}` is not `{net}_<suffix>.hlo.txt`"))?;
+    if rest.is_empty() || !rest.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_') {
+        return Err(format!("artifact file `{file}` has a non-identifier suffix"));
+    }
+    Ok(())
+}
+
+/// Pre-validate a `networks.<name>`-shaped entry so the shared
+/// [`NetworkMeta::from_json`] (which `panic!`s on missing keys, fine for the
+/// trusted startup manifest) is safe to call on an HTTP-supplied body.
+fn validate_network_body(nj: &Json) -> Result<(), String> {
+    let obj = nj.as_obj().ok_or("`network` must be an object")?;
+    for key in ["l", "p", "classes", "train_batch", "eval_batch", "fused_k", "train_size"] {
+        obj.get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("network needs numeric `{key}`"))?;
+    }
+    obj.get("dataset")
+        .and_then(|v| v.as_str())
+        .ok_or("network needs string `dataset`")?;
+    let input = obj.get("input").and_then(|v| v.as_arr()).ok_or("network needs `input` array")?;
+    if input.len() != 3 || input.iter().any(|v| v.as_usize().is_none()) {
+        return Err("`input` must be [H, W, C]".into());
+    }
+    let layers =
+        obj.get("layers").and_then(|v| v.as_arr()).ok_or("network needs `layers` array")?;
+    if layers.is_empty() {
+        return Err("`layers` must be non-empty".into());
+    }
+    for (i, lj) in layers.iter().enumerate() {
+        let lo = lj.as_obj().ok_or_else(|| format!("layers[{i}] must be an object"))?;
+        for key in ["name", "kind"] {
+            lo.get(key)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("layers[{i}] needs string `{key}`"))?;
+        }
+        for key in ["w_offset", "w_len", "b_offset", "b_len", "n_macs", "in_dim", "out_dim"] {
+            lo.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("layers[{i}] needs numeric `{key}`"))?;
+        }
+        let ws = lo
+            .get("w_shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| format!("layers[{i}] needs `w_shape` array"))?;
+        if ws.iter().any(|v| v.as_usize().is_none()) {
+            return Err(format!("layers[{i}].w_shape must be numeric"));
+        }
+    }
+    Ok(())
+}
+
+/// Where an install fetches artifact bytes from.
+enum Fetch<'a> {
+    /// files sit next to `registry.json` in a source directory
+    Dir(&'a Path),
+    /// `files: {filename -> text}` shipped inline in the POST body
+    Inline(&'a BTreeMap<String, Json>),
+}
+
+impl Fetch<'_> {
+    fn read(&self, file: &str) -> Result<Vec<u8>> {
+        match self {
+            Fetch::Dir(d) => {
+                let p = d.join(file);
+                std::fs::read(&p).with_context(|| format!("reading artifact {p:?}"))
+            }
+            Fetch::Inline(m) => {
+                let v = m
+                    .get(file)
+                    .and_then(|v| v.as_str())
+                    .with_context(|| format!("inline upload missing `files.{file}`"))?;
+                Ok(v.as_bytes().to_vec())
+            }
+        }
+    }
+}
+
+/// The registry: versioned network installs layered over a startup manifest.
+///
+/// * `base`    — the startup manifest; baseline resolution target (optional:
+///   stub daemons run without one).
+/// * `engine`  — alias target for installed artifacts (optional: the stub
+///   tier exercises install/verify/version logic without PJRT).
+/// * `cache_dir` — the content-addressed install cache; `None` disables
+///   installation (`POST /v1/networks` → 503) but resolution still serves
+///   the base manifest.
+pub struct Registry {
+    base: Option<Manifest>,
+    engine: Option<Arc<Engine>>,
+    cache_dir: Option<PathBuf>,
+    /// per-network installed versions, oldest→newest
+    nets: RwLock<BTreeMap<String, Vec<Arc<NetVersion>>>>,
+    installs: AtomicU64,
+    digest_rejects: AtomicU64,
+    legacy_manifests: AtomicU64,
+    evictions: AtomicU64,
+    staging_seq: AtomicU64,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+impl Registry {
+    /// Engine-less registry (stub daemons, tests): installs verify and
+    /// version-track but alias nothing.
+    pub fn new(base: Option<Manifest>, cache_dir: Option<PathBuf>) -> Result<Registry> {
+        Ok(Registry::with_faults(base, cache_dir, None, FaultPlan::from_env()?))
+    }
+
+    /// The real daemon's registry: installed artifacts are aliased into the
+    /// engine's compile path under digest-qualified names.
+    pub fn with_engine(
+        base: Manifest,
+        cache_dir: Option<PathBuf>,
+        engine: Arc<Engine>,
+    ) -> Result<Registry> {
+        Ok(Registry::with_faults(Some(base), cache_dir, Some(engine), FaultPlan::from_env()?))
+    }
+
+    /// Full-control constructor (fault-injection tests pass an explicit
+    /// plan instead of racing on the process environment).
+    pub fn with_faults(
+        base: Option<Manifest>,
+        cache_dir: Option<PathBuf>,
+        engine: Option<Arc<Engine>>,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Registry {
+        Registry {
+            base,
+            engine,
+            cache_dir,
+            nets: RwLock::new(BTreeMap::new()),
+            installs: AtomicU64::new(0),
+            digest_rejects: AtomicU64::new(0),
+            legacy_manifests: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            staging_seq: AtomicU64::new(0),
+            faults: faults.filter(|f| !f.is_empty()),
+        }
+    }
+
+    /// Can this registry install networks? (`--registry-dir` given)
+    pub fn enabled(&self) -> bool {
+        self.cache_dir.is_some()
+    }
+
+    /// Register from a `POST /v1/networks` body: either
+    /// `{"source": "/path/to/dir"}` (reads `<dir>/registry.json`, fetches
+    /// artifacts from the dir) or a full inline manifest (artifact text
+    /// under `files`, practical only for networks fitting the HTTP body
+    /// cap).
+    pub fn register_json(&self, body: &Json) -> Result<Installed, RegisterError> {
+        if let Some(src) = body.get("source").and_then(|v| v.as_str()) {
+            return self.register_dir(Path::new(src));
+        }
+        let man = RegManifest::parse(body)?;
+        let empty = BTreeMap::new();
+        let files = body.get("files").and_then(|v| v.as_obj()).unwrap_or(&empty);
+        self.install(man, Fetch::Inline(files))
+    }
+
+    /// Register from a source directory containing `registry.json` plus the
+    /// artifact files it names.
+    pub fn register_dir(&self, dir: &Path) -> Result<Installed, RegisterError> {
+        let p = dir.join("registry.json");
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| RegisterError::Invalid(format!("reading {p:?}: {e}")))?;
+        let j = Json::parse(&text)
+            .map_err(|e| RegisterError::Invalid(format!("parsing {p:?}: {e:#}")))?;
+        let man = RegManifest::parse(&j)?;
+        self.install(man, Fetch::Dir(dir))
+    }
+
+    /// The newest version the daemon knows for `name` (installed or base).
+    fn current_version(&self, name: &str) -> Option<u64> {
+        if let Some(v) = read_recover(&self.nets).get(name).and_then(|v| v.last().cloned()) {
+            return Some(v.version);
+        }
+        self.base
+            .as_ref()
+            .and_then(|b| b.networks.iter().find(|n| n.name == name))
+            .map(|n| n.version)
+    }
+
+    fn install(&self, man: RegManifest, fetch: Fetch<'_>) -> Result<Installed, RegisterError> {
+        let Some(cache_dir) = &self.cache_dir else {
+            return Err(RegisterError::Internal(anyhow::anyhow!(
+                "registry disabled — start the daemon with --registry-dir"
+            )));
+        };
+        let digest = sha256::digest_hex(man.canonical().as_bytes());
+        let d12 = &digest[..DIGEST12];
+
+        // Monotonicity gate (early, before any I/O). Idempotent re-install
+        // of the exact same manifest is OK-but-a-no-op.
+        if let Some(existing) = read_recover(&self.nets)
+            .get(&man.name)
+            .and_then(|vs| vs.iter().find(|v| v.version == man.version).cloned())
+        {
+            if existing.digest == digest {
+                return Ok(Installed {
+                    name: man.name,
+                    version: man.version,
+                    digest,
+                    installed: false,
+                });
+            }
+            return Err(RegisterError::Conflict(format!(
+                "{} version {} already installed with a different digest",
+                man.name, man.version
+            )));
+        }
+        if let Some(cur) = self.current_version(&man.name) {
+            if man.version <= cur {
+                return Err(RegisterError::Conflict(format!(
+                    "{} version {} is not newer than the current version {cur}",
+                    man.name, man.version
+                )));
+            }
+        }
+
+        let legacy = man.sha256.is_empty();
+        let files = man.files();
+        if !legacy {
+            // the digest map must cover the standard layout for this
+            // metadata — a manifest claiming fused_k > 0 but shipping no
+            // fused artifact would fail at first use instead of at install
+            let fused = man.network.get("fused_k").and_then(|v| v.as_usize()).unwrap_or(0);
+            let ebk = man.network.get("eval_batch_k").and_then(|v| v.as_usize()).unwrap_or(0);
+            for need in expected_files(&man.name, fused, ebk) {
+                if !man.sha256.contains_key(&need) {
+                    return Err(RegisterError::Invalid(format!(
+                        "sha256 map is missing required artifact `{need}`"
+                    )));
+                }
+            }
+        }
+
+        // Stage: fetch + verify + write every file into a tmp dir, then one
+        // atomic rename publishes the install (the archive's persistence
+        // idiom). Any failure from here on removes the staging dir; the
+        // final content-addressed slot either fully exists or not at all.
+        let seq = self.staging_seq.fetch_add(1, Ordering::Relaxed);
+        let staging = cache_dir.join(format!("tmp-{d12}-{}-{seq}", std::process::id()));
+        let final_dir = cache_dir.join(d12);
+        let stage = || -> Result<(), RegisterError> {
+            std::fs::create_dir_all(&staging)
+                .with_context(|| format!("creating staging dir {staging:?}"))
+                .map_err(RegisterError::Internal)?;
+            for file in &files {
+                let bytes = fetch.read(file).map_err(|e| RegisterError::Invalid(format!("{e:#}")))?;
+                if let Some(want) = man.sha256.get(file) {
+                    let got = sha256::digest_hex(&bytes);
+                    if got != *want {
+                        self.digest_rejects.fetch_add(1, Ordering::Relaxed);
+                        return Err(RegisterError::Invalid(format!(
+                            "digest mismatch for `{file}`: manifest says {want}, content is {got}"
+                        )));
+                    }
+                }
+                std::fs::write(staging.join(file), &bytes)
+                    .with_context(|| format!("staging `{file}`"))
+                    .map_err(RegisterError::Internal)?;
+            }
+            // provenance: the manifest travels with its artifacts
+            std::fs::write(staging.join("registry.json"), man.canonical())
+                .context("staging registry.json")
+                .map_err(RegisterError::Internal)?;
+            // fault seam: the injected failure window between staging and
+            // publication — the atomicity property under test
+            if let Some(f) = &self.faults {
+                f.on_exec(INSTALL_FAULT).map_err(RegisterError::Internal)?;
+            }
+            if !final_dir.exists() {
+                std::fs::rename(&staging, &final_dir)
+                    .with_context(|| format!("publishing install to {final_dir:?}"))
+                    .map_err(RegisterError::Internal)?;
+            }
+            Ok(())
+        };
+        let staged = stage();
+        if staging.exists() {
+            let _ = std::fs::remove_dir_all(&staging);
+        }
+        staged?;
+
+        if legacy {
+            self.legacy_manifests.fetch_add(1, Ordering::Relaxed);
+        }
+
+        // Build the digest-qualified metadata. The name charset forbids `@`,
+        // so qualified names can't collide with client-facing ones.
+        let qualified = format!("{}@{d12}", man.name);
+        let mut meta = NetworkMeta::from_json(&qualified, &man.network)
+            .map_err(|e| RegisterError::Invalid(format!("{e:#}")))?;
+        meta.version = man.version;
+        meta.sha256 = man.sha256.clone();
+
+        // Alias every shipped artifact into the engine's compile path under
+        // its qualified name — compile-on-first-use lands in per-version
+        // cache entries pointing at the content-addressed install.
+        if let Some(engine) = &self.engine {
+            for file in &files {
+                // files() output is validate_artifact_file-clean by
+                // construction, so the strips always succeed
+                if let Some(suffix) = file
+                    .strip_prefix(&man.name)
+                    .and_then(|r| r.strip_prefix('_'))
+                    .and_then(|r| r.strip_suffix(".hlo.txt"))
+                {
+                    engine.alias(&format!("{qualified}_{suffix}"), final_dir.join(file));
+                }
+            }
+        }
+
+        let nv = Arc::new(NetVersion {
+            logical: man.name.clone(),
+            meta,
+            version: man.version,
+            digest: digest.clone(),
+            dir: final_dir,
+            refs: AtomicU64::new(0),
+        });
+
+        // Activate under the write lock, re-checking monotonicity against a
+        // racing install that won the gate in between.
+        let mut retired: Vec<Arc<NetVersion>> = Vec::new();
+        {
+            let mut nets = write_recover(&self.nets);
+            let vs = nets.entry(man.name.clone()).or_default();
+            if let Some(last) = vs.last() {
+                if last.version >= man.version {
+                    drop(nets);
+                    if let Some(engine) = &self.engine {
+                        engine.unalias_prefix(&nv.qualified_prefix());
+                    }
+                    return Err(RegisterError::Conflict(format!(
+                        "{} version {} raced a newer install",
+                        man.name, man.version
+                    )));
+                }
+            }
+            vs.push(nv);
+            // retire superseded versions nothing is pinned to; versions with
+            // live sessions stay until their last session drops (unpin)
+            let mut i = 0;
+            while i + 1 < vs.len() {
+                if vs[i].refs() == 0 {
+                    retired.push(vs.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        for old in retired {
+            self.evict(&old);
+        }
+        self.installs.fetch_add(1, Ordering::Relaxed);
+        Ok(Installed { name: man.name, version: man.version, digest, installed: true })
+    }
+
+    fn evict(&self, v: &Arc<NetVersion>) {
+        if let Some(engine) = &self.engine {
+            engine.unalias_prefix(&v.qualified_prefix());
+        }
+        // the content-addressed dir stays on disk (it's a cache: re-installs
+        // of the same digest reuse it); only the live aliases/compiled
+        // executables are dropped
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Resolve a client-facing network name to the version new sessions
+    /// should use: the newest installed version, else the base manifest's
+    /// entry as a baseline version (unqualified name — baseline env
+    /// fingerprints stay byte-identical to the pre-registry daemon).
+    pub fn resolve(&self, net: &str) -> Result<Arc<NetVersion>> {
+        if let Some(v) = read_recover(&self.nets).get(net).and_then(|vs| vs.last().cloned()) {
+            return Ok(v);
+        }
+        if let Some(base) = &self.base {
+            let meta = base.network(net)?;
+            return Ok(Arc::new(NetVersion {
+                logical: net.to_string(),
+                meta: meta.clone(),
+                version: meta.version,
+                digest: String::new(),
+                dir: base.dir.clone(),
+                refs: AtomicU64::new(0),
+            }));
+        }
+        let installed: Vec<String> = read_recover(&self.nets).keys().cloned().collect();
+        anyhow::bail!("unknown network `{net}` (registry has: {})", installed.join(", "))
+    }
+
+    /// A session pinned itself to this version (serve's prepare path).
+    pub fn pin(&self, v: &Arc<NetVersion>) {
+        v.refs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A session pinned to this version dropped. A superseded installed
+    /// version whose last pin just released is evicted here — "old versions
+    /// evicted only when their last session drops".
+    pub fn unpin(&self, v: &Arc<NetVersion>) {
+        let before = v.refs.fetch_sub(1, Ordering::Relaxed);
+        debug_assert!(before > 0, "unpin without a matching pin");
+        if !v.is_installed() || before != 1 {
+            return;
+        }
+        let mut evict = false;
+        {
+            let mut nets = write_recover(&self.nets);
+            if let Some(vs) = nets.get_mut(&v.logical) {
+                let is_latest = vs.last().map(|l| Arc::ptr_eq(l, v)).unwrap_or(false);
+                if !is_latest && v.refs() == 0 {
+                    vs.retain(|x| !Arc::ptr_eq(x, v));
+                    evict = true;
+                }
+            }
+        }
+        if evict {
+            self.evict(v);
+        }
+    }
+
+    /// `GET /v1/stats` registry fragment.
+    pub fn stats_json(&self) -> Json {
+        let (networks, versions) = {
+            let nets = read_recover(&self.nets);
+            (nets.len(), nets.values().map(|v| v.len()).sum::<usize>())
+        };
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled())),
+            ("networks", Json::Num(networks as f64)),
+            ("versions", Json::Num(versions as f64)),
+            ("installs", Json::Num(self.installs.load(Ordering::Relaxed) as f64)),
+            (
+                "digest_rejects",
+                Json::Num(self.digest_rejects.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "legacy_manifests",
+                Json::Num(self.legacy_manifests.load(Ordering::Relaxed) as f64),
+            ),
+            ("evictions", Json::Num(self.evictions.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+
+    /// Installed-version snapshot for tests and the CLI.
+    pub fn versions(&self, net: &str) -> Vec<Arc<NetVersion>> {
+        read_recover(&self.nets).get(net).cloned().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_file_validation() {
+        assert!(validate_artifact_file("lenet", "lenet_train.hlo.txt").is_ok());
+        assert!(validate_artifact_file("lenet", "lenet_retrain_eval_batch.hlo.txt").is_ok());
+        assert!(validate_artifact_file("lenet", "other_train.hlo.txt").is_err());
+        assert!(validate_artifact_file("lenet", "lenet_.hlo.txt").is_err());
+        assert!(validate_artifact_file("lenet", "lenet_../evil.hlo.txt").is_err());
+        assert!(validate_artifact_file("lenet", "lenet_train.txt").is_err());
+    }
+
+    #[test]
+    fn expected_files_follow_metadata() {
+        assert_eq!(expected_files("n", 0, 0).len(), 3);
+        assert_eq!(expected_files("n", 3, 0).len(), 4);
+        assert_eq!(expected_files("n", 3, 8).len(), 5);
+    }
+}

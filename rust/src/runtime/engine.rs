@@ -415,6 +415,13 @@ pub struct Engine {
     /// pool slots; grows monotonically via [`Engine::ensure_devices`]
     devices: RwLock<Vec<Arc<DeviceSlot>>>,
     pub dir: PathBuf,
+    /// artifact-name → path overrides for registry-installed networks:
+    /// `lenet2@a1b2c3d4e5f6_train` resolves to the content-addressed install
+    /// dir instead of `dir/<name>.hlo.txt`. Because compile caches are keyed
+    /// by the (qualified) artifact name, a qualified alias simultaneously
+    /// gives every installed version its own cache entries — the compile
+    /// cache key "gains the manifest digest" with no cache rekeying.
+    aliases: RwLock<HashMap<String, PathBuf>>,
     /// fault-injection plan handed to every compiled `Exe` on every device
     /// (`None` = no fault checks on the hot path). POOL-GLOBAL on purpose:
     /// one plan's rule counters observe the execution stream of the whole
@@ -472,6 +479,7 @@ impl Engine {
         Ok(Engine {
             devices: RwLock::new(slots),
             dir: artifacts_dir,
+            aliases: RwLock::new(HashMap::new()),
             faults: faults.filter(|f| !f.is_empty()),
             retry,
             health: Arc::new(Health::new()),
@@ -620,7 +628,14 @@ impl Engine {
         // Compile outside the lock: compilation can take seconds and must not
         // serialize unrelated shards. A concurrent thread may compile the
         // same artifact; `entry().or_insert` below keeps exactly one.
-        let path = self.dir.join(format!("{name}.hlo.txt"));
+        // Registry aliases resolve first; everything else is `dir`-relative.
+        let path = self
+            .aliases
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| self.dir.join(format!("{name}.hlo.txt")));
         let path_str = path
             .to_str()
             .with_context(|| format!("artifact path {path:?} is not valid UTF-8"))?;
@@ -711,6 +726,39 @@ impl Engine {
             .collect();
         v.sort_by(|a, b| a.name.cmp(&b.name));
         v
+    }
+
+    /// Register a path override: `exe_on(name, ..)` will load `path` instead
+    /// of `dir/<name>.hlo.txt`. The registry aliases every artifact of an
+    /// installed network under its digest-qualified name
+    /// (`<net>@<digest12>_<suffix>`), pointing into the content-addressed
+    /// cache. Re-aliasing an existing name replaces the path (idempotent
+    /// re-installs alias to the same path anyway).
+    pub fn alias(&self, name: &str, path: PathBuf) {
+        self.aliases.write().unwrap().insert(name.to_string(), path);
+    }
+
+    /// Drop every alias whose name starts with `prefix` AND purge the
+    /// matching compiled executables from every device slot's cache —
+    /// eviction of a retired registry version. In-flight holders of the
+    /// `Arc<Exe>` keep running (the Arc keeps the executable alive); the
+    /// engine just stops handing it out. Returns the number of aliases
+    /// removed.
+    pub fn unalias_prefix(&self, prefix: &str) -> usize {
+        let mut aliases = self.aliases.write().unwrap();
+        let before = aliases.len();
+        aliases.retain(|name, _| !name.starts_with(prefix));
+        let removed = before - aliases.len();
+        drop(aliases);
+        for slot in self.devices.read().unwrap().iter() {
+            slot.cache.write().unwrap().retain(|name, _| !name.starts_with(prefix));
+        }
+        removed
+    }
+
+    /// Number of registered artifact aliases (registry-installed networks).
+    pub fn alias_count(&self) -> usize {
+        self.aliases.read().unwrap().len()
     }
 
     /// Number of compiled `(artifact, device)` entries currently cached

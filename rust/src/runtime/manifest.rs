@@ -3,11 +3,17 @@
 //! per-layer metadata all come from here; nothing about the networks is
 //! hard-coded on the Rust side.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use crate::util::json::Json;
+
+/// Manifest schema version the emitter currently writes. Version 0 means a
+/// legacy manifest predating schema stamping; everything downgrades gracefully
+/// (the `eval_batch_k: 0` pattern) rather than refusing to load.
+pub const MANIFEST_SCHEMA_VERSION: u32 = 1;
 
 /// One quantizable layer (the unit the RL agent assigns a bitwidth to).
 #[derive(Debug, Clone)]
@@ -49,6 +55,13 @@ pub struct NetworkMeta {
     /// resident training-set size baked into the fused artifact
     pub train_size: usize,
     pub dataset: String,
+    /// monotonically increasing network version stamped by the emitter (and
+    /// bumped on registry upgrades). Legacy manifests fall back to 1.
+    pub version: u64,
+    /// per-artifact-file sha256 (`<name>_train.hlo.txt` → lowercase hex).
+    /// Empty for legacy manifests — digest checks are then skipped and the
+    /// network is counted in the registry's `legacy_manifests` stat.
+    pub sha256: BTreeMap<String, String>,
     pub layers: Vec<LayerMeta>,
 }
 
@@ -60,6 +73,72 @@ impl NetworkMeta {
 
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.n_macs).sum()
+    }
+
+    /// Parse one `networks.<name>` entry. Shared by `Manifest::load` and the
+    /// registry, which parses the same shape out of per-network registry
+    /// manifests (`registry.json` / `POST /v1/networks` bodies).
+    pub fn from_json(name: &str, nj: &Json) -> Result<NetworkMeta> {
+        let input = nj.req("input").as_arr().context("input")?;
+        let layers = nj
+            .req("layers")
+            .as_arr()
+            .context("layers")?
+            .iter()
+            .map(|lj| LayerMeta {
+                name: lj.s("name").to_string(),
+                kind: lj.s("kind").to_string(),
+                w_shape: lj
+                    .req("w_shape")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect(),
+                w_offset: lj.u("w_offset"),
+                w_len: lj.u("w_len"),
+                b_offset: lj.u("b_offset"),
+                b_len: lj.u("b_len"),
+                n_macs: lj.u("n_macs") as u64,
+                in_dim: lj.u("in_dim"),
+                out_dim: lj.u("out_dim"),
+            })
+            .collect::<Vec<_>>();
+        let mut sha256 = BTreeMap::new();
+        if let Some(sj) = nj.get("sha256") {
+            for (file, hex) in sj.as_obj().context("sha256")? {
+                let hex = hex.as_str().context("sha256 digest must be a string")?;
+                sha256.insert(file.clone(), hex.to_string());
+            }
+        }
+        Ok(NetworkMeta {
+            name: name.to_string(),
+            l: nj.u("l"),
+            p: nj.u("p"),
+            input: [
+                input[0].as_usize().context("input[0]")?,
+                input[1].as_usize().context("input[1]")?,
+                input[2].as_usize().context("input[2]")?,
+            ],
+            classes: nj.u("classes"),
+            train_batch: nj.u("train_batch"),
+            eval_batch: nj.u("eval_batch"),
+            fused_k: nj.u("fused_k"),
+            eval_batch_k: nj
+                .get("eval_batch_k")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            train_size: nj.u("train_size"),
+            dataset: nj.s("dataset").to_string(),
+            version: nj.get("version").and_then(|v| v.as_usize()).unwrap_or(1) as u64,
+            sha256,
+            layers,
+        })
+    }
+
+    /// True when this entry predates digest stamping (no per-file sha256).
+    pub fn is_legacy(&self) -> bool {
+        self.sha256.is_empty()
     }
 }
 
@@ -83,6 +162,8 @@ pub struct AgentMeta {
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// manifest schema version (0 = legacy, pre-stamping emitter)
+    pub schema_version: u32,
     pub fp_bits: f32,
     pub bits_max: u32,
     pub agent: AgentMeta,
@@ -111,56 +192,15 @@ impl Manifest {
 
         let mut networks = Vec::new();
         for (name, nj) in j.req("networks").as_obj().context("networks")? {
-            let input = nj.req("input").as_arr().context("input")?;
-            let layers = nj
-                .req("layers")
-                .as_arr()
-                .context("layers")?
-                .iter()
-                .map(|lj| LayerMeta {
-                    name: lj.s("name").to_string(),
-                    kind: lj.s("kind").to_string(),
-                    w_shape: lj
-                        .req("w_shape")
-                        .as_arr()
-                        .unwrap()
-                        .iter()
-                        .map(|d| d.as_usize().unwrap())
-                        .collect(),
-                    w_offset: lj.u("w_offset"),
-                    w_len: lj.u("w_len"),
-                    b_offset: lj.u("b_offset"),
-                    b_len: lj.u("b_len"),
-                    n_macs: lj.u("n_macs") as u64,
-                    in_dim: lj.u("in_dim"),
-                    out_dim: lj.u("out_dim"),
-                })
-                .collect::<Vec<_>>();
-            networks.push(NetworkMeta {
-                name: name.clone(),
-                l: nj.u("l"),
-                p: nj.u("p"),
-                input: [
-                    input[0].as_usize().unwrap(),
-                    input[1].as_usize().unwrap(),
-                    input[2].as_usize().unwrap(),
-                ],
-                classes: nj.u("classes"),
-                train_batch: nj.u("train_batch"),
-                eval_batch: nj.u("eval_batch"),
-                fused_k: nj.u("fused_k"),
-                eval_batch_k: nj
-                    .get("eval_batch_k")
-                    .and_then(|v| v.as_usize())
-                    .unwrap_or(0),
-                train_size: nj.u("train_size"),
-                dataset: nj.s("dataset").to_string(),
-                layers,
-            });
+            networks.push(NetworkMeta::from_json(name, nj).with_context(|| format!("network {name}"))?);
         }
 
         Ok(Manifest {
             dir: artifacts_dir.to_path_buf(),
+            schema_version: j
+                .get("schema_version")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0) as u32,
             fp_bits: j.f("fp_bits") as f32,
             bits_max: j.u("bits_max") as u32,
             agent,
@@ -188,6 +228,62 @@ impl Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// A manifest with no `schema_version`, `version`, or `sha256` fields —
+    /// the pre-registry emitter output — must still load, with the fallbacks
+    /// (schema 0, version 1, empty digest map → `is_legacy()`), mirroring the
+    /// `eval_batch_k: 0` degradation pattern.
+    #[test]
+    fn legacy_manifest_loads_with_fallbacks() {
+        let dir = std::env::temp_dir().join(format!("releq_legacy_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+ "fp_bits": 9.0, "bits_max": 8,
+ "state_dim": 10, "n_actions": 8, "hidden": 16, "episodes_per_update": 4,
+ "agent": {"lstm": {"p": 100}, "fc": {"p": 50}},
+ "networks": {
+  "tiny": {
+   "l": 1, "p": 6, "input": [2, 2, 1], "classes": 2,
+   "train_batch": 4, "eval_batch": 4, "fused_k": 0, "train_size": 16,
+   "dataset": "toy",
+   "layers": [{"name": "fc1", "kind": "dense", "w_shape": [4, 2],
+               "w_offset": 0, "w_len": 4, "b_offset": 4, "b_len": 2,
+               "n_macs": 8, "in_dim": 4, "out_dim": 2}]
+  }
+ }
+}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.schema_version, 0);
+        let net = m.network("tiny").unwrap();
+        assert_eq!(net.version, 1);
+        assert!(net.is_legacy());
+        assert_eq!(net.eval_batch_k, 0);
+        assert_eq!(net.l, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Stamped fields parse when present.
+    #[test]
+    fn stamped_manifest_fields_parse() {
+        let nj = Json::parse(
+            r#"{
+   "l": 1, "p": 6, "input": [2, 2, 1], "classes": 2,
+   "train_batch": 4, "eval_batch": 4, "fused_k": 0, "train_size": 16,
+   "dataset": "toy", "version": 3,
+   "sha256": {"tiny_train.hlo.txt": "ab", "tiny_eval.hlo.txt": "cd"},
+   "layers": [{"name": "fc1", "kind": "dense", "w_shape": [4, 2],
+               "w_offset": 0, "w_len": 4, "b_offset": 4, "b_len": 2,
+               "n_macs": 8, "in_dim": 4, "out_dim": 2}]
+  }"#,
+        )
+        .unwrap();
+        let net = NetworkMeta::from_json("tiny", &nj).unwrap();
+        assert_eq!(net.version, 3);
+        assert!(!net.is_legacy());
+        assert_eq!(net.sha256.len(), 2);
+        assert_eq!(net.sha256["tiny_train.hlo.txt"], "ab");
+    }
 
     /// Integration with the real artifacts (skipped if `make artifacts` has
     /// not been run).

@@ -40,6 +40,15 @@ use crate::util::json::Json;
 /// also bounds every full-file save at O(ARCHIVE_CAP).
 const ARCHIVE_CAP: usize = 4096;
 
+/// Stamped into `archive.json` as a root-level `schema_version` key (record
+/// keys always contain `:`, so the name can never collide with one).
+/// Versionless files predate PR 8 and load unchanged — the stamp appears on
+/// their next save (forward migration). A file stamped NEWER than this
+/// constant is refused: its records may rely on semantics this build does
+/// not implement, and "silently reinterpret" is exactly what the checksum
+/// machinery exists to prevent.
+pub const ARCHIVE_SCHEMA_VERSION: u32 = 1;
+
 /// Fingerprint of everything that determines an accuracy value: the
 /// network, the quantization ceiling, and the env config. Jobs sharing
 /// this share a pretrained session core and may exchange memo entries.
@@ -341,7 +350,20 @@ impl Archive {
                 .with_context(|| format!("reading archive {}", path.display()))?;
             let j = Json::parse(&text)
                 .map_err(|e| anyhow::anyhow!("archive {}: {e}", path.display()))?;
+            let schema = j
+                .get("schema_version")
+                .and_then(Json::as_usize)
+                .unwrap_or(0) as u32; // versionless = legacy, loads as-is
+            anyhow::ensure!(
+                schema <= ARCHIVE_SCHEMA_VERSION,
+                "archive {} has schema_version {schema}; this build reads <= {}",
+                path.display(),
+                ARCHIVE_SCHEMA_VERSION
+            );
             for (k, v) in j.as_obj().context("archive root must be an object")? {
+                if k == "schema_version" {
+                    continue;
+                }
                 match Record::from_json(v) {
                     Ok(rec) => {
                         records.insert(k.clone(), rec);
@@ -437,7 +459,13 @@ impl Archive {
         let _serialize = self.save_lock.lock().unwrap();
         let doc = {
             let m = self.records.lock().unwrap();
-            Json::Obj(m.iter().map(|(k, r)| (k.clone(), r.to_json())).collect())
+            let mut map: BTreeMap<String, Json> =
+                m.iter().map(|(k, r)| (k.clone(), r.to_json())).collect();
+            map.insert(
+                "schema_version".to_string(),
+                Json::Num(ARCHIVE_SCHEMA_VERSION as f64),
+            );
+            Json::Obj(map)
         };
         if let Some(dir) = self.path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -695,6 +723,42 @@ mod tests {
         let b = Archive::open(&path).unwrap();
         assert_eq!((b.len(), b.skipped()), (1, 0));
         assert!(b.lookup("lenet", 0x5, 0x6).is_some());
+    }
+
+    #[test]
+    fn legacy_versionless_archive_migrates_forward() {
+        let path = tmp_path("schema.json");
+        let _ = std::fs::remove_file(&path);
+        let a = Archive::open(&path).unwrap();
+        a.insert(record("lenet", 0x7, 0x8));
+        a.save().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"schema_version\":1"), "saves stamp the schema");
+
+        // strip the root-level stamp, emulating a pre-PR-8 archive file
+        // (sorted keys put record keys like `lenet:...` before `s`, so the
+        // stamp is the LAST root entry and its leading comma goes with it)
+        let needle = ",\"schema_version\":1";
+        let i = text.find(needle).unwrap();
+        let legacy = format!("{}{}", &text[..i], &text[i + needle.len()..]);
+        assert!(!legacy.contains("schema_version"));
+        std::fs::write(&path, legacy).unwrap();
+
+        // versionless file loads with nothing skipped...
+        let b = Archive::open(&path).unwrap();
+        assert_eq!((b.len(), b.skipped()), (1, 0));
+        assert!(b.lookup("lenet", 0x7, 0x8).is_some());
+        // ...and the next save forward-migrates it to the stamped format
+        b.save().unwrap();
+        let migrated = std::fs::read_to_string(&path).unwrap();
+        assert!(migrated.contains("\"schema_version\":1"));
+        let c = Archive::open(&path).unwrap();
+        assert_eq!((c.len(), c.skipped()), (1, 0));
+
+        // a FUTURE schema is refused outright, not silently reinterpreted
+        let future = migrated.replace("\"schema_version\":1", "\"schema_version\":99");
+        std::fs::write(&path, future).unwrap();
+        assert!(Archive::open(&path).is_err());
     }
 
     #[test]

@@ -25,8 +25,9 @@
 //! | GET    | `/v1/jobs/{id}`       | status + live episode tail                |
 //! | GET    | `/v1/jobs/{id}/result`| bits, accuracy, reward, Pareto points     |
 //! | POST   | `/v1/jobs/{id}/cancel`| cooperative cancellation                  |
-//! | GET    | `/v1/stats`           | queue/session/engine/archive counters     |
+//! | GET    | `/v1/stats`           | queue/session/engine/archive/registry counters |
 //! | GET    | `/v1/health`          | engine/session/queue/breaker health (503 when degraded) |
+//! | POST   | `/v1/networks`        | register/upgrade a network in the running daemon |
 //! | POST   | `/v1/shutdown`        | drain in-flight jobs, persist, exit       |
 
 pub mod archive;
@@ -47,6 +48,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::config::{self, ServeConfig};
+use crate::registry::{RegisterError, Registry};
 use crate::runtime::{Engine, Manifest};
 use crate::util::json::Json;
 use crate::util::lock_recover;
@@ -57,6 +59,7 @@ use http::{read_request, Request, Response};
 pub struct Daemon {
     pub sched: Arc<Scheduler>,
     pub archive: Arc<Archive>,
+    pub registry: Arc<Registry>,
     runner: Arc<dyn JobRunner>,
     cfg: ServeConfig,
     local_addr: SocketAddr,
@@ -76,12 +79,18 @@ impl Server {
     /// [`SessionRunner`].
     pub fn bind(cfg: ServeConfig, manifest: Manifest, engine: Arc<Engine>) -> Result<Server> {
         let archive = Arc::new(Archive::open(&cfg.archive)?);
+        let registry = Arc::new(Registry::with_engine(
+            manifest.clone(),
+            cfg.registry_dir.clone(),
+            engine.clone(),
+        )?);
         let runner = Arc::new(SessionRunner::new(
             manifest,
             engine,
             archive.clone(),
             cfg.memo_persist,
             cfg.quarantine_k,
+            registry,
         ));
         Server::bind_with(cfg, runner, archive)
     }
@@ -96,9 +105,17 @@ impl Server {
         let local_addr = listener.local_addr()?;
         let sched = Scheduler::new(runner.clone(), archive.clone(), &cfg);
         sched.spawn_workers(cfg.workers);
+        // the runner's registry if it has one (the production
+        // SessionRunner); otherwise an engine-less registry so stub
+        // daemons still answer `POST /v1/networks` and stats rows
+        let registry = match runner.registry() {
+            Some(r) => r,
+            None => Arc::new(Registry::new(None, cfg.registry_dir.clone())?),
+        };
         let daemon = Arc::new(Daemon {
             sched,
             archive,
+            registry,
             runner,
             cfg,
             local_addr,
@@ -165,6 +182,7 @@ pub fn route(d: &Daemon, req: &Request) -> (Response, bool) {
         ("POST", ["v1", "jobs", id, "cancel"]) => (cancel_job(d, id), false),
         ("GET", ["v1", "stats"]) => (stats(d), false),
         ("GET", ["v1", "health"]) => (health(d), false),
+        ("POST", ["v1", "networks"]) => (post_network(d, req), false),
         ("POST", ["v1", "shutdown"]) => shutdown(d),
         _ => {
             // a known path with the wrong method is a 405, not a
@@ -177,6 +195,7 @@ pub fn route(d: &Daemon, req: &Request) -> (Response, bool) {
                     | ["v1", "jobs", _, "cancel"]
                     | ["v1", "stats"]
                     | ["v1", "health"]
+                    | ["v1", "networks"]
                     | ["v1", "shutdown"]
             );
             if known {
@@ -222,6 +241,44 @@ fn post_job(d: &Daemon, req: &Request) -> Response {
         Err(SubmitError::Draining) => Response::error(503, "daemon is draining"),
         Err(SubmitError::Unavailable(msg)) => Response::error(503, &msg),
         Err(SubmitError::Invalid(e)) => Response::error(400, &format!("{e:#}")),
+    }
+}
+
+/// `POST /v1/networks`: register or upgrade a network in the running
+/// daemon. Body is either `{"source": "/dir"}` (the daemon reads
+/// `<dir>/registry.json` and fetches the artifacts from that dir) or an
+/// inline manifest with artifact text under `files`. Every artifact is
+/// sha256-verified against the manifest before the atomic install; the
+/// new version is visible to the next `POST /v1/jobs` — in-flight jobs
+/// stay pinned to the version they prepared against.
+fn post_network(d: &Daemon, req: &Request) -> Response {
+    let body = match req.json() {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    // name validation answers 400 even on a registry-less daemon — a bad
+    // name is the client's bug regardless of server configuration
+    if let Some(name) = body.get("name").and_then(|v| v.as_str()) {
+        if let Err(e) = config::validate_net_name(name) {
+            return Response::error(400, &format!("{e:#}"));
+        }
+    }
+    if !d.registry.enabled() {
+        return Response::error(
+            503,
+            "network registry disabled; start the daemon with --registry-dir",
+        );
+    }
+    match d.registry.register_json(&body) {
+        Ok(ins) => Response::ok(Json::obj(vec![
+            ("net", Json::Str(ins.name)),
+            ("version", Json::Num(ins.version as f64)),
+            ("digest", Json::Str(ins.digest)),
+            ("installed", Json::Bool(ins.installed)),
+        ])),
+        Err(RegisterError::Invalid(msg)) => Response::error(400, &msg),
+        Err(RegisterError::Conflict(msg)) => Response::error(409, &msg),
+        Err(RegisterError::Internal(e)) => Response::error(500, &format!("{e:#}")),
     }
 }
 
@@ -279,6 +336,7 @@ fn stats(d: &Daemon) -> Response {
                 ("hits", Json::Num(d.archive.hits() as f64)),
             ]),
         ),
+        ("registry", d.registry.stats_json()),
         ("runner", d.runner.stats()),
     ]))
 }

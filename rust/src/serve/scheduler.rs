@@ -150,6 +150,13 @@ pub trait JobRunner: Send + Sync {
     fn healthy(&self) -> bool {
         true
     }
+
+    /// The network registry backing `POST /v1/networks`, if this runner
+    /// has one. Defaults to `None` so stub runners keep compiling; the
+    /// daemon falls back to a disabled registry (uploads get 503).
+    fn registry(&self) -> Option<std::sync::Arc<crate::registry::Registry>> {
+        None
+    }
 }
 
 /// What a cancel request actually did (mapped to HTTP statuses by the

@@ -27,23 +27,31 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use anyhow::{Context, Result};
 
 use crate::config::JobSpec;
 use crate::coordinator::{QuantEnv, Searcher};
 use crate::pareto;
+use crate::registry::{NetVersion, Registry};
 use crate::runtime::{Engine, FaultError, Manifest};
 use crate::util::json::Json;
-use crate::util::lock::lock_recover;
+use crate::util::lock::{lock_recover, read_recover, write_recover};
 
 use super::archive::{env_fingerprint, search_fingerprint, Archive, Solution};
 use super::scheduler::{Job, JobRunner};
 
+/// Session identity: `(net, manifest_version, env fingerprint)`. The version
+/// component keeps sessions from ever mixing artifacts across a registry
+/// upgrade — a job prepared against version N runs and completes on version
+/// N's session even if version N+1 installs while it is queued (new jobs
+/// resolve to N+1, whose digest-qualified network name also lands them on a
+/// different `env_fp`).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SessionKey {
     pub net: String,
+    pub version: u64,
     pub env_fp: u64,
 }
 
@@ -315,6 +323,7 @@ impl SessionCache<QuantEnv> {
                         format!("{}:{:016x}", k.net, k.env_fp),
                         Json::obj(vec![
                             ("net", Json::Str(k.net.clone())),
+                            ("version", Json::Num(k.version as f64)),
                             ("env_fp", Json::Str(format!("{:016x}", k.env_fp))),
                             ("acc_fullp", Json::Num(env.acc_fullp)),
                             ("evals", Json::Num(s.evals as f64)),
@@ -348,6 +357,15 @@ pub struct SessionRunner {
     engine: Arc<Engine>,
     sessions: SessionCache,
     archive: Arc<Archive>,
+    /// network registry: resolves job nets to (possibly installed) versions
+    registry: Arc<Registry>,
+    /// version pins: `(logical net, env_fp)` → the resolved version the
+    /// session at that fingerprint is bound to. Installed at prepare, read
+    /// at run — the seam that keeps an in-flight job on its version when an
+    /// upgrade lands in between. An entry holds a registry pin for the life
+    /// of its session; it is released only when the session is poisoned
+    /// (sessions are otherwise process-lifetime).
+    pinned: RwLock<HashMap<(String, u64), Arc<NetVersion>>>,
     /// memo entries exported per job for archive warm-starts (top-k by
     /// recency; the scheduler's `memo_persist` bound)
     memo_persist: usize,
@@ -355,12 +373,15 @@ pub struct SessionRunner {
 
 impl SessionRunner {
     pub fn new(manifest: Manifest, engine: Arc<Engine>, archive: Arc<Archive>,
-               memo_persist: usize, quarantine_k: u32) -> SessionRunner {
+               memo_persist: usize, quarantine_k: u32, registry: Arc<Registry>)
+               -> SessionRunner {
         SessionRunner {
             manifest,
             engine,
             sessions: SessionCache::with_quarantine(quarantine_k),
             archive,
+            registry,
+            pinned: RwLock::new(HashMap::new()),
             memo_persist,
         }
     }
@@ -369,13 +390,49 @@ impl SessionRunner {
         &self.sessions
     }
 
+    /// The version pinned for `(net, env_fp)` — present for every prepared
+    /// job (prepare always precedes run through the scheduler).
+    fn pinned_version(&self, net: &str, env_fp: u64) -> Result<Arc<NetVersion>> {
+        if let Some(v) = read_recover(&self.pinned).get(&(net.to_string(), env_fp)).cloned() {
+            return Ok(v);
+        }
+        // defensive fallback (e.g. a runner driven outside the scheduler):
+        // resolve fresh, pinning like prepare would
+        let resolved = self.registry.resolve(net)?;
+        self.pin(net, env_fp, &resolved);
+        Ok(resolved)
+    }
+
+    /// Install a version pin for `(net, env_fp)` if none exists yet.
+    fn pin(&self, net: &str, env_fp: u64, resolved: &Arc<NetVersion>) {
+        let mut pinned = write_recover(&self.pinned);
+        pinned.entry((net.to_string(), env_fp)).or_insert_with(|| {
+            self.registry.pin(resolved);
+            resolved.clone()
+        });
+    }
+
+    /// The session for `(net, env_fp)` died for good: release its version
+    /// pin (a superseded version whose last session drops gets its aliases
+    /// evicted here).
+    fn release_pin(&self, net: &str, env_fp: u64) {
+        let removed = write_recover(&self.pinned).remove(&(net.to_string(), env_fp));
+        if let Some(v) = removed {
+            self.registry.unpin(&v);
+        }
+    }
+
     /// The search body: session resolution + the ReLeQ search. Split from
     /// [`JobRunner::run`] so the success/failure outcome can drive the
     /// session's quarantine bookkeeping in exactly one place.
     fn run_inner(&self, job: &Job, key: &SessionKey)
                  -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
         let spec = &job.spec;
-        let net = self.manifest.network(&spec.net)?;
+        // the version this job was pinned to at prepare — NOT a fresh
+        // resolve, which would hand an upgraded-mid-queue job the new
+        // version's artifacts
+        let resolved = self.pinned_version(&spec.net, job.env_fp)?;
+        let net = &resolved.meta;
         // grow the shared engine's device pool to this job's request before
         // any session residency is built (grow-only and cheap when already
         // big enough; like memo_cap/eval_batch, `devices` is outside the env
@@ -478,21 +535,35 @@ impl SessionRunner {
 
 impl JobRunner for SessionRunner {
     fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
-        self.manifest.network(&spec.net)?;
+        crate::config::validate_net_name(&spec.net)?;
+        // resolve through the registry: newest installed version, else the
+        // startup manifest. The *resolved* name feeds the fingerprints —
+        // installed versions carry digest-qualified names, so each version
+        // gets its own env/search fingerprints (and archive records), while
+        // baseline networks keep fingerprints byte-identical to the
+        // pre-registry daemon (resolved name == client name).
+        let resolved = self.registry.resolve(&spec.net)?;
         anyhow::ensure!(spec.cfg.episodes >= 1, "job needs episodes >= 1");
         let bits_max = self.manifest.bits_max;
-        let env_fp = env_fingerprint(&spec.net, bits_max, &spec.cfg.env);
+        let env_fp = env_fingerprint(&resolved.meta.name, bits_max, &spec.cfg.env);
         // a poisoned session 503s at submission — don't queue a job whose
         // environment is known-dead
-        let key = SessionKey { net: spec.net.clone(), env_fp };
+        let key =
+            SessionKey { net: spec.net.clone(), version: resolved.version, env_fp };
         if let Some(msg) = self.sessions.poisoned(&key) {
             return Err(FaultError::Permanent(msg).into());
         }
-        Ok((env_fp, search_fingerprint(&spec.net, bits_max, &spec.cfg)))
+        let search_fp = search_fingerprint(&resolved.meta.name, bits_max, &spec.cfg);
+        self.pin(&spec.net, env_fp, &resolved);
+        Ok((env_fp, search_fp))
     }
 
     fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
-        let key = SessionKey { net: job.spec.net.clone(), env_fp: job.env_fp };
+        let version = self
+            .pinned_version(&job.spec.net, job.env_fp)
+            .map(|v| v.version)
+            .unwrap_or(1);
+        let key = SessionKey { net: job.spec.net.clone(), version, env_fp: job.env_fp };
         match self.run_inner(job, &key) {
             Ok(out) => {
                 self.sessions.record_success(&key);
@@ -502,7 +573,12 @@ impl JobRunner for SessionRunner {
                 // a cancellation says nothing about the env's health; any
                 // other failure counts against the session's streak
                 if e.downcast_ref::<crate::coordinator::Cancelled>().is_none() {
-                    self.sessions.record_failure(&key, &format!("{e:#}"));
+                    let q = self.sessions.record_failure(&key, &format!("{e:#}"));
+                    if q == Quarantine::Poisoned {
+                        // the session is dead for good — drop its version
+                        // pin so a superseded version can be evicted
+                        self.release_pin(&job.spec.net, job.env_fp);
+                    }
                 }
                 Err(e)
             }
@@ -511,6 +587,10 @@ impl JobRunner for SessionRunner {
 
     fn healthy(&self) -> bool {
         self.engine.health().is_healthy()
+    }
+
+    fn registry(&self) -> Option<Arc<Registry>> {
+        Some(self.registry.clone())
     }
 
     fn stats(&self) -> Json {
@@ -595,7 +675,7 @@ mod tests {
     #[test]
     fn failed_builds_unpin_the_key() {
         let cache: SessionCache<u32> = SessionCache::new();
-        let key = SessionKey { net: "lenet".to_string(), env_fp: 7 };
+        let key = SessionKey { net: "lenet".to_string(), version: 1, env_fp: 7 };
         let r = cache.get_or_create(key.clone(), || anyhow::bail!("no artifacts"));
         assert!(r.is_err());
         assert_eq!(cache.len(), 0, "failed build must not leave a Building slot");
@@ -609,7 +689,7 @@ mod tests {
     #[test]
     fn panicking_build_unpins_the_key() {
         let cache: SessionCache<u32> = SessionCache::new();
-        let key = SessionKey { net: "lenet".to_string(), env_fp: 3 };
+        let key = SessionKey { net: "lenet".to_string(), version: 1, env_fp: 3 };
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let _ = cache.get_or_create(key.clone(), || panic!("boom"));
         }));
@@ -624,7 +704,7 @@ mod tests {
     fn concurrent_failed_builds_never_wedge() {
         let cache = std::sync::Arc::new(SessionCache::<u32>::new());
         let results = run_sharded(vec![(); 8], |i, _| {
-            let key = SessionKey { net: "lenet".to_string(), env_fp: 1 };
+            let key = SessionKey { net: "lenet".to_string(), version: 1, env_fp: 1 };
             let r = cache.get_or_create(key, || anyhow::bail!("build {i} failed"));
             Ok(r.is_err())
         })
@@ -638,7 +718,7 @@ mod tests {
         use crate::runtime::{classify, FaultClass};
 
         let cache: SessionCache<u32> = SessionCache::with_quarantine(2);
-        let key = SessionKey { net: "lenet".to_string(), env_fp: 9 };
+        let key = SessionKey { net: "lenet".to_string(), version: 1, env_fp: 9 };
         assert_eq!(cache.get_or_create(key.clone(), || Ok(1)).unwrap(), 1);
         assert_eq!(cache.pretrains(), 1);
 
@@ -669,7 +749,7 @@ mod tests {
     #[test]
     fn quarantine_zero_disables_the_protocol() {
         let cache: SessionCache<u32> = SessionCache::with_quarantine(0);
-        let key = SessionKey { net: "lenet".to_string(), env_fp: 1 };
+        let key = SessionKey { net: "lenet".to_string(), version: 1, env_fp: 1 };
         cache.get_or_create(key.clone(), || Ok(5)).unwrap();
         for _ in 0..32 {
             assert_eq!(cache.record_failure(&key, "exec died"), Quarantine::Retained);
@@ -681,8 +761,8 @@ mod tests {
     #[test]
     fn failure_streaks_are_per_key() {
         let cache: SessionCache<u32> = SessionCache::with_quarantine(1);
-        let a = SessionKey { net: "lenet".to_string(), env_fp: 1 };
-        let b = SessionKey { net: "vgg11".to_string(), env_fp: 2 };
+        let a = SessionKey { net: "lenet".to_string(), version: 1, env_fp: 1 };
+        let b = SessionKey { net: "vgg11".to_string(), version: 1, env_fp: 2 };
         cache.get_or_create(a.clone(), || Ok(1)).unwrap();
         cache.get_or_create(b.clone(), || Ok(2)).unwrap();
         assert_eq!(cache.record_failure(&a, "exec died"), Quarantine::Evicted);

@@ -7,5 +7,6 @@ pub mod fnv;
 pub mod json;
 pub mod lock;
 pub mod rng;
+pub mod sha256;
 
 pub use lock::{lock_recover, read_recover, write_recover};

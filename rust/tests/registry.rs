@@ -1,0 +1,703 @@
+//! Integration tests for the network registry (`rust/src/registry`).
+//!
+//! Two tiers, same convention as `serve_daemon.rs`:
+//!
+//! * **stub tier** (always runs, no PJRT): digest verification + rejection,
+//!   atomic install (no partial state after an injected mid-install
+//!   failure), network-name validation over HTTP, version monotonicity,
+//!   legacy (digest-less) manifest fallback, and version-distinct session
+//!   keying.
+//! * **artifact tier** (skipped without `artifacts/manifest.json`): a
+//!   network registered into a *running* daemon serves a job bit-identical
+//!   to the same network loaded at startup, and an upgrade landing mid-job
+//!   leaves the in-flight job on its original version — with exact
+//!   per-version execution accounting.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use releq::config::{JobSpec, ServeConfig};
+use releq::metrics::EpisodeLog;
+use releq::registry::{RegisterError, Registry};
+use releq::runtime::FaultPlan;
+use releq::serve::http::request;
+use releq::serve::{
+    env_fingerprint, search_fingerprint, Archive, Job, JobRunner, Server, SessionCache,
+    SessionKey, Solution,
+};
+use releq::util::json::Json;
+use releq::util::sha256;
+
+// ---- helpers -----------------------------------------------------------------
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("releq_registry_test_{}", std::process::id()))
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A minimal valid `networks.<name>`-shaped entry (fused_k = 0: only the
+/// init/train/eval artifact triple is expected).
+fn net_body(p: usize) -> String {
+    let layer = |n: &str| {
+        format!(
+            r#"{{"name": "{n}", "kind": "dense", "w_shape": [2, 2], "w_offset": 0,
+                 "w_len": 4, "b_offset": 4, "b_len": 2, "n_macs": 8,
+                 "in_dim": 2, "out_dim": 2}}"#
+        )
+    };
+    format!(
+        r#"{{"l": 2, "p": {p}, "classes": 2, "train_batch": 4, "eval_batch": 8,
+             "fused_k": 0, "eval_batch_k": 0, "train_size": 16,
+             "dataset": "synthetic", "input": [4, 4, 1],
+             "layers": [{}, {}]}}"#,
+        layer("fc1"),
+        layer("fc2")
+    )
+}
+
+/// An inline `POST /v1/networks`-shaped body for `tinynet`: three artifact
+/// files with correct digests (tweak after parsing to corrupt them).
+fn inline_manifest(name: &str, version: u64, p: usize) -> Json {
+    let files = [
+        (format!("{name}_init.hlo.txt"), format!("HloModule {name}_init\n")),
+        (format!("{name}_train.hlo.txt"), format!("HloModule {name}_train\n")),
+        (format!("{name}_eval.hlo.txt"), format!("HloModule {name}_eval\n")),
+    ];
+    let sha: Vec<String> = files
+        .iter()
+        .map(|(f, text)| format!(r#""{f}": "{}""#, sha256::digest_hex(text.as_bytes())))
+        .collect();
+    let fjson: Vec<String> = files
+        .iter()
+        .map(|(f, text)| format!(r#""{f}": "{}""#, text.replace('\n', "\\n")))
+        .collect();
+    let body = format!(
+        r#"{{"schema_version": 1, "name": "{name}", "version": {version},
+             "network": {}, "sha256": {{{}}}, "files": {{{}}}}}"#,
+        net_body(p),
+        sha.join(", "),
+        fjson.join(", ")
+    );
+    Json::parse(&body).unwrap()
+}
+
+fn stats_u(r: &Registry, key: &str) -> u64 {
+    r.stats_json().u(key) as u64
+}
+
+/// Non-staging entries in the content-addressed cache dir.
+fn installed_dirs(cache: &PathBuf) -> Vec<String> {
+    let mut v: Vec<String> = std::fs::read_dir(cache)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+        .collect();
+    v.sort();
+    v
+}
+
+// ---- stub tier: registry core ------------------------------------------------
+
+#[test]
+fn inline_install_verifies_digests_and_rejects_corruption() {
+    let cache = tmp_dir("digests");
+    let reg = Registry::new(None, Some(cache.clone())).unwrap();
+
+    // a clean install verifies every file against its stamped digest
+    let ok = reg.register_json(&inline_manifest("tinynet", 1, 10)).unwrap();
+    assert!(ok.installed);
+    assert_eq!((ok.name.as_str(), ok.version), ("tinynet", 1));
+    assert_eq!(ok.digest.len(), 64, "full sha256 hex digest");
+    assert_eq!(stats_u(&reg, "installs"), 1);
+    assert_eq!(stats_u(&reg, "digest_rejects"), 0);
+    assert_eq!(installed_dirs(&cache), vec![ok.digest[..12].to_string()]);
+    // the manifest travels with its artifacts (provenance)
+    assert!(cache.join(&ok.digest[..12]).join("registry.json").exists());
+
+    // corrupt one file's content so it no longer matches its digest
+    let mut bad = inline_manifest("tinynet", 2, 10);
+    if let Json::Obj(m) = &mut bad {
+        let files = m.get_mut("files").unwrap();
+        if let Json::Obj(fm) = files {
+            fm.insert(
+                "tinynet_train.hlo.txt".to_string(),
+                Json::Str("HloModule tampered\n".to_string()),
+            );
+        }
+    }
+    match reg.register_json(&bad) {
+        Err(RegisterError::Invalid(msg)) => {
+            assert!(msg.contains("digest mismatch"), "{msg}");
+        }
+        other => panic!("corrupted upload must be Invalid, got {other:?}"),
+    }
+    assert_eq!(stats_u(&reg, "digest_rejects"), 1);
+    assert_eq!(stats_u(&reg, "installs"), 1, "rejected upload must not install");
+    // ...and left nothing behind: only v1's slot exists, no staging litter
+    assert_eq!(installed_dirs(&cache).len(), 1);
+
+    // the resolved version is unaffected
+    let v = reg.resolve("tinynet").unwrap();
+    assert_eq!(v.version, 1);
+    assert!(v.is_installed());
+    assert_eq!(v.meta.name, format!("tinynet@{}", &ok.digest[..12]));
+    assert!(!v.meta.is_legacy());
+}
+
+#[test]
+fn injected_install_failure_leaves_no_partial_state() {
+    let cache = tmp_dir("atomic");
+    // the fault fires between staging and the publishing rename — exactly
+    // the window a non-atomic install would leave partial state in
+    let plan = Arc::new(FaultPlan::parse("registry_install:nth=1:fail").unwrap());
+    let reg = Registry::with_faults(None, Some(cache.clone()), None, Some(plan));
+
+    let body = inline_manifest("tinynet", 1, 10);
+    match reg.register_json(&body) {
+        Err(RegisterError::Internal(_)) => {}
+        other => panic!("injected failure must surface as Internal, got {other:?}"),
+    }
+    assert_eq!(stats_u(&reg, "installs"), 0);
+    assert!(
+        installed_dirs(&cache).is_empty(),
+        "failed install must leave NO state (no final dir, no staging dir): {:?}",
+        installed_dirs(&cache)
+    );
+    assert!(reg.resolve("tinynet").is_err(), "nothing was activated");
+
+    // the retry (fault consumed) succeeds and publishes exactly one slot
+    let ok = reg.register_json(&body).unwrap();
+    assert!(ok.installed);
+    assert_eq!(installed_dirs(&cache), vec![ok.digest[..12].to_string()]);
+    assert_eq!(reg.resolve("tinynet").unwrap().version, 1);
+}
+
+#[test]
+fn version_monotonicity_idempotence_and_eviction() {
+    let cache = tmp_dir("versions");
+    let reg = Registry::new(None, Some(cache)).unwrap();
+
+    let v1 = inline_manifest("tinynet", 1, 10);
+    assert!(reg.register_json(&v1).unwrap().installed);
+    // idempotent re-registration of the exact manifest: OK but a no-op
+    let again = reg.register_json(&v1).unwrap();
+    assert!(!again.installed);
+    assert_eq!(stats_u(&reg, "installs"), 1);
+
+    // same version, different content: conflict, not silent replacement
+    match reg.register_json(&inline_manifest("tinynet", 1, 11)) {
+        Err(RegisterError::Conflict(_)) => {}
+        other => panic!("expected Conflict, got {other:?}"),
+    }
+
+    // an upgrade activates and retires the unpinned old version
+    assert!(reg.register_json(&inline_manifest("tinynet", 3, 10)).unwrap().installed);
+    assert_eq!(reg.resolve("tinynet").unwrap().version, 3);
+    assert_eq!(reg.versions("tinynet").len(), 1, "unpinned v1 retired on upgrade");
+    assert_eq!(stats_u(&reg, "evictions"), 1);
+
+    // downgrades are refused against the current version
+    match reg.register_json(&inline_manifest("tinynet", 2, 10)) {
+        Err(RegisterError::Conflict(msg)) => assert!(msg.contains("not newer"), "{msg}"),
+        other => panic!("expected Conflict, got {other:?}"),
+    }
+
+    // a pinned old version survives the next upgrade until its last unpin
+    let v3 = reg.resolve("tinynet").unwrap();
+    reg.pin(&v3);
+    assert!(reg.register_json(&inline_manifest("tinynet", 4, 10)).unwrap().installed);
+    assert_eq!(reg.versions("tinynet").len(), 2, "pinned v3 must survive the upgrade");
+    assert_eq!(reg.resolve("tinynet").unwrap().version, 4, "new sessions get v4");
+    reg.unpin(&v3);
+    assert_eq!(reg.versions("tinynet").len(), 1, "last unpin evicts the superseded v3");
+    assert_eq!(stats_u(&reg, "evictions"), 2);
+}
+
+#[test]
+fn legacy_manifest_without_digests_installs_with_checks_skipped() {
+    let cache = tmp_dir("legacy");
+    let reg = Registry::new(None, Some(cache)).unwrap();
+
+    // strip the digest map: a legacy manifest still ships its files inline
+    let mut body = inline_manifest("tinynet", 1, 10);
+    if let Json::Obj(m) = &mut body {
+        m.remove("sha256");
+        m.remove("schema_version");
+    }
+    let ok = reg.register_json(&body).unwrap();
+    assert!(ok.installed);
+    assert_eq!(stats_u(&reg, "legacy_manifests"), 1);
+    assert_eq!(stats_u(&reg, "digest_rejects"), 0, "no digests, no checks");
+    let v = reg.resolve("tinynet").unwrap();
+    assert!(v.meta.is_legacy(), "installed meta records the missing digests");
+}
+
+#[test]
+fn source_dir_install_reads_registry_json() {
+    let cache = tmp_dir("srccache");
+    let src = tmp_dir("srcdir");
+    // lay out a source dir: registry.json + the files it names
+    let mut man = inline_manifest("tinynet", 1, 10);
+    if let Json::Obj(m) = &mut man {
+        let files = m.remove("files").unwrap();
+        for (f, text) in files.as_obj().unwrap() {
+            std::fs::write(src.join(f), text.as_str().unwrap()).unwrap();
+        }
+    }
+    std::fs::write(src.join("registry.json"), man.dump()).unwrap();
+
+    let reg = Registry::new(None, Some(cache)).unwrap();
+    let body = Json::parse(&format!(r#"{{"source": "{}"}}"#, src.display())).unwrap();
+    let ok = reg.register_json(&body).unwrap();
+    assert!(ok.installed);
+    assert_eq!(reg.resolve("tinynet").unwrap().version, 1);
+
+    // a missing dir is the client's error, not a daemon crash
+    let gone = Json::parse(r#"{"source": "/nonexistent/definitely-not-here"}"#).unwrap();
+    match reg.register_json(&gone) {
+        Err(RegisterError::Invalid(_)) => {}
+        other => panic!("expected Invalid, got {other:?}"),
+    }
+}
+
+#[test]
+fn session_keys_are_version_distinct() {
+    // the upgrade-isolation seam at the cache level: keys differing only in
+    // version are different sessions (a job pinned to v1 never shares an
+    // env with v2's sessions)
+    let cache: SessionCache<u32> = SessionCache::new();
+    let k1 = SessionKey { net: "tinynet".to_string(), version: 1, env_fp: 42 };
+    let k2 = SessionKey { net: "tinynet".to_string(), version: 2, env_fp: 42 };
+    assert_eq!(cache.get_or_create(k1.clone(), || Ok(10)).unwrap(), 10);
+    assert_eq!(cache.get_or_create(k2.clone(), || Ok(20)).unwrap(), 20);
+    assert_eq!(cache.get_or_create(k1, || Ok(99)).unwrap(), 10, "v1 session retained");
+    assert_eq!(cache.get_or_create(k2, || Ok(99)).unwrap(), 20, "v2 session retained");
+    assert_eq!(cache.pretrains(), 2, "one bring-up per version");
+}
+
+// ---- stub tier: HTTP surface -------------------------------------------------
+
+/// Stub backend with a real (engine-less) registry attached, so the daemon
+/// routes `POST /v1/networks` into actual install machinery without PJRT.
+struct RegistryStubRunner {
+    registry: Arc<Registry>,
+    runs: AtomicU64,
+}
+
+impl JobRunner for RegistryStubRunner {
+    fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
+        self.registry.resolve(&spec.net)?;
+        Ok((
+            env_fingerprint(&spec.net, 8, &spec.cfg.env),
+            search_fingerprint(&spec.net, 8, &spec.cfg),
+        ))
+    }
+
+    fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        let eps = job.spec.cfg.episodes;
+        let solution = Solution {
+            bits: vec![4, 4],
+            avg_bits: 4.0,
+            acc_fullp: 0.95,
+            acc_final: 0.93,
+            acc_loss_pct: 2.0,
+            state_q: 0.5,
+            reward: 1.0,
+            episodes_run: eps,
+            pareto: vec![],
+        };
+        job.ctl.notify(&EpisodeLog {
+            episode: 0,
+            reward: 1.0,
+            state_acc: 0.9,
+            state_q: 0.5,
+            bits: vec![4, 4],
+            probs: vec![],
+        });
+        Ok((solution, vec![]))
+    }
+
+    fn registry(&self) -> Option<Arc<Registry>> {
+        Some(self.registry.clone())
+    }
+}
+
+fn serve_cfg(archive: &PathBuf) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.addr = "127.0.0.1:0".to_string();
+    cfg.workers = 1;
+    cfg.queue_cap = 8;
+    cfg.archive = archive.clone();
+    cfg
+}
+
+fn spawn(server: Server) -> (String, std::thread::JoinHandle<Result<()>>) {
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn shutdown(addr: &str, handle: std::thread::JoinHandle<Result<()>>) {
+    let (status, j) = request(addr, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(status, 200, "shutdown failed: {}", j.dump());
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn post_networks_validates_names_and_maps_registry_errors() {
+    let dir = tmp_dir("http");
+    let archive_path = dir.join("archive.json");
+    let registry = Arc::new(Registry::new(None, Some(dir.join("cache"))).unwrap());
+    let runner =
+        Arc::new(RegistryStubRunner { registry: registry.clone(), runs: AtomicU64::new(0) });
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(serve_cfg(&archive_path), runner, archive).unwrap();
+    let (addr, handle) = spawn(server);
+
+    // --- name validation: 400s before any install machinery runs ---
+    for bad in ["../lenet", "a/b", "a\\b", "net.v2", "net@v2", "", "a b"] {
+        let body = Json::parse(&format!(
+            r#"{{"name": {}, "version": 1, "network": {}}}"#,
+            Json::Str(bad.to_string()).dump(),
+            net_body(10)
+        ))
+        .unwrap();
+        let (s, j) = request(&addr, "POST", "/v1/networks", Some(&body)).unwrap();
+        assert_eq!(s, 400, "name `{bad}` must be rejected: {}", j.dump());
+    }
+    // overlong names too
+    let long = "x".repeat(65);
+    let body = Json::parse(&format!(
+        r#"{{"name": "{long}", "version": 1, "network": {}}}"#,
+        net_body(10)
+    ))
+    .unwrap();
+    let (s, _) = request(&addr, "POST", "/v1/networks", Some(&body)).unwrap();
+    assert_eq!(s, 400);
+    // ...and a job submission against a traversal name bounces the same way
+    let (s, _) = request(
+        &addr,
+        "POST",
+        "/v1/jobs",
+        Some(&Json::parse(r#"{"net": "../../etc/passwd"}"#).unwrap()),
+    )
+    .unwrap();
+    assert_eq!(s, 400);
+
+    // --- a clean inline install over HTTP ---
+    let (s, j) = request(&addr, "POST", "/v1/networks", Some(&inline_manifest("tinynet", 1, 10)))
+        .unwrap();
+    assert_eq!(s, 200, "{}", j.dump());
+    assert_eq!(j.s("net"), "tinynet");
+    assert_eq!(j.u("version"), 1);
+    assert_eq!(j.req("installed"), &Json::Bool(true));
+    assert_eq!(j.s("digest").len(), 64);
+
+    // --- registry error mapping ---
+    // same version, different content → 409
+    let (s, _) =
+        request(&addr, "POST", "/v1/networks", Some(&inline_manifest("tinynet", 1, 11))).unwrap();
+    assert_eq!(s, 409);
+    // corrupted digest → 400 and a counted reject
+    let mut bad = inline_manifest("tinynet", 2, 10);
+    if let Json::Obj(m) = &mut bad {
+        if let Some(Json::Obj(fm)) = m.get_mut("files") {
+            fm.insert(
+                "tinynet_eval.hlo.txt".to_string(),
+                Json::Str("tampered".to_string()),
+            );
+        }
+    }
+    let (s, j) = request(&addr, "POST", "/v1/networks", Some(&bad)).unwrap();
+    assert_eq!(s, 400, "{}", j.dump());
+    // wrong method on the endpoint is a 405, not a 404
+    let (s, _) = request(&addr, "GET", "/v1/networks", None).unwrap();
+    assert_eq!(s, 405);
+
+    // --- registry stats rows ---
+    let (s, stats) = request(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(s, 200);
+    let reg = stats.req("registry");
+    assert_eq!(reg.req("enabled"), &Json::Bool(true));
+    assert_eq!(reg.u("networks"), 1);
+    assert_eq!(reg.u("versions"), 1);
+    assert_eq!(reg.u("installs"), 1);
+    assert_eq!(reg.u("digest_rejects"), 1);
+
+    // --- the registered network is immediately servable ---
+    let (s, j) = request(
+        &addr,
+        "POST",
+        "/v1/jobs",
+        Some(&Json::parse(r#"{"net": "tinynet", "config": {"episodes": 1}}"#).unwrap()),
+    )
+    .unwrap();
+    assert_eq!(s, 202, "{}", j.dump());
+    let id = j.u("id");
+    let t0 = Instant::now();
+    loop {
+        let (_, st) = request(&addr, "GET", &format!("/v1/jobs/{id}"), None).unwrap();
+        if st.s("status") == "done" {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "job never finished: {}", st.dump());
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // an unknown network still bounces
+    let (s, _) = request(
+        &addr,
+        "POST",
+        "/v1/jobs",
+        Some(&Json::parse(r#"{"net": "nosuchnet"}"#).unwrap()),
+    )
+    .unwrap();
+    assert_eq!(s, 400);
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn post_networks_is_503_when_registry_disabled() {
+    // bind_with + a runner with no registry: the daemon falls back to a
+    // disabled registry — installs 503, but name validation still 400s
+    struct Plain;
+    impl JobRunner for Plain {
+        fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
+            Ok((
+                env_fingerprint(&spec.net, 8, &spec.cfg.env),
+                search_fingerprint(&spec.net, 8, &spec.cfg),
+            ))
+        }
+        fn run(&self, _job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+            anyhow::bail!("unused")
+        }
+    }
+    let dir = tmp_dir("disabled");
+    let archive_path = dir.join("archive.json");
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(serve_cfg(&archive_path), Arc::new(Plain), archive).unwrap();
+    let (addr, handle) = spawn(server);
+
+    let (s, j) = request(&addr, "POST", "/v1/networks", Some(&inline_manifest("tinynet", 1, 10)))
+        .unwrap();
+    assert_eq!(s, 503, "{}", j.dump());
+    let (s, _) = request(
+        &addr,
+        "POST",
+        "/v1/networks",
+        Some(&Json::parse(&format!(r#"{{"name": "../x", "version": 1, "network": {}}}"#, net_body(10))).unwrap()),
+    )
+    .unwrap();
+    assert_eq!(s, 400, "bad names are the client's bug regardless of configuration");
+    let (s, stats) = request(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(stats.req("registry").req("enabled"), &Json::Bool(false));
+
+    shutdown(&addr, handle);
+}
+
+// ---- artifact tier -----------------------------------------------------------
+
+/// Build a registerable source dir for a copy of the base `lenet` network
+/// under a new name: artifacts copied file-for-file, `registry.json` with
+/// freshly computed digests and the requested version.
+fn lenet_copy_source(dst: &PathBuf, new_name: &str, version: u64) -> Json {
+    let base = releq::artifacts_dir();
+    let text = std::fs::read_to_string(base.join("manifest.json")).unwrap();
+    let man = Json::parse(&text).unwrap();
+    let mut net = man.req("networks").req("lenet").clone();
+
+    let fused = net.req("fused_k").as_usize().unwrap();
+    let ebk = net.get("eval_batch_k").and_then(Json::as_usize).unwrap_or(0);
+    let files = releq::registry::expected_files("lenet", fused, ebk);
+    let mut sha: std::collections::BTreeMap<String, Json> = Default::default();
+    for f in &files {
+        let renamed = f.replacen("lenet", new_name, 1);
+        std::fs::copy(base.join(f), dst.join(&renamed)).unwrap();
+        sha.insert(renamed.clone(), Json::Str(sha256::file_hex(&dst.join(&renamed)).unwrap()));
+    }
+    // the registry stamps its own version/digests; drop any baked-in ones
+    if let Json::Obj(m) = &mut net {
+        m.remove("version");
+        m.remove("sha256");
+    }
+    let reg_manifest = Json::obj(vec![
+        ("schema_version", Json::Num(1.0)),
+        ("name", Json::Str(new_name.to_string())),
+        ("version", Json::Num(version as f64)),
+        ("network", net),
+        ("sha256", Json::Obj(sha)),
+    ]);
+    std::fs::write(dst.join("registry.json"), reg_manifest.dump()).unwrap();
+    reg_manifest
+}
+
+/// Sum of `execs` over runner engine rows whose artifact name starts with
+/// `prefix`; `init_execs` isolates the pretrain row.
+fn execs_with_prefix(stats: &Json, prefix: &str) -> u64 {
+    stats
+        .req("runner")
+        .req("engine")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|row| row.s("artifact").starts_with(prefix))
+        .map(|row| row.u("execs") as u64)
+        .sum()
+}
+
+#[test]
+fn registered_network_serves_bit_identical_and_isolates_upgrades() {
+    use releq::runtime::{Engine, Manifest};
+
+    let dir = releq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Arc::new(Engine::new(dir).unwrap());
+    let work = tmp_dir("artifact_tier");
+    let archive_path = work.join("archive.json");
+    let mut cfg = serve_cfg(&archive_path);
+    cfg.workers = 2;
+    cfg.registry_dir = Some(work.join("cache"));
+    let server = Server::bind(cfg, manifest, engine.clone()).unwrap();
+    let (addr, handle) = spawn(server);
+
+    // register lenet2 = a byte-identical copy of lenet, version 1
+    let src = tmp_dir("lenet2_v1");
+    lenet_copy_source(&src, "lenet2", 1);
+    let body = Json::parse(&format!(r#"{{"source": "{}"}}"#, src.display())).unwrap();
+    let (s, reg1) = request(&addr, "POST", "/v1/networks", Some(&body)).unwrap();
+    assert_eq!(s, 200, "{}", reg1.dump());
+    assert_eq!(reg1.u("version"), 1);
+    let d1 = reg1.s("digest")[..12].to_string();
+
+    let job_body = |net: &str, seed: u64, episodes: u32| {
+        Json::parse(&format!(
+            r#"{{"net": "{net}", "config": {{"episodes": {episodes}, "pretrain_steps": 60,
+                 "long_retrain_steps": 8, "patience": 0, "seed": {seed}}}}}"#
+        ))
+        .unwrap()
+    };
+    let submit = |body: &Json| {
+        let (s, j) = request(&addr, "POST", "/v1/jobs", Some(body)).unwrap();
+        assert_eq!(s, 202, "{}", j.dump());
+        j.u("id")
+    };
+    let wait_done = |id: usize| {
+        let t0 = Instant::now();
+        loop {
+            let (_, st) = request(&addr, "GET", &format!("/v1/jobs/{id}"), None).unwrap();
+            if st.s("status") == "done" {
+                return;
+            }
+            assert!(
+                matches!(st.s("status"), "queued" | "running"),
+                "job {id} failed: {}",
+                st.dump()
+            );
+            assert!(t0.elapsed() < Duration::from_secs(300), "job {id} timed out");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    };
+    let result_of = |id: usize| {
+        let (s, r) = request(&addr, "GET", &format!("/v1/jobs/{id}/result"), None).unwrap();
+        assert_eq!(s, 200, "{}", r.dump());
+        r
+    };
+
+    // --- bit-identical serving: same artifacts, same config, same seed ---
+    let a = submit(&job_body("lenet", 7, 4));
+    let b = submit(&job_body("lenet2", 7, 4));
+    wait_done(a);
+    wait_done(b);
+    let (ra, rb) = (result_of(a), result_of(b));
+    assert_eq!(
+        ra.req("bits").dump(),
+        rb.req("bits").dump(),
+        "registered copy must search identically to the startup-loaded original"
+    );
+    assert_eq!(ra.f("acc_final"), rb.f("acc_final"), "bit-identical accuracy");
+    assert_eq!(ra.f("avg_bits"), rb.f("avg_bits"));
+    assert_eq!(ra.f("reward"), rb.f("reward"));
+
+    // the copy executed under its digest-qualified identity, not lenet's
+    let (_, stats) = request(&addr, "GET", "/v1/stats", None).unwrap();
+    let v1_prefix = format!("lenet2@{d1}_");
+    assert_eq!(
+        execs_with_prefix(&stats, &format!("{v1_prefix}init")),
+        1,
+        "one pretrain on the installed version"
+    );
+    assert_eq!(stats.req("registry").u("installs"), 1);
+    assert_eq!(stats.req("registry").u("digest_rejects"), 0);
+
+    // --- upgrade mid-job: the in-flight job stays on its pinned version ---
+    let c = submit(&job_body("lenet2", 9, 6));
+    // wait until C is actually running so the upgrade lands mid-flight
+    let t0 = Instant::now();
+    loop {
+        let (_, st) = request(&addr, "GET", &format!("/v1/jobs/{c}"), None).unwrap();
+        if st.s("status") == "running" {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(60), "C never started");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let src2 = tmp_dir("lenet2_v2");
+    lenet_copy_source(&src2, "lenet2", 2);
+    let body2 = Json::parse(&format!(r#"{{"source": "{}"}}"#, src2.display())).unwrap();
+    let (s, reg2) = request(&addr, "POST", "/v1/networks", Some(&body2)).unwrap();
+    assert_eq!(s, 200, "{}", reg2.dump());
+    assert_eq!(reg2.u("version"), 2);
+    let d2 = reg2.s("digest")[..12].to_string();
+    assert_ne!(d1, d2, "version bump changes the manifest digest");
+
+    // a job submitted after the upgrade resolves to v2
+    let e = submit(&job_body("lenet2", 10, 4));
+    wait_done(c);
+    wait_done(e);
+
+    // exact per-version execution accounting: C (prepared on v1) ran every
+    // execution under v1's qualified rows and paid no new pretrain (shared
+    // session with B); E pretrained exactly once under v2's rows
+    let (_, stats) = request(&addr, "GET", "/v1/stats", None).unwrap();
+    let v2_prefix = format!("lenet2@{d2}_");
+    assert_eq!(
+        execs_with_prefix(&stats, &format!("{v1_prefix}init")),
+        1,
+        "C joined B's v1 session — no second v1 pretrain"
+    );
+    assert_eq!(
+        execs_with_prefix(&stats, &format!("{v2_prefix}init")),
+        1,
+        "E pretrained on v2"
+    );
+    assert!(
+        execs_with_prefix(&stats, &v2_prefix) > 1,
+        "E's search executed v2 artifacts"
+    );
+    // both versions are live: v1 pinned by its sessions, v2 the latest
+    assert_eq!(stats.req("registry").u("versions"), 2);
+    // session rows carry their version
+    let sessions = stats.req("runner").req("sessions");
+    let versions: Vec<u64> = sessions
+        .as_obj()
+        .unwrap()
+        .values()
+        .filter(|row| row.s("net") == "lenet2")
+        .map(|row| row.u("version") as u64)
+        .collect();
+    assert!(versions.contains(&1) && versions.contains(&2), "sessions: {versions:?}");
+
+    shutdown(&addr, handle);
+}
