@@ -411,6 +411,9 @@ pub struct ServeConfig {
     /// (`--registry-dir`; absent = registration disabled, resolution still
     /// serves the startup manifest)
     pub registry_dir: Option<PathBuf>,
+    /// emit one structured JSON access-log line per request to stderr
+    /// (`--access-log`; same line shape as the fleet router's)
+    pub access_log: bool,
 }
 
 impl Default for ServeConfig {
@@ -426,6 +429,7 @@ impl Default for ServeConfig {
             quarantine_k: 3,
             breaker_fails: 8,
             registry_dir: None,
+            access_log: false,
         }
     }
 }
@@ -464,6 +468,103 @@ pub fn serve_config(args: &Args) -> Result<ServeConfig> {
     if let Some(v) = args.opt_str("registry-dir") {
         c.registry_dir = Some(PathBuf::from(v));
     }
+    c.access_log = args.has("access-log");
+    Ok(c)
+}
+
+/// `releq fleet` configuration: the front-end router plus the worker set
+/// it spawns or joins.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// router listen address (`--addr`; port 0 binds an ephemeral port)
+    pub addr: String,
+    /// `releq serve` child processes to spawn on ephemeral ports
+    /// (`--spawn-workers`)
+    pub spawn_workers: usize,
+    /// already-running workers to join, comma-separated `host:port` list
+    /// (`--worker-addrs`; the flags map holds one value per flag, so the
+    /// list is one comma-separated token rather than a repeated flag)
+    pub worker_addrs: Vec<String>,
+    /// merged fleet archive path (`--archive`); spawned worker i gets
+    /// `<stem>.w{i}.json` beside it
+    pub archive: PathBuf,
+    /// worker threads per SPAWNED worker (`--worker-threads`)
+    pub worker_threads: usize,
+    /// queue cap per SPAWNED worker (`--worker-queue-cap`)
+    pub worker_queue_cap: usize,
+    /// ms between archive pull-merge rounds (`--merge-interval-ms`;
+    /// 0 = only on demand via `POST /v1/fleet/merge` and at shutdown)
+    pub merge_interval_ms: u64,
+    /// ms between `/v1/health` polls of each worker (`--health-interval-ms`)
+    pub health_interval_ms: u64,
+    /// extra ring successors tried when the home worker answers 429
+    /// (`--steal-budget`; 0 = never steal, pass the 429 through)
+    pub steal_budget: usize,
+    /// structured access-log lines on the router (and forwarded to
+    /// spawned workers) (`--access-log`)
+    pub access_log: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            addr: "127.0.0.1:7470".to_string(),
+            spawn_workers: 0,
+            worker_addrs: Vec::new(),
+            archive: PathBuf::from("fleet_archive.json"),
+            worker_threads: 2,
+            worker_queue_cap: 64,
+            merge_interval_ms: 5000,
+            health_interval_ms: 1000,
+            steal_budget: 1,
+            access_log: false,
+        }
+    }
+}
+
+/// Resolve the fleet router config from CLI flags. A fleet with no workers
+/// at all is a configuration error, caught here rather than at the first
+/// unroutable job.
+pub fn fleet_config(args: &Args) -> Result<FleetConfig> {
+    let mut c = FleetConfig::default();
+    c.addr = args.str_of("addr", &c.addr);
+    if let Some(v) = flag_num(args, "spawn-workers")? {
+        c.spawn_workers = v;
+    }
+    if let Some(v) = args.opt_str("worker-addrs") {
+        c.worker_addrs = v
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect();
+    }
+    anyhow::ensure!(
+        c.spawn_workers + c.worker_addrs.len() >= 1,
+        "a fleet needs workers: pass --spawn-workers N and/or --worker-addrs host:port,..."
+    );
+    if let Some(v) = args.opt_str("archive") {
+        c.archive = PathBuf::from(v);
+    }
+    if let Some(v) = flag_num(args, "worker-threads")? {
+        anyhow::ensure!(v >= 1, "--worker-threads must be >= 1");
+        c.worker_threads = v;
+    }
+    if let Some(v) = flag_num(args, "worker-queue-cap")? {
+        anyhow::ensure!(v >= 1, "--worker-queue-cap must be >= 1");
+        c.worker_queue_cap = v;
+    }
+    if let Some(v) = flag_num(args, "merge-interval-ms")? {
+        c.merge_interval_ms = v;
+    }
+    if let Some(v) = flag_num(args, "health-interval-ms")? {
+        anyhow::ensure!(v >= 1, "--health-interval-ms must be >= 1");
+        c.health_interval_ms = v;
+    }
+    if let Some(v) = flag_num(args, "steal-budget")? {
+        c.steal_budget = v;
+    }
+    c.access_log = args.has("access-log");
     Ok(c)
 }
 
@@ -707,6 +808,41 @@ mod tests {
         assert!(serve_config(&args("serve --workers 0")).is_err());
         assert!(serve_config(&args("serve --queue-cap zero")).is_err());
         assert!(serve_config(&args("serve --job-retries lots")).is_err());
+        assert!(!serve_config(&args("serve")).unwrap().access_log);
+        assert!(serve_config(&args("serve --access-log")).unwrap().access_log);
+    }
+
+    #[test]
+    fn fleet_config_flags_resolve() {
+        // no workers at all is a configuration error, not a silent no-op
+        assert!(fleet_config(&args("fleet")).is_err());
+        let c = fleet_config(&args("fleet --spawn-workers 2")).unwrap();
+        assert_eq!(c.addr, "127.0.0.1:7470");
+        assert_eq!(c.spawn_workers, 2);
+        assert!(c.worker_addrs.is_empty());
+        assert_eq!(c.merge_interval_ms, 5000);
+        assert_eq!(c.steal_budget, 1);
+        assert!(!c.access_log);
+        let c = fleet_config(&args(
+            "fleet --addr 127.0.0.1:0 --worker-addrs 127.0.0.1:7463,127.0.0.1:7464 \
+             --archive /tmp/f.json --merge-interval-ms 0 --health-interval-ms 50 \
+             --steal-budget 2 --worker-threads 1 --worker-queue-cap 3 --access-log",
+        ))
+        .unwrap();
+        assert_eq!(c.worker_addrs, vec!["127.0.0.1:7463", "127.0.0.1:7464"]);
+        assert_eq!(c.archive, std::path::PathBuf::from("/tmp/f.json"));
+        assert_eq!(c.merge_interval_ms, 0);
+        assert_eq!(c.health_interval_ms, 50);
+        assert_eq!(c.steal_budget, 2);
+        assert_eq!((c.worker_threads, c.worker_queue_cap), (1, 3));
+        assert!(c.access_log);
+        // joins + spawns compose; stray commas are tolerated
+        let c = fleet_config(&args("fleet --spawn-workers 1 --worker-addrs 127.0.0.1:7463,"))
+            .unwrap();
+        assert_eq!((c.spawn_workers, c.worker_addrs.len()), (1, 1));
+        assert!(fleet_config(&args("fleet --spawn-workers 1 --worker-threads 0")).is_err());
+        assert!(fleet_config(&args("fleet --spawn-workers 1 --health-interval-ms 0")).is_err());
+        assert!(fleet_config(&args("fleet --spawn-workers nope")).is_err());
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Archive replication: periodic pull-merge between the router and its
+//! workers.
+//!
+//! Every worker accumulates solution records locally (its own archive
+//! file); the router holds a fleet-wide merged archive. A merge round is
+//! two passes over the reachable workers:
+//!
+//! 1. **Pull** — page each worker's `GET /v1/archive` (cursor walk,
+//!    [`PAGE_LIMIT`] records a page so a response stays far below the
+//!    client body cap) and fold every record into the merged archive via
+//!    `Archive::merge_record` (content re-keyed, union by fingerprint,
+//!    max hit count wins).
+//! 2. **Push** — page the merged archive back out to each worker via
+//!    `POST /v1/archive/merge` in the same bounded chunks.
+//!
+//! Because the merge operator is idempotent and commutative, rounds
+//! converge: after one full round every reachable worker holds the union,
+//! so an exact resubmission is a zero-eval archive hit at ANY entry point
+//! — the router, or any worker directly. A worker that is down during a
+//! round simply catches up on the next one.
+
+use std::time::Duration;
+
+use crate::serve::{Archive, MergeStats};
+use crate::util::json::Json;
+
+use super::router::Worker;
+
+/// Records per pull page / push chunk. A record dumps to well under 1 KiB,
+/// so 16 keeps each body a few KiB — far below `http::MAX_BODY`.
+pub const PAGE_LIMIT: usize = 16;
+
+/// Per-exchange budget during a merge round; a hung worker costs seconds,
+/// not the client default of minutes.
+const MERGE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Outcome counters for one merge round (surfaced in `/v1/stats`).
+#[derive(Debug, Default, Clone)]
+pub struct RoundStats {
+    /// workers successfully pulled from / pushed to
+    pub pulled: usize,
+    pub pushed: usize,
+    /// workers skipped (down) or that failed mid-transfer
+    pub failed: usize,
+    /// records newly added or hit-raised in the ROUTER's merged archive
+    pub absorbed: usize,
+}
+
+impl RoundStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pulled", Json::Num(self.pulled as f64)),
+            ("pushed", Json::Num(self.pushed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("absorbed", Json::Num(self.absorbed as f64)),
+        ])
+    }
+}
+
+/// Pull one worker's full archive into `merged`, one page at a time.
+/// Returns the number of records added or raised locally.
+fn pull_worker(w: &Worker, merged: &Archive) -> anyhow::Result<usize> {
+    let mut absorbed = 0usize;
+    let mut cursor: Option<String> = None;
+    loop {
+        let path = match &cursor {
+            Some(c) => format!("/v1/archive?limit={PAGE_LIMIT}&cursor={c}"),
+            None => format!("/v1/archive?limit={PAGE_LIMIT}"),
+        };
+        let (status, body) = w.call_timeout("GET", &path, None, MERGE_TIMEOUT)?;
+        anyhow::ensure!(status == 200, "{}: GET /v1/archive -> {status}", w.name);
+        let stats: MergeStats = merged.merge_json(&body)?;
+        absorbed += stats.added + stats.raised;
+        match body.get("next_cursor").and_then(Json::as_str) {
+            Some(c) => cursor = Some(c.to_string()),
+            None => return Ok(absorbed),
+        }
+    }
+}
+
+/// Push the merged archive to one worker, chunk by chunk. The worker's
+/// merge endpoint applies the same max-hits union, so re-sending records
+/// it already holds is a no-op, not double counting.
+fn push_worker(w: &Worker, merged: &Archive) -> anyhow::Result<()> {
+    let mut cursor: Option<String> = None;
+    loop {
+        let (page, next) = merged.page(cursor.as_deref(), PAGE_LIMIT);
+        if page.is_empty() {
+            return Ok(());
+        }
+        let records = Json::Obj(page.into_iter().collect());
+        let body = Json::obj(vec![("records", records)]);
+        let (status, _) =
+            w.call_timeout("POST", "/v1/archive/merge", Some(&body), MERGE_TIMEOUT)?;
+        anyhow::ensure!(status == 200, "{}: POST /v1/archive/merge -> {status}", w.name);
+        match next {
+            Some(c) => cursor = Some(c),
+            None => return Ok(()),
+        }
+    }
+}
+
+/// One full pull-then-push round over the given workers. Workers marked
+/// down are skipped outright (they catch up next round); a worker that
+/// fails mid-transfer is counted and the round continues — replication is
+/// best-effort per round, convergent across rounds.
+pub fn merge_round(workers: &[std::sync::Arc<Worker>], merged: &Archive) -> RoundStats {
+    let mut st = RoundStats::default();
+    for w in workers {
+        if !w.is_up() {
+            st.failed += 1;
+            continue;
+        }
+        match pull_worker(w, merged) {
+            Ok(n) => {
+                st.pulled += 1;
+                st.absorbed += n;
+            }
+            Err(e) => {
+                st.failed += 1;
+                eprintln!("fleet: pull from {} failed: {e:#}", w.name);
+                continue; // don't push stale state over a flaky link
+            }
+        }
+    }
+    for w in workers {
+        if !w.is_up() {
+            continue;
+        }
+        match push_worker(w, merged) {
+            Ok(()) => st.pushed += 1,
+            Err(e) => {
+                st.failed += 1;
+                eprintln!("fleet: push to {} failed: {e:#}", w.name);
+            }
+        }
+    }
+    st
+}

@@ -1,0 +1,462 @@
+//! `releq fleet`: a front-end router over N `releq serve` workers.
+//!
+//! One `releq serve` daemon is bounded by one process's engine pool. The
+//! fleet scales the serve surface horizontally without giving up the two
+//! properties that make the daemon fast — warm sessions and the solution
+//! archive:
+//!
+//! * **Consistent-hash placement** ([`ring`]): jobs route by session key
+//!   (net + env-config fingerprint), so repeat jobs land on the worker
+//!   that already pretrained that exact env. One pretrain per session
+//!   fleet-wide, not per worker.
+//! * **Health-aware fallback + work stealing** ([`router`]): a down or
+//!   draining home worker is skipped (least-loaded fallback), and a home
+//!   worker answering 429 hands the job to up to `--steal-budget` ring
+//!   successors before the 429 reaches the client.
+//! * **Archive replication** ([`merge`]): periodic pull-merge rounds make
+//!   every worker's solved records visible fleet-wide (content-addressed
+//!   union, max hit count wins), so an exact resubmission is a zero-eval
+//!   archive hit at any entry point.
+//! * **Keep-alive transport** (`serve::http`): router→worker requests
+//!   multiplex over pooled persistent connections.
+//!
+//! The router itself holds no engine, no artifacts, and no sessions — it
+//! can run anywhere. Workers are spawned as child processes
+//! (`--spawn-workers N`, ephemeral ports, per-worker archives) and/or
+//! joined at known addresses (`--worker-addrs host:port,...`).
+
+pub mod merge;
+pub mod ring;
+pub mod router;
+
+pub use merge::RoundStats;
+pub use ring::{job_key, Ring, DEFAULT_VNODES};
+pub use router::{Health, Router, Worker};
+
+use std::io::BufRead;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::FleetConfig;
+use crate::serve::http::{self, Request, Response};
+use crate::serve::{page_params, Archive};
+use crate::util::json::Json;
+use crate::util::lock_recover;
+
+/// Budget for one worker's drain during fleet shutdown — generous, since
+/// a drain finishes every in-flight search episode.
+const SHUTDOWN_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Shared fleet state handed to every connection thread.
+pub struct Fleet {
+    pub router: Arc<Router>,
+    /// the fleet-wide merged archive (what `GET /v1/archive` serves)
+    pub archive: Arc<Archive>,
+    cfg: FleetConfig,
+    local_addr: SocketAddr,
+    shutdown: AtomicBool,
+    /// spawned `releq serve` child processes (empty for pure joins)
+    children: Mutex<Vec<Child>>,
+    merge_rounds: AtomicU64,
+    last_merge: Mutex<RoundStats>,
+}
+
+/// The bound-but-not-yet-serving fleet front end; `bind` then `run`.
+pub struct FleetServer {
+    listener: TcpListener,
+    fleet: Arc<Fleet>,
+}
+
+impl FleetServer {
+    pub fn bind(cfg: FleetConfig) -> Result<FleetServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        let archive = Arc::new(Archive::open(&cfg.archive)?);
+        let mut workers: Vec<Arc<Worker>> = Vec::new();
+        let mut children = Vec::new();
+        for i in 0..cfg.spawn_workers {
+            let (w, child) = spawn_worker(i, &cfg)?;
+            workers.push(Arc::new(w));
+            children.push(child);
+        }
+        for addr in &cfg.worker_addrs {
+            // joined workers are named by address — stable across router
+            // restarts, which keeps ring placement stable too
+            workers.push(Arc::new(Worker::new(addr, addr)));
+        }
+        // one synchronous probe so the first route sees real health/load
+        for w in &workers {
+            w.probe();
+        }
+        let router = Arc::new(Router::new(workers, cfg.steal_budget));
+        Ok(FleetServer {
+            listener,
+            fleet: Arc::new(Fleet {
+                router,
+                archive,
+                cfg,
+                local_addr,
+                shutdown: AtomicBool::new(false),
+                children: Mutex::new(children),
+                merge_rounds: AtomicU64::new(0),
+                last_merge: Mutex::new(RoundStats::default()),
+            }),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.fleet.local_addr
+    }
+
+    pub fn fleet(&self) -> Arc<Fleet> {
+        self.fleet.clone()
+    }
+
+    /// Accept loop plus the two background threads (health monitor,
+    /// periodic merge). Returns after a `POST /v1/shutdown` has merged
+    /// archives, drained the workers, and persisted the fleet archive.
+    pub fn run(self) -> Result<()> {
+        let f = self.fleet.clone();
+        std::thread::spawn(move || health_loop(&f));
+        if self.fleet.cfg.merge_interval_ms > 0 {
+            let f = self.fleet.clone();
+            std::thread::spawn(move || merge_loop(&f));
+        }
+        for conn in self.listener.incoming() {
+            if self.fleet.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[fleet] accept error: {e}");
+                    continue;
+                }
+            };
+            let f = self.fleet.clone();
+            std::thread::spawn(move || handle_conn(&f, stream));
+        }
+        self.fleet.reap_children();
+        Ok(())
+    }
+}
+
+fn handle_conn(f: &Arc<Fleet>, stream: TcpStream) {
+    let st = http::serve_conn(stream, f.cfg.access_log, "fleet", |req| route(f, req));
+    if st.exit {
+        f.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(f.local_addr); // kick the accept loop
+    }
+}
+
+fn health_loop(f: &Arc<Fleet>) {
+    let interval = Duration::from_millis(f.cfg.health_interval_ms);
+    while !f.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(interval);
+        for w in &f.router.workers {
+            w.probe();
+        }
+    }
+}
+
+fn merge_loop(f: &Arc<Fleet>) {
+    let interval = Duration::from_millis(f.cfg.merge_interval_ms);
+    while !f.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(interval);
+        if f.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        f.run_merge();
+    }
+}
+
+impl Fleet {
+    /// One replication round: pull-merge every reachable worker, push the
+    /// union back out, persist the merged archive (throttled).
+    pub fn run_merge(&self) -> RoundStats {
+        let round = merge::merge_round(&self.router.workers, &self.archive);
+        self.merge_rounds.fetch_add(1, Ordering::Relaxed);
+        *lock_recover(&self.last_merge) = round.clone();
+        if let Err(e) = self.archive.save_throttled(Duration::from_secs(5)) {
+            eprintln!("[fleet] archive save after merge failed: {e:#}");
+        }
+        round
+    }
+
+    /// Wait briefly for spawned workers to exit on their own (they were
+    /// just asked to shut down), then make sure.
+    fn reap_children(&self) {
+        let mut children = lock_recover(&self.children);
+        for _ in 0..50 {
+            if children.iter_mut().all(|c| matches!(c.try_wait(), Ok(Some(_)))) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        for c in children.iter_mut() {
+            if !matches!(c.try_wait(), Ok(Some(_))) {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+}
+
+/// Dispatch one request. The bool asks the accept loop to exit (completed
+/// fleet shutdown). Same surface as one worker, plus
+/// `POST /v1/fleet/merge` to force a replication round.
+pub fn route(f: &Fleet, req: &Request) -> (Response, bool) {
+    let path = req.path.split('?').next().unwrap_or("");
+    let segs: Vec<&str> = path.trim_matches('/').split('/').collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["v1", "jobs"]) => {
+            let body = match req.json() {
+                Ok(j) => j,
+                Err(e) => return (Response::error(400, &format!("{e:#}")), false),
+            };
+            (f.router.submit(&body), false)
+        }
+        ("GET", ["v1", "jobs"]) => (list_jobs(f, req), false),
+        ("GET", ["v1", "jobs", id]) => (f.router.forward_job(id, "GET", ""), false),
+        ("GET", ["v1", "jobs", id, "result"]) => {
+            (f.router.forward_job(id, "GET", "/result"), false)
+        }
+        ("POST", ["v1", "jobs", id, "cancel"]) => {
+            (f.router.forward_job(id, "POST", "/cancel"), false)
+        }
+        ("GET", ["v1", "archive"]) => (list_archive(f, req), false),
+        ("POST", ["v1", "archive", "merge"]) => (merge_in(f, req), false),
+        ("POST", ["v1", "fleet", "merge"]) => {
+            let round = f.run_merge();
+            let mut out = match round.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("RoundStats::to_json returns an object"),
+            };
+            out.insert("records".to_string(), Json::Num(f.archive.len() as f64));
+            (Response::ok(Json::Obj(out)), false)
+        }
+        ("GET", ["v1", "stats"]) => (stats(f), false),
+        ("GET", ["v1", "health"]) => (f.router.health(), false),
+        ("POST", ["v1", "networks"]) => {
+            let body = match req.json() {
+                Ok(j) => j,
+                Err(e) => return (Response::error(400, &format!("{e:#}")), false),
+            };
+            (f.router.broadcast("POST", "/v1/networks", &body), false)
+        }
+        ("POST", ["v1", "shutdown"]) => shutdown_fleet(f),
+        _ => {
+            let known = matches!(
+                segs.as_slice(),
+                ["v1", "jobs"]
+                    | ["v1", "jobs", _]
+                    | ["v1", "jobs", _, "result"]
+                    | ["v1", "jobs", _, "cancel"]
+                    | ["v1", "archive"]
+                    | ["v1", "archive", "merge"]
+                    | ["v1", "fleet", "merge"]
+                    | ["v1", "stats"]
+                    | ["v1", "health"]
+                    | ["v1", "networks"]
+                    | ["v1", "shutdown"]
+            );
+            if known {
+                (Response::error(405, "method not allowed for this endpoint"), false)
+            } else {
+                (Response::error(404, "no such endpoint"), false)
+            }
+        }
+    }
+}
+
+/// `GET /v1/jobs` on the fleet surface: fleet-id cursor over the router's
+/// job table (same `?cursor=&limit=` contract as one worker).
+fn list_jobs(f: &Fleet, req: &Request) -> Response {
+    let (cursor, limit) = match page_params(req) {
+        Ok(p) => p,
+        Err(resp) => return resp,
+    };
+    let cursor = match cursor {
+        None => None,
+        Some(c) => match c.parse::<u64>() {
+            Ok(n) => Some(n),
+            Err(_) => return Response::error(400, "cursor must be a job id"),
+        },
+    };
+    f.router.list_jobs(cursor, limit)
+}
+
+/// `GET /v1/archive` serves the MERGED fleet archive (complete as of the
+/// last replication round).
+fn list_archive(f: &Fleet, req: &Request) -> Response {
+    let (cursor, limit) = match page_params(req) {
+        Ok(p) => p,
+        Err(resp) => return resp,
+    };
+    let (records, next) = f.archive.page(cursor.as_deref(), limit);
+    Response::ok(Json::obj(vec![
+        ("records", Json::Obj(records.into_iter().collect())),
+        ("next_cursor", next.map(Json::Str).unwrap_or(Json::Null)),
+    ]))
+}
+
+/// `POST /v1/archive/merge` into the merged archive — lets an external
+/// feed (another fleet, a backup) seed records; the next push round
+/// propagates them to the workers.
+fn merge_in(f: &Fleet, req: &Request) -> Response {
+    let body = match req.json() {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    match f.archive.merge_json(&body) {
+        Ok(st) => {
+            let mut out = match st.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("MergeStats::to_json returns an object"),
+            };
+            out.insert("records".to_string(), Json::Num(f.archive.len() as f64));
+            Response::ok(Json::Obj(out))
+        }
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    }
+}
+
+fn stats(f: &Fleet) -> Response {
+    let extra = vec![
+        (
+            "archive",
+            Json::obj(vec![
+                ("path", Json::Str(f.archive.path().display().to_string())),
+                ("records", Json::Num(f.archive.len() as f64)),
+            ]),
+        ),
+        (
+            "merge",
+            Json::obj(vec![
+                (
+                    "rounds",
+                    Json::Num(f.merge_rounds.load(Ordering::Relaxed) as f64),
+                ),
+                ("last", lock_recover(&f.last_merge).to_json()),
+            ]),
+        ),
+    ];
+    Response::ok(f.router.stats(extra))
+}
+
+/// Fleet shutdown: final replication round (no worker's solutions are
+/// lost), drain every reachable worker, persist the merged archive. Dead
+/// workers are tolerated — a fleet that lost a worker still exits clean.
+fn shutdown_fleet(f: &Fleet) -> (Response, bool) {
+    let round = merge::merge_round(&f.router.workers, &f.archive);
+    let mut drained = 0usize;
+    let mut unreachable = 0usize;
+    for w in &f.router.workers {
+        match w.call_timeout("POST", "/v1/shutdown", None, SHUTDOWN_TIMEOUT) {
+            Ok((200, _)) => drained += 1,
+            Ok(_) | Err(_) => unreachable += 1,
+        }
+    }
+    let body = vec![
+        ("drained_workers", Json::Num(drained as f64)),
+        ("unreachable_workers", Json::Num(unreachable as f64)),
+        ("final_merge", round.to_json()),
+        ("archived_records", Json::Num(f.archive.len() as f64)),
+    ];
+    match f.archive.save() {
+        Ok(()) => (Response::ok(Json::obj(body)), true),
+        Err(e) => (
+            Response::error(500, &format!("workers drained, but archive save failed: {e:#}")),
+            true,
+        ),
+    }
+}
+
+/// Per-worker archive path: `<stem>.w{i}.json` beside the fleet archive.
+fn worker_archive(base: &std::path::Path, i: usize) -> std::path::PathBuf {
+    let stem = base
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("fleet_archive");
+    base.with_file_name(format!("{stem}.w{i}.json"))
+}
+
+/// Spawn one `releq serve` child on an ephemeral port and parse its
+/// listening address off stdout. The child's remaining output is echoed
+/// with a `[w{i}]` prefix so fleet logs stay attributable.
+fn spawn_worker(i: usize, cfg: &FleetConfig) -> Result<(Worker, Child)> {
+    let exe = std::env::current_exe().context("resolving the releq binary for worker spawn")?;
+    let archive = worker_archive(&cfg.archive, i);
+    let mut cmd = Command::new(exe);
+    cmd.arg("serve")
+        .args(["--addr", "127.0.0.1:0"])
+        .arg("--archive")
+        .arg(&archive)
+        .args(["--workers", &cfg.worker_threads.to_string()])
+        .args(["--queue-cap", &cfg.worker_queue_cap.to_string()])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    if cfg.access_log {
+        cmd.arg("--access-log");
+    }
+    let mut child = cmd.spawn().with_context(|| format!("spawning worker {i}"))?;
+    let stdout = child.stdout.take().context("worker stdout")?;
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut addr = None;
+    let mut line = String::new();
+    // the listening line is among the first prints; engine bring-up
+    // happens before bind, so just read until we see it (or EOF = the
+    // worker died, e.g. missing artifacts)
+    for _ in 0..64 {
+        line.clear();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        eprintln!("[w{i}] {}", line.trim_end());
+        if let Some(pos) = line.find("listening on http://") {
+            addr = Some(line[pos + "listening on http://".len()..].trim().to_string());
+            break;
+        }
+    }
+    let Some(addr) = addr else {
+        let _ = child.kill();
+        let _ = child.wait();
+        anyhow::bail!("worker {i} exited before reporting a listening address");
+    };
+    std::thread::spawn(move || {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => eprintln!("[w{i}] {}", line.trim_end()),
+            }
+        }
+    });
+    Ok((Worker::new(&format!("w{i}"), &addr), child))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_archive_paths_sit_beside_the_fleet_archive() {
+        let base = std::path::Path::new("/data/fleet_archive.json");
+        assert_eq!(
+            worker_archive(base, 0),
+            std::path::Path::new("/data/fleet_archive.w0.json")
+        );
+        assert_eq!(
+            worker_archive(std::path::Path::new("arch.json"), 2),
+            std::path::Path::new("arch.w2.json")
+        );
+    }
+}

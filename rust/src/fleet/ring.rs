@@ -1,0 +1,185 @@
+//! Consistent-hash ring over worker names.
+//!
+//! The router's job placement must be *sticky*: a given (net, env
+//! fingerprint) pair should land on the same worker every time, so that
+//! worker's QuantEnv / AccMemo session is already warm and the fleet as a
+//! whole preserves the one-pretrain invariant. A consistent hash gives
+//! that stickiness **and** minimal reshuffle: adding or removing one
+//! worker moves only the keys that hash adjacent to its points — every
+//! other session stays home, warm.
+//!
+//! Implementation is the classic vnode ring: each worker name is hashed
+//! at [`DEFAULT_VNODES`] points (FNV-1a of `name` + vnode index, the
+//! repo's one stable hash, so placement is identical across builds and
+//! hosts), the points are kept sorted, and a key routes to the first
+//! point clockwise from its own hash ([`Ring::route`]). Fallback order
+//! for work stealing and health-aware skipping is the continued
+//! clockwise walk ([`Ring::successors`]): deterministic, and distinct —
+//! each worker appears once.
+
+use crate::util::fnv::Fnv;
+
+/// Vnodes per worker. 64 points per worker keeps the expected load
+/// imbalance across a handful of workers within a few percent while the
+/// whole ring stays a few-KB sorted Vec.
+pub const DEFAULT_VNODES: usize = 64;
+
+/// Immutable ring over worker indices `0..names.len()`.
+pub struct Ring {
+    /// Sorted (point hash, worker index). Ties (astronomically unlikely
+    /// with 64-bit FNV) resolve by worker index via the tuple sort.
+    points: Vec<(u64, usize)>,
+    workers: usize,
+}
+
+impl Ring {
+    pub fn new(names: &[String], vnodes: usize) -> Ring {
+        let mut points = Vec::with_capacity(names.len() * vnodes);
+        for (i, name) in names.iter().enumerate() {
+            for v in 0..vnodes {
+                let h = Fnv::new().write_str(name).write_u64(v as u64).finish();
+                points.push((h, i));
+            }
+        }
+        points.sort_unstable();
+        Ring { points, workers: names.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers == 0
+    }
+
+    /// Home worker for `key`: owner of the first ring point at or after
+    /// the key's hash, wrapping at the top.
+    pub fn route(&self, key: u64) -> Option<usize> {
+        self.successors(key).next()
+    }
+
+    /// Workers in ring order starting from `key`'s home, each yielded
+    /// once. This is the steal / fallback order: position 0 is the home
+    /// worker, later positions are progressively "colder" hosts.
+    pub fn successors(&self, key: u64) -> Successors<'_> {
+        let start = self.points.partition_point(|&(h, _)| h < key);
+        Successors { ring: self, pos: start, emitted: 0, seen: vec![false; self.workers] }
+    }
+}
+
+pub struct Successors<'a> {
+    ring: &'a Ring,
+    pos: usize,
+    emitted: usize,
+    seen: Vec<bool>,
+}
+
+impl Iterator for Successors<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.emitted < self.ring.workers {
+            let (_, w) = self.ring.points[self.pos % self.ring.points.len()];
+            self.pos += 1;
+            if !self.seen[w] {
+                self.seen[w] = true;
+                self.emitted += 1;
+                return Some(w);
+            }
+        }
+        None
+    }
+}
+
+/// Affinity key for a job: the session identity the workers themselves
+/// warm caches under. Hashing the env fingerprint (which already folds
+/// net + env config) with the net name again is cheap insurance against
+/// fingerprint collisions across nets.
+pub fn job_key(net: &str, env_fp: u64) -> u64 {
+    Fnv::new().write_str(net).write_u64(env_fp).finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("w{i}")).collect()
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let r = Ring::new(&names(3), DEFAULT_VNODES);
+        for k in 0..200u64 {
+            let key = job_key("net", k);
+            let a = r.route(key).unwrap();
+            let b = r.route(key).unwrap();
+            assert_eq!(a, b);
+            assert!(a < 3);
+        }
+    }
+
+    #[test]
+    fn successors_visit_every_worker_once() {
+        let r = Ring::new(&names(4), DEFAULT_VNODES);
+        let order: Vec<usize> = r.successors(job_key("net", 7)).collect();
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn removing_a_worker_only_moves_its_own_keys() {
+        // Ring semantics, not Vec-index semantics: compare by NAME. With
+        // ["w0","w1","w2"] vs ["w0","w2"], every key w1 did not own must
+        // keep its owner name.
+        let full = Ring::new(&names(3), DEFAULT_VNODES);
+        let reduced_names = vec!["w0".to_string(), "w2".to_string()];
+        let reduced = Ring::new(&reduced_names, DEFAULT_VNODES);
+        let all = names(3);
+        let mut moved = 0usize;
+        for k in 0..500u64 {
+            let key = job_key("net", k);
+            let before = &all[full.route(key).unwrap()];
+            let after = &reduced_names[reduced.route(key).unwrap()];
+            if before == "w1" {
+                moved += 1; // orphaned keys must land somewhere
+            } else {
+                assert_eq!(before, after, "key {k} moved off a surviving worker");
+            }
+        }
+        assert!(moved > 0, "w1 owned no keys — vnode spread is broken");
+    }
+
+    #[test]
+    fn joining_a_worker_only_claims_keys_for_itself() {
+        let small = Ring::new(&names(3), DEFAULT_VNODES);
+        let grown = Ring::new(&names(4), DEFAULT_VNODES);
+        let mut claimed = 0usize;
+        for k in 0..500u64 {
+            let key = job_key("net", k);
+            let before = small.route(key).unwrap();
+            let after = grown.route(key).unwrap();
+            if after == 3 {
+                claimed += 1;
+            } else {
+                assert_eq!(before, after, "key {k} moved between pre-existing workers");
+            }
+        }
+        assert!(claimed > 0, "the new worker claimed nothing");
+    }
+
+    #[test]
+    fn load_spread_is_roughly_uniform() {
+        let r = Ring::new(&names(4), DEFAULT_VNODES);
+        let mut counts = [0usize; 4];
+        for k in 0..4000u64 {
+            counts[r.route(job_key("net", k)).unwrap()] += 1;
+        }
+        for &c in &counts {
+            // expected 1000 each; 64 vnodes keeps skew well inside 2x
+            assert!(c > 400 && c < 2000, "skewed spread: {counts:?}");
+        }
+    }
+}

@@ -1,0 +1,567 @@
+//! The fleet's front end: job placement, forwarding, and aggregation.
+//!
+//! The router owns the public HTTP surface and forwards every job to one
+//! of N `releq serve` workers. Placement is the consistent hash in
+//! [`super::ring`] keyed on the job's session identity (net + env config
+//! fingerprint), so repeat jobs land on the worker whose QuantEnv /
+//! AccMemo is already warm — the one-pretrain invariant, fleet-wide.
+//! When the home worker is unavailable the fallback order is
+//! health-aware and least-loaded: ring successors, with the tail sorted
+//! by each worker's last observed queue depth. A home worker answering
+//! 429 (queue full) triggers bounded work stealing — up to
+//! `steal_budget` additional workers are offered the job before the 429
+//! is surfaced to the client.
+//!
+//! Transport is the keep-alive [`Conn`] pool, one pool per worker:
+//! router→worker exchanges reuse sockets instead of paying TCP setup per
+//! request. One sharp edge is inherent to that design: a pooled
+//! connection can go stale (worker restarted, idle timeout fired), which
+//! surfaces as an error on the NEXT request. The pool retries exactly
+//! once on a fresh dial. For a `POST /v1/jobs` this can double-submit if
+//! the stale connection actually delivered the request before dying —
+//! bounded waste, not corruption: the duplicate lands on the same warm
+//! session and (for archive-hit jobs) costs zero evaluations.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config;
+use crate::serve::env_fingerprint;
+use crate::serve::http::{self, Conn, Response};
+use crate::util::json::Json;
+use crate::util::lock_recover;
+
+use super::ring::{job_key, Ring, DEFAULT_VNODES};
+
+/// Pooled keep-alive connections kept per worker. Two is enough for the
+/// router's concurrency sweet spot (submissions + a poll stream); excess
+/// connections are simply closed on return.
+const POOL_CAP: usize = 2;
+/// Fleet job-table retention. Old completed mappings age out lowest-id
+/// first, mirroring the workers' own finished-job retention.
+const JOB_TABLE_CAP: usize = 4096;
+/// Health-probe budget: a hung worker costs milliseconds per round.
+pub const PROBE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Health as last observed by the monitor thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// `/v1/health` answered 200
+    Up,
+    /// reachable but degraded (health answered non-200: breaker open,
+    /// watchdog tripped, draining)
+    Degraded,
+    /// unreachable
+    Down,
+}
+
+const H_UP: u8 = 0;
+const H_DEGRADED: u8 = 1;
+const H_DOWN: u8 = 2;
+
+/// One worker as the router sees it: address, health, load estimate, and
+/// a keep-alive connection pool.
+pub struct Worker {
+    /// display name (`w0`.. for spawned workers, the address for joins)
+    pub name: String,
+    pub addr: String,
+    health: AtomicU8,
+    /// last observed `queue_depth + running` from the health probe — the
+    /// "least-loaded" ordering key for fallback placement
+    load: AtomicU64,
+    /// jobs this router routed here (lifetime counter)
+    pub routed: AtomicU64,
+    pool: Mutex<Vec<Conn>>,
+}
+
+impl Worker {
+    pub fn new(name: &str, addr: &str) -> Worker {
+        Worker {
+            name: name.to_string(),
+            addr: addr.to_string(),
+            // optimistic start: workers are probed before the first route
+            health: AtomicU8::new(H_UP),
+            load: AtomicU64::new(0),
+            routed: AtomicU64::new(0),
+            pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn health(&self) -> Health {
+        match self.health.load(Ordering::Relaxed) {
+            H_UP => Health::Up,
+            H_DEGRADED => Health::Degraded,
+            _ => Health::Down,
+        }
+    }
+
+    /// Reachable (Up or Degraded) — the merge loop still replicates with
+    /// a degraded worker; only routing avoids it.
+    pub fn is_up(&self) -> bool {
+        self.health.load(Ordering::Relaxed) != H_DOWN
+    }
+
+    /// Eligible for new job placements.
+    pub fn routable(&self) -> bool {
+        self.health.load(Ordering::Relaxed) == H_UP
+    }
+
+    pub fn load(&self) -> u64 {
+        self.load.load(Ordering::Relaxed)
+    }
+
+    fn set_health(&self, h: u8) {
+        self.health.store(h, Ordering::Relaxed);
+    }
+
+    /// One `/v1/health` probe: updates health state and the load
+    /// estimate. Called by the fleet's monitor thread and once at
+    /// startup before the first route.
+    pub fn probe(&self) -> Health {
+        match http::request_timeout(&self.addr, "GET", "/v1/health", None, PROBE_TIMEOUT) {
+            Ok((status, body)) => {
+                let depth = body.get("queue_depth").and_then(Json::as_f64).unwrap_or(0.0);
+                let running = body.get("running").and_then(Json::as_f64).unwrap_or(0.0);
+                self.load.store((depth + running) as u64, Ordering::Relaxed);
+                self.set_health(if status == 200 { H_UP } else { H_DEGRADED });
+            }
+            Err(_) => self.set_health(H_DOWN),
+        }
+        self.health()
+    }
+
+    /// One request over the pooled keep-alive transport. A stale pooled
+    /// connection is retried exactly once on a fresh dial (see the module
+    /// docs for the double-submit caveat). A transport failure on the
+    /// fresh dial marks the worker Down immediately — the health monitor
+    /// will bring it back when it answers again.
+    pub fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        if let Some(mut c) = lock_recover(&self.pool).pop() {
+            if let Ok(r) = c.request(method, path, body) {
+                self.recycle(c);
+                return Ok(r);
+            }
+            // stale pooled socket — fall through to a fresh dial
+        }
+        let mut c = match Conn::connect(&self.addr) {
+            Ok(c) => c,
+            Err(e) => {
+                self.set_health(H_DOWN);
+                return Err(e);
+            }
+        };
+        match c.request(method, path, body) {
+            Ok(r) => {
+                self.recycle(c);
+                Ok(r)
+            }
+            Err(e) => {
+                self.set_health(H_DOWN);
+                Err(e)
+            }
+        }
+    }
+
+    /// Close-mode request with an explicit budget — the merge loop's
+    /// transport (periodic bulk transfer doesn't need the pool, and must
+    /// not hang behind a wedged worker).
+    pub fn call_timeout(
+        &self, method: &str, path: &str, body: Option<&Json>, timeout: Duration,
+    ) -> Result<(u16, Json)> {
+        http::request_timeout(&self.addr, method, path, body, timeout)
+    }
+
+    fn recycle(&self, c: Conn) {
+        if c.is_reusable() {
+            let mut pool = lock_recover(&self.pool);
+            if pool.len() < POOL_CAP {
+                pool.push(c);
+            }
+        }
+    }
+}
+
+/// Router-side counters, surfaced under `router` in `/v1/stats`.
+#[derive(Default)]
+pub struct Counters {
+    /// jobs successfully placed
+    pub routed: AtomicU64,
+    /// ... on their consistent-hash home worker
+    pub routed_home: AtomicU64,
+    /// ... on another worker after the home answered 429 (work stealing)
+    pub stolen: AtomicU64,
+    /// ... on another worker because the home was down/degraded/draining
+    pub rerouted: AtomicU64,
+    /// submissions the whole fleet refused (every candidate full/down)
+    pub shed: AtomicU64,
+}
+
+impl Counters {
+    fn json(&self) -> Json {
+        let n = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("routed", n(&self.routed)),
+            ("routed_home", n(&self.routed_home)),
+            ("stolen", n(&self.stolen)),
+            ("rerouted", n(&self.rerouted)),
+            ("shed", n(&self.shed)),
+        ])
+    }
+}
+
+/// Placement + forwarding state. Shared (behind `Arc`) between the fleet
+/// server's connection threads.
+pub struct Router {
+    pub workers: Vec<Arc<Worker>>,
+    ring: Ring,
+    steal_budget: usize,
+    /// fleet job id → (worker index, worker-local job id)
+    jobs: Mutex<BTreeMap<u64, (usize, u64)>>,
+    next_id: AtomicU64,
+    pub counters: Counters,
+}
+
+impl Router {
+    pub fn new(workers: Vec<Arc<Worker>>, steal_budget: usize) -> Router {
+        let names: Vec<String> = workers.iter().map(|w| w.name.clone()).collect();
+        Router {
+            ring: Ring::new(&names, DEFAULT_VNODES),
+            workers,
+            steal_budget,
+            jobs: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            counters: Counters::default(),
+        }
+    }
+
+    /// Candidate order for a job: consistent-hash home first, then the
+    /// remaining ring successors sorted by observed load (stable sort, so
+    /// equal loads keep deterministic ring order).
+    fn placement(&self, key: u64) -> Vec<usize> {
+        let mut order: Vec<usize> = self.ring.successors(key).collect();
+        if order.len() > 1 {
+            order[1..].sort_by_key(|&i| self.workers[i].load());
+        }
+        order
+    }
+
+    /// `POST /v1/jobs`: validate, place, forward, and rewrite ids.
+    ///
+    /// The router parses the body only to validate early (a 400 must not
+    /// consume fleet capacity or steal budget) and to derive the affinity
+    /// key; the submission forwarded to the worker is the same JSON. The
+    /// worker derives its archive fingerprints from the PARSED config,
+    /// so routing through the fleet cannot perturb them — the
+    /// bit-identical guarantee holds by construction.
+    pub fn submit(&self, body: &Json) -> Response {
+        let spec = match config::job_from_json(body) {
+            Ok(s) => s,
+            Err(e) => return Response::error(400, &format!("{e:#}")),
+        };
+        // bits_max=0: the router doesn't resolve the network (that needs
+        // the worker's registry); a fixed value keeps the key a pure
+        // function of the submission, which is all placement needs
+        let key = job_key(&spec.net, env_fingerprint(&spec.net, 0, &spec.cfg.env));
+        let order = self.placement(key);
+        let home = order.first().copied();
+
+        let mut steal_left = self.steal_budget;
+        let mut saw_429 = false;
+        let mut last_refusal: Option<Response> = None;
+        for &wi in &order {
+            let w = &self.workers[wi];
+            if !w.routable() {
+                continue; // health-aware skip — no request wasted
+            }
+            match w.call("POST", "/v1/jobs", Some(body)) {
+                Ok((429, b)) => {
+                    last_refusal = Some(Response::status(429, b));
+                    if steal_left == 0 {
+                        break; // stealing budget exhausted — shed
+                    }
+                    steal_left -= 1;
+                    saw_429 = true;
+                }
+                Ok((503, b)) => {
+                    // draining/degraded: fall through to the next worker
+                    last_refusal = Some(Response::status(503, b));
+                }
+                Ok((status, b)) if status == 200 || status == 202 => {
+                    return self.placed(status, b, wi, home, saw_429);
+                }
+                Ok((status, b)) => {
+                    // 400 and friends are the CLIENT's problem — every
+                    // worker would answer the same; forward as-is
+                    return Response::status(status, b);
+                }
+                Err(_) => {
+                    // transport failure; `call` already marked it Down
+                    last_refusal = Some(Response::error(503, "worker unreachable"));
+                }
+            }
+        }
+        self.counters.shed.fetch_add(1, Ordering::Relaxed);
+        last_refusal
+            .unwrap_or_else(|| Response::error(503, "no healthy workers in the fleet"))
+    }
+
+    /// Book-keep a successful placement and rewrite the response: the
+    /// worker-local id becomes a fleet id, and the response is annotated
+    /// with the worker name (which the access log picks up).
+    fn placed(
+        &self, status: u16, body: Json, wi: usize, home: Option<usize>, stolen: bool,
+    ) -> Response {
+        let w = &self.workers[wi];
+        w.routed.fetch_add(1, Ordering::Relaxed);
+        self.counters.routed.fetch_add(1, Ordering::Relaxed);
+        if Some(wi) == home {
+            self.counters.routed_home.fetch_add(1, Ordering::Relaxed);
+        } else if stolen {
+            self.counters.stolen.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counters.rerouted.fetch_add(1, Ordering::Relaxed);
+        }
+        let remote_id = body.get("id").and_then(Json::as_f64).map(|f| f as u64);
+        let fleet_id = match remote_id {
+            Some(rid) => {
+                let fid = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let mut jobs = lock_recover(&self.jobs);
+                jobs.insert(fid, (wi, rid));
+                while jobs.len() > JOB_TABLE_CAP {
+                    let oldest = *jobs.keys().next().unwrap();
+                    jobs.remove(&oldest);
+                }
+                Some(fid)
+            }
+            None => None,
+        };
+        Response::status(status, annotate(body, fleet_id, &w.name))
+    }
+
+    /// Forward a per-job request (`GET status`, `GET result`,
+    /// `POST cancel`) to the worker that owns the job.
+    pub fn forward_job(&self, fleet_id: &str, method: &str, suffix: &str) -> Response {
+        let Ok(fid) = fleet_id.parse::<u64>() else {
+            return Response::error(400, "job id must be a number");
+        };
+        let Some((wi, rid)) = lock_recover(&self.jobs).get(&fid).copied() else {
+            return Response::error(404, "no such job (finished jobs are retained briefly)");
+        };
+        let w = &self.workers[wi];
+        let path = format!("/v1/jobs/{rid}{suffix}");
+        match w.call(method, &path, None) {
+            Ok((status, body)) => Response::status(status, annotate(body, Some(fid), &w.name)),
+            Err(e) => Response::error(503, &format!("worker {} unreachable: {e:#}", w.name)),
+        }
+    }
+
+    /// `GET /v1/jobs`: page over the fleet job table (id order), fetching
+    /// each job's live summary from its worker. O(limit) pooled-transport
+    /// round trips, bounded by the shared `LIST_LIMIT_MAX` clamp.
+    pub fn list_jobs(&self, cursor: Option<u64>, limit: usize) -> Response {
+        let page: Vec<(u64, (usize, u64))> = {
+            let jobs = lock_recover(&self.jobs);
+            let start = match cursor {
+                Some(c) => std::ops::Bound::Excluded(c),
+                None => std::ops::Bound::Unbounded,
+            };
+            jobs.range((start, std::ops::Bound::Unbounded))
+                .take(limit + 1)
+                .map(|(k, v)| (*k, *v))
+                .collect()
+        };
+        let next = if page.len() > limit { page.get(limit - 1).map(|(k, _)| *k) } else { None };
+        let mut out = Vec::new();
+        for &(fid, (wi, rid)) in page.iter().take(limit) {
+            let w = &self.workers[wi];
+            let row = match w.call("GET", &format!("/v1/jobs/{rid}"), None) {
+                Ok((200, body)) => {
+                    // summary shape, not the full status: drop the tail
+                    let mut m = match annotate(body, Some(fid), &w.name) {
+                        Json::Obj(m) => m,
+                        other => return Response::error(500, &format!("bad worker body {other:?}")),
+                    };
+                    m.remove("tail");
+                    Json::Obj(m)
+                }
+                Ok((_, _)) | Err(_) => Json::obj(vec![
+                    ("id", Json::Num(fid as f64)),
+                    ("worker", Json::Str(w.name.clone())),
+                    ("status", Json::Str("unknown".to_string())),
+                ]),
+            };
+            out.push(row);
+        }
+        Response::ok(Json::obj(vec![
+            ("jobs", Json::Arr(out)),
+            ("next_cursor", next.map(|n| Json::Str(n.to_string())).unwrap_or(Json::Null)),
+        ]))
+    }
+
+    /// Aggregate `/v1/stats` across the fleet: router counters + each
+    /// worker's own stats body (best-effort; a down worker contributes an
+    /// error row instead of stalling the response).
+    pub fn stats(&self, extra: Vec<(&'static str, Json)>) -> Json {
+        let mut per_worker = BTreeMap::new();
+        for w in &self.workers {
+            let row = if w.is_up() {
+                match w.call_timeout("GET", "/v1/stats", None, PROBE_TIMEOUT) {
+                    Ok((200, body)) => body,
+                    Ok((status, _)) => Json::obj(vec![(
+                        "error",
+                        Json::Str(format!("stats answered {status}")),
+                    )]),
+                    Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
+                }
+            } else {
+                Json::obj(vec![("error", Json::Str("down".to_string()))])
+            };
+            let mut m = match row {
+                Json::Obj(m) => m,
+                other => BTreeMap::from([("raw".to_string(), other)]),
+            };
+            m.insert("addr".to_string(), Json::Str(w.addr.clone()));
+            m.insert("health".to_string(), Json::Str(format!("{:?}", w.health())));
+            m.insert("routed".to_string(), Json::Num(w.routed.load(Ordering::Relaxed) as f64));
+            per_worker.insert(w.name.clone(), Json::Obj(m));
+        }
+        let mut fields = vec![
+            ("router", self.counters.json()),
+            ("workers", Json::Obj(per_worker)),
+        ];
+        fields.extend(extra);
+        Json::obj(fields)
+    }
+
+    /// Fleet health: 200 while at least one worker is routable.
+    pub fn health(&self) -> Response {
+        let mut rows = BTreeMap::new();
+        let mut routable = 0usize;
+        for w in &self.workers {
+            if w.routable() {
+                routable += 1;
+            }
+            rows.insert(
+                w.name.clone(),
+                Json::obj(vec![
+                    ("addr", Json::Str(w.addr.clone())),
+                    ("health", Json::Str(format!("{:?}", w.health()))),
+                    ("load", Json::Num(w.load() as f64)),
+                ]),
+            );
+        }
+        let body = Json::obj(vec![
+            (
+                "status",
+                Json::Str(if routable > 0 { "ok" } else { "degraded" }.to_string()),
+            ),
+            ("routable_workers", Json::Num(routable as f64)),
+            ("workers", Json::Obj(rows)),
+        ]);
+        if routable > 0 {
+            Response::ok(body)
+        } else {
+            Response::status(503, body)
+        }
+    }
+
+    /// Broadcast a request to every reachable worker (network installs).
+    /// 200 only when every reachable worker accepted; per-worker outcomes
+    /// in the body either way.
+    pub fn broadcast(&self, method: &str, path: &str, body: &Json) -> Response {
+        let mut rows = BTreeMap::new();
+        let mut failures = 0usize;
+        for w in &self.workers {
+            let outcome = if !w.is_up() {
+                failures += 1;
+                Json::obj(vec![("error", Json::Str("down".to_string()))])
+            } else {
+                match w.call(method, path, Some(body)) {
+                    Ok((status, b)) => {
+                        if status >= 300 {
+                            failures += 1;
+                        }
+                        Json::obj(vec![("status", Json::Num(status as f64)), ("body", b)])
+                    }
+                    Err(e) => {
+                        failures += 1;
+                        Json::obj(vec![("error", Json::Str(format!("{e:#}")))])
+                    }
+                }
+            };
+            rows.insert(w.name.clone(), outcome);
+        }
+        let body = Json::obj(vec![
+            ("ok", Json::Bool(failures == 0)),
+            ("workers", Json::Obj(rows)),
+        ]);
+        if failures == 0 {
+            Response::ok(body)
+        } else {
+            Response::status(502, body)
+        }
+    }
+}
+
+/// Rewrite a worker response for the fleet surface: the worker-local `id`
+/// (when present) becomes the fleet id, and the routed worker's name is
+/// recorded under `worker`. Everything else passes through untouched —
+/// the bit-identical guarantee covers every other field.
+fn annotate(body: Json, fleet_id: Option<u64>, worker: &str) -> Json {
+    let mut m = match body {
+        Json::Obj(m) => m,
+        other => return other, // non-object bodies pass through verbatim
+    };
+    if let Some(fid) = fleet_id {
+        if m.contains_key("id") {
+            m.insert("id".to_string(), Json::Num(fid as f64));
+        }
+    }
+    m.insert("worker".to_string(), Json::Str(worker.to_string()));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn annotate_rewrites_id_and_tags_worker() {
+        let body = Json::obj(vec![
+            ("id", Json::Num(3.0)),
+            ("status", Json::Str("queued".to_string())),
+        ]);
+        let out = annotate(body, Some(41), "w1");
+        assert_eq!(out.u("id"), 41);
+        assert_eq!(out.s("worker"), "w1");
+        assert_eq!(out.s("status"), "queued");
+        // bodies without an id (errors) only get the worker tag
+        let out = annotate(Json::obj(vec![("error", Json::Str("x".into()))]), Some(9), "w0");
+        assert!(out.get("id").is_none());
+        assert_eq!(out.s("worker"), "w0");
+    }
+
+    #[test]
+    fn worker_health_transitions() {
+        let w = Worker::new("w0", "127.0.0.1:1"); // nothing listens on port 1
+        assert!(w.routable(), "workers start optimistic");
+        assert_eq!(w.probe(), Health::Down);
+        assert!(!w.is_up());
+        assert!(!w.routable());
+    }
+
+    #[test]
+    fn counters_serialize() {
+        let c = Counters::default();
+        c.routed.store(3, Ordering::Relaxed);
+        c.stolen.store(1, Ordering::Relaxed);
+        let j = c.json();
+        assert_eq!(j.u("routed"), 3);
+        assert_eq!(j.u("stolen"), 1);
+        assert_eq!(j.u("shed"), 0);
+    }
+}

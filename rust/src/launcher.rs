@@ -290,6 +290,35 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `releq fleet`: front-end router over N `releq serve` workers —
+/// consistent-hash placement, health-aware fallback, work stealing, and
+/// archive pull-merge replication. The router holds no engine or
+/// artifacts; spawned workers do their own bring-up. Blocks until a
+/// `POST /v1/shutdown` has merged archives and drained every worker.
+pub fn cmd_fleet(args: &Args) -> Result<()> {
+    let cfg = config::fleet_config(args)?;
+    let spawn = cfg.spawn_workers;
+    let joins = cfg.worker_addrs.len();
+    let archive = cfg.archive.clone();
+    let merge_ms = cfg.merge_interval_ms;
+    let steal = cfg.steal_budget;
+    let server = crate::fleet::FleetServer::bind(cfg)?;
+    println!("releq fleet: listening on http://{}", server.local_addr());
+    println!(
+        "  workers: {spawn} spawned + {joins} joined, steal budget {steal}, merged archive: {}",
+        archive.display()
+    );
+    match merge_ms {
+        0 => println!("  archive merge: on demand (POST /v1/fleet/merge) and at shutdown"),
+        ms => println!("  archive merge: every {ms} ms (+ POST /v1/fleet/merge on demand)"),
+    }
+    println!("  POST /v1/jobs | GET /v1/jobs[/<id>[/result]] | POST /v1/jobs/<id>/cancel");
+    println!("  GET /v1/archive | POST /v1/fleet/merge | GET /v1/stats | GET /v1/health | POST /v1/shutdown");
+    server.run()?;
+    println!("releq fleet: drained and stopped");
+    Ok(())
+}
+
 pub fn cmd_admm(args: &Args) -> Result<()> {
     let net_name = args.str_of("net", "lenet");
     let (manifest, engine) = bringup()?;

@@ -23,6 +23,7 @@ pub mod exp;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod launcher;
 pub mod metrics;
 pub mod parallel;

@@ -7,6 +7,8 @@
 //!   hw-eval      run Stripes + bit-serial CPU simulators on a solution
 //!   admm         run the ADMM baseline bitwidth selection
 //!   serve        run the quantization-as-a-service daemon (HTTP/JSON)
+//!   fleet        front-end router over N serve workers (consistent-hash
+//!                routing, work stealing, archive replication)
 //!   exp <id>     regenerate a paper table/figure (table2|table4|table5|fig5..fig10|ablation-*)
 //!   stats        dump manifest / artifact info
 
@@ -27,6 +29,7 @@ fn main() -> Result<()> {
         "hw-eval" => releq::launcher::cmd_hw_eval(&args),
         "admm" => releq::launcher::cmd_admm(&args),
         "serve" => releq::launcher::cmd_serve(&args),
+        "fleet" => releq::launcher::cmd_fleet(&args),
         "exp" => releq::exp::run(&args),
         other => {
             eprintln!("unknown subcommand `{other}`\n");
@@ -67,6 +70,13 @@ fn print_help() {
          \x20                             failures before quarantine; failures to open breaker)\n\
          \x20           [--registry-dir dir] (content-addressed install cache; enables hot\n\
          \x20                             network registration via POST /v1/networks)\n\
+         \x20           [--access-log]   (structured JSON access-log lines on stderr)\n\
+         \x20 fleet     [--addr host:port] [--spawn-workers N] [--worker-addrs h:p,h:p,...]\n\
+         \x20           [--archive file.json] (merged fleet archive; spawned worker i\n\
+         \x20                             writes <stem>.w<i>.json beside it)\n\
+         \x20           [--merge-interval-ms N] (0 = merge on demand/shutdown only)\n\
+         \x20           [--health-interval-ms N] [--steal-budget N]\n\
+         \x20           [--worker-threads N] [--worker-queue-cap N] [--access-log]\n\
          \x20 exp       <table2|table4|table5|fig5|fig6|fig7|fig8|fig9|fig10|ablation-action|ablation-lstm|all>\n\
          \x20 stats\n"
     );

@@ -246,7 +246,10 @@ impl Record {
         h.finish()
     }
 
-    fn to_json(&self) -> Json {
+    /// Wire/disk form of the record — public because fleet replication
+    /// ships records between processes over `GET /v1/archive` /
+    /// `POST /v1/archive/merge`.
+    pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("net", Json::Str(self.net.clone())),
             ("env_fp", Json::Str(format!("{:016x}", self.env_fp))),
@@ -266,7 +269,9 @@ impl Record {
         ])
     }
 
-    fn from_json(j: &Json) -> Result<Record> {
+    /// Decode (and checksum-verify) one record — the counterpart of
+    /// [`Record::to_json`], shared by disk loads and fleet merges.
+    pub fn from_json(j: &Json) -> Result<Record> {
         let fp = |k: &str| -> Result<u64> {
             let s = j.get(k).and_then(Json::as_str).with_context(|| format!("record `{k}`"))?;
             u64::from_str_radix(s, 16).with_context(|| format!("record `{k}` = `{s}`"))
@@ -305,6 +310,45 @@ impl Record {
             );
         }
         Ok(rec)
+    }
+}
+
+/// What [`Archive::merge_record`] did with one replicated record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeOutcome {
+    /// key was absent locally: record adopted
+    Added,
+    /// key present, remote copy had more hits: local copy replaced
+    Raised,
+    /// key present with >= hits locally: merge was a no-op
+    Unchanged,
+    /// record rejected (non-finite payload)
+    Skipped,
+}
+
+/// Aggregate outcome of one [`Archive::merge_json`] call.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MergeStats {
+    pub added: usize,
+    pub raised: usize,
+    pub unchanged: usize,
+    /// records dropped for failing decode, checksum, or finiteness
+    pub skipped: usize,
+}
+
+impl MergeStats {
+    /// Did the merge change this archive at all?
+    pub fn changed(&self) -> bool {
+        self.added + self.raised > 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("added", Json::Num(self.added as f64)),
+            ("raised", Json::Num(self.raised as f64)),
+            ("unchanged", Json::Num(self.unchanged as f64)),
+            ("skipped", Json::Num(self.skipped as f64)),
+        ])
     }
 }
 
@@ -416,10 +460,16 @@ impl Archive {
             rec.hits += old.hits;
         }
         m.insert(key.clone(), rec);
+        Self::evict_over_cap(&mut m, &key);
+    }
+
+    /// Least-hit eviction down to [`ARCHIVE_CAP`], never touching
+    /// `keep_key` (the record that was just written).
+    fn evict_over_cap(m: &mut BTreeMap<String, Record>, keep_key: &str) {
         while m.len() > ARCHIVE_CAP {
             let victim = m
                 .iter()
-                .filter(|(k, _)| **k != key)
+                .filter(|(k, _)| k.as_str() != keep_key)
                 .min_by(|a, b| (a.1.hits, a.0).cmp(&(b.1.hits, b.0)))
                 .map(|(k, _)| k.clone());
             match victim {
@@ -429,6 +479,96 @@ impl Archive {
                 None => break,
             }
         }
+    }
+
+    /// Merge one record replicated from another archive. Union-by-key:
+    /// an absent key is added; a present key keeps whichever copy has the
+    /// HIGHER hit count (ties keep the local copy). Unlike
+    /// [`Archive::insert`] — where a replacement *adds* the old hit count,
+    /// because local completions race local resubmissions — a merge must
+    /// take the max, not the sum: pull-merge rounds repeat forever, and
+    /// summing would double-count the same hits every round. Max is
+    /// idempotent (merging the same snapshot twice is a no-op) and
+    /// commutative, so any two archives exchanging records converge.
+    pub fn merge_record(&self, rec: Record) -> MergeOutcome {
+        if !rec.is_finite() {
+            return MergeOutcome::Skipped;
+        }
+        let key = Self::key(&rec.net, rec.env_fp, rec.search_fp);
+        let mut m = self.records.lock().unwrap();
+        match m.get_mut(&key) {
+            Some(local) => {
+                if rec.hits > local.hits {
+                    *local = rec;
+                    MergeOutcome::Raised
+                } else {
+                    MergeOutcome::Unchanged
+                }
+            }
+            None => {
+                m.insert(key.clone(), rec);
+                Self::evict_over_cap(&mut m, &key);
+                MergeOutcome::Added
+            }
+        }
+    }
+
+    /// Merge a `{"records": {key: record, ...}}` document (the
+    /// `POST /v1/archive/merge` body and the pull-merge payload). Records
+    /// are re-keyed from their own content — the sender's map keys are
+    /// ignored — so a corrupted or adversarial key cannot alias a record
+    /// onto the wrong fingerprint. A record failing decode or checksum is
+    /// skipped and counted, same policy as [`Archive::open`]: one bad
+    /// record costs one record.
+    pub fn merge_json(&self, j: &Json) -> Result<MergeStats> {
+        let records = j
+            .get("records")
+            .and_then(Json::as_obj)
+            .context("merge body needs a `records` object")?;
+        let mut stats = MergeStats::default();
+        for (k, v) in records {
+            match Record::from_json(v) {
+                Ok(rec) => match self.merge_record(rec) {
+                    MergeOutcome::Added => stats.added += 1,
+                    MergeOutcome::Raised => stats.raised += 1,
+                    MergeOutcome::Unchanged => stats.unchanged += 1,
+                    MergeOutcome::Skipped => stats.skipped += 1,
+                },
+                Err(e) => {
+                    stats.skipped += 1;
+                    eprintln!("[serve] merge: skipping record `{k}`: {e:#}");
+                }
+            }
+        }
+        Ok(stats)
+    }
+
+    /// One page of records in key order (= fingerprint order — keys embed
+    /// the hex fingerprints). `cursor` is the last key of the previous
+    /// page (exclusive); `None` starts from the beginning. Returns the
+    /// page and the cursor for the next one (`None` when exhausted). The
+    /// caller caps `limit`; a page is the fleet's replication unit, so it
+    /// must stay well under [`crate::serve::http::MAX_BODY`].
+    pub fn page(&self, cursor: Option<&str>, limit: usize) -> (Vec<(String, Json)>, Option<String>) {
+        let m = self.records.lock().unwrap();
+        let mut out: Vec<(String, Json)> = m
+            .range::<str, _>((
+                match cursor {
+                    Some(c) => std::ops::Bound::Excluded(c),
+                    None => std::ops::Bound::Unbounded,
+                },
+                std::ops::Bound::Unbounded,
+            ))
+            .take(limit + 1)
+            .map(|(k, r)| (k.clone(), r.to_json()))
+            .collect();
+        let next = if out.len() > limit {
+            out.truncate(limit);
+            out.last().map(|(k, _)| k.clone())
+        } else {
+            None
+        };
+        (out, next)
     }
 
     /// Union of the memo snapshots of every record matching (net, env_fp) —
@@ -784,5 +924,128 @@ mod tests {
         let mut cap_tweak = base.clone();
         cap_tweak.env.memo_cap = 7;
         assert_eq!(e0, env_fingerprint("lenet", 8, &cap_tweak.env));
+    }
+
+    /// All records of `a` as a merge document (what one pull page carries).
+    fn merge_doc(a: &Archive) -> Json {
+        let (page, next) = a.page(None, ARCHIVE_CAP);
+        assert!(next.is_none());
+        Json::obj(vec![("records", Json::Obj(page.into_iter().collect()))])
+    }
+
+    #[test]
+    fn merge_is_idempotent_and_convergent() {
+        let pa = tmp_path("merge_a.json");
+        let pb = tmp_path("merge_b.json");
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+        let a = Archive::open(&pa).unwrap();
+        let b = Archive::open(&pb).unwrap();
+        // overlap on (lenet, 1, 1) with different hit counts; each side
+        // also holds a record the other lacks
+        let mut hot = record("lenet", 1, 1);
+        hot.hits = 9;
+        a.insert(hot);
+        a.insert(record("lenet", 2, 2));
+        let mut cold = record("lenet", 1, 1);
+        cold.hits = 3;
+        b.insert(cold);
+        b.insert(record("mobilenet", 5, 5));
+
+        // one exchange in each direction converges both sides
+        let sb = b.merge_json(&merge_doc(&a)).unwrap();
+        assert_eq!((sb.added, sb.raised, sb.skipped), (1, 1, 0));
+        let sa = a.merge_json(&merge_doc(&b)).unwrap();
+        assert_eq!((sa.added, sa.raised, sa.skipped), (1, 0, 0));
+        assert!(sa.changed() && sb.changed());
+        let keys = |x: &Archive| x.page(None, ARCHIVE_CAP).0.into_iter()
+            .map(|(k, _)| k).collect::<Vec<_>>();
+        assert_eq!(keys(&a), keys(&b), "one round-trip converges the key sets");
+        // max-hits-wins: both sides now carry the 9-hit copy. lookup bumps
+        // hits, so read them straight off the page payloads.
+        for x in [&a, &b] {
+            let (page, _) = x.page(None, ARCHIVE_CAP);
+            let hot = page.iter().find(|(k, _)| k.starts_with("lenet:0000000000000001")).unwrap();
+            assert_eq!(hot.1.u("hits"), 9);
+        }
+
+        // idempotence: re-merging the same snapshot changes nothing
+        let again = b.merge_json(&merge_doc(&a)).unwrap();
+        assert_eq!((again.added, again.raised), (0, 0));
+        assert!(!again.changed());
+        assert_eq!(again.unchanged, 3);
+    }
+
+    #[test]
+    fn merge_rejects_corrupt_records_individually() {
+        let p = tmp_path("merge_bad.json");
+        let _ = std::fs::remove_file(&p);
+        let a = Archive::open(&p).unwrap();
+        let good = record("lenet", 1, 1).to_json();
+        let mut tampered = match record("lenet", 2, 2).to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        tampered.insert("checksum".into(), Json::Str("00000000deadbeef".into()));
+        let doc = Json::obj(vec![(
+            "records",
+            Json::Obj(
+                [
+                    ("k1".to_string(), good),
+                    ("k2".to_string(), Json::Obj(tampered)),
+                    ("k3".to_string(), Json::Str("not a record".into())),
+                ]
+                .into_iter()
+                .collect(),
+            ),
+        )]);
+        let st = a.merge_json(&doc).unwrap();
+        assert_eq!((st.added, st.skipped), (1, 2), "bad records cost only themselves");
+        assert_eq!(a.len(), 1);
+        // a body without `records` is a client error
+        assert!(a.merge_json(&Json::obj(vec![("nope", Json::Null)])).is_err());
+    }
+
+    #[test]
+    fn merge_never_sums_hits_across_rounds() {
+        // the regression the max-hits rule exists for: N merge rounds of
+        // the same remote snapshot must not inflate the local hit count
+        let p = tmp_path("merge_hits.json");
+        let _ = std::fs::remove_file(&p);
+        let a = Archive::open(&p).unwrap();
+        let mut remote = record("lenet", 1, 1);
+        remote.hits = 4;
+        for _ in 0..5 {
+            a.merge_record(remote.clone());
+        }
+        let (page, _) = a.page(None, 8);
+        assert_eq!(page[0].1.u("hits"), 4, "5 rounds of the same record keep hits at 4");
+    }
+
+    #[test]
+    fn pages_walk_the_archive_in_key_order() {
+        let p = tmp_path("page.json");
+        let _ = std::fs::remove_file(&p);
+        let a = Archive::open(&p).unwrap();
+        for i in 0..7u64 {
+            a.insert(record("lenet", i, i));
+        }
+        let mut cursor: Option<String> = None;
+        let mut seen = Vec::new();
+        loop {
+            let (page, next) = a.page(cursor.as_deref(), 3);
+            assert!(page.len() <= 3);
+            seen.extend(page.into_iter().map(|(k, _)| k));
+            match next {
+                Some(c) => cursor = Some(c),
+                None => break,
+            }
+        }
+        assert_eq!(seen.len(), 7, "pagination visits every record exactly once");
+        let mut sorted = seen.clone();
+        sorted.sort();
+        assert_eq!(seen, sorted, "pages walk in key (fingerprint) order");
+        // a cursor past the end is an empty final page, not an error
+        assert!(a.page(Some("zzzz"), 3).0.is_empty());
     }
 }

@@ -1,29 +1,54 @@
-//! Dependency-free HTTP/1.1 plumbing for the serve daemon (the build
-//! environment is offline — no hyper/axum; DESIGN.md §9). One request per
-//! connection (`Connection: close`), JSON bodies only, via
-//! [`crate::util::json::Json`].
+//! Dependency-free HTTP/1.1 plumbing for the serve daemon and the fleet
+//! router (the build environment is offline — no hyper/axum; DESIGN.md §9).
+//! JSON bodies only, via [`crate::util::json::Json`].
 //!
 //! Scope is deliberately narrow: request line + headers + `Content-Length`
-//! body. No chunked transfer, no keep-alive, no TLS — the daemon fronts a
-//! trusted deployment pipeline on localhost, not the open internet. Hard
-//! limits ([`MAX_BODY`], [`MAX_HEADERS`], [`MAX_LINE`]) bound what one
-//! connection can make the daemon buffer.
+//! body. No chunked transfer, no TLS — the daemon fronts a trusted
+//! deployment pipeline on localhost, not the open internet. Hard limits
+//! ([`MAX_BODY`], [`MAX_HEADERS`], [`MAX_LINE`]) bound what one connection
+//! can make the daemon buffer.
+//!
+//! # Connection reuse
+//!
+//! Responses are always Content-Length framed, so a connection CAN carry
+//! more than one exchange. A client that sends `Connection: keep-alive`
+//! gets `Connection: keep-alive` back and may reuse the socket (bounded:
+//! [`MAX_REQS_PER_CONN`] requests per connection, [`KEEPALIVE_IDLE`]
+//! between them); the fleet router's per-worker [`Conn`] pool rides on
+//! this — without it, router→worker latency is dominated by per-request
+//! TCP setup. Absent the header, the connection closes after one exchange.
+//! That default is deliberately NOT the HTTP/1.1 spec default (which is
+//! keep-alive): every pre-fleet client of this daemon — curl sessions, the
+//! smoke scripts, `examples/serve_client.rs` — speaks one-shot close, and
+//! an external caller that never opts in must never be left holding a
+//! half-open socket.
 
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::TcpStream;
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
 /// Maximum accepted request/response body (a job submission is < 1 KiB;
-/// this is pure defense).
+/// archive pages are chunked well below this — pure defense).
 pub const MAX_BODY: usize = 1 << 20;
 /// Maximum header lines read before giving up on a connection.
 pub const MAX_HEADERS: usize = 64;
 /// Maximum bytes in one request/status/header line — without this cap a
 /// newline-free stream would grow `read_line`'s buffer without limit.
 pub const MAX_LINE: usize = 8 << 10;
+/// Requests served over one kept-alive connection before the server closes
+/// it anyway (bounds how long one client can monopolize a handler thread).
+pub const MAX_REQS_PER_CONN: u64 = 1024;
+/// Idle budget between requests on a kept-alive connection. The FIRST
+/// request gets the looser 30 s budget (same as the pre-keep-alive
+/// daemon); once a client has opted into reuse it is expected to either
+/// pipeline promptly or close.
+pub const KEEPALIVE_IDLE: Duration = Duration::from_secs(10);
+/// Read timeout for the one-shot client helpers.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(600);
 
 /// `read_line` with the [`MAX_LINE`] bound: reads through a `Take` so a
 /// pathological sender can't buffer more than the cap.
@@ -36,13 +61,22 @@ fn read_line_capped<R: BufRead>(r: &mut R, line: &mut String) -> Result<usize> {
     Ok(n)
 }
 
-/// Scan the header section up to the blank line, returning the
-/// `Content-Length` value if present. Shared by the server parser and the
-/// test/example client so the two sides cannot drift. EOF before the blank
-/// line is tolerated only for header-only messages (no content-length).
-fn read_headers<R: BufRead>(r: &mut R) -> Result<Option<usize>> {
+/// The header subset both sides of this module care about.
+#[derive(Debug, Default)]
+struct Headers {
+    content_len: Option<usize>,
+    /// `Some(true)` for `Connection: keep-alive`, `Some(false)` for
+    /// `Connection: close`, `None` when the header is absent.
+    connection: Option<bool>,
+}
+
+/// Scan the header section up to the blank line. Shared by the server
+/// parser and the client helpers so the two sides cannot drift. EOF before
+/// the blank line is tolerated only for header-only messages (no
+/// content-length).
+fn read_headers<R: BufRead>(r: &mut R) -> Result<Headers> {
     let mut line = String::new();
-    let mut content_len: Option<usize> = None;
+    let mut h = Headers::default();
     for _ in 0..MAX_HEADERS {
         line.clear();
         if read_line_capped(r, &mut line)? == 0 {
@@ -50,23 +84,26 @@ fn read_headers<R: BufRead>(r: &mut R) -> Result<Option<usize>> {
         }
         let t = line.trim_end();
         if t.is_empty() {
-            return Ok(content_len);
+            return Ok(h);
         }
         if let Some((k, v)) = t.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_len = Some(
+            let k = k.trim();
+            if k.eq_ignore_ascii_case("content-length") {
+                h.content_len = Some(
                     v.trim()
                         .parse()
                         .map_err(|_| anyhow::anyhow!("bad content-length `{}`", v.trim()))?,
                 );
+            } else if k.eq_ignore_ascii_case("connection") {
+                h.connection = Some(v.trim().eq_ignore_ascii_case("keep-alive"));
             }
         }
     }
     anyhow::ensure!(
-        content_len.is_none(),
+        h.content_len.is_none(),
         "header section exceeds {MAX_HEADERS} lines"
     );
-    Ok(None)
+    Ok(h)
 }
 
 /// One parsed request.
@@ -75,6 +112,9 @@ pub struct Request {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    /// the client sent `Connection: keep-alive` (absent header = close;
+    /// see the module docs for why that inverts the HTTP/1.1 default)
+    pub keep_alive: bool,
 }
 
 impl Request {
@@ -86,25 +126,47 @@ impl Request {
         let text = std::str::from_utf8(&self.body).context("request body is not UTF-8")?;
         Json::parse(text).map_err(|e| anyhow::anyhow!("request body: {e}"))
     }
+
+    /// Decoded `?key=value&...` query pairs (no percent-decoding — the
+    /// daemon's cursors and limits are plain `[a-zA-Z0-9:._-]` tokens).
+    pub fn query(&self) -> std::collections::BTreeMap<String, String> {
+        let mut q = std::collections::BTreeMap::new();
+        if let Some((_, qs)) = self.path.split_once('?') {
+            for pair in qs.split('&') {
+                if pair.is_empty() {
+                    continue;
+                }
+                let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+                q.insert(k.to_string(), v.to_string());
+            }
+        }
+        q
+    }
 }
 
-/// Read one request off a buffered stream. Fails (closing the connection)
-/// on a malformed request line, an oversized body, or header overflow.
-pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request> {
+/// Read one request off a buffered stream. `Ok(None)` on a clean EOF
+/// before any request byte — the peer closing a kept-alive connection
+/// between requests is normal, not an error. Fails (closing the
+/// connection) on a malformed request line, an oversized body, or header
+/// overflow.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>> {
     let mut line = String::new();
-    read_line_capped(r, &mut line).context("reading request line")?;
+    if read_line_capped(r, &mut line).context("reading request line")? == 0 {
+        return Ok(None);
+    }
     let mut parts = line.split_whitespace();
     let method = parts.next().context("empty request line")?.to_string();
     let path = parts.next().context("request line has no path")?.to_string();
     let version = parts.next().context("request line has no version")?;
     anyhow::ensure!(version.starts_with("HTTP/1."), "unsupported version `{version}`");
 
-    let content_len = read_headers(r)?.unwrap_or(0);
+    let headers = read_headers(r)?;
+    let content_len = headers.content_len.unwrap_or(0);
     anyhow::ensure!(content_len <= MAX_BODY, "body of {content_len} bytes exceeds {MAX_BODY}");
 
     let mut body = vec![0u8; content_len];
     r.read_exact(&mut body).context("reading request body")?;
-    Ok(Request { method, path, body })
+    Ok(Some(Request { method, path, body, keep_alive: headers.connection == Some(true) }))
 }
 
 /// One JSON response.
@@ -128,17 +190,27 @@ impl Response {
         Response::status(status, Json::obj(vec![("error", Json::Str(msg.to_string()))]))
     }
 
-    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+    /// Serialize with the given connection disposition; returns the body
+    /// byte count (the access log's `bytes` field).
+    pub fn write<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<usize> {
         let body = self.body.dump();
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
             self.status,
             reason(self.status),
             body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
             body
         )?;
-        w.flush()
+        w.flush()?;
+        Ok(body.len())
+    }
+
+    /// One-shot serialization (`Connection: close`) — the pre-keep-alive
+    /// wire format, byte for byte.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        self.write(w, false).map(|_| ())
     }
 }
 
@@ -158,31 +230,120 @@ pub fn reason(status: u16) -> &'static str {
     }
 }
 
-/// Minimal blocking client: one request, one connection. Returns the status
-/// code and the decoded JSON body (`Json::Null` for an empty body). Used by
-/// `examples/serve_client.rs` and the integration tests; production clients
-/// can use anything that speaks HTTP (see README for the curl session).
-pub fn request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
-    let mut stream =
-        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(600)))?;
-    let body = body.map(|j| j.dump()).unwrap_or_default();
-    write!(
-        stream,
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    )?;
-    stream.flush()?;
+/// One structured access-log line (JSON, sorted keys): method, path,
+/// status, body bytes, wall latency, and — when the response body carries
+/// a `worker` field (fleet submissions) — the worker the request was
+/// routed to. Shared by the serve daemon and the fleet router so the two
+/// log streams grep identically.
+pub fn access_log_line(
+    tag: &str, method: &str, path: &str, status: u16, bytes: usize, latency_ms: f64,
+    worker: Option<&str>,
+) -> String {
+    let ts_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0);
+    let mut fields = vec![
+        ("ts_ms", Json::Num(ts_ms)),
+        ("tag", Json::Str(tag.to_string())),
+        ("method", Json::Str(method.to_string())),
+        ("path", Json::Str(path.to_string())),
+        ("status", Json::Num(status as f64)),
+        ("bytes", Json::Num(bytes as f64)),
+        ("latency_ms", Json::Num((latency_ms * 1000.0).round() / 1000.0)),
+    ];
+    if let Some(w) = worker {
+        fields.push(("worker", Json::Str(w.to_string())));
+    }
+    Json::obj(fields).dump()
+}
 
-    let mut r = BufReader::new(stream);
+/// What one connection did, reported back to the accept loop.
+pub struct ConnStats {
+    /// requests served (each got a response, including error responses)
+    pub served: u64,
+    /// a handler asked the accept loop to exit (completed shutdown)
+    pub exit: bool,
+}
+
+/// Serve one connection to completion: read requests, dispatch each
+/// through `route`, write responses honoring the client's keep-alive
+/// opt-in. Both the serve daemon and the fleet router run their accept
+/// threads through this one loop, so framing, reuse bounds, and access
+/// logging cannot drift between them.
+pub fn serve_conn<F>(stream: TcpStream, access_log: bool, tag: &str, mut route: F) -> ConnStats
+where
+    F: FnMut(&Request) -> (Response, bool),
+{
+    let mut st = ConnStats { served: 0, exit: false };
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let Ok(read_half) = stream.try_clone() else { return st };
+    let mut reader = BufReader::new(read_half);
+    let mut w = stream;
+    loop {
+        let t0 = Instant::now();
+        let req = match read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => break, // peer closed cleanly between requests
+            Err(_) if st.served > 0 => break, // idle timeout / partial request on a reused conn
+            Err(e) => {
+                let resp = Response::error(400, &format!("{e:#}"));
+                let n = resp.write(&mut w, false);
+                st.served += 1;
+                if access_log {
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    eprintln!("{}", access_log_line(tag, "-", "-", 400, n.unwrap_or(0), ms, None));
+                }
+                break;
+            }
+        };
+        let (resp, exit) = route(&req);
+        st.served += 1;
+        let keep = req.keep_alive && !exit && st.served < MAX_REQS_PER_CONN;
+        let wrote = resp.write(&mut w, keep);
+        if access_log {
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let worker = resp.body.get("worker").and_then(Json::as_str);
+            eprintln!(
+                "{}",
+                access_log_line(
+                    tag,
+                    &req.method,
+                    &req.path,
+                    resp.status,
+                    wrote.as_ref().copied().unwrap_or(0),
+                    ms,
+                    worker
+                )
+            );
+        }
+        if exit {
+            st.exit = true;
+            break;
+        }
+        if !keep || wrote.is_err() {
+            break;
+        }
+        // tighter budget between requests on a reused connection — the
+        // timeout is a socket option, shared with the reader's dup'd fd
+        let _ = w.set_read_timeout(Some(KEEPALIVE_IDLE));
+    }
+    st
+}
+
+/// Read one framed response: status code, decoded JSON body, and whether
+/// the server committed to keeping the connection open (keep-alive header
+/// AND a Content-Length frame — an unframed body is delimited by close).
+fn read_response<R: BufRead>(r: &mut R) -> Result<(u16, Json, bool)> {
     let mut line = String::new();
-    read_line_capped(&mut r, &mut line).context("reading status line")?;
+    read_line_capped(r, &mut line).context("reading status line")?;
     let status: u16 = line
         .split_whitespace()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .with_context(|| format!("bad status line `{}`", line.trim_end()))?;
-    let body = match read_headers(&mut r)? {
+    let headers = read_headers(r)?;
+    let body = match headers.content_len {
         Some(n) => {
             anyhow::ensure!(n <= MAX_BODY, "response body too large");
             let mut b = vec![0u8; n];
@@ -195,12 +356,108 @@ pub fn request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Res
             b
         }
     };
+    let keep = headers.connection == Some(true) && headers.content_len.is_some();
     if body.is_empty() {
-        return Ok((status, Json::Null));
+        return Ok((status, Json::Null, keep));
     }
     let text = std::str::from_utf8(&body).context("response body is not UTF-8")?;
     let json = Json::parse(text).map_err(|e| anyhow::anyhow!("response body: {e}"))?;
+    Ok((status, json, keep))
+}
+
+/// Minimal blocking client: one request, one connection
+/// (`Connection: close`). Returns the status code and the decoded JSON
+/// body (`Json::Null` for an empty body). Used by
+/// `examples/serve_client.rs` and the integration tests; production
+/// clients can use anything that speaks HTTP (see README for the curl
+/// session).
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+    request_timeout(addr, method, path, body, CLIENT_TIMEOUT)
+}
+
+/// [`request`] with an explicit connect/read budget — the fleet health
+/// monitor polls with a short one so a hung worker costs milliseconds,
+/// not the default ten minutes.
+pub fn request_timeout(
+    addr: &str, method: &str, path: &str, body: Option<&Json>, timeout: Duration,
+) -> Result<(u16, Json)> {
+    let mut stream = match addr.parse::<SocketAddr>() {
+        Ok(sa) => TcpStream::connect_timeout(&sa, timeout)
+            .with_context(|| format!("connecting to {addr}"))?,
+        Err(_) => TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?,
+    };
+    stream.set_read_timeout(Some(timeout))?;
+    let body = body.map(|j| j.dump()).unwrap_or_default();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut r = BufReader::new(stream);
+    let (status, json, _keep) = read_response(&mut r)?;
     Ok((status, json))
+}
+
+/// A persistent keep-alive client connection — the router's per-worker
+/// transport. Requests go out with `Connection: keep-alive`; the
+/// connection stays reusable until the server declines (responds close /
+/// unframed) or the [`MAX_REQS_PER_CONN`] bound is reached. NOT
+/// thread-safe by design: the fleet pools `Conn`s behind a mutex and
+/// checks one out per request.
+pub struct Conn {
+    reader: BufReader<TcpStream>,
+    addr: String,
+    sent: u64,
+    reusable: bool,
+}
+
+impl Conn {
+    pub fn connect(addr: &str) -> Result<Conn> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_read_timeout(Some(CLIENT_TIMEOUT))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Conn { reader: BufReader::new(stream), addr: addr.to_string(), sent: 0, reusable: true })
+    }
+
+    /// One request/response exchange on this connection. Any error marks
+    /// the connection non-reusable: a failed exchange leaves the stream at
+    /// an unknown framing position, and reusing it would desynchronize
+    /// every later response.
+    pub fn request(&mut self, method: &str, path: &str, body: Option<&Json>)
+                   -> Result<(u16, Json)> {
+        anyhow::ensure!(self.reusable, "connection to {} is no longer reusable", self.addr);
+        self.reusable = false;
+        let body = body.map(|j| j.dump()).unwrap_or_default();
+        let stream = self.reader.get_mut();
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            self.addr,
+            body.len()
+        )?;
+        stream.flush()?;
+        self.sent += 1;
+        let (status, json, server_keeps) = read_response(&mut self.reader)?;
+        self.reusable = server_keeps && self.sent < MAX_REQS_PER_CONN;
+        Ok((status, json))
+    }
+
+    /// Requests sent over this one socket (the keep-alive reuse test's
+    /// witness).
+    pub fn requests_sent(&self) -> u64 {
+        self.sent
+    }
+
+    /// Can this connection carry another request?
+    pub fn is_reusable(&self) -> bool {
+        self.reusable
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
 }
 
 #[cfg(test)]
@@ -211,19 +468,33 @@ mod tests {
     #[test]
     fn parses_request_with_body() {
         let raw = "POST /v1/jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 15\r\n\r\n{\"net\":\"lenet\"}";
-        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        let req = read_request(&mut Cursor::new(raw)).unwrap().unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/jobs");
         assert_eq!(req.json().unwrap().s("net"), "lenet");
+        assert!(!req.keep_alive, "absent Connection header means close");
     }
 
     #[test]
     fn parses_bodyless_request() {
         let raw = "GET /v1/stats HTTP/1.1\r\n\r\n";
-        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        let req = read_request(&mut Cursor::new(raw)).unwrap().unwrap();
         assert_eq!(req.method, "GET");
         assert!(req.body.is_empty());
         assert_eq!(req.json().unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn keep_alive_header_is_parsed_case_insensitively() {
+        let raw = "GET /v1/stats HTTP/1.1\r\nConnection: Keep-Alive\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(raw)).unwrap().unwrap().keep_alive);
+        let raw = "GET /v1/stats HTTP/1.1\r\nconnection: close\r\n\r\n";
+        assert!(!read_request(&mut Cursor::new(raw)).unwrap().unwrap().keep_alive);
+    }
+
+    #[test]
+    fn eof_before_a_request_is_none_not_an_error() {
+        assert!(read_request(&mut Cursor::new("")).unwrap().is_none());
     }
 
     #[test]
@@ -259,8 +530,93 @@ mod tests {
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
         assert!(text.contains("Content-Type: application/json"));
+        assert!(text.contains("Connection: close"));
         assert!(text.ends_with("{\"error\":\"queue full\"}"));
         let body_len = "{\"error\":\"queue full\"}".len();
         assert!(text.contains(&format!("Content-Length: {body_len}")));
+
+        // the keep-alive variant differs only in the Connection header and
+        // reports the body length back for the access log
+        let mut out = Vec::new();
+        let n = Response::error(429, "queue full").write(&mut out, true).unwrap();
+        assert_eq!(n, body_len);
+        assert!(String::from_utf8(out).unwrap().contains("Connection: keep-alive"));
+    }
+
+    #[test]
+    fn query_pairs_parse() {
+        let req = Request {
+            method: "GET".into(),
+            path: "/v1/jobs?limit=2&cursor=abc:01".into(),
+            body: Vec::new(),
+            keep_alive: false,
+        };
+        let q = req.query();
+        assert_eq!(q.get("limit").map(String::as_str), Some("2"));
+        assert_eq!(q.get("cursor").map(String::as_str), Some("abc:01"));
+        let bare = Request {
+            method: "GET".into(),
+            path: "/v1/jobs".into(),
+            body: Vec::new(),
+            keep_alive: false,
+        };
+        assert!(bare.query().is_empty());
+    }
+
+    #[test]
+    fn access_log_line_is_one_json_object() {
+        let line = access_log_line("serve", "POST", "/v1/jobs", 202, 64, 1.25, Some("w1"));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.s("method"), "POST");
+        assert_eq!(j.u("status"), 202);
+        assert_eq!(j.u("bytes"), 64);
+        assert_eq!(j.s("worker"), "w1");
+        assert!(j.f("latency_ms") >= 0.0);
+        // no worker field when none was routed
+        let j = Json::parse(&access_log_line("serve", "GET", "/v1/stats", 200, 8, 0.1, None))
+            .unwrap();
+        assert!(j.get("worker").is_none());
+    }
+
+    /// End-to-end keep-alive over a real socket: N requests on ONE client
+    /// connection, one server-side connection loop serving all of them.
+    #[test]
+    fn keep_alive_reuses_one_socket() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            serve_conn(stream, false, "test", |req| {
+                (Response::ok(Json::obj(vec![("path", Json::Str(req.path.clone()))])), false)
+            })
+        });
+        let mut conn = Conn::connect(&addr).unwrap();
+        for i in 0..5 {
+            let (status, body) = conn.request("GET", &format!("/ping/{i}"), None).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(body.s("path"), format!("/ping/{i}"));
+            assert!(conn.is_reusable());
+        }
+        assert_eq!(conn.requests_sent(), 5);
+        drop(conn); // clean close ends the server loop
+        let st = server.join().unwrap();
+        assert_eq!(st.served, 5, "one connection served every request");
+        assert!(!st.exit);
+    }
+
+    /// A close-mode client (the one-shot helper) against the same loop:
+    /// exactly one request per connection, like the pre-fleet daemon.
+    #[test]
+    fn close_mode_clients_get_one_exchange() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            serve_conn(stream, false, "test", |_req| (Response::ok(Json::Null), false))
+        });
+        let (status, _) = request(&addr, "GET", "/once", None).unwrap();
+        assert_eq!(status, 200);
+        let st = server.join().unwrap();
+        assert_eq!(st.served, 1);
     }
 }

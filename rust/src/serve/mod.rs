@@ -22,26 +22,34 @@
 //! | method | path                  | purpose                                   |
 //! |--------|-----------------------|-------------------------------------------|
 //! | POST   | `/v1/jobs`            | submit `{net, config?, deadline_ms?}`     |
+//! | GET    | `/v1/jobs`            | paged job listing (`?cursor=&limit=`)     |
 //! | GET    | `/v1/jobs/{id}`       | status + live episode tail                |
 //! | GET    | `/v1/jobs/{id}/result`| bits, accuracy, reward, Pareto points     |
 //! | POST   | `/v1/jobs/{id}/cancel`| cooperative cancellation                  |
+//! | GET    | `/v1/archive`         | paged archive records (`?cursor=&limit=`) — fleet replication reads this |
+//! | POST   | `/v1/archive/merge`   | union-merge replicated records (max hits wins) |
 //! | GET    | `/v1/stats`           | queue/session/engine/archive/registry counters |
 //! | GET    | `/v1/health`          | engine/session/queue/breaker health (503 when degraded) |
 //! | POST   | `/v1/networks`        | register/upgrade a network in the running daemon |
 //! | POST   | `/v1/shutdown`        | drain in-flight jobs, persist, exit       |
+//!
+//! Connections close after one exchange unless the client sends
+//! `Connection: keep-alive` (see [`http`] — the fleet router's per-worker
+//! connection pools depend on this).
 
 pub mod archive;
 pub mod http;
 pub mod scheduler;
 pub mod session;
 
-pub use archive::{env_fingerprint, search_fingerprint, Archive, Record, Solution};
+pub use archive::{
+    env_fingerprint, search_fingerprint, Archive, MergeOutcome, MergeStats, Record, Solution,
+};
 pub use scheduler::{CancelOutcome, Job, JobRunner, JobStatus, Scheduler, SubmitError};
 pub use session::{SessionCache, SessionKey, SessionRunner};
 
-use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -53,7 +61,15 @@ use crate::runtime::{Engine, Manifest};
 use crate::util::json::Json;
 use crate::util::lock_recover;
 
-use http::{read_request, Request, Response};
+use http::{Request, Response};
+
+/// Default page size for `GET /v1/jobs` / `GET /v1/archive` when the
+/// client sends no `limit`.
+pub const LIST_LIMIT_DEFAULT: usize = 50;
+/// Hard cap on a requested `limit` — a page must stay well under
+/// [`http::MAX_BODY`] even with memo-heavy archive records, so
+/// fleet-sized listings can never build unbounded JSON bodies.
+pub const LIST_LIMIT_MAX: usize = 64;
 
 /// Shared daemon state handed to every connection thread.
 pub struct Daemon {
@@ -65,6 +81,10 @@ pub struct Daemon {
     local_addr: SocketAddr,
     /// set once a shutdown request finished draining; breaks the accept loop
     shutdown: AtomicBool,
+    /// TCP connections accepted (one keep-alive connection counts once)
+    connections: AtomicU64,
+    /// requests served across all connections
+    requests: AtomicU64,
 }
 
 /// The bound-but-not-yet-serving daemon. `bind` then `run`; `local_addr`
@@ -120,6 +140,8 @@ impl Server {
             cfg,
             local_addr,
             shutdown: AtomicBool::new(false),
+            connections: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
         });
         Ok(Server { listener, daemon })
     }
@@ -128,9 +150,11 @@ impl Server {
         self.daemon.local_addr
     }
 
-    /// Accept loop: one thread per connection (one request per connection —
-    /// `Connection: close`). Returns after a `POST /v1/shutdown` has
-    /// drained the scheduler and persisted the archive.
+    /// Accept loop: one thread per connection. A connection serves one
+    /// request (`Connection: close`, the default) or a bounded keep-alive
+    /// sequence when the client opts in (`http::serve_conn`). Returns
+    /// after a `POST /v1/shutdown` has drained the scheduler and persisted
+    /// the archive.
     pub fn run(self) -> Result<()> {
         for conn in self.listener.incoming() {
             if self.daemon.shutdown.load(Ordering::SeqCst) {
@@ -154,16 +178,10 @@ impl Server {
 }
 
 fn handle_conn(d: &Arc<Daemon>, stream: TcpStream) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    let Ok(read_half) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(read_half);
-    let (response, exit_after) = match read_request(&mut reader) {
-        Ok(req) => route(d, &req),
-        Err(e) => (Response::error(400, &format!("{e:#}")), false),
-    };
-    let mut w = stream;
-    let _ = response.write_to(&mut w);
-    if exit_after {
+    d.connections.fetch_add(1, Ordering::Relaxed);
+    let st = http::serve_conn(stream, d.cfg.access_log, "serve", |req| route(d, req));
+    d.requests.fetch_add(st.served, Ordering::Relaxed);
+    if st.exit {
         d.shutdown.store(true, Ordering::SeqCst);
         // kick the accept loop out of its blocking accept
         let _ = TcpStream::connect(d.local_addr);
@@ -177,9 +195,12 @@ pub fn route(d: &Daemon, req: &Request) -> (Response, bool) {
     let segs: Vec<&str> = path.trim_matches('/').split('/').collect();
     match (req.method.as_str(), segs.as_slice()) {
         ("POST", ["v1", "jobs"]) => (post_job(d, req), false),
+        ("GET", ["v1", "jobs"]) => (list_jobs(d, req), false),
         ("GET", ["v1", "jobs", id]) => (with_job(d, id, |j| Response::ok(j.status_json())), false),
         ("GET", ["v1", "jobs", id, "result"]) => (with_job(d, id, job_result), false),
         ("POST", ["v1", "jobs", id, "cancel"]) => (cancel_job(d, id), false),
+        ("GET", ["v1", "archive"]) => (list_archive(d, req), false),
+        ("POST", ["v1", "archive", "merge"]) => (merge_archive(d, req), false),
         ("GET", ["v1", "stats"]) => (stats(d), false),
         ("GET", ["v1", "health"]) => (health(d), false),
         ("POST", ["v1", "networks"]) => (post_network(d, req), false),
@@ -193,6 +214,8 @@ pub fn route(d: &Daemon, req: &Request) -> (Response, bool) {
                     | ["v1", "jobs", _]
                     | ["v1", "jobs", _, "result"]
                     | ["v1", "jobs", _, "cancel"]
+                    | ["v1", "archive"]
+                    | ["v1", "archive", "merge"]
                     | ["v1", "stats"]
                     | ["v1", "health"]
                     | ["v1", "networks"]
@@ -282,6 +305,93 @@ fn post_network(d: &Daemon, req: &Request) -> Response {
     }
 }
 
+/// Parse `?cursor=&limit=` off a listing request: `Err` is the 400 to
+/// answer with. The limit is clamped to [`LIST_LIMIT_MAX`] rather than
+/// rejected — a client asking for more simply pages more often. Shared by
+/// the daemon's listings and the fleet router's.
+pub fn page_params(req: &Request) -> Result<(Option<String>, usize), Response> {
+    let q = req.query();
+    let cursor = q.get("cursor").cloned().filter(|c| !c.is_empty());
+    let limit = match q.get("limit") {
+        None => LIST_LIMIT_DEFAULT,
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => n.min(LIST_LIMIT_MAX),
+            _ => return Err(Response::error(400, "limit must be a positive integer")),
+        },
+    };
+    Ok((cursor, limit))
+}
+
+/// `GET /v1/jobs?cursor=&limit=`: one page of retained job summaries in
+/// id order. `next_cursor` is null on the last page.
+fn list_jobs(d: &Daemon, req: &Request) -> Response {
+    let (cursor, limit) = match page_params(req) {
+        Ok(p) => p,
+        Err(resp) => return resp,
+    };
+    let cursor = match cursor {
+        None => None,
+        Some(c) => match c.parse::<u64>() {
+            Ok(n) => Some(n),
+            Err(_) => return Response::error(400, "cursor must be a job id"),
+        },
+    };
+    let (jobs, next) = d.sched.jobs_page(cursor, limit);
+    Response::ok(Json::obj(vec![
+        ("jobs", Json::Arr(jobs.iter().map(|j| j.summary_json()).collect())),
+        (
+            "next_cursor",
+            next.map(|n| Json::Str(n.to_string())).unwrap_or(Json::Null),
+        ),
+    ]))
+}
+
+/// `GET /v1/archive?cursor=&limit=`: one page of archive records in key
+/// (fingerprint) order — the fleet pull-merge's read side. The cursor is
+/// opaque to clients (it happens to be the last record key).
+fn list_archive(d: &Daemon, req: &Request) -> Response {
+    let (cursor, limit) = match page_params(req) {
+        Ok(p) => p,
+        Err(resp) => return resp,
+    };
+    let (records, next) = d.archive.page(cursor.as_deref(), limit);
+    Response::ok(Json::obj(vec![
+        ("records", Json::Obj(records.into_iter().collect())),
+        (
+            "next_cursor",
+            next.map(Json::Str).unwrap_or(Json::Null),
+        ),
+    ]))
+}
+
+/// `POST /v1/archive/merge`: union-merge replicated records into this
+/// worker's archive (max hit count wins; see `Archive::merge_record`).
+/// A merge that changed anything re-warms live session memos and persists
+/// (throttled — the drain still saves unconditionally).
+fn merge_archive(d: &Daemon, req: &Request) -> Response {
+    let body = match req.json() {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    match d.archive.merge_json(&body) {
+        Ok(st) => {
+            if st.changed() {
+                d.runner.absorb_archive(&d.archive);
+                if let Err(e) = d.archive.save_throttled(Duration::from_secs(5)) {
+                    eprintln!("[serve] archive save after merge failed: {e:#}");
+                }
+            }
+            let mut out = match st.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("MergeStats::to_json returns an object"),
+            };
+            out.insert("records".to_string(), Json::Num(d.archive.len() as f64));
+            Response::ok(Json::Obj(out))
+        }
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    }
+}
+
 fn with_job(d: &Daemon, id: &str, f: impl FnOnce(&Job) -> Response) -> Response {
     let Ok(id) = id.parse::<u64>() else {
         return Response::error(400, "job id must be a number");
@@ -327,6 +437,13 @@ fn stats(d: &Daemon) -> Response {
     Response::ok(Json::obj(vec![
         ("workers", Json::Num(d.cfg.workers as f64)),
         ("draining", Json::Bool(d.sched.is_draining())),
+        (
+            "http",
+            Json::obj(vec![
+                ("connections", Json::Num(d.connections.load(Ordering::Relaxed) as f64)),
+                ("requests", Json::Num(d.requests.load(Ordering::Relaxed) as f64)),
+            ]),
+        ),
         ("scheduler", d.sched.stats_json()),
         (
             "archive",

@@ -107,6 +107,24 @@ impl Job {
         Json::obj(fields)
     }
 
+    /// One row of the `GET /v1/jobs` listing: the status fields without
+    /// the episode tail — a page of summaries must stay O(limit), not
+    /// O(limit × tail).
+    pub fn summary_json(&self) -> Json {
+        let s = lock_recover(&self.state);
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("net", Json::Str(self.spec.net.clone())),
+            ("status", Json::Str(s.status.as_str().to_string())),
+            (
+                "source",
+                Json::Str(if s.from_archive { "archive" } else { "search" }.to_string()),
+            ),
+            ("episodes_run", Json::Num(s.episodes_run as f64)),
+            ("episodes_total", Json::Num(self.spec.cfg.episodes as f64)),
+        ])
+    }
+
     /// `GET /v1/jobs/{id}/result` body, once the job is done.
     pub fn result_json(&self) -> Option<Json> {
         let s = lock_recover(&self.state);
@@ -157,6 +175,11 @@ pub trait JobRunner: Send + Sync {
     fn registry(&self) -> Option<std::sync::Arc<crate::registry::Registry>> {
         None
     }
+
+    /// The archive gained records out-of-band (a fleet pull-merge via
+    /// `POST /v1/archive/merge`). The real runner re-warms live session
+    /// memos from them; stubs default to a no-op.
+    fn absorb_archive(&self, _archive: &Archive) {}
 }
 
 /// What a cancel request actually did (mapped to HTTP statuses by the
@@ -384,6 +407,32 @@ impl Scheduler {
 
     pub fn job(&self, id: u64) -> Option<Arc<Job>> {
         lock_recover(&self.inner).jobs.get(&id).cloned()
+    }
+
+    /// One page of retained jobs in id order. `cursor` is the last id of
+    /// the previous page (exclusive); returns the page plus the next
+    /// cursor (`None` when exhausted). Ids are monotonic, so the cursor is
+    /// stable under concurrent submissions — new jobs only ever appear
+    /// after it.
+    pub fn jobs_page(&self, cursor: Option<u64>, limit: usize) -> (Vec<Arc<Job>>, Option<u64>) {
+        let g = lock_recover(&self.inner);
+        let start = match cursor {
+            Some(c) => std::ops::Bound::Excluded(c),
+            None => std::ops::Bound::Unbounded,
+        };
+        let mut out: Vec<Arc<Job>> = g
+            .jobs
+            .range((start, std::ops::Bound::Unbounded))
+            .take(limit + 1)
+            .map(|(_, j)| j.clone())
+            .collect();
+        let next = if out.len() > limit {
+            out.truncate(limit);
+            out.last().map(|j| j.id)
+        } else {
+            None
+        };
+        (out, next)
     }
 
     /// Cancel a job: a queued job flips to `Cancelled` immediately and is

@@ -296,6 +296,20 @@ impl<V: Clone> SessionCache<V> {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Snapshot of the Ready sessions: `(key, value)` clones. The archive
+    /// merge path walks this to re-warm live memos with replicated
+    /// records; building/vacant/poisoned slots are skipped (a building
+    /// session warm-starts itself when its leader finishes).
+    pub fn ready_sessions(&self) -> Vec<(SessionKey, V)> {
+        let m = lock_recover(&self.slots);
+        m.iter()
+            .filter_map(|(k, e)| match &e.slot {
+                Slot::Ready(v) => Some((k.clone(), v.clone())),
+                _ => None,
+            })
+            .collect()
+    }
 }
 
 /// Condvar wait that recovers a poisoned guard (same rationale as
@@ -587,6 +601,22 @@ impl JobRunner for SessionRunner {
 
     fn healthy(&self) -> bool {
         self.engine.health().is_healthy()
+    }
+
+    /// A fleet pull-merge landed new records: fold their memo entries into
+    /// every LIVE session of the matching (net, env fingerprint). Sessions
+    /// built later warm-start from the archive anyway (see `run_inner`);
+    /// this hook closes the gap for sessions that were already running
+    /// when the records arrived. Purity makes it safe: accuracy is a pure
+    /// function of (env config, bits), so for entries both sides already
+    /// hold, `AccMemo::extend`'s overwrite writes back the same value.
+    fn absorb_archive(&self, archive: &Archive) {
+        for (key, env) in self.sessions.ready_sessions() {
+            let warm = archive.memo_for(&key.net, key.env_fp);
+            if !warm.is_empty() {
+                env.memo().extend(warm);
+            }
+        }
     }
 
     fn registry(&self) -> Option<Arc<Registry>> {

@@ -1,0 +1,560 @@
+//! Integration tests for the `releq fleet` front end.
+//!
+//! Two tiers, mirroring `serve_daemon.rs`:
+//!
+//! * **stub tier** (always runs, no PJRT): `StubRunner`-backed workers
+//!   under a real `FleetServer` — consistent-hash affinity, 429→steal,
+//!   health-aware rerouting around a dead worker, archive pull-merge
+//!   convergence (zero-eval resubmission at any entry point), keep-alive
+//!   connection reuse on the router→worker path, paginated listings, and
+//!   fleet-wide drain.
+//! * **artifact tier** (skipped without `artifacts/manifest.json`): the
+//!   acceptance criteria — a routed job is bit-identical to the same job
+//!   against a standalone daemon, and post-merge resubmissions cost zero
+//!   PJRT executions regardless of entry point.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use releq::config::{FleetConfig, JobSpec, ServeConfig};
+use releq::fleet::FleetServer;
+use releq::metrics::EpisodeLog;
+use releq::serve::http::request;
+use releq::serve::{
+    env_fingerprint, search_fingerprint, Archive, Job, JobRunner, Server, Solution,
+};
+use releq::util::json::Json;
+
+// ---- stub backend (same shape as serve_daemon.rs) ----------------------------
+
+struct StubRunner {
+    episode_ms: u64,
+    runs: AtomicU64,
+}
+
+impl StubRunner {
+    fn new(episode_ms: u64) -> Arc<StubRunner> {
+        Arc::new(StubRunner { episode_ms, runs: AtomicU64::new(0) })
+    }
+}
+
+impl JobRunner for StubRunner {
+    fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
+        Ok((
+            env_fingerprint(&spec.net, 8, &spec.cfg.env),
+            search_fingerprint(&spec.net, 8, &spec.cfg),
+        ))
+    }
+
+    fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        let eps = job.spec.cfg.episodes;
+        for e in 0..eps {
+            job.ctl.check()?;
+            std::thread::sleep(Duration::from_millis(self.episode_ms));
+            job.ctl.notify(&EpisodeLog {
+                episode: e,
+                reward: e as f64,
+                state_acc: 0.9,
+                state_q: 0.5,
+                bits: vec![4, 4],
+                probs: vec![],
+            });
+        }
+        let solution = Solution {
+            bits: vec![4, 4],
+            avg_bits: 4.0,
+            acc_fullp: 0.95,
+            acc_final: 0.93,
+            acc_loss_pct: 2.0,
+            state_q: 0.5,
+            reward: eps.saturating_sub(1) as f64,
+            episodes_run: eps,
+            pareto: vec![(0.5, 0.98, vec![4, 4])],
+        };
+        Ok((solution, vec![(vec![4, 4], 0.93), (vec![8, 8], 0.95)]))
+    }
+}
+
+// ---- helpers -----------------------------------------------------------------
+
+fn tmp_archive(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("releq_fleet_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.json"));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+fn serve_cfg(archive: &PathBuf, workers: usize, queue_cap: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.addr = "127.0.0.1:0".to_string();
+    cfg.workers = workers;
+    cfg.queue_cap = queue_cap;
+    cfg.archive = archive.clone();
+    cfg.log_tail = 4;
+    cfg
+}
+
+type Handle = std::thread::JoinHandle<Result<()>>;
+
+/// One stub worker daemon; returns (addr, its StubRunner, join handle).
+fn stub_worker(name: &str, episode_ms: u64, queue_cap: usize) -> (String, Arc<StubRunner>, Handle) {
+    let archive_path = tmp_archive(name);
+    let stub = StubRunner::new(episode_ms);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server =
+        Server::bind_with(serve_cfg(&archive_path, 1, queue_cap), stub.clone(), archive).unwrap();
+    let addr = server.local_addr().to_string();
+    (addr, stub, std::thread::spawn(move || server.run()))
+}
+
+/// A fleet joined to already-running workers; merge on demand only.
+fn fleet_over(worker_addrs: &[String], archive_name: &str, steal_budget: usize)
+              -> (String, Handle) {
+    let mut cfg = FleetConfig::default();
+    cfg.addr = "127.0.0.1:0".to_string();
+    cfg.worker_addrs = worker_addrs.to_vec();
+    cfg.archive = tmp_archive(archive_name);
+    cfg.merge_interval_ms = 0;
+    // long interval: tests drive health via the bind-time probe and the
+    // transport's mark-down-on-error path, not timer races
+    cfg.health_interval_ms = 60_000;
+    cfg.steal_budget = steal_budget;
+    let server = FleetServer::bind(cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn submit(addr: &str, body: &str) -> (u16, Json) {
+    request(addr, "POST", "/v1/jobs", Some(&Json::parse(body).unwrap())).unwrap()
+}
+
+fn wait_terminal(addr: &str, id: u64, timeout: Duration) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let (s, j) = request(addr, "GET", &format!("/v1/jobs/{id}"), None).unwrap();
+        assert_eq!(s, 200, "status poll failed: {}", j.dump());
+        if matches!(j.s("status"), "done" | "failed" | "cancelled") {
+            return j;
+        }
+        assert!(t0.elapsed() < timeout, "job {id} not terminal after {timeout:?}: {}", j.dump());
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn get(addr: &str, path: &str) -> (u16, Json) {
+    request(addr, "GET", path, None).unwrap()
+}
+
+/// Strip the routing-dependent fields (`id`, `worker`) so bodies can be
+/// compared across entry points.
+fn strip_routing(j: &Json) -> Json {
+    match j {
+        Json::Obj(m) => {
+            let mut m = m.clone();
+            m.remove("id");
+            m.remove("worker");
+            Json::Obj(m)
+        }
+        other => other.clone(),
+    }
+}
+
+// ---- stub tier ---------------------------------------------------------------
+
+/// End to end over two joined workers: affinity, archive hits, merge
+/// convergence to the other worker, listings, stats, drain.
+#[test]
+fn fleet_routes_merges_and_drains() {
+    let (a_addr, a_stub, a_handle) = stub_worker("e2e_a", 2, 8);
+    let (b_addr, b_stub, b_handle) = stub_worker("e2e_b", 2, 8);
+    let (fleet, fleet_handle) = fleet_over(&[a_addr.clone(), b_addr.clone()], "e2e_fleet", 1);
+
+    // baseline: the same job against a standalone daemon (worker-less
+    // comparison server), for the bit-identical check
+    let (solo_addr, _solo_stub, solo_handle) = stub_worker("e2e_solo", 2, 8);
+    let body = r#"{"net": "stubnet", "config": {"episodes": 4}}"#;
+    let (s, solo) = submit(&solo_addr, body);
+    assert_eq!(s, 202, "{}", solo.dump());
+    let solo_done = wait_terminal(&solo_addr, solo.u("id") as u64, Duration::from_secs(10));
+    assert_eq!(solo_done.s("status"), "done");
+    let (s, solo_result) = get(&solo_addr, &format!("/v1/jobs/{}/result", solo.u("id")));
+    assert_eq!(s, 200);
+
+    // the same job through the fleet
+    let (s, j) = submit(&fleet, body);
+    assert_eq!(s, 202, "{}", j.dump());
+    let home = j.s("worker").to_string();
+    assert!(home == a_addr || home == b_addr, "worker must be attributed: {}", j.dump());
+    let id = j.u("id") as u64;
+    let done = wait_terminal(&fleet, id, Duration::from_secs(10));
+    assert_eq!(done.s("status"), "done", "{}", done.dump());
+    assert_eq!(done.s("worker"), home, "polls must reach the same worker");
+    let (s, result) = get(&fleet, &format!("/v1/jobs/{id}/result"));
+    assert_eq!(s, 200, "{}", result.dump());
+    // bit-identical modulo the routing fields the fleet adds/rewrites
+    assert_eq!(
+        strip_routing(&result),
+        strip_routing(&solo_result),
+        "routed result must match the standalone daemon's"
+    );
+
+    // exact resubmission: consistent hashing sends it to the SAME worker,
+    // whose archive answers with zero new runs
+    let runs_before = (a_stub.runs.load(Ordering::SeqCst), b_stub.runs.load(Ordering::SeqCst));
+    let (s, j2) = submit(&fleet, body);
+    assert_eq!(s, 200, "archive answers are complete immediately: {}", j2.dump());
+    assert_eq!(j2.s("source"), "archive");
+    assert_eq!(j2.s("worker"), home, "affinity must route the repeat to the warm worker");
+    assert_eq!(
+        (a_stub.runs.load(Ordering::SeqCst), b_stub.runs.load(Ordering::SeqCst)),
+        runs_before,
+        "archive hit must not re-run anywhere"
+    );
+
+    // replicate, then resubmit DIRECTLY to the worker that never ran the
+    // job: still an archive hit — zero evals at any entry point
+    let (s, round) = request(&fleet, "POST", "/v1/fleet/merge", None).unwrap();
+    assert_eq!(s, 200, "{}", round.dump());
+    assert_eq!(round.u("pulled"), 2, "both workers replicated: {}", round.dump());
+    assert_eq!(round.u("pushed"), 2, "{}", round.dump());
+    let other = if home == a_addr { &b_addr } else { &a_addr };
+    let other_stub = if home == a_addr { &b_stub } else { &a_stub };
+    let other_runs = other_stub.runs.load(Ordering::SeqCst);
+    let (s, j3) = submit(other, body);
+    assert_eq!(s, 200, "post-merge direct submit must hit: {}", j3.dump());
+    assert_eq!(j3.s("source"), "archive");
+    assert_eq!(other_stub.runs.load(Ordering::SeqCst), other_runs);
+
+    // the merged archive is served (and paginated) by the fleet itself
+    let (s, p1) = get(&fleet, "/v1/archive?limit=1");
+    assert_eq!(s, 200);
+    assert_eq!(p1.req("records").as_obj().unwrap().len(), 1);
+
+    // fleet job listing pages by fleet id
+    let (s, jobs) = get(&fleet, "/v1/jobs?limit=1");
+    assert_eq!(s, 200);
+    let rows = jobs.req("jobs").as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert!(rows[0].get("tail").is_none(), "summaries must omit the tail");
+    if let Some(cursor) = jobs.get("next_cursor").and_then(Json::as_str) {
+        let (s, page2) = get(&fleet, &format!("/v1/jobs?limit=8&cursor={cursor}"));
+        assert_eq!(s, 200);
+        for row in page2.req("jobs").as_arr().unwrap() {
+            assert!(row.u("id") as u64 > cursor.parse::<u64>().unwrap());
+        }
+    }
+
+    // aggregated stats carry router counters and one section per worker
+    let (s, stats) = get(&fleet, "/v1/stats");
+    assert_eq!(s, 200);
+    // both the original submission and the archive-hit resubmission were
+    // placed on the home worker
+    assert_eq!(stats.req("router").u("routed"), 2);
+    assert_eq!(stats.req("router").u("routed_home"), 2);
+    let per_worker = stats.req("workers").as_obj().unwrap();
+    assert_eq!(per_worker.len(), 2);
+    for w in per_worker.values() {
+        assert_eq!(w.s("health"), "Up");
+    }
+    assert_eq!(stats.req("merge").u("rounds"), 1);
+
+    // keep-alive transport: the home worker served several fleet requests
+    // (submit, polls, result) over FEWER connections than requests
+    let (s, wstats) = get(&home, "/v1/stats");
+    assert_eq!(s, 200);
+    let http = wstats.req("http");
+    assert!(
+        http.u("requests") >= http.u("connections") + 3,
+        "router must reuse pooled connections: {} requests / {} connections",
+        http.u("requests"),
+        http.u("connections"),
+    );
+
+    // fleet shutdown: final merge + drain of both workers
+    let (s, down) = request(&fleet, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(s, 200, "{}", down.dump());
+    assert_eq!(down.u("drained_workers"), 2);
+    assert_eq!(down.u("unreachable_workers"), 0);
+    fleet_handle.join().unwrap().unwrap();
+    a_handle.join().unwrap().unwrap();
+    b_handle.join().unwrap().unwrap();
+
+    // standalone comparison daemon cleans up too
+    let (s, _) = request(&solo_addr, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(s, 200);
+    solo_handle.join().unwrap().unwrap();
+}
+
+/// A full home worker answers 429; the router steals to a ring successor
+/// within the steal budget, and sheds when the budget is 0.
+#[test]
+fn full_home_worker_triggers_bounded_stealing() {
+    // 1 worker thread + queue cap 1: one running + one queued fills a worker
+    let (a_addr, _a_stub, a_handle) = stub_worker("steal_a", 20, 1);
+    let (b_addr, _b_stub, b_handle) = stub_worker("steal_b", 20, 1);
+    let (fleet, fleet_handle) = fleet_over(&[a_addr.clone(), b_addr.clone()], "steal_fleet", 1);
+
+    // all seeds share one env config → one affinity key → one home worker
+    let body = |seed: u64| {
+        format!(r#"{{"net": "stubnet", "config": {{"episodes": 60, "seed": {seed}}}}}"#)
+    };
+    let (s, j1) = submit(&fleet, &body(1));
+    assert_eq!(s, 202, "{}", j1.dump());
+    let home = j1.s("worker").to_string();
+    // wait until job 1 is RUNNING so job 2 occupies the queue slot
+    let t0 = Instant::now();
+    loop {
+        let (_, j) = get(&fleet, &format!("/v1/jobs/{}", j1.u("id")));
+        if j.s("status") == "running" {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "job 1 never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (s, j2) = submit(&fleet, &body(2));
+    assert_eq!(s, 202, "{}", j2.dump());
+    assert_eq!(j2.s("worker"), home, "same affinity key routes home while it has capacity");
+
+    // home is now full: the third job must be STOLEN by the other worker
+    let (s, j3) = submit(&fleet, &body(3));
+    assert_eq!(s, 202, "steal must succeed: {}", j3.dump());
+    assert_ne!(j3.s("worker"), home, "stolen job must land elsewhere");
+    let (_, stats) = get(&fleet, "/v1/stats");
+    assert_eq!(stats.req("router").u("stolen"), 1, "{}", stats.dump());
+
+    // fourth job: home 429s AND the thief is now busy too → shed
+    let t0 = Instant::now();
+    loop {
+        let (s, j4) = submit(&fleet, &body(4));
+        if s == 429 {
+            break;
+        }
+        // the thief may still have queue room for one more; cancel and retry
+        assert_eq!(s, 202, "{}", j4.dump());
+        assert!(t0.elapsed() < Duration::from_secs(5), "fleet never saturated");
+    }
+    let (_, stats) = get(&fleet, "/v1/stats");
+    assert!(stats.req("router").u("shed") >= 1, "{}", stats.dump());
+
+    // cancel everything so the drain is quick
+    let (_, jobs) = get(&fleet, "/v1/jobs?limit=64");
+    for row in jobs.req("jobs").as_arr().unwrap() {
+        let _ = request(&fleet, "POST", &format!("/v1/jobs/{}/cancel", row.u("id")), None);
+    }
+    let (s, _) = request(&fleet, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(s, 200);
+    fleet_handle.join().unwrap().unwrap();
+    a_handle.join().unwrap().unwrap();
+    b_handle.join().unwrap().unwrap();
+}
+
+/// Zero-budget fleets never steal: the home worker's 429 surfaces.
+#[test]
+fn zero_steal_budget_passes_the_429_through() {
+    let (a_addr, _a_stub, a_handle) = stub_worker("nosteal_a", 20, 1);
+    let (b_addr, _b_stub, b_handle) = stub_worker("nosteal_b", 20, 1);
+    let (fleet, fleet_handle) = fleet_over(&[a_addr, b_addr], "nosteal_fleet", 0);
+
+    let body = |seed: u64| {
+        format!(r#"{{"net": "stubnet", "config": {{"episodes": 60, "seed": {seed}}}}}"#)
+    };
+    let (s, j1) = submit(&fleet, &body(1));
+    assert_eq!(s, 202, "{}", j1.dump());
+    let t0 = Instant::now();
+    loop {
+        let (_, j) = get(&fleet, &format!("/v1/jobs/{}", j1.u("id")));
+        if j.s("status") == "running" {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "job 1 never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (s, _) = submit(&fleet, &body(2));
+    assert_eq!(s, 202);
+    let (s, j3) = submit(&fleet, &body(3));
+    assert_eq!(s, 429, "with no steal budget the home's 429 surfaces: {}", j3.dump());
+    let (_, stats) = get(&fleet, "/v1/stats");
+    assert_eq!(stats.req("router").u("stolen"), 0);
+    assert!(stats.req("router").u("shed") >= 1);
+
+    let (_, jobs) = get(&fleet, "/v1/jobs?limit=64");
+    for row in jobs.req("jobs").as_arr().unwrap() {
+        let _ = request(&fleet, "POST", &format!("/v1/jobs/{}/cancel", row.u("id")), None);
+    }
+    let (s, _) = request(&fleet, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(s, 200);
+    fleet_handle.join().unwrap().unwrap();
+    a_handle.join().unwrap().unwrap();
+    b_handle.join().unwrap().unwrap();
+}
+
+/// A dead worker address is probed Down at bind time; every job routes to
+/// the live worker, and the fleet still shuts down clean.
+#[test]
+fn dead_workers_are_skipped_and_tolerated_at_shutdown() {
+    let (live_addr, live_stub, live_handle) = stub_worker("dead_live", 2, 8);
+    // reserve a port and close it: nothing listens there afterwards
+    let dead_addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let (fleet, fleet_handle) = fleet_over(&[live_addr, dead_addr], "dead_fleet", 1);
+
+    // several distinct env fingerprints — some would hash home to the dead
+    // worker, all must complete on the live one
+    for steps in [40u64, 41, 42, 43] {
+        let body = format!(
+            r#"{{"net": "stubnet", "config": {{"episodes": 2, "pretrain_steps": {steps}}}}}"#
+        );
+        let (s, j) = submit(&fleet, &body);
+        assert_eq!(s, 202, "{}", j.dump());
+        let done = wait_terminal(&fleet, j.u("id") as u64, Duration::from_secs(10));
+        assert_eq!(done.s("status"), "done", "{}", done.dump());
+    }
+    assert_eq!(live_stub.runs.load(Ordering::SeqCst), 4);
+
+    // fleet health: degraded membership is visible but the fleet is up
+    let (s, health) = get(&fleet, "/v1/health");
+    assert_eq!(s, 200, "one live worker keeps the fleet up: {}", health.dump());
+    assert_eq!(health.u("routable_workers"), 1);
+
+    // shutdown tolerates the dead worker
+    let (s, down) = request(&fleet, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(s, 200, "{}", down.dump());
+    assert_eq!(down.u("drained_workers"), 1);
+    assert_eq!(down.u("unreachable_workers"), 1);
+    fleet_handle.join().unwrap().unwrap();
+    live_handle.join().unwrap().unwrap();
+}
+
+/// Merge is convergent when both workers hold disjoint solutions: after
+/// one round each side holds the union, served identically everywhere.
+#[test]
+fn merge_round_unions_disjoint_worker_archives() {
+    let (a_addr, _a_stub, a_handle) = stub_worker("union_a", 2, 8);
+    let (b_addr, _b_stub, b_handle) = stub_worker("union_b", 2, 8);
+
+    // solve different jobs directly on each worker (bypassing the router,
+    // as if two fleets had warmed them independently)
+    let (s, ja) = submit(&a_addr, r#"{"net": "stubnet", "config": {"episodes": 2, "seed": 1}}"#);
+    assert_eq!(s, 202);
+    let (s, jb) = submit(&b_addr, r#"{"net": "stubnet", "config": {"episodes": 2, "seed": 2}}"#);
+    assert_eq!(s, 202);
+    wait_terminal(&a_addr, ja.u("id") as u64, Duration::from_secs(10));
+    wait_terminal(&b_addr, jb.u("id") as u64, Duration::from_secs(10));
+
+    let (fleet, fleet_handle) = fleet_over(&[a_addr.clone(), b_addr.clone()], "union_fleet", 1);
+    let (s, round) = request(&fleet, "POST", "/v1/fleet/merge", None).unwrap();
+    assert_eq!(s, 200, "{}", round.dump());
+    assert_eq!(round.u("records"), 2, "merged archive holds the union: {}", round.dump());
+
+    // both workers now agree record-for-record
+    let (_, pa) = get(&a_addr, "/v1/archive?limit=64");
+    let (_, pb) = get(&b_addr, "/v1/archive?limit=64");
+    let keys = |p: &Json| -> Vec<String> {
+        p.req("records").as_obj().unwrap().keys().cloned().collect()
+    };
+    assert_eq!(keys(&pa).len(), 2);
+    assert_eq!(keys(&pa), keys(&pb), "workers must converge on the same key set");
+
+    // a second round is a no-op (idempotence over the wire)
+    let (_, round2) = request(&fleet, "POST", "/v1/fleet/merge", None).unwrap();
+    assert_eq!(round2.u("absorbed"), 0, "{}", round2.dump());
+    assert_eq!(round2.u("records"), 2);
+
+    let (s, _) = request(&fleet, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(s, 200);
+    fleet_handle.join().unwrap().unwrap();
+    a_handle.join().unwrap().unwrap();
+    b_handle.join().unwrap().unwrap();
+}
+
+// ---- artifact tier -----------------------------------------------------------
+
+/// Acceptance criteria with real engines: a routed job is bit-identical
+/// to the standalone daemon's, and post-merge resubmissions cost zero
+/// PJRT executions at either entry point.
+#[test]
+fn fleet_bit_identical_and_zero_eval_with_artifacts() {
+    use releq::runtime::{Engine, Manifest};
+
+    let dir = releq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Arc::new(Engine::new(dir).unwrap());
+    let total_execs = |e: &Engine| e.exec_stats().iter().map(|s| s.execs).sum::<u64>();
+
+    // two real workers + a standalone comparison daemon, one shared engine
+    // (exec counters are engine-global, which is exactly what we assert on)
+    let mk = |name: &str| {
+        let path = tmp_archive(name);
+        let server =
+            Server::bind(serve_cfg(&path, 1, 8), manifest.clone(), engine.clone()).unwrap();
+        let addr = server.local_addr().to_string();
+        (addr, std::thread::spawn(move || server.run()))
+    };
+    let (a_addr, a_handle) = mk("art_a");
+    let (b_addr, b_handle) = mk("art_b");
+    let (solo_addr, solo_handle) = mk("art_solo");
+    let (fleet, fleet_handle) = fleet_over(&[a_addr.clone(), b_addr.clone()], "art_fleet", 1);
+
+    let body = r#"{"net": "lenet", "config": {"episodes": 6, "pretrain_steps": 60,
+                    "long_retrain_steps": 8, "patience": 0, "seed": 11}}"#;
+
+    // through the fleet
+    let (s, j) = submit(&fleet, body);
+    assert_eq!(s, 202, "{}", j.dump());
+    let home = j.s("worker").to_string();
+    let done = wait_terminal(&fleet, j.u("id") as u64, Duration::from_secs(300));
+    assert_eq!(done.s("status"), "done", "{}", done.dump());
+    let (s, routed) = get(&fleet, &format!("/v1/jobs/{}/result", j.u("id")));
+    assert_eq!(s, 200, "{}", routed.dump());
+
+    // same spec against the standalone daemon: bit-identical result
+    let (s, js) = submit(&solo_addr, body);
+    assert_eq!(s, 202, "{}", js.dump());
+    wait_terminal(&solo_addr, js.u("id") as u64, Duration::from_secs(300));
+    let (s, solo) = get(&solo_addr, &format!("/v1/jobs/{}/result", js.u("id")));
+    assert_eq!(s, 200);
+    assert_eq!(
+        strip_routing(&routed),
+        strip_routing(&solo),
+        "routed and standalone results must be bit-identical"
+    );
+
+    // exact resubmission through the fleet: archive hit, zero executions
+    let before = total_execs(&engine);
+    let (s, j2) = submit(&fleet, body);
+    assert_eq!(s, 200, "{}", j2.dump());
+    assert_eq!(j2.s("source"), "archive");
+    assert_eq!(j2.s("worker"), home);
+    assert_eq!(total_execs(&engine), before, "archive hit must cost zero executions");
+
+    // replicate, then hit the OTHER worker directly: still zero executions
+    let (s, round) = request(&fleet, "POST", "/v1/fleet/merge", None).unwrap();
+    assert_eq!(s, 200, "{}", round.dump());
+    let other = if home == a_addr { &b_addr } else { &a_addr };
+    let before = total_execs(&engine);
+    let (s, j3) = submit(other, body);
+    assert_eq!(s, 200, "{}", j3.dump());
+    assert_eq!(j3.s("source"), "archive");
+    assert_eq!(total_execs(&engine), before, "post-merge direct hit must cost zero executions");
+
+    let (s, _) = request(&fleet, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(s, 200);
+    fleet_handle.join().unwrap().unwrap();
+    a_handle.join().unwrap().unwrap();
+    b_handle.join().unwrap().unwrap();
+    let (s, _) = request(&solo_addr, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(s, 200);
+    solo_handle.join().unwrap().unwrap();
+}
