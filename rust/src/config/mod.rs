@@ -344,6 +344,32 @@ pub struct JobSpec {
     pub net: String,
     pub cfg: SearchConfig,
     pub deadline_ms: Option<u64>,
+    /// client-supplied dedupe key: a resubmission carrying the same key
+    /// returns the original job instead of queueing a duplicate (the fleet
+    /// router stamps one on every forwarded job so a retried POST after a
+    /// dropped keep-alive response can never double-run)
+    pub idempotency_key: Option<String>,
+    /// the original request body, journaled verbatim into the job WAL so a
+    /// recovered job re-decodes through [`job_from_json`] with full fidelity
+    pub raw: Json,
+}
+
+/// Validate a client-supplied idempotency key: same strictness philosophy as
+/// [`validate_net_name`] — the key lands in WAL records and stats output, so
+/// keep the charset boring.
+pub fn validate_idempotency_key(key: &str) -> Result<()> {
+    anyhow::ensure!(!key.is_empty(), "idempotency_key must be non-empty");
+    anyhow::ensure!(
+        key.len() <= 80,
+        "idempotency_key too long ({} chars, max 80)",
+        key.len()
+    );
+    anyhow::ensure!(
+        key.bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-' || b == b'.'),
+        "idempotency_key may only contain [A-Za-z0-9._-]"
+    );
+    Ok(())
 }
 
 /// Decode a job submission. The `config` object accepts exactly the keys a
@@ -354,8 +380,8 @@ pub fn job_from_json(j: &Json) -> Result<JobSpec> {
     let obj = j.as_obj().context("job body must be a JSON object")?;
     for k in obj.keys() {
         anyhow::ensure!(
-            matches!(k.as_str(), "net" | "config" | "deadline_ms"),
-            "unknown job key `{k}` (expected net, config, deadline_ms)"
+            matches!(k.as_str(), "net" | "config" | "deadline_ms" | "idempotency_key"),
+            "unknown job key `{k}` (expected net, config, deadline_ms, idempotency_key)"
         );
     }
     let net = j
@@ -377,7 +403,15 @@ pub fn job_from_json(j: &Json) -> Result<JobSpec> {
                 .context("`deadline_ms` must be a non-negative number")? as u64,
         ),
     };
-    Ok(JobSpec { net, cfg, deadline_ms })
+    let idempotency_key = match j.get("idempotency_key") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let key = v.as_str().context("`idempotency_key` must be a string")?;
+            validate_idempotency_key(key)?;
+            Some(key.to_string())
+        }
+    };
+    Ok(JobSpec { net, cfg, deadline_ms, idempotency_key, raw: j.clone() })
 }
 
 /// `releq serve` daemon configuration (see `serve::Server`).
@@ -414,6 +448,17 @@ pub struct ServeConfig {
     /// emit one structured JSON access-log line per request to stderr
     /// (`--access-log`; same line shape as the fleet router's)
     pub access_log: bool,
+    /// write-ahead job journal path (`--wal`; absent = no journal). Job
+    /// submissions and status transitions append here fsync'd; on restart
+    /// incomplete jobs are recovered and re-enqueued under their old ids.
+    pub wal: Option<PathBuf>,
+    /// search checkpoint directory (`--checkpoint-dir`; absent = searches
+    /// run without checkpoints). Recovered and resubmitted jobs resume from
+    /// the latest valid checkpoint instead of restarting.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// episodes between checkpoint writes (`--checkpoint-every`; writes
+    /// land on the nearest PPO update boundary at or after the mark)
+    pub checkpoint_every: usize,
 }
 
 impl Default for ServeConfig {
@@ -430,6 +475,9 @@ impl Default for ServeConfig {
             breaker_fails: 8,
             registry_dir: None,
             access_log: false,
+            wal: None,
+            checkpoint_dir: None,
+            checkpoint_every: 8,
         }
     }
 }
@@ -469,6 +517,16 @@ pub fn serve_config(args: &Args) -> Result<ServeConfig> {
         c.registry_dir = Some(PathBuf::from(v));
     }
     c.access_log = args.has("access-log");
+    if let Some(v) = args.opt_str("wal") {
+        c.wal = Some(PathBuf::from(v));
+    }
+    if let Some(v) = args.opt_str("checkpoint-dir") {
+        c.checkpoint_dir = Some(PathBuf::from(v));
+    }
+    if let Some(v) = flag_num(args, "checkpoint-every")? {
+        anyhow::ensure!(v >= 1usize, "--checkpoint-every must be >= 1");
+        c.checkpoint_every = v;
+    }
     Ok(c)
 }
 
@@ -503,6 +561,12 @@ pub struct FleetConfig {
     /// structured access-log lines on the router (and forwarded to
     /// spawned workers) (`--access-log`)
     pub access_log: bool,
+    /// durable fleet mode (`--durable`): spawned worker i gets a job WAL at
+    /// `<stem>.w{i}.wal` and a checkpoint dir at `<stem>.w{i}.ckpt` beside
+    /// the fleet archive, checkpoints replicate between workers during merge
+    /// rounds, and jobs in flight on a worker that goes Down are
+    /// re-dispatched to its ring successor
+    pub durable: bool,
 }
 
 impl Default for FleetConfig {
@@ -518,6 +582,7 @@ impl Default for FleetConfig {
             health_interval_ms: 1000,
             steal_budget: 1,
             access_log: false,
+            durable: false,
         }
     }
 }
@@ -565,6 +630,7 @@ pub fn fleet_config(args: &Args) -> Result<FleetConfig> {
         c.steal_budget = v;
     }
     c.access_log = args.has("access-log");
+    c.durable = args.has("durable");
     Ok(c)
 }
 
@@ -843,6 +909,53 @@ mod tests {
         assert!(fleet_config(&args("fleet --spawn-workers 1 --worker-threads 0")).is_err());
         assert!(fleet_config(&args("fleet --spawn-workers 1 --health-interval-ms 0")).is_err());
         assert!(fleet_config(&args("fleet --spawn-workers nope")).is_err());
+    }
+
+    #[test]
+    fn idempotency_key_decodes_and_validates() {
+        let j = Json::parse(r#"{"net": "lenet", "idempotency_key": "cli.retry-7"}"#).unwrap();
+        let spec = job_from_json(&j).unwrap();
+        assert_eq!(spec.idempotency_key.as_deref(), Some("cli.retry-7"));
+        // raw body is carried verbatim for the WAL, key included
+        assert_eq!(
+            spec.raw.get("idempotency_key").and_then(Json::as_str),
+            Some("cli.retry-7")
+        );
+        // absent and null both mean "no key"
+        let j = Json::parse(r#"{"net": "lenet"}"#).unwrap();
+        assert_eq!(job_from_json(&j).unwrap().idempotency_key, None);
+        let j = Json::parse(r#"{"net": "lenet", "idempotency_key": null}"#).unwrap();
+        assert_eq!(job_from_json(&j).unwrap().idempotency_key, None);
+        // bad keys 400 at decode, same strictness as net names
+        for bad in ["", "a b", "a/b", "k\u{e9}y", &"k".repeat(81)] {
+            let j = Json::obj(vec![
+                ("net", Json::Str("lenet".into())),
+                ("idempotency_key", Json::Str(bad.to_string())),
+            ]);
+            assert!(job_from_json(&j).is_err(), "{bad:?} must be rejected");
+        }
+        assert!(job_from_json(
+            &Json::parse(r#"{"net": "lenet", "idempotency_key": 7}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn durability_flags_resolve() {
+        let c = serve_config(&args("serve")).unwrap();
+        assert_eq!((c.wal.clone(), c.checkpoint_dir.clone()), (None, None));
+        assert_eq!(c.checkpoint_every, 8);
+        let c = serve_config(&args(
+            "serve --wal /tmp/jobs.wal --checkpoint-dir /tmp/ckpt --checkpoint-every 4",
+        ))
+        .unwrap();
+        assert_eq!(c.wal, Some(std::path::PathBuf::from("/tmp/jobs.wal")));
+        assert_eq!(c.checkpoint_dir, Some(std::path::PathBuf::from("/tmp/ckpt")));
+        assert_eq!(c.checkpoint_every, 4);
+        assert!(serve_config(&args("serve --checkpoint-every 0")).is_err());
+        assert!(serve_config(&args("serve --checkpoint-every soon")).is_err());
+        assert!(!fleet_config(&args("fleet --spawn-workers 1")).unwrap().durable);
+        assert!(fleet_config(&args("fleet --spawn-workers 1 --durable")).unwrap().durable);
     }
 
     #[test]

@@ -1,0 +1,583 @@
+//! Durable search state: versioned, checksummed `SearchCheckpoint` files
+//! and the [`Durable`] driver that writes them at PPO update boundaries.
+//!
+//! A ReLeQ search is hundreds of episodes of retrain+eval; losing episode
+//! 180/200 to a crash forfeits hours of device time. This module captures
+//! everything a resumed run needs to continue **bit-identically**:
+//!
+//! * the episode index — per-episode PCG streams derive from the base seed
+//!   and the episode number alone (`Searcher::episode_rng`), so stream
+//!   positions need no explicit serialization;
+//! * the downloaded PPO agent state (params + Adam moments + step count),
+//!   snapshotted only at update boundaries where no trajectory is pending;
+//! * the episode log so far and the convergence-detector state;
+//! * the accuracy memo export, so resumed runs re-execute **only**
+//!   post-checkpoint episodes (pre-checkpoint evaluations hit the memo —
+//!   pinned by exec accounting in `tests/durable_jobs.rs`).
+//!
+//! Files follow the archive's durability idiom: a `schema_version` stamp,
+//! an FNV-1a checksum over the canonical payload, and atomic tmp+rename
+//! installation. The rename is wired through the `$RELEQ_FAULTS` seam
+//! (action point [`CHECKPOINT_FAULT`]) so chaos tests can tear the write;
+//! a torn or corrupt checkpoint is detected at load and the caller falls
+//! back to a fresh run — never a hard job failure.
+//!
+//! f32 tensors (agent params, Adam moments) are persisted as their raw
+//! `u32` bit patterns: every bit pattern (±0.0, subnormals, NaN payloads)
+//! round-trips exactly through the integer-formatting JSON writer, which a
+//! decimal rendering cannot guarantee. Resume bit-identity depends on it.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{episodes_json, EpisodeLog};
+use crate::runtime::faults::FaultPlan;
+use crate::util::fnv::Fnv;
+use crate::util::json::Json;
+
+/// Bump on incompatible layout changes; loaders refuse newer files.
+pub const CHECKPOINT_SCHEMA_VERSION: u64 = 1;
+
+/// Fault-plan action point consulted between staging a checkpoint's tmp
+/// file and renaming it into place (mirrors `registry_install`).
+pub const CHECKPOINT_FAULT: &str = "checkpoint_save";
+
+// ---- agent snapshot ----------------------------------------------------------
+
+/// The PPO agent's learnable state at an update boundary: flat parameters,
+/// Adam first/second moments, the Adam step count, and the update counter.
+/// Captured/applied by `PpoAgent::{snapshot, restore}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentSnapshot {
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub adam_t: f32,
+    pub updates_done: usize,
+}
+
+/// f32 slice → JSON array of raw u32 bit patterns (exact round trip).
+fn f32_bits_json(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|x| Json::Num(x.to_bits() as f64)).collect())
+}
+
+/// JSON array of u32 bit patterns → f32 vector.
+fn f32s_from_bits(j: Option<&Json>, what: &str) -> Result<Vec<f32>> {
+    j.and_then(Json::as_arr)
+        .with_context(|| format!("checkpoint agent missing `{what}`"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .filter(|n| (0.0..=u32::MAX as f64).contains(n) && n.fract() == 0.0)
+                .map(|n| f32::from_bits(n as u32))
+                .with_context(|| format!("bad f32 bit pattern in checkpoint `{what}`"))
+        })
+        .collect()
+}
+
+impl AgentSnapshot {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("params", f32_bits_json(&self.params)),
+            ("adam_m", f32_bits_json(&self.adam_m)),
+            ("adam_v", f32_bits_json(&self.adam_v)),
+            ("adam_t", Json::Num(self.adam_t.to_bits() as f64)),
+            ("updates_done", Json::Num(self.updates_done as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<AgentSnapshot> {
+        Ok(AgentSnapshot {
+            params: f32s_from_bits(j.get("params"), "params")?,
+            adam_m: f32s_from_bits(j.get("adam_m"), "adam_m")?,
+            adam_v: f32s_from_bits(j.get("adam_v"), "adam_v")?,
+            adam_t: f32::from_bits(
+                j.get("adam_t")
+                    .and_then(Json::as_f64)
+                    .context("checkpoint agent missing `adam_t`")? as u32,
+            ),
+            updates_done: j
+                .get("updates_done")
+                .and_then(Json::as_usize)
+                .context("checkpoint agent missing `updates_done`")?,
+        })
+    }
+}
+
+// ---- checkpoint --------------------------------------------------------------
+
+/// One resumable search state, written at a PPO update boundary (no
+/// trajectory is pending there, so the agent snapshot alone is complete).
+#[derive(Debug, Clone)]
+pub struct SearchCheckpoint {
+    /// logical network name (operator visibility + a cheap sanity gate)
+    pub net: String,
+    /// opaque fingerprint of the full search spec; a checkpoint only
+    /// resumes a search with the identical fingerprint
+    pub search_fp: u64,
+    /// episodes fully completed (the resumed loop starts here)
+    pub episodes_done: usize,
+    /// the episode log so far, with probs (part of the final result)
+    pub log: Vec<EpisodeLog>,
+    pub agent: AgentSnapshot,
+    /// convergence-detector state (`Searcher::greedy_converged`)
+    pub last_greedy: Option<Vec<u32>>,
+    pub stable_updates: usize,
+    /// accuracy memo export — what makes resumed runs skip re-execution
+    pub memo: Vec<(Vec<u32>, f64)>,
+}
+
+fn checksum_hex(payload: &str) -> String {
+    format!("{:016x}", Fnv::new().write_bytes(payload.as_bytes()).finish())
+}
+
+impl SearchCheckpoint {
+    /// Best-so-far (bits, reward) from the log — the paper's running
+    /// solution, surfaced for operators and the fleet replication listing.
+    pub fn best(&self) -> Option<(&[u32], f64)> {
+        self.log
+            .iter()
+            .filter(|e| e.reward.is_finite())
+            .max_by(|a, b| a.reward.total_cmp(&b.reward))
+            .map(|e| (e.bits.as_slice(), e.reward))
+    }
+
+    fn payload_json(&self) -> Json {
+        let memo = Json::Arr(
+            self.memo
+                .iter()
+                .map(|(bits, acc)| {
+                    Json::obj(vec![("bits", Json::arr_u32(bits)), ("acc", Json::Num(*acc))])
+                })
+                .collect(),
+        );
+        let best = match self.best() {
+            Some((bits, reward)) => Json::obj(vec![
+                ("bits", Json::arr_u32(bits)),
+                ("reward", Json::Num(reward)),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("schema_version", Json::Num(CHECKPOINT_SCHEMA_VERSION as f64)),
+            ("net", Json::Str(self.net.clone())),
+            ("search_fp", Json::Str(format!("{:016x}", self.search_fp))),
+            ("episodes_done", Json::Num(self.episodes_done as f64)),
+            ("log", episodes_json(&self.log, true)),
+            ("agent", self.agent.to_json()),
+            (
+                "last_greedy",
+                match &self.last_greedy {
+                    Some(b) => Json::arr_u32(b),
+                    None => Json::Null,
+                },
+            ),
+            ("stable_updates", Json::Num(self.stable_updates as f64)),
+            ("memo", memo),
+            ("best", best),
+        ])
+    }
+
+    /// Full JSON document: the canonical payload plus its checksum.
+    pub fn to_json(&self) -> Json {
+        let payload = self.payload_json();
+        let sum = checksum_hex(&payload.dump());
+        match payload {
+            Json::Obj(mut m) => {
+                m.insert("checksum".to_string(), Json::Str(sum));
+                Json::Obj(m)
+            }
+            _ => unreachable!("payload is an object"),
+        }
+    }
+
+    /// Decode + verify. The checksum is recomputed over the re-serialized
+    /// payload (canonical: sorted keys, shortest-round-trip floats), so any
+    /// bit flip, truncation, or hand edit is rejected; a newer
+    /// `schema_version` is refused rather than misread.
+    pub fn from_json(j: &Json) -> Result<SearchCheckpoint> {
+        let obj = j.as_obj().context("checkpoint is not a JSON object")?;
+        let schema = j
+            .get("schema_version")
+            .and_then(Json::as_f64)
+            .context("checkpoint missing `schema_version`")? as u64;
+        anyhow::ensure!(
+            schema <= CHECKPOINT_SCHEMA_VERSION,
+            "checkpoint schema_version {schema} is newer than supported {CHECKPOINT_SCHEMA_VERSION}"
+        );
+        let recorded = j
+            .get("checksum")
+            .and_then(Json::as_str)
+            .context("checkpoint missing `checksum`")?;
+        let mut payload = obj.clone();
+        payload.remove("checksum");
+        let expect = checksum_hex(&Json::Obj(payload).dump());
+        anyhow::ensure!(
+            recorded == expect,
+            "checkpoint checksum mismatch (recorded {recorded}, computed {expect}): \
+             corrupt or torn write"
+        );
+        let log = j
+            .get("log")
+            .and_then(Json::as_arr)
+            .context("checkpoint missing `log`")?
+            .iter()
+            .map(EpisodeLog::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let memo = j
+            .get("memo")
+            .and_then(Json::as_arr)
+            .context("checkpoint missing `memo`")?
+            .iter()
+            .map(|e| {
+                let bits = e
+                    .get("bits")
+                    .and_then(Json::as_arr)
+                    .context("memo entry missing `bits`")?
+                    .iter()
+                    .map(|b| {
+                        b.as_f64()
+                            .map(|n| n as u32)
+                            .context("non-numeric memo bit")
+                    })
+                    .collect::<Result<Vec<u32>>>()?;
+                let acc = e
+                    .get("acc")
+                    .and_then(Json::as_f64)
+                    .context("memo entry missing `acc`")?;
+                Ok((bits, acc))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let last_greedy = match j.get("last_greedy") {
+            None | Some(Json::Null) => None,
+            Some(b) => Some(
+                b.as_arr()
+                    .context("checkpoint `last_greedy` is not an array")?
+                    .iter()
+                    .map(|x| x.as_f64().map(|n| n as u32).context("bad greedy bit"))
+                    .collect::<Result<Vec<u32>>>()?,
+            ),
+        };
+        Ok(SearchCheckpoint {
+            net: j
+                .get("net")
+                .and_then(Json::as_str)
+                .context("checkpoint missing `net`")?
+                .to_string(),
+            search_fp: u64::from_str_radix(
+                j.get("search_fp")
+                    .and_then(Json::as_str)
+                    .context("checkpoint missing `search_fp`")?,
+                16,
+            )
+            .context("checkpoint `search_fp` is not 16-hex")?,
+            episodes_done: j
+                .get("episodes_done")
+                .and_then(Json::as_usize)
+                .context("checkpoint missing `episodes_done`")?,
+            log,
+            agent: AgentSnapshot::from_json(
+                j.get("agent").context("checkpoint missing `agent`")?,
+            )?,
+            last_greedy,
+            stable_updates: j
+                .get("stable_updates")
+                .and_then(Json::as_usize)
+                .context("checkpoint missing `stable_updates`")?,
+            memo,
+        })
+    }
+
+    /// Atomically install this checkpoint at `path`: write `<path>.tmp`,
+    /// consult the fault plan ([`CHECKPOINT_FAULT`]), then rename. A fault
+    /// or I/O error leaves the previous checkpoint (if any) intact and the
+    /// tmp file removed.
+    pub fn save(&self, path: &Path, faults: Option<&FaultPlan>) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        let stage = (|| -> Result<()> {
+            std::fs::write(&tmp, self.to_json().dump())
+                .with_context(|| format!("staging checkpoint {tmp:?}"))?;
+            if let Some(f) = faults {
+                f.on_exec(CHECKPOINT_FAULT)
+                    .context("checkpoint install fault")?;
+            }
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("installing checkpoint {path:?}"))?;
+            Ok(())
+        })();
+        if stage.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        stage
+    }
+
+    /// Load a checkpoint if one exists. `Ok(None)` means no file; `Err`
+    /// means a file exists but is unusable (corrupt, torn, newer schema) —
+    /// callers count it and fall back to a fresh run.
+    pub fn load(path: &Path) -> Result<Option<SearchCheckpoint>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("reading checkpoint {path:?}")),
+        };
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("checkpoint {path:?} is not valid JSON: {e}"))?;
+        SearchCheckpoint::from_json(&j)
+            .with_context(|| format!("decoding checkpoint {path:?}"))
+            .map(Some)
+    }
+}
+
+// ---- durable driver ----------------------------------------------------------
+
+/// Resume state handed from [`Durable`] (after a successful restore) to the
+/// search drivers: where to pick the episode loop back up.
+#[derive(Debug)]
+pub struct ResumeState {
+    pub start: usize,
+    pub episodes: Vec<EpisodeLog>,
+    pub last_greedy: Option<Vec<u32>>,
+    pub stable_updates: usize,
+}
+
+/// Checkpoint policy + bookkeeping for one durable search run. The search
+/// drivers hand it a fresh [`SearchCheckpoint`] at every update boundary;
+/// it persists one every `every` episodes (and stashes the latest boundary
+/// in between, so a cancellation can still [`Durable::flush`] a final
+/// checkpoint). Save failures are counted and logged, never fatal: a
+/// search must not die because its safety net did.
+pub struct Durable {
+    pub path: PathBuf,
+    /// minimum completed episodes between persisted checkpoints (>= 1)
+    pub every: usize,
+    pub net: String,
+    pub search_fp: u64,
+    faults: Option<Arc<FaultPlan>>,
+    pub saves: u64,
+    pub save_failures: u64,
+    /// `Some(ep)` when this run restored a checkpoint at episode `ep`
+    pub resumed_from: Option<usize>,
+    pub(super) last_saved: usize,
+    pending: Option<SearchCheckpoint>,
+    pub(super) resume: Option<ResumeState>,
+}
+
+impl Durable {
+    /// A durable driver writing to `path` every `every` episodes, with the
+    /// process fault plan (`$RELEQ_FAULTS`) wired into the install path.
+    pub fn new(path: PathBuf, every: usize, net: &str, search_fp: u64) -> Result<Durable> {
+        let faults = FaultPlan::from_env()?.filter(|p| !p.is_empty());
+        Ok(Durable {
+            path,
+            every: every.max(1),
+            net: net.to_string(),
+            search_fp,
+            faults,
+            saves: 0,
+            save_failures: 0,
+            resumed_from: None,
+            last_saved: 0,
+            pending: None,
+            resume: None,
+        })
+    }
+
+    /// Replace the fault plan (tests inject torn writes without touching
+    /// the process environment).
+    pub fn with_fault_plan(mut self, faults: Option<Arc<FaultPlan>>) -> Durable {
+        self.faults = faults;
+        self
+    }
+
+    /// Called by the search drivers at each PPO update boundary. Persists
+    /// when `every` episodes have completed since the last save; otherwise
+    /// keeps the snapshot in memory for a potential [`Durable::flush`].
+    pub fn on_boundary(&mut self, ck: SearchCheckpoint) {
+        if ck.episodes_done >= self.last_saved + self.every {
+            self.write(&ck);
+            self.pending = None;
+        } else {
+            self.pending = Some(ck);
+        }
+    }
+
+    /// Persist the newest unsaved boundary snapshot, if any — the "final
+    /// checkpoint" on cancellation/shutdown.
+    pub fn flush(&mut self) {
+        if let Some(ck) = self.pending.take() {
+            self.write(&ck);
+        }
+    }
+
+    /// The search finished: the checkpoint has served its purpose. Removes
+    /// the file so a later identical submission starts fresh instead of
+    /// resuming into an instant no-op.
+    pub fn complete(&mut self) {
+        self.pending = None;
+        let _ = std::fs::remove_file(&self.path);
+    }
+
+    fn write(&mut self, ck: &SearchCheckpoint) {
+        match ck.save(&self.path, self.faults.as_deref()) {
+            Ok(()) => {
+                self.saves += 1;
+                self.last_saved = ck.episodes_done;
+            }
+            Err(e) => {
+                self.save_failures += 1;
+                eprintln!(
+                    "[checkpoint] save to {:?} failed (search continues): {e:#}",
+                    self.path
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("releq_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample(episodes_done: usize) -> SearchCheckpoint {
+        let log = (0..episodes_done)
+            .map(|i| EpisodeLog {
+                episode: i,
+                reward: 0.5 + i as f64 * 0.0625,
+                state_acc: 0.9,
+                state_q: 4.0 - i as f64 * 0.125,
+                bits: vec![8, 4, 2, 8],
+                probs: vec![vec![0.125f32; 8]; 4],
+            })
+            .collect();
+        SearchCheckpoint {
+            net: "lenet".to_string(),
+            search_fp: 0xdead_beef_0123_4567,
+            episodes_done,
+            log,
+            agent: AgentSnapshot {
+                params: vec![0.5, -0.25, 1.5e-3, -0.0, f32::MIN_POSITIVE],
+                adam_m: vec![0.0; 5],
+                adam_v: vec![1e-8; 5],
+                adam_t: 2.0,
+                updates_done: 1,
+            },
+            last_greedy: Some(vec![8, 2, 2, 8]),
+            stable_updates: 1,
+            memo: vec![(vec![8, 4, 2, 8], 0.912345678), (vec![2, 2, 2, 2], 0.5)],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let ck = sample(4);
+        let back =
+            SearchCheckpoint::from_json(&Json::parse(&ck.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.net, ck.net);
+        assert_eq!(back.search_fp, ck.search_fp);
+        assert_eq!(back.episodes_done, 4);
+        assert_eq!(back.agent, ck.agent, "agent state must round-trip bit-exactly");
+        assert_eq!(back.last_greedy, ck.last_greedy);
+        assert_eq!(back.memo.len(), 2);
+        assert_eq!(back.memo[0].1.to_bits(), ck.memo[0].1.to_bits());
+        assert_eq!(back.log.len(), 4);
+        assert_eq!(back.log[3].reward.to_bits(), ck.log[3].reward.to_bits());
+        assert_eq!(back.log[3].probs, ck.log[3].probs);
+    }
+
+    #[test]
+    fn negative_zero_param_survives() {
+        let ck = sample(1);
+        let back =
+            SearchCheckpoint::from_json(&Json::parse(&ck.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.agent.params[3].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn checksum_rejects_tampering() {
+        let ck = sample(2);
+        let text = ck.to_json().dump();
+        let bad = text.replacen("\"episodes_done\":2", "\"episodes_done\":3", 1);
+        assert_ne!(text, bad, "test must actually alter the payload");
+        let err = SearchCheckpoint::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    }
+
+    #[test]
+    fn newer_schema_is_refused() {
+        let ck = sample(1);
+        let mut m = match ck.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("schema_version".to_string(), Json::Num(99.0));
+        let err = SearchCheckpoint::from_json(&Json::Obj(m)).unwrap_err();
+        assert!(format!("{err:#}").contains("schema_version"), "{err:#}");
+    }
+
+    #[test]
+    fn load_missing_is_none_and_corrupt_is_err() {
+        let dir = tmp_dir("load");
+        let path = dir.join("lenet.ckpt.json");
+        assert!(SearchCheckpoint::load(&path).unwrap().is_none());
+        sample(2).save(&path, None).unwrap();
+        assert_eq!(SearchCheckpoint::load(&path).unwrap().unwrap().episodes_done, 2);
+        // torn tail: truncate mid-document
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert!(SearchCheckpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn injected_install_fault_leaves_no_file() {
+        let dir = tmp_dir("fault");
+        let path = dir.join("lenet.ckpt.json");
+        let plan = Arc::new(FaultPlan::parse("checkpoint_save:nth=1:perm").unwrap());
+        let mut d = Durable::new(path.clone(), 1, "lenet", 7)
+            .unwrap()
+            .with_fault_plan(Some(plan.clone()));
+        d.on_boundary(sample(1));
+        assert_eq!(d.save_failures, 1);
+        assert_eq!(d.saves, 0);
+        assert!(!path.exists(), "faulted install must not leave a checkpoint");
+        assert!(!path.with_extension("tmp").exists(), "tmp must be cleaned up");
+        assert_eq!(plan.injected(), 1);
+        // the next boundary succeeds (nth=1 fired once)
+        d.on_boundary(sample(2));
+        assert_eq!(d.saves, 1);
+        assert!(path.exists());
+    }
+
+    #[test]
+    fn every_throttles_and_flush_persists_pending() {
+        let dir = tmp_dir("every");
+        let path = dir.join("net.ckpt.json");
+        let mut d = Durable::new(path.clone(), 4, "net", 1).unwrap();
+        d.on_boundary(sample(2));
+        assert_eq!(d.saves, 0, "below the interval: stashed, not written");
+        assert!(!path.exists());
+        d.flush();
+        assert_eq!(d.saves, 1, "flush persists the stashed boundary");
+        assert_eq!(SearchCheckpoint::load(&path).unwrap().unwrap().episodes_done, 2);
+        d.on_boundary(sample(4));
+        assert_eq!(d.saves, 1, "interval counts from the flushed save");
+        d.on_boundary(sample(6));
+        assert_eq!(d.saves, 2);
+        d.complete();
+        assert!(!path.exists(), "complete removes the checkpoint");
+    }
+}

@@ -9,7 +9,10 @@
 //! * [`rollout`] — lockstep batched rollouts over the shared env core,
 //!   optionally pipelined over a `runtime::Dispatcher`
 //! * [`search`] — the episode loop, convergence detection, final solution
+//! * [`checkpoint`] — durable, checksummed search checkpoints written at
+//!   PPO update boundaries; resumed runs continue bit-identically
 
+pub mod checkpoint;
 pub mod embedding;
 pub mod env;
 pub mod ppo;
@@ -18,6 +21,9 @@ pub mod reward;
 pub mod rollout;
 pub mod search;
 
+pub use checkpoint::{
+    AgentSnapshot, Durable, SearchCheckpoint, CHECKPOINT_FAULT, CHECKPOINT_SCHEMA_VERSION,
+};
 pub use embedding::{embed, StaticFeatures, STATE_DIM};
 pub use env::{EnvConfig, EnvCore, EnvStats, QuantEnv};
 pub use ppo::{AgentKind, PpoAgent, PpoConfig, StepRecord, UpdateStats};

@@ -505,6 +505,45 @@ impl PpoAgent {
     pub fn pending_episodes(&self) -> usize {
         self.pending.len()
     }
+
+    /// Capture the learnable state for a search checkpoint. Only meaningful
+    /// at an update boundary (no pending trajectories) — the checkpoint
+    /// driver calls it exactly there, so trajectories never serialize.
+    pub fn snapshot(&self) -> super::checkpoint::AgentSnapshot {
+        debug_assert!(
+            self.pending.is_empty(),
+            "agent snapshot taken mid-batch: pending trajectories would be lost"
+        );
+        super::checkpoint::AgentSnapshot {
+            params: self.params.clone(),
+            adam_m: self.adam_m.clone(),
+            adam_v: self.adam_v.clone(),
+            adam_t: self.adam_t,
+            updates_done: self.updates_done,
+        }
+    }
+
+    /// Restore a [`super::checkpoint::AgentSnapshot`] captured by
+    /// [`PpoAgent::snapshot`]. Invalidates the device-resident params (the
+    /// next act re-uploads, exactly as after a PPO update), so a resumed
+    /// run's act path is bit-identical to the uninterrupted one.
+    pub fn restore(&mut self, s: &super::checkpoint::AgentSnapshot) -> Result<()> {
+        let p = self.params.len();
+        anyhow::ensure!(
+            s.params.len() == p && s.adam_m.len() == p && s.adam_v.len() == p,
+            "agent snapshot has {} params, this agent has {p} (different \
+             network or architecture)",
+            s.params.len()
+        );
+        self.params = s.params.clone();
+        self.adam_m = s.adam_m.clone();
+        self.adam_v = s.adam_v.clone();
+        self.adam_t = s.adam_t;
+        self.updates_done = s.updates_done;
+        self.pending.clear();
+        self.params_buf = None;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

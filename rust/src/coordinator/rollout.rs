@@ -58,6 +58,7 @@ use crate::metrics::{EpisodeLog, SearchLog};
 use crate::runtime::{Dispatcher, HostLit, Pending};
 use crate::util::rng::Pcg32;
 
+use super::checkpoint::Durable;
 use super::embedding::{embed, STATE_DIM};
 use super::ppo::{PpoAgent, StepRecord};
 use super::prefetch::Prefetcher;
@@ -255,7 +256,8 @@ impl Searcher {
     /// — success, error, or cancellation — so a shared serve-session ledger
     /// is never left unbalanced and no device work outlives the search.
     /// Results are bit-identical either way.
-    pub(super) fn run_batched(&mut self, ctl: &SearchCtl) -> Result<SearchResult> {
+    pub(super) fn run_batched(&mut self, ctl: &SearchCtl,
+                              mut durable: Option<&mut Durable>) -> Result<SearchResult> {
         let lanes = if self.cfg.lanes == 0 {
             self.agent.act_lanes.min(self.cfg.ppo.episodes_per_update)
         } else {
@@ -269,7 +271,8 @@ impl Searcher {
         let mut log = SearchLog::default();
         let mut episodes_run = 0usize;
         if self.cfg.pipeline == 0 {
-            self.batched_episodes(ctl, lanes, None, &mut log, &mut episodes_run)?;
+            self.batched_episodes(ctl, lanes, None, &mut log, &mut episodes_run,
+                                  durable.as_deref_mut())?;
         } else {
             // at least two workers: one lane for the double-buffered
             // act_batch, one for the speculative accuracy slate; the depth
@@ -297,6 +300,7 @@ impl Searcher {
                 Some((&disp, &prefetcher)),
                 &mut log,
                 &mut episodes_run,
+                durable.as_deref_mut(),
             );
             // tally never-claimed speculations as wasted and quiesce the
             // pool on EVERY exit (a dropped pending's execution still
@@ -317,15 +321,33 @@ impl Searcher {
     /// joining a pre-submitted first-layer act_batch and handing the next
     /// chunk's work to the dispatcher once this chunk's last PPO update has
     /// run.
+    /// Durability: `durable` (if armed with resume state by
+    /// `Searcher::restore`) moves the loop's starting episode to the
+    /// checkpoint boundary — always a PPO-update boundary, so when `lanes`
+    /// divides `episodes_per_update` (the default and every parity-tested
+    /// config) the resumed chunk grouping matches the uninterrupted run's
+    /// exactly. The first resumed chunk computes its layer-0 forward
+    /// synchronously (no pre-submitted pending survives a restart), which
+    /// the pipeline contract already guarantees is value-identical.
     fn batched_episodes(&mut self, ctl: &SearchCtl, lanes: usize,
                         pipeline: Option<(&Dispatcher, &Prefetcher)>, log: &mut SearchLog,
-                        episodes_run: &mut usize) -> Result<()> {
+                        episodes_run: &mut usize,
+                        mut durable: Option<&mut Durable>) -> Result<()> {
         let epu = self.cfg.ppo.episodes_per_update;
         let mut stable_updates = 0usize;
         let mut last_greedy: Option<Vec<u32>> = None;
         let mut pending0: Option<ActPending> = None;
 
         let mut ep = 0usize;
+        if let Some(d) = durable.as_deref_mut() {
+            if let Some(rs) = d.resume.take() {
+                ep = rs.start;
+                log.episodes = rs.episodes;
+                *episodes_run = rs.start;
+                last_greedy = rs.last_greedy;
+                stable_updates = rs.stable_updates;
+            }
+        }
         'episodes: while ep < self.cfg.episodes {
             ctl.check()?;
             let n = lanes.min(self.cfg.episodes - ep);
@@ -386,6 +408,13 @@ impl Searcher {
                     && self.greedy_converged(&mut last_greedy, &mut stable_updates)?
                 {
                     break 'episodes;
+                }
+                if updated {
+                    if let Some(d) = durable.as_deref_mut() {
+                        let ck = self.checkpoint_at(d, ep + i + 1, log, &last_greedy,
+                                                    stable_updates);
+                        d.on_boundary(ck);
+                    }
                 }
             }
             ep += n;

@@ -21,6 +21,7 @@ use crate::parallel;
 use crate::runtime::{Engine, Manifest, NetworkMeta};
 use crate::util::rng::Pcg32;
 
+use super::checkpoint::{Durable, ResumeState, SearchCheckpoint};
 use super::embedding::{embed, StaticFeatures, STATE_DIM};
 use super::env::{EnvConfig, QuantEnv};
 use super::ppo::{AgentKind, PpoAgent, PpoConfig, StepRecord};
@@ -90,6 +91,10 @@ impl std::error::Error for Cancelled {}
 #[derive(Default)]
 pub struct SearchCtl {
     cancelled: AtomicBool,
+    /// the cancellation is a process shutdown, not a user cancel — the
+    /// scheduler journals the job as "interrupted" (recoverable) instead of
+    /// terminally cancelled
+    shutdown: AtomicBool,
     deadline: Option<Instant>,
     progress: Option<Box<dyn Fn(&EpisodeLog) + Send + Sync>>,
 }
@@ -119,6 +124,16 @@ impl SearchCtl {
         self.cancelled.store(true, Ordering::Relaxed);
     }
 
+    /// Cancel because the process is shutting down (SIGTERM/SIGINT drain).
+    /// The search stops with `Cancelled("shutdown")`, which the serve
+    /// scheduler journals as a *recoverable* interruption — the job is
+    /// re-enqueued on the next daemon start and resumes from its last
+    /// checkpoint — where a plain [`SearchCtl::cancel`] is terminal.
+    pub fn cancel_for_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
     pub fn is_cancelled(&self) -> bool {
         self.cancelled.load(Ordering::Relaxed)
             || self.deadline.map_or(false, |d| Instant::now() >= d)
@@ -128,6 +143,9 @@ impl SearchCtl {
     /// deadline fired. The rollout drivers call this at episode boundaries.
     pub fn check(&self) -> Result<()> {
         if self.cancelled.load(Ordering::Relaxed) {
+            if self.shutdown.load(Ordering::Relaxed) {
+                return Err(Cancelled("shutdown").into());
+            }
             return Err(Cancelled("cancelled").into());
         }
         if self.deadline.map_or(false, |d| Instant::now() >= d) {
@@ -417,19 +435,112 @@ impl Searcher {
     /// [`Cancelled`] error) and receives every finished episode through its
     /// progress hook. `run()` is `run_ctl` with an inert control.
     pub fn run_ctl(&mut self, ctl: &SearchCtl) -> Result<SearchResult> {
-        match self.cfg.rollout {
-            RolloutMode::Serial => self.run_serial(ctl),
-            RolloutMode::Batched => self.run_batched(ctl),
+        self.run_durable(ctl, None)
+    }
+
+    /// [`Searcher::run_ctl`] with optional durability: when `durable` is
+    /// given, a [`SearchCheckpoint`] is captured at every PPO update
+    /// boundary (the one point where the agent holds no pending
+    /// trajectories) and persisted per the driver's interval; an error exit
+    /// — including cooperative cancellation — flushes the newest unsaved
+    /// boundary first, so a drained job leaves a final checkpoint behind.
+    ///
+    /// If `durable` carries resume state (a checkpoint restored via
+    /// [`Searcher::restore`]), the episode loop continues from the
+    /// checkpointed episode and the final result is **bit-identical** to an
+    /// uninterrupted run: per-episode PCG streams derive from the episode
+    /// index alone, accuracy is a pure function of the bits vector (and
+    /// memo-warmed, so pre-checkpoint evaluations do not re-execute), and
+    /// the restored agent state replays the exact act/update sequence.
+    pub fn run_durable(&mut self, ctl: &SearchCtl,
+                       mut durable: Option<&mut Durable>) -> Result<SearchResult> {
+        let out = match self.cfg.rollout {
+            RolloutMode::Serial => self.run_serial(ctl, durable.as_deref_mut()),
+            RolloutMode::Batched => self.run_batched(ctl, durable.as_deref_mut()),
+        };
+        if out.is_err() {
+            if let Some(d) = durable {
+                d.flush();
+            }
+        }
+        out
+    }
+
+    /// Capture a resumable checkpoint at an update boundary: `episodes_done`
+    /// episodes complete, `log` covering exactly those episodes, and the
+    /// convergence-detector state. The full memo export rides along so the
+    /// resumed run re-executes only post-checkpoint episodes.
+    pub(super) fn checkpoint_at(&self, d: &Durable, episodes_done: usize, log: &SearchLog,
+                                last_greedy: &Option<Vec<u32>>, stable_updates: usize)
+                                -> SearchCheckpoint {
+        SearchCheckpoint {
+            net: d.net.clone(),
+            search_fp: d.search_fp,
+            episodes_done,
+            log: log.episodes.clone(),
+            agent: self.agent.snapshot(),
+            last_greedy: last_greedy.clone(),
+            stable_updates,
+            memo: self.env.memo().entries(),
         }
     }
 
-    fn run_serial(&mut self, ctl: &SearchCtl) -> Result<SearchResult> {
+    /// Restore a loaded checkpoint into this searcher and arm `durable`
+    /// with the resume state consumed by the next [`Searcher::run_durable`]
+    /// call. Rejects checkpoints from a different search spec (fingerprint
+    /// mismatch) or an incompatible agent — callers treat a rejection as
+    /// "start fresh", never as a job failure.
+    pub fn restore(&mut self, ck: SearchCheckpoint, durable: &mut Durable) -> Result<()> {
+        anyhow::ensure!(
+            ck.search_fp == durable.search_fp,
+            "checkpoint fingerprint {:016x} != this search's {:016x}",
+            ck.search_fp,
+            durable.search_fp
+        );
+        anyhow::ensure!(
+            ck.episodes_done <= self.cfg.episodes,
+            "checkpoint at episode {} exceeds configured episodes {}",
+            ck.episodes_done,
+            self.cfg.episodes
+        );
+        anyhow::ensure!(
+            ck.log.len() == ck.episodes_done,
+            "checkpoint log covers {} episodes, expected {}",
+            ck.log.len(),
+            ck.episodes_done
+        );
+        self.agent.restore(&ck.agent)?;
+        if !ck.memo.is_empty() {
+            self.env.memo().extend(ck.memo);
+        }
+        durable.resumed_from = Some(ck.episodes_done);
+        durable.last_saved = ck.episodes_done;
+        durable.resume = Some(ResumeState {
+            start: ck.episodes_done,
+            episodes: ck.log,
+            last_greedy: ck.last_greedy,
+            stable_updates: ck.stable_updates,
+        });
+        Ok(())
+    }
+
+    fn run_serial(&mut self, ctl: &SearchCtl,
+                  mut durable: Option<&mut Durable>) -> Result<SearchResult> {
         let mut log = SearchLog::default();
         let mut stable_updates = 0usize;
         let mut last_greedy: Option<Vec<u32>> = None;
-        let mut episodes_run = 0usize;
+        let mut start = 0usize;
+        if let Some(d) = durable.as_deref_mut() {
+            if let Some(rs) = d.resume.take() {
+                start = rs.start;
+                log.episodes = rs.episodes;
+                last_greedy = rs.last_greedy;
+                stable_updates = rs.stable_updates;
+            }
+        }
+        let mut episodes_run = start;
 
-        for ep in 0..self.cfg.episodes {
+        for ep in start..self.cfg.episodes {
             ctl.check()?;
             let mut rng = self.episode_rng(ep);
             let (bits, probs, records) = self.rollout(Some(&mut rng))?;
@@ -454,6 +565,12 @@ impl Searcher {
                 && self.greedy_converged(&mut last_greedy, &mut stable_updates)?
             {
                 break;
+            }
+            if updated {
+                if let Some(d) = durable.as_deref_mut() {
+                    let ck = self.checkpoint_at(d, ep + 1, &log, &last_greedy, stable_updates);
+                    d.on_boundary(ck);
+                }
             }
         }
 

@@ -44,6 +44,9 @@ pub struct RoundStats {
     pub failed: usize,
     /// records newly added or hit-raised in the ROUTER's merged archive
     pub absorbed: usize,
+    /// checkpoint installs performed during this round's replication pass
+    /// (durable fleets only; always 0 otherwise)
+    pub checkpoints_replicated: usize,
 }
 
 impl RoundStats {
@@ -53,6 +56,10 @@ impl RoundStats {
             ("pushed", Json::Num(self.pushed as f64)),
             ("failed", Json::Num(self.failed as f64)),
             ("absorbed", Json::Num(self.absorbed as f64)),
+            (
+                "checkpoints_replicated",
+                Json::Num(self.checkpoints_replicated as f64),
+            ),
         ])
     }
 }
@@ -99,6 +106,95 @@ fn push_worker(w: &Worker, merged: &Archive) -> anyhow::Result<()> {
         }
     }
 }
+
+/// One checkpoint replication round (durable fleets). For every
+/// checkpoint file any worker holds, the copy with the most episodes done
+/// is fetched from its holder and offered to every other reachable worker
+/// — the receiving daemon's `POST /v1/checkpoints/{file}` verifies the
+/// checksum and installs only when the offered copy is AHEAD of its own,
+/// so replication is monotone and corruption-proof by construction. A
+/// ring successor that inherits a failed-over job thus resumes it from
+/// the dead worker's last replicated checkpoint instead of restarting.
+/// Transfers are bounded per round ([`CKPT_TRANSFER_CAP`]); a busy fleet
+/// converges over successive rounds. Returns the number of installs.
+pub fn checkpoint_round(workers: &[std::sync::Arc<Worker>]) -> usize {
+    // per-worker listing: file -> episodes_done (workers without
+    // --checkpoint-dir answer 503 and simply don't participate)
+    let mut have: Vec<std::collections::BTreeMap<String, f64>> =
+        vec![Default::default(); workers.len()];
+    let mut reachable: Vec<bool> = vec![false; workers.len()];
+    for (i, w) in workers.iter().enumerate() {
+        if !w.is_up() {
+            continue;
+        }
+        let Ok((200, body)) = w.call_timeout("GET", "/v1/checkpoints", None, MERGE_TIMEOUT)
+        else {
+            continue;
+        };
+        reachable[i] = true;
+        let Some(rows) = body.get("checkpoints").and_then(Json::as_arr) else { continue };
+        for row in rows {
+            let (Some(file), Some(eps)) = (
+                row.get("file").and_then(Json::as_str),
+                row.get("episodes_done").and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            have[i].insert(file.to_string(), eps);
+        }
+    }
+    // best holder per file
+    let mut best: std::collections::BTreeMap<String, (f64, usize)> = Default::default();
+    for (i, files) in have.iter().enumerate() {
+        for (file, &eps) in files {
+            match best.get(file) {
+                Some(&(b, _)) if b >= eps => {}
+                _ => {
+                    best.insert(file.clone(), (eps, i));
+                }
+            }
+        }
+    }
+    let mut installed = 0usize;
+    let mut transfers = 0usize;
+    for (file, (eps, holder)) in best {
+        if transfers >= CKPT_TRANSFER_CAP {
+            break;
+        }
+        // anyone behind? (missing the file, or holding fewer episodes)
+        let behind: Vec<usize> = (0..workers.len())
+            .filter(|&j| {
+                j != holder
+                    && reachable[j]
+                    && have[j].get(&file).copied().unwrap_or(-1.0) < eps
+            })
+            .collect();
+        if behind.is_empty() {
+            continue;
+        }
+        let path = format!("/v1/checkpoints/{file}");
+        let doc = match workers[holder].call_timeout("GET", &path, None, MERGE_TIMEOUT) {
+            Ok((200, doc)) => doc,
+            Ok(_) | Err(_) => continue, // deleted between list and fetch, or flaky
+        };
+        transfers += 1;
+        for j in behind {
+            match workers[j].call_timeout("POST", &path, Some(&doc), MERGE_TIMEOUT) {
+                Ok((200, resp)) => {
+                    if matches!(resp.get("installed"), Some(Json::Bool(true))) {
+                        installed += 1;
+                    }
+                }
+                Ok(_) | Err(_) => {}
+            }
+        }
+    }
+    installed
+}
+
+/// Checkpoint documents fetched per replication round — bounds a round's
+/// transfer volume the way [`PAGE_LIMIT`] bounds archive pages.
+pub const CKPT_TRANSFER_CAP: usize = 32;
 
 /// One full pull-then-push round over the given workers. Workers marked
 /// down are skipped outright (they catch up next round); a worker that

@@ -47,6 +47,7 @@ use crate::serve::http::{self, Request, Response};
 use crate::serve::{page_params, Archive};
 use crate::util::json::Json;
 use crate::util::lock_recover;
+use crate::util::signals;
 
 /// Budget for one worker's drain during fleet shutdown — generous, since
 /// a drain finishes every in-flight search episode.
@@ -118,10 +119,26 @@ impl FleetServer {
         self.fleet.clone()
     }
 
-    /// Accept loop plus the two background threads (health monitor,
-    /// periodic merge). Returns after a `POST /v1/shutdown` has merged
-    /// archives, drained the workers, and persisted the fleet archive.
+    /// Accept loop plus the background threads (health monitor, periodic
+    /// merge, signal watcher). Returns after a `POST /v1/shutdown` — or a
+    /// SIGTERM/SIGINT — has merged archives, drained the workers, and
+    /// persisted the fleet archive.
     pub fn run(self) -> Result<()> {
+        signals::install();
+        {
+            let f = self.fleet.clone();
+            std::thread::spawn(move || loop {
+                if f.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if signals::triggered() {
+                    eprintln!("[fleet] termination signal: draining workers");
+                    f.interrupt();
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            });
+        }
         let f = self.fleet.clone();
         std::thread::spawn(move || health_loop(&f));
         if self.fleet.cfg.merge_interval_ms > 0 {
@@ -157,10 +174,25 @@ fn handle_conn(f: &Arc<Fleet>, stream: TcpStream) {
 
 fn health_loop(f: &Arc<Fleet>) {
     let interval = Duration::from_millis(f.cfg.health_interval_ms);
+    // seeded from the startup probes: a worker that was already Down at
+    // bind doesn't fire a spurious failover on the first round
+    let mut was_down: Vec<bool> =
+        f.router.workers.iter().map(|w| w.health() == Health::Down).collect();
     while !f.shutdown.load(Ordering::SeqCst) {
         std::thread::sleep(interval);
-        for w in &f.router.workers {
-            w.probe();
+        for (i, w) in f.router.workers.iter().enumerate() {
+            let down = w.probe() == Health::Down;
+            if down && !was_down[i] {
+                // Up→Down transition: re-dispatch this worker's in-flight
+                // jobs to ring successors (checkpoint replication lets the
+                // successor resume them rather than restart)
+                eprintln!("[fleet] worker {} went down", w.name);
+                let moved = f.router.failover(i);
+                if moved > 0 {
+                    eprintln!("[fleet] re-dispatched {moved} in-flight job(s) from {}", w.name);
+                }
+            }
+            was_down[i] = down;
         }
     }
 }
@@ -178,15 +210,38 @@ fn merge_loop(f: &Arc<Fleet>) {
 
 impl Fleet {
     /// One replication round: pull-merge every reachable worker, push the
-    /// union back out, persist the merged archive (throttled).
+    /// union back out, persist the merged archive (throttled). Durable
+    /// fleets also replicate search checkpoints worker→worker in the same
+    /// round, so a ring successor can resume a failed-over job from its
+    /// last checkpoint instead of restarting it.
     pub fn run_merge(&self) -> RoundStats {
-        let round = merge::merge_round(&self.router.workers, &self.archive);
+        let mut round = merge::merge_round(&self.router.workers, &self.archive);
+        if self.cfg.durable {
+            round.checkpoints_replicated = merge::checkpoint_round(&self.router.workers);
+        }
         self.merge_rounds.fetch_add(1, Ordering::Relaxed);
         *lock_recover(&self.last_merge) = round.clone();
         if let Err(e) = self.archive.save_throttled(Duration::from_secs(5)) {
             eprintln!("[fleet] archive save after merge failed: {e:#}");
         }
         round
+    }
+
+    /// Signal-driven shutdown: the same sequence as `POST /v1/shutdown`
+    /// (final replication round, drain every reachable worker, persist the
+    /// merged archive) without an HTTP requester to answer.
+    pub fn interrupt(&self) {
+        let _ = merge::merge_round(&self.router.workers, &self.archive);
+        for w in &self.router.workers {
+            if let Err(e) = w.call_timeout("POST", "/v1/shutdown", None, SHUTDOWN_TIMEOUT) {
+                eprintln!("[fleet] worker {} did not drain: {e:#}", w.name);
+            }
+        }
+        if let Err(e) = self.archive.save() {
+            eprintln!("[fleet] archive save on shutdown failed: {e:#}");
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.local_addr); // kick the accept loop
     }
 
     /// Wait briefly for spawned workers to exit on their own (they were
@@ -387,6 +442,25 @@ fn worker_archive(base: &std::path::Path, i: usize) -> std::path::PathBuf {
     base.with_file_name(format!("{stem}.w{i}.json"))
 }
 
+/// Per-worker durability paths (only used with `--durable`): the job WAL
+/// `<stem>.w{i}.wal` and the checkpoint directory `<stem>.w{i}.ckpt`, both
+/// beside the fleet archive like the per-worker archives.
+fn worker_wal(base: &std::path::Path, i: usize) -> std::path::PathBuf {
+    let stem = base
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("fleet_archive");
+    base.with_file_name(format!("{stem}.w{i}.wal"))
+}
+
+fn worker_ckpt_dir(base: &std::path::Path, i: usize) -> std::path::PathBuf {
+    let stem = base
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("fleet_archive");
+    base.with_file_name(format!("{stem}.w{i}.ckpt"))
+}
+
 /// Spawn one `releq serve` child on an ephemeral port and parse its
 /// listening address off stdout. The child's remaining output is echoed
 /// with a `[w{i}]` prefix so fleet logs stay attributable.
@@ -403,6 +477,13 @@ fn spawn_worker(i: usize, cfg: &FleetConfig) -> Result<(Worker, Child)> {
         .stdin(Stdio::null())
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit());
+    if cfg.durable {
+        // per-worker job journal + checkpoint dir: a crashed worker's jobs
+        // recover on ITS restart, while checkpoint replication (the merge
+        // loop) lets OTHER workers resume them on failover
+        cmd.arg("--wal").arg(worker_wal(&cfg.archive, i));
+        cmd.arg("--checkpoint-dir").arg(worker_ckpt_dir(&cfg.archive, i));
+    }
     if cfg.access_log {
         cmd.arg("--access-log");
     }
@@ -457,6 +538,19 @@ mod tests {
         assert_eq!(
             worker_archive(std::path::Path::new("arch.json"), 2),
             std::path::Path::new("arch.w2.json")
+        );
+    }
+
+    #[test]
+    fn worker_durability_paths_sit_beside_the_fleet_archive() {
+        let base = std::path::Path::new("/data/fleet_archive.json");
+        assert_eq!(
+            worker_wal(base, 1),
+            std::path::Path::new("/data/fleet_archive.w1.wal")
+        );
+        assert_eq!(
+            worker_ckpt_dir(base, 1),
+            std::path::Path::new("/data/fleet_archive.w1.ckpt")
         );
     }
 }

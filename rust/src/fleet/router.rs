@@ -198,6 +198,12 @@ pub struct Counters {
     pub rerouted: AtomicU64,
     /// submissions the whole fleet refused (every candidate full/down)
     pub shed: AtomicU64,
+    /// in-flight jobs re-dispatched to a ring successor after their worker
+    /// was observed Down
+    pub failed_over: AtomicU64,
+    /// failover attempts that found no live worker to take the job (the
+    /// job stays tracked; a later Down transition retries it)
+    pub failover_shed: AtomicU64,
 }
 
 impl Counters {
@@ -209,8 +215,28 @@ impl Counters {
             ("stolen", n(&self.stolen)),
             ("rerouted", n(&self.rerouted)),
             ("shed", n(&self.shed)),
+            ("failed_over", n(&self.failed_over)),
+            ("failover_shed", n(&self.failover_shed)),
         ])
     }
+}
+
+/// Everything the router must retain to survive losing the worker a job
+/// was placed on: the submitted spec (verbatim, idempotency key already
+/// injected), the placement key, and whether the job ever reached a
+/// terminal status (terminal jobs are never re-dispatched).
+#[derive(Clone)]
+struct Tracked {
+    /// worker index currently owning the job
+    wi: usize,
+    /// worker-local job id on that worker
+    rid: u64,
+    /// the forwarded submission body — replayable verbatim on failover
+    body: Json,
+    /// consistent-hash placement key (session identity)
+    key: u64,
+    /// last observed terminal state, if any
+    done: bool,
 }
 
 /// Placement + forwarding state. Shared (behind `Arc`) between the fleet
@@ -219,9 +245,11 @@ pub struct Router {
     pub workers: Vec<Arc<Worker>>,
     ring: Ring,
     steal_budget: usize,
-    /// fleet job id → (worker index, worker-local job id)
-    jobs: Mutex<BTreeMap<u64, (usize, u64)>>,
+    /// fleet job id → tracked placement (spec retained for failover)
+    jobs: Mutex<BTreeMap<u64, Tracked>>,
     next_id: AtomicU64,
+    /// sequence for router-generated idempotency keys
+    idem_seq: AtomicU64,
     pub counters: Counters,
 }
 
@@ -234,8 +262,22 @@ impl Router {
             steal_budget,
             jobs: Mutex::new(BTreeMap::new()),
             next_id: AtomicU64::new(1),
+            idem_seq: AtomicU64::new(0),
             counters: Counters::default(),
         }
+    }
+
+    /// Router-generated idempotency key: unique per (process, submission)
+    /// so retries of one logical job — pool double-submits, failover
+    /// re-dispatch landing where the job already ran — dedupe on the
+    /// worker, while distinct submissions of the same config never do.
+    fn generate_idem_key(&self) -> String {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let seq = self.idem_seq.fetch_add(1, Ordering::Relaxed);
+        format!("fleet-{:x}-{:x}-{}", std::process::id(), nanos, seq)
     }
 
     /// Candidate order for a job: consistent-hash home first, then the
@@ -262,6 +304,23 @@ impl Router {
             Ok(s) => s,
             Err(e) => return Response::error(400, &format!("{e:#}")),
         };
+        // every fleet job carries an idempotency key — the client's when
+        // supplied, a router-generated one otherwise. Workers dedupe on
+        // it, which makes both the keep-alive pool's retry-once and the
+        // failover re-dispatch at-most-once-per-worker instead of
+        // at-least-once.
+        let forwarded = match (&spec.idempotency_key, body) {
+            (Some(_), _) => body.clone(),
+            (None, Json::Obj(m)) => {
+                let mut m = m.clone();
+                m.insert(
+                    "idempotency_key".to_string(),
+                    Json::Str(self.generate_idem_key()),
+                );
+                Json::Obj(m)
+            }
+            (None, other) => other.clone(),
+        };
         // bits_max=0: the router doesn't resolve the network (that needs
         // the worker's registry); a fixed value keeps the key a pure
         // function of the submission, which is all placement needs
@@ -277,7 +336,7 @@ impl Router {
             if !w.routable() {
                 continue; // health-aware skip — no request wasted
             }
-            match w.call("POST", "/v1/jobs", Some(body)) {
+            match w.call("POST", "/v1/jobs", Some(&forwarded)) {
                 Ok((429, b)) => {
                     last_refusal = Some(Response::status(429, b));
                     if steal_left == 0 {
@@ -291,7 +350,7 @@ impl Router {
                     last_refusal = Some(Response::status(503, b));
                 }
                 Ok((status, b)) if status == 200 || status == 202 => {
-                    return self.placed(status, b, wi, home, saw_429);
+                    return self.placed(status, b, wi, home, saw_429, &forwarded, key);
                 }
                 Ok((status, b)) => {
                     // 400 and friends are the CLIENT's problem — every
@@ -311,9 +370,13 @@ impl Router {
 
     /// Book-keep a successful placement and rewrite the response: the
     /// worker-local id becomes a fleet id, and the response is annotated
-    /// with the worker name (which the access log picks up).
+    /// with the worker name (which the access log picks up). The
+    /// submission body is retained against the fleet id so the job can be
+    /// re-dispatched if this worker dies with it in flight (a 200 is an
+    /// archive hit — already terminal, nothing to fail over).
     fn placed(
         &self, status: u16, body: Json, wi: usize, home: Option<usize>, stolen: bool,
+        forwarded: &Json, key: u64,
     ) -> Response {
         let w = &self.workers[wi];
         w.routed.fetch_add(1, Ordering::Relaxed);
@@ -330,7 +393,10 @@ impl Router {
             Some(rid) => {
                 let fid = self.next_id.fetch_add(1, Ordering::Relaxed);
                 let mut jobs = lock_recover(&self.jobs);
-                jobs.insert(fid, (wi, rid));
+                jobs.insert(
+                    fid,
+                    Tracked { wi, rid, body: forwarded.clone(), key, done: status == 200 },
+                );
                 while jobs.len() > JOB_TABLE_CAP {
                     let oldest = *jobs.keys().next().unwrap();
                     jobs.remove(&oldest);
@@ -343,20 +409,95 @@ impl Router {
     }
 
     /// Forward a per-job request (`GET status`, `GET result`,
-    /// `POST cancel`) to the worker that owns the job.
+    /// `POST cancel`) to the worker that owns the job. Observed terminal
+    /// statuses are recorded so a later worker death doesn't re-dispatch
+    /// a job that already finished.
     pub fn forward_job(&self, fleet_id: &str, method: &str, suffix: &str) -> Response {
         let Ok(fid) = fleet_id.parse::<u64>() else {
             return Response::error(400, "job id must be a number");
         };
-        let Some((wi, rid)) = lock_recover(&self.jobs).get(&fid).copied() else {
+        let Some((wi, rid)) =
+            lock_recover(&self.jobs).get(&fid).map(|t| (t.wi, t.rid))
+        else {
             return Response::error(404, "no such job (finished jobs are retained briefly)");
         };
         let w = &self.workers[wi];
         let path = format!("/v1/jobs/{rid}{suffix}");
         match w.call(method, &path, None) {
-            Ok((status, body)) => Response::status(status, annotate(body, Some(fid), &w.name)),
+            Ok((status, body)) => {
+                if let Some(s) = body.get("status").and_then(Json::as_str) {
+                    if matches!(s, "done" | "failed" | "cancelled") {
+                        if let Some(t) = lock_recover(&self.jobs).get_mut(&fid) {
+                            t.done = true;
+                        }
+                    }
+                }
+                Response::status(status, annotate(body, Some(fid), &w.name))
+            }
             Err(e) => Response::error(503, &format!("worker {} unreachable: {e:#}", w.name)),
         }
+    }
+
+    /// Re-dispatch every in-flight job stranded on a dead worker. Called
+    /// by the fleet health monitor on an Up→Down transition. Each job's
+    /// retained submission replays through normal placement with the dead
+    /// worker excluded — the idempotency key makes a replay landing on a
+    /// worker that already saw it a dedupe, and checkpoint replication
+    /// means the successor resumes from the job's last checkpoint instead
+    /// of restarting. Returns the number of jobs successfully re-homed.
+    pub fn failover(&self, dead: usize) -> usize {
+        let stranded: Vec<(u64, Tracked)> = {
+            let jobs = lock_recover(&self.jobs);
+            jobs.iter()
+                .filter(|(_, t)| t.wi == dead && !t.done)
+                .map(|(k, t)| (*k, t.clone()))
+                .collect()
+        };
+        let mut moved = 0usize;
+        for (fid, t) in stranded {
+            let mut placed = false;
+            for wi in self.placement(t.key) {
+                if wi == dead || !self.workers[wi].routable() {
+                    continue;
+                }
+                let w = &self.workers[wi];
+                match w.call("POST", "/v1/jobs", Some(&t.body)) {
+                    Ok((status, b)) if status == 200 || status == 202 => {
+                        let rid = b.get("id").and_then(Json::as_f64).map(|f| f as u64);
+                        let Some(rid) = rid else { break };
+                        {
+                            let mut jobs = lock_recover(&self.jobs);
+                            if let Some(entry) = jobs.get_mut(&fid) {
+                                entry.wi = wi;
+                                entry.rid = rid;
+                                entry.done = status == 200;
+                            }
+                        }
+                        w.routed.fetch_add(1, Ordering::Relaxed);
+                        self.counters.failed_over.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "[fleet] job {fid} failed over to {} (worker-local id {rid})",
+                            w.name
+                        );
+                        moved += 1;
+                        placed = true;
+                        break;
+                    }
+                    // a refusal (429/503) falls through to the next
+                    // candidate; transport errors mark the worker Down
+                    Ok(_) | Err(_) => {}
+                }
+            }
+            if !placed {
+                self.counters.failover_shed.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "[fleet] job {fid} stranded on dead worker {}: no live worker \
+                     accepted it (will retry on the next Down transition)",
+                    self.workers[dead].name
+                );
+            }
+        }
+        moved
     }
 
     /// `GET /v1/jobs`: page over the fleet job table (id order), fetching
@@ -371,7 +512,7 @@ impl Router {
             };
             jobs.range((start, std::ops::Bound::Unbounded))
                 .take(limit + 1)
-                .map(|(k, v)| (*k, *v))
+                .map(|(k, t)| (*k, (t.wi, t.rid)))
                 .collect()
         };
         let next = if page.len() > limit { page.get(limit - 1).map(|(k, _)| *k) } else { None };
@@ -563,5 +704,49 @@ mod tests {
         assert_eq!(j.u("routed"), 3);
         assert_eq!(j.u("stolen"), 1);
         assert_eq!(j.u("shed"), 0);
+        assert_eq!(j.u("failed_over"), 0);
+        assert_eq!(j.u("failover_shed"), 0);
+    }
+
+    #[test]
+    fn generated_idem_keys_are_unique_and_valid() {
+        let r = Router::new(vec![Arc::new(Worker::new("w0", "127.0.0.1:1"))], 0);
+        let a = r.generate_idem_key();
+        let b = r.generate_idem_key();
+        assert_ne!(a, b);
+        config::validate_idempotency_key(&a).unwrap();
+        config::validate_idempotency_key(&b).unwrap();
+    }
+
+    #[test]
+    fn failover_with_no_live_successor_sheds_and_retains_the_job() {
+        // two workers, neither listening: the stranded job can't be
+        // re-homed, the shed counter ticks, and the entry stays tracked
+        // (a later transition retries it)
+        let workers = vec![
+            Arc::new(Worker::new("w0", "127.0.0.1:1")),
+            Arc::new(Worker::new("w1", "127.0.0.1:1")),
+        ];
+        let r = Router::new(workers, 1);
+        lock_recover(&r.jobs).insert(
+            7,
+            Tracked {
+                wi: 0,
+                rid: 3,
+                body: Json::obj(vec![("net", Json::Str("lenet_init".into()))]),
+                key: 42,
+                done: false,
+            },
+        );
+        // a done job on the same dead worker must never be re-dispatched
+        lock_recover(&r.jobs).insert(
+            8,
+            Tracked { wi: 0, rid: 4, body: Json::Null, key: 42, done: true },
+        );
+        assert_eq!(r.failover(0), 0);
+        assert_eq!(r.counters.failover_shed.load(Ordering::Relaxed), 1);
+        assert_eq!(r.counters.failed_over.load(Ordering::Relaxed), 0);
+        let jobs = lock_recover(&r.jobs);
+        assert_eq!(jobs.get(&7).map(|t| t.wi), Some(0), "entry retained");
     }
 }

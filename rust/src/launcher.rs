@@ -9,7 +9,8 @@ use anyhow::{Context, Result};
 use crate::baselines::{paper_solution, AdmmConfig, AdmmSelector};
 use crate::config;
 use crate::coordinator::{
-    best_replica, run_replicas, EnvConfig, QuantEnv, SearchResult, Searcher,
+    best_replica, run_replicas, Durable, EnvConfig, QuantEnv, SearchCheckpoint, SearchCtl,
+    SearchResult, Searcher,
 };
 use crate::metrics::sparkline;
 use crate::parallel;
@@ -145,9 +146,51 @@ pub fn cmd_search(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    // --checkpoint <path>: durable search. Checkpoints are written at PPO
+    // update boundaries; an interrupted run re-invoked with the same flags
+    // resumes bit-identically from the last checkpoint.
+    let checkpoint = args.opt_str("checkpoint").map(PathBuf::from);
+    let checkpoint_every = args.usize_of("checkpoint-every", 8);
+    let search_fp = crate::serve::search_fingerprint(&net_name, manifest.bits_max, &cfg);
+
     let mut searcher = Searcher::new(engine.clone(), &manifest, net, cfg)?;
     println!("{net_name}: pretrained, Acc_FullP = {:.4}; searching...", searcher.env.acc_fullp);
-    let result = searcher.run()?;
+    let mut durable = match checkpoint {
+        Some(path) => {
+            let mut d = Durable::new(path, checkpoint_every, &net_name, search_fp)?;
+            match SearchCheckpoint::load(&d.path) {
+                Ok(Some(ck)) => match searcher.restore(ck, &mut d) {
+                    Ok(()) => println!(
+                        "resuming from checkpoint {} at episode {}",
+                        d.path.display(),
+                        d.resumed_from.unwrap_or(0)
+                    ),
+                    Err(e) => println!("checkpoint rejected ({e:#}); starting fresh"),
+                },
+                Ok(None) => println!(
+                    "checkpointing to {} every {} episode(s)",
+                    d.path.display(),
+                    d.every
+                ),
+                Err(e) => println!("checkpoint unreadable ({e:#}); starting fresh"),
+            }
+            Some(d)
+        }
+        None => None,
+    };
+    let result = searcher.run_durable(&SearchCtl::default(), durable.as_mut());
+    if let Some(d) = &durable {
+        if result.is_err() && d.saves > 0 {
+            println!(
+                "interrupted: checkpoint retained at {} (re-run the same command to resume)",
+                d.path.display()
+            );
+        }
+    }
+    let result = result?;
+    if let Some(d) = &mut durable {
+        d.complete();
+    }
     report_search(&result, true);
     println!("wall time           : {:.1}s", t0.elapsed().as_secs_f64());
     let stats = searcher.env.stats();
@@ -276,12 +319,25 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let workers = cfg.workers;
     let archive = cfg.archive.clone();
     let registry_dir = cfg.registry_dir.clone();
+    let wal = cfg.wal.clone();
+    let ckpt_dir = cfg.checkpoint_dir.clone();
+    let ckpt_every = cfg.checkpoint_every;
     let server = crate::serve::Server::bind(cfg, manifest, engine)?;
     println!("releq serve: listening on http://{}", server.local_addr());
     println!("  workers: {workers}, archive: {}", archive.display());
     match &registry_dir {
         Some(d) => println!("  registry: {} (POST /v1/networks accepts installs)", d.display()),
         None => println!("  registry: disabled (start with --registry-dir to enable POST /v1/networks)"),
+    }
+    match (&wal, &ckpt_dir) {
+        (None, None) => println!("  durability: off (--wal journals jobs, --checkpoint-dir checkpoints searches)"),
+        (w, c) => {
+            let wal_s = w.as_ref().map(|p| p.display().to_string()).unwrap_or_else(|| "off".into());
+            let ck_s = c.as_ref()
+                .map(|p| format!("{} (every {ckpt_every} episodes)", p.display()))
+                .unwrap_or_else(|| "off".into());
+            println!("  durability: wal {wal_s}, checkpoints {ck_s}");
+        }
     }
     println!("  POST /v1/jobs | GET /v1/jobs/<id>[/result] | POST /v1/jobs/<id>/cancel");
     println!("  POST /v1/networks | GET /v1/stats | GET /v1/health | POST /v1/shutdown (drains + persists)");
@@ -302,12 +358,19 @@ pub fn cmd_fleet(args: &Args) -> Result<()> {
     let archive = cfg.archive.clone();
     let merge_ms = cfg.merge_interval_ms;
     let steal = cfg.steal_budget;
+    let durable = cfg.durable;
     let server = crate::fleet::FleetServer::bind(cfg)?;
     println!("releq fleet: listening on http://{}", server.local_addr());
     println!(
         "  workers: {spawn} spawned + {joins} joined, steal budget {steal}, merged archive: {}",
         archive.display()
     );
+    if durable {
+        println!(
+            "  durable: per-worker WALs + checkpoint dirs; checkpoints replicate each \
+             merge round; in-flight jobs fail over on worker death"
+        );
+    }
     match merge_ms {
         0 => println!("  archive merge: on demand (POST /v1/fleet/merge) and at shutdown"),
         ms => println!("  archive merge: every {ms} ms (+ POST /v1/fleet/merge on demand)"),

@@ -59,6 +59,10 @@ fn print_help() {
          \x20                             pool forces N host devices, one client per slot, so\n\
          \x20                             N>1 is testable anywhere; RELEQ_DEVICES=N presizes\n\
          \x20                             the pool at bring-up; 1 = exact pre-pool behavior)\n\
+         \x20           [--checkpoint file.ckpt.json] (durable search: checkpoint at PPO\n\
+         \x20                             update boundaries; re-run the same command after a\n\
+         \x20                             crash to resume bit-identically)\n\
+         \x20           [--checkpoint-every N] (episodes between checkpoint writes; default 8)\n\
          \x20 pretrain  --net <name> [--steps N] [--lr F] [--verbose]\n\
          \x20 pareto    --net <name> [--samples N] [--shards N] [--out dir]\n\
          \x20 hw-eval   --net <name> --bits 8,4,4,8\n\
@@ -70,12 +74,19 @@ fn print_help() {
          \x20                             failures before quarantine; failures to open breaker)\n\
          \x20           [--registry-dir dir] (content-addressed install cache; enables hot\n\
          \x20                             network registration via POST /v1/networks)\n\
+         \x20           [--wal file.wal] (write-ahead job journal: incomplete jobs are\n\
+         \x20                             recovered and re-enqueued on restart)\n\
+         \x20           [--checkpoint-dir dir] [--checkpoint-every N] (durable searches:\n\
+         \x20                             recovered jobs resume from their last checkpoint)\n\
          \x20           [--access-log]   (structured JSON access-log lines on stderr)\n\
          \x20 fleet     [--addr host:port] [--spawn-workers N] [--worker-addrs h:p,h:p,...]\n\
          \x20           [--archive file.json] (merged fleet archive; spawned worker i\n\
          \x20                             writes <stem>.w<i>.json beside it)\n\
          \x20           [--merge-interval-ms N] (0 = merge on demand/shutdown only)\n\
          \x20           [--health-interval-ms N] [--steal-budget N]\n\
+         \x20           [--durable]      (per-worker job WALs + checkpoint dirs, checkpoint\n\
+         \x20                             replication each merge round, and failover of\n\
+         \x20                             in-flight jobs when a worker dies)\n\
          \x20           [--worker-threads N] [--worker-queue-cap N] [--access-log]\n\
          \x20 exp       <table2|table4|table5|fig5|fig6|fig7|fig8|fig9|fig10|ablation-action|ablation-lstm|all>\n\
          \x20 stats\n"

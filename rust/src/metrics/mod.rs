@@ -50,6 +50,57 @@ impl EpisodeLog {
         }
         Json::obj(fields)
     }
+
+    /// Parse one episode back from its [`EpisodeLog::to_json`] view. The
+    /// search checkpoint (`coordinator::checkpoint`) persists the episode
+    /// log with probs and restores it on resume; a missing `probs` key
+    /// (the serve status tail's lite view) parses to an empty vector.
+    pub fn from_json(j: &Json) -> Result<EpisodeLog> {
+        let num = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("episode log missing number `{k}`"))
+        };
+        let bits = j
+            .get("bits")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("episode log missing `bits`"))?
+            .iter()
+            .map(|b| {
+                b.as_f64()
+                    .map(|n| n as u32)
+                    .ok_or_else(|| anyhow::anyhow!("non-numeric bit in episode log"))
+            })
+            .collect::<Result<Vec<u32>>>()?;
+        let probs = match j.get("probs") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(p) => p
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("episode log `probs` is not an array"))?
+                .iter()
+                .map(|layer| {
+                    layer
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("episode log probs row is not an array"))?
+                        .iter()
+                        .map(|x| {
+                            x.as_f64()
+                                .map(|n| n as f32)
+                                .ok_or_else(|| anyhow::anyhow!("non-numeric prob in episode log"))
+                        })
+                        .collect::<Result<Vec<f32>>>()
+                })
+                .collect::<Result<Vec<Vec<f32>>>>()?,
+        };
+        Ok(EpisodeLog {
+            episode: num("episode")? as usize,
+            reward: num("reward")?,
+            state_acc: num("state_acc")?,
+            state_q: num("state_q")?,
+            bits,
+            probs,
+        })
+    }
 }
 
 /// JSON array over a slice of episodes — shared by [`SearchLog::write_json`]
@@ -200,6 +251,28 @@ mod tests {
         let arr = episodes_json(&[e], false).dump();
         let parsed = Json::parse(&arr).unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn episode_json_roundtrips_bit_exactly() {
+        let e = EpisodeLog {
+            episode: 7,
+            reward: -0.123456789012345,
+            state_acc: 0.9172,
+            state_q: 4.25,
+            bits: vec![8, 4, 2, 8],
+            probs: vec![vec![0.1f32, 0.3, 0.6], vec![0.25; 3]],
+        };
+        let back = EpisodeLog::from_json(&Json::parse(&e.to_json(true).dump()).unwrap()).unwrap();
+        assert_eq!(back.episode, e.episode);
+        assert_eq!(back.reward.to_bits(), e.reward.to_bits());
+        assert_eq!(back.state_acc.to_bits(), e.state_acc.to_bits());
+        assert_eq!(back.state_q.to_bits(), e.state_q.to_bits());
+        assert_eq!(back.bits, e.bits);
+        assert_eq!(back.probs, e.probs);
+        // lite view (no probs) still parses, with an empty probs vector
+        let lite = EpisodeLog::from_json(&e.to_json(false)).unwrap();
+        assert!(lite.probs.is_empty());
     }
 
     #[test]

@@ -31,7 +31,18 @@
 //! | GET    | `/v1/stats`           | queue/session/engine/archive/registry counters |
 //! | GET    | `/v1/health`          | engine/session/queue/breaker health (503 when degraded) |
 //! | POST   | `/v1/networks`        | register/upgrade a network in the running daemon |
+//! | GET    | `/v1/checkpoints`     | list search checkpoints (fleet replication reads this) |
+//! | GET    | `/v1/checkpoints/{f}` | one raw checkpoint document                |
+//! | POST   | `/v1/checkpoints/{f}` | replicate a checkpoint in (higher episodes wins) |
 //! | POST   | `/v1/shutdown`        | drain in-flight jobs, persist, exit       |
+//!
+//! With `--wal`, job submissions and status transitions are journaled
+//! write-ahead ([`wal`]); a daemon restarted over the same journal
+//! re-enqueues every incomplete job under its original id. With
+//! `--checkpoint-dir`, searches checkpoint at PPO update boundaries and
+//! recovered jobs resume bit-identically instead of restarting. SIGTERM /
+//! SIGINT trigger the same interrupt path as a crash-with-journal, plus a
+//! final checkpoint flush for running jobs.
 //!
 //! Connections close after one exchange unless the client sends
 //! `Connection: keep-alive` (see [`http`] — the fleet router's per-worker
@@ -41,12 +52,14 @@ pub mod archive;
 pub mod http;
 pub mod scheduler;
 pub mod session;
+pub mod wal;
 
 pub use archive::{
     env_fingerprint, search_fingerprint, Archive, MergeOutcome, MergeStats, Record, Solution,
 };
 pub use scheduler::{CancelOutcome, Job, JobRunner, JobStatus, Scheduler, SubmitError};
 pub use session::{SessionCache, SessionKey, SessionRunner};
+pub use wal::{RecoveredJob, Wal, WalRecovery, WAL_SCHEMA_VERSION};
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -56,10 +69,12 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::config::{self, ServeConfig};
+use crate::coordinator::SearchCheckpoint;
 use crate::registry::{RegisterError, Registry};
 use crate::runtime::{Engine, Manifest};
 use crate::util::json::Json;
 use crate::util::lock_recover;
+use crate::util::signals;
 
 use http::{Request, Response};
 
@@ -104,14 +119,17 @@ impl Server {
             cfg.registry_dir.clone(),
             engine.clone(),
         )?);
-        let runner = Arc::new(SessionRunner::new(
-            manifest,
-            engine,
-            archive.clone(),
-            cfg.memo_persist,
-            cfg.quarantine_k,
-            registry,
-        ));
+        let runner = Arc::new(
+            SessionRunner::new(
+                manifest,
+                engine,
+                archive.clone(),
+                cfg.memo_persist,
+                cfg.quarantine_k,
+                registry,
+            )
+            .with_checkpoints(cfg.checkpoint_dir.clone(), cfg.checkpoint_every),
+        );
         Server::bind_with(cfg, runner, archive)
     }
 
@@ -124,6 +142,20 @@ impl Server {
             .with_context(|| format!("binding {}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
         let sched = Scheduler::new(runner.clone(), archive.clone(), &cfg);
+        // journal recovery happens BEFORE workers spawn: every incomplete
+        // job is back in the queue (original ids) when execution starts
+        if let Some(path) = &cfg.wal {
+            let (wal, recovery) = wal::Wal::open(path)?;
+            if !recovery.jobs.is_empty() || recovery.skipped > 0 {
+                eprintln!(
+                    "[serve] WAL {}: recovered {} incomplete job(s), skipped {} torn record(s)",
+                    path.display(),
+                    recovery.jobs.len(),
+                    recovery.skipped
+                );
+            }
+            sched.attach_wal(Arc::new(wal), recovery);
+        }
         sched.spawn_workers(cfg.workers);
         // the runner's registry if it has one (the production
         // SessionRunner); otherwise an engine-less registry so stub
@@ -150,12 +182,31 @@ impl Server {
         self.daemon.local_addr
     }
 
+    /// The shared daemon state — tests use this to drive
+    /// [`Daemon::interrupt`] without a real signal.
+    pub fn daemon(&self) -> Arc<Daemon> {
+        self.daemon.clone()
+    }
+
     /// Accept loop: one thread per connection. A connection serves one
     /// request (`Connection: close`, the default) or a bounded keep-alive
     /// sequence when the client opts in (`http::serve_conn`). Returns
     /// after a `POST /v1/shutdown` has drained the scheduler and persisted
-    /// the archive.
+    /// the archive, or after SIGTERM/SIGINT ran the interrupt path.
     pub fn run(self) -> Result<()> {
+        signals::install();
+        let d = self.daemon.clone();
+        std::thread::spawn(move || loop {
+            if d.shutdown.load(Ordering::SeqCst) {
+                return; // normal shutdown already happened
+            }
+            if signals::triggered() {
+                eprintln!("[serve] termination signal: interrupting jobs and persisting");
+                d.interrupt();
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        });
         for conn in self.listener.incoming() {
             if self.daemon.shutdown.load(Ordering::SeqCst) {
                 break;
@@ -174,6 +225,23 @@ impl Server {
             std::thread::spawn(move || handle_conn(&d, stream));
         }
         Ok(())
+    }
+}
+
+impl Daemon {
+    /// Graceful termination — SIGTERM/SIGINT and the kill-mid-job tests
+    /// both land here. Running searches stop at their next episode
+    /// boundary (flushing a final checkpoint, journaled `interrupted`),
+    /// queued journaled jobs are abandoned for the next start to recover,
+    /// the archive is persisted unconditionally, and the accept loop is
+    /// kicked awake to exit. Idempotent.
+    pub fn interrupt(&self) {
+        self.sched.interrupt();
+        if let Err(e) = self.archive.save() {
+            eprintln!("[serve] archive save at interrupt failed: {e:#}");
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.local_addr);
     }
 }
 
@@ -204,6 +272,9 @@ pub fn route(d: &Daemon, req: &Request) -> (Response, bool) {
         ("GET", ["v1", "stats"]) => (stats(d), false),
         ("GET", ["v1", "health"]) => (health(d), false),
         ("POST", ["v1", "networks"]) => (post_network(d, req), false),
+        ("GET", ["v1", "checkpoints"]) => (list_checkpoints(d), false),
+        ("GET", ["v1", "checkpoints", name]) => (get_checkpoint(d, name), false),
+        ("POST", ["v1", "checkpoints", name]) => (put_checkpoint(d, name, req), false),
         ("POST", ["v1", "shutdown"]) => shutdown(d),
         _ => {
             // a known path with the wrong method is a 405, not a
@@ -219,6 +290,8 @@ pub fn route(d: &Daemon, req: &Request) -> (Response, bool) {
                     | ["v1", "stats"]
                     | ["v1", "health"]
                     | ["v1", "networks"]
+                    | ["v1", "checkpoints"]
+                    | ["v1", "checkpoints", _]
                     | ["v1", "shutdown"]
             );
             if known {
@@ -433,6 +506,120 @@ fn cancel_job(d: &Daemon, id: &str) -> Response {
     }
 }
 
+/// Gate a client-supplied checkpoint file name: strict charset, mandatory
+/// suffix, so it can never traverse out of the checkpoint dir or name a
+/// non-checkpoint file. (The charset excludes `/` and `\`, so `..` is the
+/// only traversal vector left — and `.` is allowed in names, hence the
+/// explicit check.)
+fn checkpoint_name_ok(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 128
+        && name.ends_with(".ckpt.json")
+        && !name.contains("..")
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-')
+}
+
+/// `GET /v1/checkpoints`: checkpoint files with their resume positions —
+/// the read side of fleet checkpoint replication. Corrupt or torn files
+/// are silently unlisted (they fail [`SearchCheckpoint::load`]'s checksum),
+/// so a replica never pulls garbage.
+fn list_checkpoints(d: &Daemon) -> Response {
+    let Some(dir) = &d.cfg.checkpoint_dir else {
+        return Response::error(
+            503,
+            "checkpoints disabled; start the daemon with --checkpoint-dir",
+        );
+    };
+    let mut names: Vec<String> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| checkpoint_name_ok(n))
+            .collect(),
+        Err(_) => Vec::new(), // dir not created yet = no checkpoints
+    };
+    names.sort();
+    names.truncate(LIST_LIMIT_MAX);
+    let mut out = Vec::new();
+    for name in names {
+        if let Ok(Some(ck)) = SearchCheckpoint::load(&dir.join(&name)) {
+            out.push(Json::obj(vec![
+                ("file", Json::Str(name)),
+                ("net", Json::Str(ck.net.clone())),
+                ("search_fp", Json::Str(format!("{:016x}", ck.search_fp))),
+                ("episodes_done", Json::Num(ck.episodes_done as f64)),
+            ]));
+        }
+    }
+    Response::ok(Json::obj(vec![("checkpoints", Json::Arr(out))]))
+}
+
+/// `GET /v1/checkpoints/{file}`: one raw checkpoint document, exactly as
+/// stored (the checksum stays valid end to end).
+fn get_checkpoint(d: &Daemon, name: &str) -> Response {
+    let Some(dir) = &d.cfg.checkpoint_dir else {
+        return Response::error(
+            503,
+            "checkpoints disabled; start the daemon with --checkpoint-dir",
+        );
+    };
+    if !checkpoint_name_ok(name) {
+        return Response::error(400, "bad checkpoint name");
+    }
+    match std::fs::read_to_string(dir.join(name)) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(j) => Response::ok(j),
+            Err(e) => Response::error(500, &format!("unreadable checkpoint: {e:#}")),
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            Response::error(404, "no such checkpoint")
+        }
+        Err(e) => Response::error(500, &format!("{e:#}")),
+    }
+}
+
+/// `POST /v1/checkpoints/{file}`: replicate a checkpoint in. The body is
+/// fully verified (schema gate, checksum, field decode) and installed only
+/// when AHEAD of the local copy — replication must never roll a resume
+/// position back, and a corrupted payload must never land on disk.
+fn put_checkpoint(d: &Daemon, name: &str, req: &Request) -> Response {
+    let Some(dir) = &d.cfg.checkpoint_dir else {
+        return Response::error(
+            503,
+            "checkpoints disabled; start the daemon with --checkpoint-dir",
+        );
+    };
+    if !checkpoint_name_ok(name) {
+        return Response::error(400, "bad checkpoint name");
+    }
+    let body = match req.json() {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let ck = match SearchCheckpoint::from_json(&body) {
+        Ok(ck) => ck,
+        Err(e) => return Response::error(400, &format!("rejected checkpoint: {e:#}")),
+    };
+    let path = dir.join(name);
+    if let Ok(Some(existing)) = SearchCheckpoint::load(&path) {
+        if existing.episodes_done >= ck.episodes_done {
+            return Response::ok(Json::obj(vec![
+                ("installed", Json::Bool(false)),
+                ("episodes_done", Json::Num(existing.episodes_done as f64)),
+            ]));
+        }
+    }
+    match ck.save(&path, None) {
+        Ok(()) => Response::ok(Json::obj(vec![
+            ("installed", Json::Bool(true)),
+            ("episodes_done", Json::Num(ck.episodes_done as f64)),
+        ])),
+        Err(e) => Response::error(500, &format!("{e:#}")),
+    }
+}
+
 fn stats(d: &Daemon) -> Response {
     Response::ok(Json::obj(vec![
         ("workers", Json::Num(d.cfg.workers as f64)),
@@ -454,6 +641,20 @@ fn stats(d: &Daemon) -> Response {
             ]),
         ),
         ("registry", d.registry.stats_json()),
+        (
+            "checkpoints",
+            Json::obj(vec![
+                ("enabled", Json::Bool(d.cfg.checkpoint_dir.is_some())),
+                (
+                    "dir",
+                    d.cfg
+                        .checkpoint_dir
+                        .as_ref()
+                        .map(|p| Json::Str(p.display().to_string()))
+                        .unwrap_or(Json::Null),
+                ),
+            ]),
+        ),
         ("runner", d.runner.stats()),
     ]))
 }

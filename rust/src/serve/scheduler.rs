@@ -8,14 +8,14 @@
 //! artifacts (`rust/tests/serve_daemon.rs` drives it with a stub runner);
 //! the real backend is `session::SessionRunner`.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::config::{JobSpec, ServeConfig};
+use crate::config::{job_from_json, JobSpec, ServeConfig};
 use crate::coordinator::{Cancelled, SearchCtl};
 use crate::metrics::{episodes_json, EpisodeLog};
 use crate::runtime::{classify, FaultClass, FaultError, RetryPolicy};
@@ -24,6 +24,7 @@ use crate::util::lock::lock_recover;
 use crate::util::rng::Pcg32;
 
 use super::archive::{Archive, Record, Solution};
+use super::wal::{Wal, WalRecovery};
 
 /// Finished jobs retained for status queries after completion. Without a
 /// bound the job table is the daemon's second unbounded map (the first
@@ -216,6 +217,10 @@ struct Sched {
     finished_order: VecDeque<u64>,
     running: usize,
     draining: bool,
+    /// idempotency_key -> job id: a resubmission with a known key is
+    /// answered with the original job instead of queueing a duplicate.
+    /// Entries die with their job's table entry (see [`prune_finished`]).
+    idem: HashMap<String, u64>,
 }
 
 /// Cumulative outcome counters (survive job-table pruning).
@@ -231,6 +236,14 @@ struct Totals {
     retries: AtomicU64,
     /// times the circuit breaker opened
     breaker_trips: AtomicU64,
+    /// submissions answered by idempotency-key dedupe (no new job)
+    deduped: AtomicU64,
+    /// incomplete jobs re-enqueued from the WAL at startup
+    recovered: AtomicU64,
+    /// torn / corrupt WAL lines skipped during replay
+    wal_skipped: AtomicU64,
+    /// WAL appends that failed (durability degraded, job unaffected)
+    wal_append_failures: AtomicU64,
 }
 
 pub struct Scheduler {
@@ -250,6 +263,9 @@ pub struct Scheduler {
     breaker_open: AtomicBool,
     next_id: AtomicU64,
     totals: Totals,
+    /// write-ahead job journal (`--wal`); `None` = journaling disabled.
+    /// Attached via [`Scheduler::attach_wal`] before workers spawn.
+    wal: Mutex<Option<Arc<Wal>>>,
     inner: Mutex<Sched>,
     cv: Condvar,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
@@ -270,12 +286,14 @@ impl Scheduler {
             breaker_open: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
             totals: Totals::default(),
+            wal: Mutex::new(None),
             inner: Mutex::new(Sched {
                 queue: VecDeque::new(),
                 jobs: BTreeMap::new(),
                 finished_order: VecDeque::new(),
                 running: 0,
                 draining: false,
+                idem: HashMap::new(),
             }),
             cv: Condvar::new(),
             workers: Mutex::new(Vec::new()),
@@ -295,26 +313,10 @@ impl Scheduler {
         }
     }
 
-    /// Submit a job: validated, fingerprinted, then either answered from
-    /// the archive (no queue slot, no accuracy evals) or enqueued.
-    ///
-    /// Known limitation: two *identical* jobs submitted before the first
-    /// completes both run (the archive only answers after a completion).
-    /// The duplicate's accuracy queries — the expensive part — all hit the
-    /// shared session memo, so the waste is bounded to the agent-side
-    /// episode work; job-level single-flight (parking the duplicate on the
-    /// first job's completion) is deliberately deferred.
-    pub fn submit(&self, spec: JobSpec) -> Result<Arc<Job>, SubmitError> {
-        let (env_fp, search_fp) = self.runner.prepare(&spec).map_err(|e| {
-            // a typed permanent fault from prepare (a quarantine-poisoned
-            // session) is a backend condition, not a bad request: 503
-            match e.downcast_ref::<FaultError>() {
-                Some(FaultError::Permanent(_)) => SubmitError::Unavailable(format!("{e:#}")),
-                _ => SubmitError::Invalid(e),
-            }
-        })?;
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
-
+    /// Construct the in-memory job record: state, progress hook feeding the
+    /// live tail, cancellation control, deadline. Shared by [`submit`] and
+    /// [`Scheduler::resubmit_recovered`].
+    fn build_job(&self, id: u64, spec: JobSpec, env_fp: u64, search_fp: u64) -> Arc<Job> {
         let state = Arc::new(Mutex::new(JobState {
             status: JobStatus::Queued,
             error: None,
@@ -343,7 +345,137 @@ impl Scheduler {
         if let Some(ms) = spec.deadline_ms {
             ctl = ctl.with_deadline(Duration::from_millis(ms));
         }
-        let job = Arc::new(Job { id, spec, env_fp, search_fp, ctl: Arc::new(ctl), state });
+        Arc::new(Job { id, spec, env_fp, search_fp, ctl: Arc::new(ctl), state })
+    }
+
+    /// The attached journal, if any.
+    fn wal(&self) -> Option<Arc<Wal>> {
+        lock_recover(&self.wal).clone()
+    }
+
+    /// Best-effort journal append: a failed append degrades durability
+    /// (counted, logged), it never fails the job.
+    fn wal_append_submit(&self, id: u64, spec: &Json) {
+        if let Some(w) = self.wal() {
+            if let Err(e) = w.append_submit(id, spec) {
+                self.totals.wal_append_failures.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[serve] WAL append failed: {e:#}");
+            }
+        }
+    }
+
+    fn wal_append_status(&self, id: u64, status: &str) {
+        if let Some(w) = self.wal() {
+            if let Err(e) = w.append_status(id, status) {
+                self.totals.wal_append_failures.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[serve] WAL append failed: {e:#}");
+            }
+        }
+    }
+
+    /// Attach the write-ahead journal and re-enqueue everything it
+    /// recovered, under the original ids. Called once at startup, before
+    /// workers spawn. A recovered spec that no longer decodes or prepares
+    /// (network since unregistered, say) is journaled `failed` rather than
+    /// retried forever.
+    pub fn attach_wal(&self, wal: Arc<Wal>, recovery: WalRecovery) {
+        // fence the id counter above every id the journal ever issued, so
+        // fresh submissions can never collide with recovered (or finished
+        // and compacted-away) jobs
+        self.next_id.fetch_max(recovery.max_id, Ordering::Relaxed);
+        self.totals.wal_skipped.store(recovery.skipped, Ordering::Relaxed);
+        *lock_recover(&self.wal) = Some(wal);
+        for rec in &recovery.jobs {
+            let outcome = job_from_json(&rec.spec)
+                .and_then(|spec| self.resubmit_recovered(rec.id, spec));
+            if let Err(e) = outcome {
+                eprintln!("[serve] recovered job {} cannot be re-enqueued: {e:#}", rec.id);
+                self.wal_append_status(rec.id, "failed");
+            }
+        }
+    }
+
+    /// Re-enqueue one WAL-recovered job under its original id. Bypasses
+    /// the queue cap, breaker, and draining gates — the job was already
+    /// accepted once — and appends no submit record (WAL compaction
+    /// rewrote it during [`Wal::open`]).
+    pub fn resubmit_recovered(&self, id: u64, spec: JobSpec) -> Result<Arc<Job>> {
+        let (env_fp, search_fp) = self.runner.prepare(&spec)?;
+        let job = self.build_job(id, spec, env_fp, search_fp);
+        let mut g = lock_recover(&self.inner);
+        if let Some(k) = &job.spec.idempotency_key {
+            g.idem.insert(k.clone(), id);
+        }
+        self.totals.submitted.fetch_add(1, Ordering::Relaxed);
+        self.totals.recovered.fetch_add(1, Ordering::Relaxed);
+        if let Some(sol) = self.archive.lookup(&job.spec.net, env_fp, search_fp) {
+            // a sibling fleet worker (or a pre-crash completion whose
+            // terminal record got torn) already solved it
+            {
+                let mut s = lock_recover(&job.state);
+                s.status = JobStatus::Done;
+                s.episodes_run = sol.episodes_run;
+                s.solution = Some(sol);
+                s.from_archive = true;
+            }
+            self.totals.archived.fetch_add(1, Ordering::Relaxed);
+            g.jobs.insert(id, job.clone());
+            g.finished_order.push_back(id);
+            Self::prune_finished(&mut g);
+            drop(g);
+            self.wal_append_status(id, "done");
+            return Ok(job);
+        }
+        g.jobs.insert(id, job.clone());
+        g.queue.push_back(job.clone());
+        drop(g);
+        self.cv.notify_one();
+        Ok(job)
+    }
+
+    /// SIGTERM/SIGINT path, the journal-aware sibling of [`drain`]: stop
+    /// accepting, abandon the queue (journaled queued jobs stay
+    /// non-terminal, so the next start recovers them), and ask running
+    /// searches to stop at their next episode boundary — each flushes a
+    /// final checkpoint and is journaled `interrupted`, not `cancelled`.
+    /// Blocks until the worker pool is quiet.
+    pub fn interrupt(&self) {
+        {
+            let mut g = lock_recover(&self.inner);
+            g.draining = true;
+            g.queue.clear();
+            for job in g.jobs.values() {
+                if lock_recover(&job.state).status == JobStatus::Running {
+                    job.ctl.cancel_for_shutdown();
+                }
+            }
+        }
+        self.cv.notify_all();
+        self.drain();
+    }
+
+    /// Submit a job: validated, fingerprinted, then either answered from
+    /// the archive (no queue slot, no accuracy evals), deduplicated on its
+    /// idempotency key, or enqueued.
+    ///
+    /// Known limitation: two *identical* jobs (without idempotency keys)
+    /// submitted before the first completes both run (the archive only
+    /// answers after a completion). The duplicate's accuracy queries — the
+    /// expensive part — all hit the shared session memo, so the waste is
+    /// bounded to the agent-side episode work; job-level single-flight
+    /// (parking the duplicate on the first job's completion) is
+    /// deliberately deferred.
+    pub fn submit(&self, spec: JobSpec) -> Result<Arc<Job>, SubmitError> {
+        let (env_fp, search_fp) = self.runner.prepare(&spec).map_err(|e| {
+            // a typed permanent fault from prepare (a quarantine-poisoned
+            // session) is a backend condition, not a bad request: 503
+            match e.downcast_ref::<FaultError>() {
+                Some(FaultError::Permanent(_)) => SubmitError::Unavailable(format!("{e:#}")),
+                _ => SubmitError::Invalid(e),
+            }
+        })?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let job = self.build_job(id, spec, env_fp, search_fp);
 
         // one authoritative gate: the draining check precedes the archive
         // lookup so a 503-rejected resubmission can't bump the persistent
@@ -353,6 +485,15 @@ impl Scheduler {
         let mut g = lock_recover(&self.inner);
         if g.draining {
             return Err(SubmitError::Draining);
+        }
+        // idempotent resubmission: a key we've already accepted answers
+        // with the ORIGINAL job — whatever state it is in — so a client
+        // retrying a dropped response can never double-run a search
+        if let Some(k) = &job.spec.idempotency_key {
+            if let Some(prior) = g.idem.get(k).and_then(|pid| g.jobs.get(pid)).cloned() {
+                self.totals.deduped.fetch_add(1, Ordering::Relaxed);
+                return Ok(prior);
+            }
         }
         // graceful degradation: while the breaker is open or the backend
         // reports unhealthy, shed new work — but only while jobs are still
@@ -388,9 +529,15 @@ impl Scheduler {
             // inflate `submitted` in /v1/stats
             self.totals.submitted.fetch_add(1, Ordering::Relaxed);
             self.totals.archived.fetch_add(1, Ordering::Relaxed);
+            if let Some(k) = &job.spec.idempotency_key {
+                g.idem.insert(k.clone(), id);
+            }
             g.jobs.insert(id, job.clone());
             g.finished_order.push_back(id);
             Self::prune_finished(&mut g);
+            drop(g);
+            self.wal_append_submit(id, &job.spec.raw);
+            self.wal_append_status(id, "done");
             return Ok(job);
         }
 
@@ -398,9 +545,13 @@ impl Scheduler {
             return Err(SubmitError::Full);
         }
         self.totals.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Some(k) = &job.spec.idempotency_key {
+            g.idem.insert(k.clone(), id);
+        }
         g.jobs.insert(id, job.clone());
         g.queue.push_back(job.clone());
         drop(g);
+        self.wal_append_submit(id, &job.spec.raw);
         self.cv.notify_one();
         Ok(job)
     }
@@ -469,6 +620,9 @@ impl Scheduler {
                 Self::prune_finished(&mut g);
             }
             drop(g);
+            // a cancelled-while-queued job is terminal: journal it so a
+            // restart does not resurrect work the client explicitly killed
+            self.wal_append_status(id, "cancelled");
             // a drain() may be waiting on the queue emptying
             self.cv.notify_all();
         }
@@ -478,7 +632,15 @@ impl Scheduler {
     fn prune_finished(g: &mut Sched) {
         while g.finished_order.len() > FINISHED_RETAIN {
             if let Some(old) = g.finished_order.pop_front() {
-                g.jobs.remove(&old);
+                if let Some(j) = g.jobs.remove(&old) {
+                    // the dedupe entry dies with the job it points at (if
+                    // the key was reused by a newer job, leave that alone)
+                    if let Some(k) = &j.spec.idempotency_key {
+                        if g.idem.get(k) == Some(&old) {
+                            g.idem.remove(k);
+                        }
+                    }
+                }
             }
         }
     }
@@ -513,12 +675,20 @@ impl Scheduler {
                 // the guard (the state is a plain field record, valid
                 // across any panic) instead of silently skipping the
                 // failure bookkeeping
-                let mut s = lock_recover(&job.state);
-                if !s.status.is_terminal() {
-                    s.status = JobStatus::Failed;
-                    s.error = Some("job execution panicked".to_string());
-                    self.totals.failed.fetch_add(1, Ordering::Relaxed);
-                    self.note_failure();
+                let newly_failed = {
+                    let mut s = lock_recover(&job.state);
+                    if !s.status.is_terminal() {
+                        s.status = JobStatus::Failed;
+                        s.error = Some("job execution panicked".to_string());
+                        self.totals.failed.fetch_add(1, Ordering::Relaxed);
+                        self.note_failure();
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if newly_failed {
+                    self.wal_append_status(job.id, "failed");
                 }
             }
             let mut g = lock_recover(&self.inner);
@@ -598,10 +768,13 @@ impl Scheduler {
                 s.status = JobStatus::Cancelled;
                 s.error = Some("deadline exceeded while queued".to_string());
                 self.totals.cancelled.fetch_add(1, Ordering::Relaxed);
+                drop(s);
+                self.wal_append_status(job.id, "cancelled");
                 return;
             }
             s.status = JobStatus::Running;
         }
+        self.wal_append_status(job.id, "running");
         match self.run_with_retries(job) {
             Ok((sol, mut memo)) => {
                 {
@@ -612,6 +785,7 @@ impl Scheduler {
                 }
                 self.totals.done.fetch_add(1, Ordering::Relaxed);
                 self.note_success();
+                self.wal_append_status(job.id, "done");
                 memo.truncate(self.memo_persist);
                 self.archive.insert(Record {
                     net: job.spec.net.clone(),
@@ -628,17 +802,26 @@ impl Scheduler {
                 }
             }
             Err(e) => {
-                let mut s = lock_recover(&job.state);
-                if let Some(c) = e.downcast_ref::<Cancelled>() {
-                    s.status = JobStatus::Cancelled;
-                    s.error = Some(c.0.to_string());
-                    self.totals.cancelled.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    s.status = JobStatus::Failed;
-                    s.error = Some(format!("{e:#}"));
-                    self.totals.failed.fetch_add(1, Ordering::Relaxed);
-                    self.note_failure();
+                let wal_status;
+                {
+                    let mut s = lock_recover(&job.state);
+                    if let Some(c) = e.downcast_ref::<Cancelled>() {
+                        s.status = JobStatus::Cancelled;
+                        s.error = Some(c.0.to_string());
+                        self.totals.cancelled.fetch_add(1, Ordering::Relaxed);
+                        // a process shutdown is no verdict on the job:
+                        // journaled as `interrupted` (non-terminal), it is
+                        // recovered and resumed on the next daemon start
+                        wal_status = if c.0 == "shutdown" { "interrupted" } else { "cancelled" };
+                    } else {
+                        s.status = JobStatus::Failed;
+                        s.error = Some(format!("{e:#}"));
+                        self.totals.failed.fetch_add(1, Ordering::Relaxed);
+                        self.note_failure();
+                        wal_status = "failed";
+                    }
                 }
+                self.wal_append_status(job.id, wal_status);
             }
         }
     }
@@ -707,6 +890,29 @@ impl Scheduler {
                 Json::Num(self.totals.breaker_trips.load(Ordering::Relaxed) as f64),
             ),
             ("breaker_open", Json::Bool(self.breaker_open())),
+            ("deduped", Json::Num(self.totals.deduped.load(Ordering::Relaxed) as f64)),
+            ("wal", self.wal_stats_json()),
         ])
+    }
+
+    /// `/v1/stats` journal fragment: enabled flag, recovery and durability
+    /// counters. The chaos smoke asserts on `recovered` after a kill -9.
+    fn wal_stats_json(&self) -> Json {
+        let mut fields = vec![("enabled", Json::Bool(self.wal().is_some()))];
+        if let Some(w) = self.wal() {
+            fields.push(("path", Json::Str(w.path().display().to_string())));
+        }
+        fields.extend([
+            ("recovered", Json::Num(self.totals.recovered.load(Ordering::Relaxed) as f64)),
+            (
+                "skipped_records",
+                Json::Num(self.totals.wal_skipped.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "append_failures",
+                Json::Num(self.totals.wal_append_failures.load(Ordering::Relaxed) as f64),
+            ),
+        ]);
+        Json::obj(fields)
     }
 }

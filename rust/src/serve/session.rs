@@ -26,13 +26,14 @@
 //! `eval_batch_execs` / `batched_candidates` / `pad_lanes`).
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use anyhow::{Context, Result};
 
 use crate::config::JobSpec;
-use crate::coordinator::{QuantEnv, Searcher};
+use crate::coordinator::{Durable, QuantEnv, SearchCheckpoint, Searcher};
 use crate::pareto;
 use crate::registry::{NetVersion, Registry};
 use crate::runtime::{Engine, FaultError, Manifest};
@@ -383,6 +384,20 @@ pub struct SessionRunner {
     /// memo entries exported per job for archive warm-starts (top-k by
     /// recency; the scheduler's `memo_persist` bound)
     memo_persist: usize,
+    /// search checkpoint directory (`--checkpoint-dir`); `None` = searches
+    /// run without checkpoints
+    checkpoint_dir: Option<PathBuf>,
+    /// episodes between checkpoint writes (`--checkpoint-every`)
+    checkpoint_every: usize,
+    /// jobs that resumed from a valid checkpoint instead of starting fresh
+    resumes: AtomicU64,
+    /// checkpoint files written across all jobs
+    checkpoint_saves: AtomicU64,
+    /// checkpoint writes that failed (search unaffected)
+    checkpoint_save_failures: AtomicU64,
+    /// checkpoints refused at load (bad checksum, wrong fingerprint,
+    /// newer schema) — the job started fresh instead
+    checkpoint_rejects: AtomicU64,
 }
 
 impl SessionRunner {
@@ -397,11 +412,33 @@ impl SessionRunner {
             registry,
             pinned: RwLock::new(HashMap::new()),
             memo_persist,
+            checkpoint_dir: None,
+            checkpoint_every: 8,
+            resumes: AtomicU64::new(0),
+            checkpoint_saves: AtomicU64::new(0),
+            checkpoint_save_failures: AtomicU64::new(0),
+            checkpoint_rejects: AtomicU64::new(0),
         }
+    }
+
+    /// Enable durable searches: checkpoints land in `dir` (one file per
+    /// `(net, search fingerprint)`) roughly every `every` episodes, on PPO
+    /// update boundaries. A job finding a valid checkpoint for its
+    /// fingerprint resumes bit-identically instead of restarting.
+    pub fn with_checkpoints(mut self, dir: Option<PathBuf>, every: usize) -> SessionRunner {
+        self.checkpoint_dir = dir;
+        self.checkpoint_every = every.max(1);
+        self
     }
 
     pub fn sessions(&self) -> &SessionCache {
         &self.sessions
+    }
+
+    /// Jobs resumed from a checkpoint since process start (test hook; also
+    /// in the stats fragment).
+    pub fn resumes(&self) -> u64 {
+        self.resumes.load(Ordering::Relaxed)
     }
 
     /// The version pinned for `(net, env_fp)` — present for every prepared
@@ -505,7 +542,62 @@ impl SessionRunner {
         let mut searcher =
             Searcher::with_env(env.clone(), self.engine.clone(), &self.manifest, spec.cfg.clone())
                 .with_context(|| format!("building searcher for {}", spec.net))?;
-        let result = searcher.run_ctl(&job.ctl)?;
+
+        // durable searches: one checkpoint file per (net, search_fp). A
+        // valid checkpoint for this exact fingerprint resumes the search
+        // bit-identically; anything invalid (bad checksum, foreign
+        // fingerprint, newer schema) is rejected and the job starts fresh —
+        // a stale file must never be able to wedge a search.
+        let mut durable = match &self.checkpoint_dir {
+            Some(dir) => {
+                let path =
+                    dir.join(format!("{}.{:016x}.ckpt.json", spec.net, job.search_fp));
+                let mut d =
+                    Durable::new(path, self.checkpoint_every, &spec.net, job.search_fp)?;
+                match SearchCheckpoint::load(&d.path) {
+                    Ok(Some(ck)) => match searcher.restore(ck, &mut d) {
+                        Ok(()) => {
+                            self.resumes.fetch_add(1, Ordering::Relaxed);
+                            eprintln!(
+                                "[serve] job {}: resuming {} from checkpoint at episode {}",
+                                job.id,
+                                spec.net,
+                                d.resumed_from.unwrap_or(0)
+                            );
+                        }
+                        Err(e) => {
+                            self.checkpoint_rejects.fetch_add(1, Ordering::Relaxed);
+                            eprintln!(
+                                "[serve] job {}: checkpoint rejected ({e:#}); starting fresh",
+                                job.id
+                            );
+                        }
+                    },
+                    Ok(None) => {}
+                    Err(e) => {
+                        self.checkpoint_rejects.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "[serve] job {}: checkpoint unreadable ({e:#}); starting fresh",
+                            job.id
+                        );
+                    }
+                }
+                Some(d)
+            }
+            None => None,
+        };
+        let result = searcher.run_durable(&job.ctl, durable.as_mut());
+        // account saves before propagating any error — an interrupted job's
+        // final-flush checkpoint still counts
+        if let Some(d) = &durable {
+            self.checkpoint_saves.fetch_add(d.saves, Ordering::Relaxed);
+            self.checkpoint_save_failures
+                .fetch_add(d.save_failures, Ordering::Relaxed);
+        }
+        let result = result?;
+        if let Some(d) = &mut durable {
+            d.complete();
+        }
 
         // Pareto view of everything this search visited: dedup episode
         // bits (accuracy is pure in bits, so later duplicates are
@@ -629,6 +721,19 @@ impl JobRunner for SessionRunner {
         Json::obj(vec![
             ("pretrains", Json::Num(self.sessions.pretrains() as f64)),
             ("quarantines", Json::Num(self.sessions.quarantines() as f64)),
+            ("resumes", Json::Num(self.resumes.load(Ordering::Relaxed) as f64)),
+            (
+                "checkpoint_saves",
+                Json::Num(self.checkpoint_saves.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "checkpoint_save_failures",
+                Json::Num(self.checkpoint_save_failures.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "checkpoint_rejects",
+                Json::Num(self.checkpoint_rejects.load(Ordering::Relaxed) as f64),
+            ),
             ("poisoned_sessions", Json::Num(self.sessions.poisoned_count() as f64)),
             // pool-global counters: one fault plan / retry ledger shared by
             // every per-device client, so `exec_retries == faults_injected`

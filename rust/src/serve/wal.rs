@@ -1,0 +1,407 @@
+//! Write-ahead job journal: every submission and status transition appends
+//! one checksummed JSON line to `jobs.wal`, fsync'd, so a daemon that dies
+//! mid-job can recover its queue on restart.
+//!
+//! File shape: a header line `{"max_id":N,"schema_version":1}` followed by
+//! one record per line (`max_id` is the compaction-time id high-water mark,
+//! so finished jobs' ids are never reissued even after their records are
+//! compacted away). Two record kinds:
+//!
+//! ```text
+//! {"checksum":"<fnv16>","event":"submit","id":3,"spec":{...original body...}}
+//! {"checksum":"<fnv16>","event":"status","id":3,"status":"running"}
+//! ```
+//!
+//! The checksum is FNV-1a over the record's canonical dump with the
+//! `checksum` key removed — the same scheme as
+//! [`crate::coordinator::checkpoint`] and the solution archive, so one
+//! inspection habit covers all three durable formats.
+//!
+//! Recovery rules ([`Wal::open`]):
+//!
+//! * a record that fails to parse or fails its checksum is **skipped and
+//!   counted**, never a hard error — a torn tail from `kill -9` mid-append
+//!   must not take the daemon down with it;
+//! * a job whose last status is terminal (`done` / `failed` / `cancelled`)
+//!   is complete and dropped;
+//! * everything else — submitted, `running`, `interrupted` — is returned as
+//!   a [`RecoveredJob`] for re-enqueue under its original id;
+//! * the file is then **compacted** (tmp + rename): header plus one fresh
+//!   submit record per recovered job, so the journal never grows without
+//!   bound across restarts;
+//! * a header from a NEWER schema is refused outright — old code must not
+//!   guess at records it cannot fully interpret.
+//!
+//! Append failures after open are surfaced as `Err` but the scheduler treats
+//! them as counters, not fatalities: a full disk degrades durability, it
+//! does not stop serving.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::util::fnv::Fnv;
+use crate::util::json::Json;
+
+/// Journal format version. Bump on any record-shape change; `open` refuses
+/// files stamped with a newer version.
+pub const WAL_SCHEMA_VERSION: u64 = 1;
+
+/// Job statuses that mean "finished, nothing to recover".
+pub fn is_terminal_status(s: &str) -> bool {
+    matches!(s, "done" | "failed" | "cancelled")
+}
+
+/// One incomplete job replayed out of the journal: its original id and the
+/// verbatim request body it was submitted with (re-decoded through
+/// [`crate::config::job_from_json`] at recovery time, so recovered specs
+/// pass exactly the validation live ones do).
+#[derive(Debug, Clone)]
+pub struct RecoveredJob {
+    pub id: u64,
+    pub spec: Json,
+}
+
+/// What [`Wal::open`] found in an existing journal.
+#[derive(Debug)]
+pub struct WalRecovery {
+    /// incomplete jobs, ascending id order
+    pub jobs: Vec<RecoveredJob>,
+    /// highest job id ever journaled (0 when none) — the scheduler seeds its
+    /// id counter above this so recovered and fresh ids never collide
+    pub max_id: u64,
+    /// torn / corrupt lines skipped during replay
+    pub skipped: u64,
+}
+
+/// The open journal: an append handle behind a mutex (appends come from
+/// every scheduler worker thread) plus append accounting for `/v1/stats`.
+pub struct Wal {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+fn checksum_hex(payload: &str) -> String {
+    format!("{:016x}", Fnv::new().write_bytes(payload.as_bytes()).finish())
+}
+
+/// Stamp a record with its checksum: dump the object WITHOUT the checksum
+/// key, hash that, insert the key, dump again. Verification is the mirror
+/// image, so any canonical-form drift fails closed.
+fn sealed_line(mut obj: BTreeMap<String, Json>) -> String {
+    obj.remove("checksum");
+    let payload = Json::Obj(obj.clone()).dump();
+    obj.insert("checksum".to_string(), Json::Str(checksum_hex(&payload)));
+    Json::Obj(obj).dump()
+}
+
+/// Parse + verify one journal line. `None` = torn or tampered, skip it.
+fn verified_record(line: &str) -> Option<Json> {
+    let j = Json::parse(line).ok()?;
+    let obj = j.as_obj()?;
+    let want = obj.get("checksum")?.as_str()?.to_string();
+    let mut stripped = obj.clone();
+    stripped.remove("checksum");
+    if checksum_hex(&Json::Obj(stripped).dump()) == want {
+        Some(j)
+    } else {
+        None
+    }
+}
+
+fn submit_record(id: u64, spec: &Json) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("event".to_string(), Json::Str("submit".to_string()));
+    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert("spec".to_string(), spec.clone());
+    sealed_line(obj)
+}
+
+fn status_record(id: u64, status: &str) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("event".to_string(), Json::Str("status".to_string()));
+    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert("status".to_string(), Json::Str(status.to_string()));
+    sealed_line(obj)
+}
+
+impl Wal {
+    /// Open (creating if absent) the journal at `path`: replay it, compact
+    /// it, and return the append handle plus everything recovered.
+    pub fn open(path: &Path) -> Result<(Wal, WalRecovery)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating WAL dir {}", parent.display()))?;
+            }
+        }
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+            Err(e) => return Err(e).with_context(|| format!("reading WAL {}", path.display())),
+        };
+
+        let mut max_id = 0u64;
+        let mut lines = text.lines();
+        if let Some(header) = lines.next() {
+            let h = Json::parse(header)
+                .with_context(|| format!("WAL {} has an unreadable header", path.display()))?;
+            let schema = h
+                .get("schema_version")
+                .and_then(Json::as_f64)
+                .context("WAL header missing schema_version")? as u64;
+            anyhow::ensure!(
+                schema <= WAL_SCHEMA_VERSION,
+                "WAL {} has schema_version {} but this build understands {}",
+                path.display(),
+                schema,
+                WAL_SCHEMA_VERSION
+            );
+            if let Some(n) = h.get("max_id").and_then(Json::as_f64) {
+                if n >= 0.0 && n.fract() == 0.0 {
+                    max_id = n as u64;
+                }
+            }
+        }
+
+        // Replay: last writer wins per id. A status line for an id with no
+        // surviving submit record cannot be recovered (the spec is gone) —
+        // it is counted as skipped rather than silently dropped.
+        let mut specs: BTreeMap<u64, Json> = BTreeMap::new();
+        let mut status: BTreeMap<u64, String> = BTreeMap::new();
+        let mut skipped = 0u64;
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Some(rec) = verified_record(line) else {
+                skipped += 1;
+                continue;
+            };
+            let id = match rec.get("id").and_then(Json::as_f64) {
+                Some(n) if n >= 0.0 && n.fract() == 0.0 => n as u64,
+                _ => {
+                    skipped += 1;
+                    continue;
+                }
+            };
+            match rec.get("event").and_then(Json::as_str) {
+                Some("submit") => match rec.get("spec") {
+                    Some(spec) => {
+                        specs.insert(id, spec.clone());
+                        max_id = max_id.max(id);
+                    }
+                    None => skipped += 1,
+                },
+                Some("status") => match rec.get("status").and_then(Json::as_str) {
+                    Some(s) => {
+                        status.insert(id, s.to_string());
+                        max_id = max_id.max(id);
+                    }
+                    None => skipped += 1,
+                },
+                _ => skipped += 1,
+            }
+        }
+        for (id, s) in &status {
+            if is_terminal_status(s) || !specs.contains_key(id) {
+                specs.remove(id);
+                if !is_terminal_status(s) {
+                    skipped += 1; // orphan non-terminal status: unrecoverable
+                }
+            }
+        }
+        let jobs: Vec<RecoveredJob> = specs
+            .into_iter()
+            .map(|(id, spec)| RecoveredJob { id, spec })
+            .collect();
+
+        // Compact: header + one submit record per recovered job, atomically.
+        let tmp = path.with_extension("wal.tmp");
+        {
+            let mut out = String::new();
+            out.push_str(&format!(
+                "{{\"max_id\":{max_id},\"schema_version\":{WAL_SCHEMA_VERSION}}}\n"
+            ));
+            for j in &jobs {
+                out.push_str(&submit_record(j.id, &j.spec));
+                out.push('\n');
+            }
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating WAL tmp {}", tmp.display()))?;
+            f.write_all(out.as_bytes())?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("installing compacted WAL {}", path.display()))?;
+
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening WAL {} for append", path.display()))?;
+        Ok((
+            Wal { path: path.to_path_buf(), file: Mutex::new(file) },
+            WalRecovery { jobs, max_id, skipped },
+        ))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn append(&self, line: &str) -> Result<()> {
+        let mut f = crate::util::lock_recover(&self.file);
+        f.write_all(line.as_bytes())
+            .and_then(|()| f.write_all(b"\n"))
+            .and_then(|()| f.sync_data())
+            .with_context(|| format!("appending to WAL {}", self.path.display()))
+    }
+
+    /// Journal a fresh submission: id + the verbatim request body.
+    pub fn append_submit(&self, id: u64, spec: &Json) -> Result<()> {
+        self.append(&submit_record(id, spec))
+    }
+
+    /// Journal a status transition (`running`, `done`, `failed`,
+    /// `cancelled`, `interrupted`).
+    pub fn append_status(&self, id: u64, status: &str) -> Result<()> {
+        self.append(&status_record(id, status))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("releq_wal_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!(
+            "{}_{}.wal",
+            name,
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn spec(net: &str) -> Json {
+        Json::obj(vec![("net", Json::Str(net.to_string()))])
+    }
+
+    #[test]
+    fn replay_recovers_incomplete_jobs_only() {
+        let p = tmp("replay");
+        {
+            let (w, rec) = Wal::open(&p).unwrap();
+            assert!(rec.jobs.is_empty());
+            assert_eq!((rec.max_id, rec.skipped), (0, 0));
+            w.append_submit(1, &spec("lenet")).unwrap();
+            w.append_status(1, "running").unwrap();
+            w.append_status(1, "done").unwrap();
+            w.append_submit(2, &spec("simplenet")).unwrap();
+            w.append_status(2, "running").unwrap(); // died mid-run
+            w.append_submit(3, &spec("lenet")).unwrap(); // never started
+            w.append_submit(4, &spec("lenet")).unwrap();
+            w.append_status(4, "interrupted").unwrap(); // graceful shutdown
+            w.append_submit(5, &spec("lenet")).unwrap();
+            w.append_status(5, "cancelled").unwrap();
+        }
+        let (_w, rec) = Wal::open(&p).unwrap();
+        let ids: Vec<u64> = rec.jobs.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+        assert_eq!(rec.max_id, 5, "terminal ids still fence the id counter");
+        assert_eq!(rec.skipped, 0);
+        assert_eq!(
+            rec.jobs[0].spec.get("net").and_then(Json::as_str),
+            Some("simplenet"),
+            "spec body survives the journal verbatim"
+        );
+        // terminal ids were compacted away, but the header's high-water mark
+        // keeps fencing the id counter on every subsequent open
+        drop(_w);
+        let (_w, rec) = Wal::open(&p).unwrap();
+        assert_eq!(rec.max_id, 5);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn torn_tail_is_skipped_and_counted() {
+        let p = tmp("torn");
+        {
+            let (w, _) = Wal::open(&p).unwrap();
+            w.append_submit(1, &spec("lenet")).unwrap();
+            w.append_submit(2, &spec("lenet")).unwrap();
+        }
+        // simulate kill -9 mid-append: a truncated record on the tail
+        let mut text = std::fs::read_to_string(&p).unwrap();
+        text.push_str("{\"checksum\":\"0000000000000000\",\"event\":\"status\",\"id\":1,");
+        std::fs::write(&p, text).unwrap();
+        let (_w, rec) = Wal::open(&p).unwrap();
+        assert_eq!(rec.jobs.len(), 2, "intact records all recovered");
+        assert_eq!(rec.skipped, 1, "the torn line is counted, not fatal");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn checksum_mismatch_drops_the_record() {
+        let p = tmp("tamper");
+        {
+            let (w, _) = Wal::open(&p).unwrap();
+            w.append_submit(1, &spec("lenet")).unwrap();
+            w.append_status(1, "done").unwrap();
+        }
+        // flip the terminal status to a non-terminal one without re-sealing:
+        // the checksum no longer matches, so the edit must be ignored and
+        // the job treated as done (its last VALID status).
+        let text = std::fs::read_to_string(&p).unwrap().replace("\"done\"", "\"running\"");
+        std::fs::write(&p, text).unwrap();
+        let (_w, rec) = Wal::open(&p).unwrap();
+        assert!(rec.jobs.is_empty(), "tampered status line must not resurrect the job");
+        assert_eq!(rec.skipped, 1);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn newer_schema_is_refused() {
+        let p = tmp("schema");
+        std::fs::write(&p, "{\"schema_version\":99}\n").unwrap();
+        let err = Wal::open(&p).unwrap_err().to_string();
+        assert!(err.contains("schema_version 99"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn compaction_bounds_the_file() {
+        let p = tmp("compact");
+        {
+            let (w, _) = Wal::open(&p).unwrap();
+            for id in 1..=20u64 {
+                w.append_submit(id, &spec("lenet")).unwrap();
+                w.append_status(id, "done").unwrap();
+            }
+            w.append_submit(21, &spec("lenet")).unwrap();
+        }
+        let before = std::fs::metadata(&p).unwrap().len();
+        let (_w, rec) = Wal::open(&p).unwrap();
+        let after = std::fs::metadata(&p).unwrap().len();
+        assert_eq!(rec.jobs.len(), 1);
+        assert!(
+            after < before / 4,
+            "compaction must shed the 20 finished jobs ({before} -> {after} bytes)"
+        );
+        // and the compacted file replays identically
+        let (_w2, rec2) = Wal::open(&p).unwrap();
+        assert_eq!(rec2.jobs.len(), 1);
+        assert_eq!(rec2.jobs[0].id, 21);
+        assert_eq!(rec2.max_id, 21, "max_id survives compaction via the submit record");
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -8,5 +8,6 @@ pub mod json;
 pub mod lock;
 pub mod rng;
 pub mod sha256;
+pub mod signals;
 
 pub use lock::{lock_recover, read_recover, write_recover};

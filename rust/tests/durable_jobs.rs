@@ -1,0 +1,734 @@
+//! Durability integration tests: checkpointed searches, the write-ahead
+//! job journal, idempotency keys, and router failover.
+//!
+//! Two tiers, like `serve_daemon.rs`:
+//!
+//! * **stub tier** (always runs, no PJRT): WAL replay across daemon
+//!   restarts (including torn-tail corruption), idempotency-key dedupe,
+//!   the checkpoint replication endpoints, and router failover of
+//!   in-flight jobs to a live successor.
+//! * **artifact tier** (skipped without `artifacts/manifest.json`): the
+//!   tentpole invariant — a search interrupted at a checkpoint boundary
+//!   and resumed produces a **bit-identical** result with exact exec
+//!   accounting (only post-checkpoint episodes re-execute, one pretrain
+//!   total), and a daemon restart recovers a journaled job under its
+//!   original id and resumes it from its checkpoint.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use releq::config::{JobSpec, ServeConfig};
+use releq::coordinator::{
+    AgentSnapshot, Durable, SearchCheckpoint, SearchCtl,
+};
+use releq::fleet::{Health, Router, Worker};
+use releq::metrics::{episodes_json, EpisodeLog};
+use releq::serve::http::{request, serve_conn, Response};
+use releq::serve::{
+    env_fingerprint, search_fingerprint, Archive, Job, JobRunner, Server, Solution, Wal,
+};
+use releq::util::json::Json;
+
+// ---- stub backend (same shape as serve_daemon.rs) ---------------------------
+
+struct StubRunner {
+    episode_ms: u64,
+    runs: AtomicU64,
+}
+
+impl StubRunner {
+    fn new(episode_ms: u64) -> Arc<StubRunner> {
+        Arc::new(StubRunner { episode_ms, runs: AtomicU64::new(0) })
+    }
+}
+
+impl JobRunner for StubRunner {
+    fn prepare(&self, spec: &JobSpec) -> Result<(u64, u64)> {
+        anyhow::ensure!(spec.net != "unknown-net", "unknown network `{}`", spec.net);
+        Ok((
+            env_fingerprint(&spec.net, 8, &spec.cfg.env),
+            search_fingerprint(&spec.net, 8, &spec.cfg),
+        ))
+    }
+
+    fn run(&self, job: &Job) -> Result<(Solution, Vec<(Vec<u32>, f64)>)> {
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        let eps = job.spec.cfg.episodes;
+        for e in 0..eps {
+            job.ctl.check()?;
+            std::thread::sleep(Duration::from_millis(self.episode_ms));
+            job.ctl.notify(&EpisodeLog {
+                episode: e,
+                reward: e as f64,
+                state_acc: 0.9,
+                state_q: 0.5,
+                bits: vec![4, 4],
+                probs: vec![],
+            });
+        }
+        let solution = Solution {
+            bits: vec![4, 4],
+            avg_bits: 4.0,
+            acc_fullp: 0.95,
+            acc_final: 0.93,
+            acc_loss_pct: 2.0,
+            state_q: 0.5,
+            reward: eps.saturating_sub(1) as f64,
+            episodes_run: eps,
+            pareto: vec![(0.5, 0.98, vec![4, 4])],
+        };
+        Ok((solution, vec![(vec![4, 4], 0.93)]))
+    }
+}
+
+// ---- helpers ----------------------------------------------------------------
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("releq_durable_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn fresh(name: &str) -> PathBuf {
+    let p = tmp_path(name);
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn serve_cfg(archive: &PathBuf) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.addr = "127.0.0.1:0".to_string();
+    cfg.workers = 1;
+    cfg.queue_cap = 8;
+    cfg.archive = archive.clone();
+    cfg.log_tail = 4;
+    cfg
+}
+
+fn spawn(server: Server) -> (String, std::thread::JoinHandle<Result<()>>) {
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn submit(addr: &str, body: &str) -> (u16, Json) {
+    request(addr, "POST", "/v1/jobs", Some(&Json::parse(body).unwrap())).unwrap()
+}
+
+fn wait_terminal(addr: &str, id: usize, timeout: Duration) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let (s, j) = request(addr, "GET", &format!("/v1/jobs/{id}"), None).unwrap();
+        assert_eq!(s, 200, "status poll failed: {}", j.dump());
+        if matches!(j.s("status"), "done" | "failed" | "cancelled") {
+            return j;
+        }
+        assert!(t0.elapsed() < timeout, "job {id} not terminal after {timeout:?}: {}", j.dump());
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn wait_running(addr: &str, id: usize) {
+    let t0 = Instant::now();
+    loop {
+        let (_, j) = request(addr, "GET", &format!("/v1/jobs/{id}"), None).unwrap();
+        if j.s("status") == "running" {
+            return;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "job {id} never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn shutdown(addr: &str, handle: std::thread::JoinHandle<Result<()>>) {
+    let (status, j) = request(addr, "POST", "/v1/shutdown", None).unwrap();
+    assert_eq!(status, 200, "shutdown failed: {}", j.dump());
+    handle.join().unwrap().unwrap();
+}
+
+// ---- stub tier: WAL recovery ------------------------------------------------
+
+/// A daemon interrupted with a running job journals it as non-terminal;
+/// the next daemon on the same WAL re-enqueues it UNDER ITS ORIGINAL ID
+/// and runs it to completion. A third open recovers nothing.
+#[test]
+fn stub_wal_recovers_interrupted_job_across_restart() {
+    let archive_path = fresh("wal_recover_archive.json");
+    let wal_path = fresh("wal_recover.wal");
+
+    let stub = StubRunner::new(20);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let mut cfg = serve_cfg(&archive_path);
+    cfg.wal = Some(wal_path.clone());
+    let server = Server::bind_with(cfg, stub.clone(), archive).unwrap();
+    let daemon = server.daemon();
+    let (addr, handle) = spawn(server);
+
+    let (s, j) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 400, "seed": 1}}"#);
+    assert_eq!(s, 202, "{}", j.dump());
+    let id = j.u("id");
+    wait_running(&addr, id);
+
+    // crash-like stop: drain via shutdown-cancel (journals "interrupted",
+    // a recoverable status), no client shutdown request involved
+    daemon.interrupt();
+    handle.join().unwrap().unwrap();
+    assert_eq!(stub.runs.load(Ordering::SeqCst), 1);
+
+    // restart on the same WAL: the job comes back under its original id
+    let stub2 = StubRunner::new(1);
+    let archive2 = Arc::new(Archive::open(&archive_path).unwrap());
+    let mut cfg2 = serve_cfg(&archive_path);
+    cfg2.wal = Some(wal_path.clone());
+    let server2 = Server::bind_with(cfg2, stub2.clone(), archive2).unwrap();
+    let (addr2, handle2) = spawn(server2);
+
+    let done = wait_terminal(&addr2, id, Duration::from_secs(30));
+    assert_eq!(done.s("status"), "done", "{}", done.dump());
+    assert_eq!(stub2.runs.load(Ordering::SeqCst), 1, "recovered job must re-run");
+
+    let (s, stats) = request(&addr2, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(s, 200);
+    let wal_stats = stats.req("scheduler").req("wal");
+    assert_eq!(wal_stats.req("enabled"), &Json::Bool(true));
+    assert_eq!(wal_stats.u("recovered"), 1);
+    assert_eq!(wal_stats.u("append_failures"), 0);
+
+    // a fresh submission must NOT collide with the recovered id space
+    let (s, j2) = submit(&addr2, r#"{"net": "stubnet", "config": {"episodes": 2, "seed": 7}}"#);
+    assert_eq!(s, 202);
+    assert!(j2.u("id") > id, "fresh ids must stay above recovered ids");
+    wait_terminal(&addr2, j2.u("id"), Duration::from_secs(10));
+    shutdown(&addr2, handle2);
+
+    // clean shutdown journaled everything terminal: nothing to recover
+    let (_, recovery) = Wal::open(&wal_path).unwrap();
+    assert!(recovery.jobs.is_empty(), "recovered {:?}", recovery.jobs.len());
+    assert!(recovery.max_id >= id as u64, "id high-water mark must persist");
+}
+
+/// Torn trailing bytes (a crash mid-append) are skipped and counted —
+/// never fatal, and never block recovery of the intact prefix.
+#[test]
+fn stub_wal_torn_tail_is_skipped_not_fatal() {
+    let archive_path = fresh("wal_torn_archive.json");
+    let wal_path = fresh("wal_torn.wal");
+
+    let stub = StubRunner::new(20);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let mut cfg = serve_cfg(&archive_path);
+    cfg.wal = Some(wal_path.clone());
+    let server = Server::bind_with(cfg, stub, archive).unwrap();
+    let daemon = server.daemon();
+    let (addr, handle) = spawn(server);
+    let (s, j) = submit(&addr, r#"{"net": "stubnet", "config": {"episodes": 400, "seed": 3}}"#);
+    assert_eq!(s, 202);
+    let id = j.u("id");
+    wait_running(&addr, id);
+    daemon.interrupt();
+    handle.join().unwrap().unwrap();
+
+    // simulate a crash mid-append: a half-written record and checksum rot
+    let mut text = std::fs::read_to_string(&wal_path).unwrap();
+    text.push_str("{\"checksum\":\"0000000000000000\",\"event\":\"status\",\"id\":1,\"status\":\"done\"}\n");
+    text.push_str("{\"checksum\":\"12ab, torn mid-wri");
+    std::fs::write(&wal_path, text).unwrap();
+
+    let stub2 = StubRunner::new(1);
+    let archive2 = Arc::new(Archive::open(&archive_path).unwrap());
+    let mut cfg2 = serve_cfg(&archive_path);
+    cfg2.wal = Some(wal_path.clone());
+    let server2 = Server::bind_with(cfg2, stub2, archive2).unwrap();
+    let (addr2, handle2) = spawn(server2);
+
+    // the bad "done" record failed its checksum, so the job is STILL
+    // recovered — a tampered terminal status cannot erase an in-flight job
+    let done = wait_terminal(&addr2, id, Duration::from_secs(30));
+    assert_eq!(done.s("status"), "done");
+    let (_, stats) = request(&addr2, "GET", "/v1/stats", None).unwrap();
+    let wal_stats = stats.req("scheduler").req("wal");
+    assert_eq!(wal_stats.u("recovered"), 1);
+    assert!(wal_stats.u("skipped_records") >= 2, "{}", wal_stats.dump());
+    shutdown(&addr2, handle2);
+}
+
+// ---- stub tier: idempotency keys --------------------------------------------
+
+#[test]
+fn stub_idempotency_key_dedupes_resubmissions() {
+    let archive_path = fresh("idem_archive.json");
+    let stub = StubRunner::new(10);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(serve_cfg(&archive_path), stub.clone(), archive).unwrap();
+    let (addr, handle) = spawn(server);
+
+    // same key, different specs: the retry returns the ORIGINAL job
+    let (s, a) = submit(
+        &addr,
+        r#"{"net": "stubnet", "config": {"episodes": 100, "seed": 1}, "idempotency_key": "cli-retry-1"}"#,
+    );
+    assert_eq!(s, 202, "{}", a.dump());
+    let (s, b) = submit(
+        &addr,
+        r#"{"net": "stubnet", "config": {"episodes": 100, "seed": 2}, "idempotency_key": "cli-retry-1"}"#,
+    );
+    assert_eq!(s, 202, "{}", b.dump());
+    assert_eq!(a.u("id"), b.u("id"), "same key must dedupe to one job");
+    assert_eq!(stub.runs.load(Ordering::SeqCst), 1, "dedupe must not start a second run");
+
+    // a different key is a different job
+    let (s, c) = submit(
+        &addr,
+        r#"{"net": "stubnet", "config": {"episodes": 3, "seed": 3}, "idempotency_key": "cli-retry-2"}"#,
+    );
+    assert_eq!(s, 202);
+    assert_ne!(c.u("id"), a.u("id"));
+
+    // malformed keys are the client's bug
+    for bad in [r#""""#, r#""k y""#, r#"7"#] {
+        let (s, j) = submit(
+            &addr,
+            &format!(r#"{{"net": "stubnet", "config": {{"episodes": 1}}, "idempotency_key": {bad}}}"#),
+        );
+        assert_eq!(s, 400, "key {bad} must be rejected: {}", j.dump());
+    }
+
+    let (_, stats) = request(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(stats.req("scheduler").u("deduped"), 1);
+
+    // unblock the long job so drain is quick
+    let (s, _) =
+        request(&addr, "POST", &format!("/v1/jobs/{}/cancel", a.u("id")), None).unwrap();
+    assert_eq!(s, 200);
+    shutdown(&addr, handle);
+}
+
+// ---- stub tier: checkpoint replication endpoints ----------------------------
+
+fn sample_checkpoint(episodes_done: usize) -> SearchCheckpoint {
+    let log = (0..episodes_done)
+        .map(|e| EpisodeLog {
+            episode: e,
+            reward: e as f64,
+            state_acc: 0.9,
+            state_q: 0.5,
+            bits: vec![4, 4],
+            probs: vec![vec![0.25; 4]; 2],
+        })
+        .collect();
+    SearchCheckpoint {
+        net: "stubnet".to_string(),
+        search_fp: 0xabc,
+        episodes_done,
+        log,
+        agent: AgentSnapshot {
+            params: vec![0.5, -0.0, 1.25e-30],
+            adam_m: vec![0.0, 0.0, 0.0],
+            adam_v: vec![0.0, 0.0, 0.0],
+            adam_t: 2.0,
+            updates_done: 1,
+        },
+        last_greedy: Some(vec![4, 4]),
+        stable_updates: 0,
+        memo: vec![(vec![4, 4], 0.9)],
+    }
+}
+
+#[test]
+fn stub_checkpoint_endpoints_verify_and_install_monotonically() {
+    let archive_path = fresh("ckpt_ep_archive.json");
+    let ckpt_dir = fresh("ckpt_ep_dir");
+
+    // checkpoints disabled: the endpoints answer 503
+    let stub = StubRunner::new(1);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(serve_cfg(&archive_path), stub, archive).unwrap();
+    let (addr, handle) = spawn(server);
+    let (s, _) = request(&addr, "GET", "/v1/checkpoints", None).unwrap();
+    assert_eq!(s, 503);
+    shutdown(&addr, handle);
+
+    // enabled daemon
+    let stub = StubRunner::new(1);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let mut cfg = serve_cfg(&archive_path);
+    cfg.checkpoint_dir = Some(ckpt_dir.clone());
+    let server = Server::bind_with(cfg, stub, archive).unwrap();
+    let (addr, handle) = spawn(server);
+
+    let (s, j) = request(&addr, "GET", "/v1/checkpoints", None).unwrap();
+    assert_eq!(s, 200);
+    assert!(j.req("checkpoints").as_arr().unwrap().is_empty());
+
+    // a valid checkpoint document, produced by the real writer
+    let scratch = fresh("ckpt_scratch.ckpt.json");
+    sample_checkpoint(2).save(&scratch, None).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&scratch).unwrap()).unwrap();
+    let name = "stubnet.0000000000000abc.ckpt.json";
+
+    // install, list, fetch
+    let (s, j) = request(&addr, "POST", &format!("/v1/checkpoints/{name}"), Some(&doc)).unwrap();
+    assert_eq!(s, 200, "{}", j.dump());
+    assert_eq!(j.req("installed"), &Json::Bool(true));
+    let (s, j) = request(&addr, "GET", "/v1/checkpoints", None).unwrap();
+    assert_eq!(s, 200);
+    let rows = j.req("checkpoints").as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].s("file"), name);
+    assert_eq!(rows[0].u("episodes_done"), 2);
+    let (s, fetched) = request(&addr, "GET", &format!("/v1/checkpoints/{name}"), None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(fetched.u("episodes_done"), 2);
+
+    // replication is monotone: equal-or-behind copies are refused...
+    let (s, j) = request(&addr, "POST", &format!("/v1/checkpoints/{name}"), Some(&doc)).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(j.req("installed"), &Json::Bool(false));
+    // ...and an AHEAD copy wins
+    sample_checkpoint(4).save(&scratch, None).unwrap();
+    let ahead = Json::parse(&std::fs::read_to_string(&scratch).unwrap()).unwrap();
+    let (s, j) = request(&addr, "POST", &format!("/v1/checkpoints/{name}"), Some(&ahead)).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(j.req("installed"), &Json::Bool(true));
+    assert_eq!(j.u("episodes_done"), 4);
+
+    // a tampered body fails checksum verification and never lands on disk
+    let tampered =
+        Json::parse(&ahead.dump().replace("\"episodes_done\":4", "\"episodes_done\":9")).unwrap();
+    let (s, j) = request(&addr, "POST", &format!("/v1/checkpoints/{name}"), Some(&tampered)).unwrap();
+    assert_eq!(s, 400, "{}", j.dump());
+    let (_, j) = request(&addr, "GET", &format!("/v1/checkpoints/{name}"), None).unwrap();
+    assert_eq!(j.u("episodes_done"), 4, "tampered install must not change the file");
+
+    // name hygiene
+    for bad in ["nosuffix", "a..b.ckpt.json", "sp%20ace.ckpt.json"] {
+        let (s, _) = request(&addr, "GET", &format!("/v1/checkpoints/{bad}"), None).unwrap();
+        assert_eq!(s, 400, "name `{bad}` must be rejected");
+    }
+    let (s, _) = request(&addr, "GET", "/v1/checkpoints/missing.ckpt.json", None).unwrap();
+    assert_eq!(s, 404);
+
+    shutdown(&addr, handle);
+}
+
+// ---- stub tier: router failover ---------------------------------------------
+
+/// Minimal fake worker: answers health probes and accepts jobs (id 1),
+/// recording every submission body it sees. Killed by flipping `stop` and
+/// poking the listener.
+fn spawn_fake_worker() -> (String, Arc<AtomicBool>, Arc<Mutex<Vec<Json>>>) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let seen: Arc<Mutex<Vec<Json>>> = Arc::new(Mutex::new(Vec::new()));
+    let (stop2, seen2) = (stop.clone(), seen.clone());
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                return; // drops the listener: the port goes dark
+            }
+            let Ok(stream) = conn else { return };
+            let seen3 = seen2.clone();
+            std::thread::spawn(move || {
+                serve_conn(stream, false, "fake", |req| {
+                    let path = req.path.split('?').next().unwrap_or("");
+                    match (req.method.as_str(), path) {
+                        ("GET", "/v1/health") => (
+                            Response::ok(Json::obj(vec![
+                                ("queue_depth", Json::Num(0.0)),
+                                ("running", Json::Num(0.0)),
+                            ])),
+                            false,
+                        ),
+                        ("POST", "/v1/jobs") => {
+                            seen3.lock().unwrap().push(req.json().unwrap_or(Json::Null));
+                            (
+                                Response::status(
+                                    202,
+                                    Json::obj(vec![
+                                        ("id", Json::Num(1.0)),
+                                        ("status", Json::Str("queued".to_string())),
+                                        ("source", Json::Str("search".to_string())),
+                                    ]),
+                                ),
+                                false,
+                            )
+                        }
+                        ("GET", p) if p.starts_with("/v1/jobs/") => (
+                            Response::ok(Json::obj(vec![
+                                ("id", Json::Num(1.0)),
+                                ("status", Json::Str("running".to_string())),
+                            ])),
+                            false,
+                        ),
+                        _ => (Response::error(404, "no such endpoint"), false),
+                    }
+                });
+            });
+        }
+    });
+    (addr, stop, seen)
+}
+
+/// An in-flight job on a worker that dies is re-dispatched to a live ring
+/// successor and completes there, under the same fleet id.
+#[test]
+fn stub_router_fails_over_in_flight_jobs_to_live_successor() {
+    let (fake_addr, stop, seen) = spawn_fake_worker();
+
+    // real successor: a stub daemon
+    let archive_path = fresh("failover_archive.json");
+    let stub = StubRunner::new(1);
+    let archive = Arc::new(Archive::open(&archive_path).unwrap());
+    let server = Server::bind_with(serve_cfg(&archive_path), stub, archive).unwrap();
+    let (real_addr, handle) = spawn(server);
+
+    let workers = vec![
+        Arc::new(Worker::new("wA", &fake_addr)),
+        Arc::new(Worker::new("wB", &real_addr)),
+    ];
+    let router = Router::new(workers, 1);
+    for w in &router.workers {
+        assert_ne!(w.probe(), Health::Down, "worker {} down at start", w.name);
+    }
+
+    // vary the net name until placement lands a job on the fake worker
+    let mut on_fake: Option<u64> = None;
+    for i in 0..64 {
+        let body = Json::parse(&format!(
+            r#"{{"net": "stubnet{i}", "config": {{"episodes": 4, "seed": 1}}}}"#
+        ))
+        .unwrap();
+        let resp = router.submit(&body);
+        assert!(resp.status == 200 || resp.status == 202, "{}", resp.body.dump());
+        if resp.body.s("worker") == "wA" {
+            on_fake = Some(resp.body.u("id") as u64);
+            break;
+        }
+    }
+    let fid = on_fake.expect("64 distinct nets never hashed to the fake worker");
+
+    // the router injected an idempotency key into the forwarded body
+    let captured = seen.lock().unwrap().last().cloned().unwrap();
+    let key = captured.s("idempotency_key").to_string();
+    assert!(!key.is_empty());
+
+    // kill the fake worker and observe the Down transition
+    stop.store(true, Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(&fake_addr); // unblock accept, drop listener
+    std::thread::sleep(Duration::from_millis(50));
+    let ai = router.workers.iter().position(|w| w.name == "wA").unwrap();
+    let t0 = Instant::now();
+    while router.workers[ai].probe() != Health::Down {
+        assert!(t0.elapsed() < Duration::from_secs(5), "fake worker never went down");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // failover re-homes the stranded job onto the live successor
+    let moved = router.failover(ai);
+    assert_eq!(moved, 1, "exactly the one in-flight job moves");
+    assert_eq!(router.counters.failed_over.load(Ordering::Relaxed), 1);
+
+    // the job now lives on wB (same fleet id) and completes there; wB saw
+    // the SAME idempotency key, so a duplicate delivery would dedupe
+    let t0 = Instant::now();
+    loop {
+        let resp = router.forward_job(&fid.to_string(), "GET", "");
+        assert_eq!(resp.status, 200, "{}", resp.body.dump());
+        assert_eq!(resp.body.s("worker"), "wB");
+        if resp.body.s("status") == "done" {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(20), "failed-over job never finished");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    shutdown(&real_addr, handle);
+}
+
+// ---- artifact tier ----------------------------------------------------------
+
+fn bringup() -> Option<(releq::runtime::Manifest, Arc<releq::runtime::Engine>)> {
+    let dir = releq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = releq::runtime::Manifest::load(&dir).unwrap();
+    let engine = Arc::new(releq::runtime::Engine::new(dir).unwrap());
+    Some((manifest, engine))
+}
+
+fn total_execs(e: &releq::runtime::Engine) -> u64 {
+    e.exec_stats().iter().map(|s| s.execs).sum()
+}
+
+/// The tentpole invariant, at the searcher level: interrupt at a PPO
+/// update boundary, restore, continue — the final result AND the full
+/// episode log are bit-identical to an uninterrupted run, the resumed
+/// process re-executes only post-checkpoint episodes (total exec counts
+/// match the uninterrupted engine exactly), and the environment pretrains
+/// once across interrupt + resume.
+#[test]
+fn searcher_checkpoint_resume_is_bit_identical_with_exact_exec_accounting() {
+    use releq::coordinator::{QuantEnv, SearchConfig, Searcher};
+
+    let Some((manifest, engine_a)) = bringup() else { return };
+    let net = manifest.network("lenet").unwrap();
+    let mut cfg = SearchConfig::default();
+    cfg.episodes = 16; // update boundaries at 8 and 16 (episodes_per_update=8)
+    cfg.env.pretrain_steps = 40;
+    cfg.patience = 0;
+    cfg.seed = 91;
+
+    // reference: uninterrupted run on its own engine
+    let mut ref_searcher = Searcher::new(engine_a.clone(), &manifest, net, cfg.clone()).unwrap();
+    let reference = ref_searcher.run().unwrap();
+    let ref_execs = total_execs(&engine_a);
+
+    // durable run on a second engine: cancel (as a shutdown) right after
+    // the first update boundary's checkpoint lands
+    let engine_b = Arc::new(releq::runtime::Engine::new(releq::artifacts_dir()).unwrap());
+    let env_b = QuantEnv::new(
+        engine_b.clone(),
+        net,
+        manifest.bits_max,
+        manifest.fp_bits,
+        cfg.env.clone(),
+    )
+    .unwrap();
+    let ckpt = fresh("searcher_resume.ckpt.json");
+    let search_fp = search_fingerprint("lenet", manifest.bits_max, &cfg);
+
+    let mut d1 = Durable::new(ckpt.clone(), 8, "lenet", search_fp).unwrap();
+    let mut s1 =
+        Searcher::with_env(env_b.clone(), engine_b.clone(), &manifest, cfg.clone()).unwrap();
+    let slot: Arc<OnceLock<Arc<SearchCtl>>> = Arc::new(OnceLock::new());
+    let slot2 = slot.clone();
+    let ctl = Arc::new(SearchCtl::new().with_progress(move |ep| {
+        if ep.episode + 1 >= 8 {
+            if let Some(c) = slot2.get() {
+                c.cancel_for_shutdown();
+            }
+        }
+    }));
+    slot.set(ctl.clone()).ok();
+    let err = match s1.run_durable(&ctl, Some(&mut d1)) {
+        Err(e) => e,
+        Ok(_) => panic!("interrupted run must not complete"),
+    };
+    assert!(format!("{err:#}").contains("shutdown"), "{err:#}");
+    assert!(d1.saves >= 1, "the boundary checkpoint must have been written");
+    assert!(ckpt.exists());
+
+    // resume: same env (one pretrain total), fresh searcher + Durable
+    let mut d2 = Durable::new(ckpt.clone(), 8, "lenet", search_fp).unwrap();
+    let mut s2 =
+        Searcher::with_env(env_b.clone(), engine_b.clone(), &manifest, cfg.clone()).unwrap();
+    let ck = SearchCheckpoint::load(&d2.path).unwrap().expect("checkpoint present");
+    assert_eq!(ck.episodes_done, 8, "checkpoint sits on the update boundary");
+    s2.restore(ck, &mut d2).unwrap();
+    assert_eq!(d2.resumed_from, Some(8));
+    let resumed = s2.run_durable(&SearchCtl::default(), Some(&mut d2)).unwrap();
+    d2.complete();
+    assert!(!ckpt.exists(), "complete() must retire the checkpoint");
+
+    // bit-identical: solution, accuracies, and the FULL episode log
+    assert_eq!(reference.bits, resumed.bits);
+    assert_eq!(reference.episodes_run, resumed.episodes_run);
+    assert_eq!(reference.avg_bits, resumed.avg_bits);
+    assert_eq!(reference.acc_final, resumed.acc_final, "bitwise accuracy equality");
+    assert_eq!(reference.state_q, resumed.state_q);
+    assert_eq!(
+        episodes_json(&reference.log.episodes, true).dump(),
+        episodes_json(&resumed.log.episodes, true).dump(),
+        "episode logs must match bit-for-bit, probs included"
+    );
+
+    // exact exec accounting: the interrupted+resumed engine spent exactly
+    // the uninterrupted engine's executions — pre-checkpoint episodes were
+    // NOT re-executed (their accuracies are memo hits on resume)
+    assert_eq!(total_execs(&engine_b), ref_execs, "resume must not repeat device work");
+    assert_eq!(
+        engine_b.exe("lenet_init").unwrap().exec_count(),
+        1,
+        "one pretrain across interrupt + resume"
+    );
+}
+
+/// Daemon-level recovery: a durable daemon interrupted mid-search recovers
+/// the journaled job on restart under its original id, resumes it from
+/// the checkpoint (runner `resumes` counter), and completes it.
+#[test]
+fn daemon_recovers_and_resumes_durable_job_with_artifacts() {
+    let Some((manifest, engine)) = bringup() else { return };
+    let archive_path = fresh("daemon_durable_archive.json");
+    let wal_path = fresh("daemon_durable.wal");
+    let ckpt_dir = fresh("daemon_durable_ckpt");
+
+    let durable_cfg = || {
+        let mut cfg = serve_cfg(&archive_path);
+        cfg.wal = Some(wal_path.clone());
+        cfg.checkpoint_dir = Some(ckpt_dir.clone());
+        cfg.checkpoint_every = 2;
+        cfg
+    };
+    let server = Server::bind(durable_cfg(), manifest.clone(), engine.clone()).unwrap();
+    let daemon = server.daemon();
+    let (addr, handle) = spawn(server);
+
+    let body = r#"{"net": "lenet", "config": {"episodes": 24, "pretrain_steps": 60,
+                    "long_retrain_steps": 8, "patience": 0, "seed": 7}}"#;
+    let (s, j) = submit(&addr, body);
+    assert_eq!(s, 202, "{}", j.dump());
+    let id = j.u("id");
+
+    // wait for the first checkpoint (update boundary 8 of 24), then pull
+    // the plug while most of the search is still ahead
+    let t0 = Instant::now();
+    loop {
+        let (s, j) = request(&addr, "GET", "/v1/checkpoints", None).unwrap();
+        assert_eq!(s, 200);
+        if !j.req("checkpoints").as_arr().unwrap().is_empty() {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(300),
+            "no checkpoint appeared before the search finished"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    daemon.interrupt();
+    handle.join().unwrap().unwrap();
+
+    // restart with a FRESH engine (new process semantics)
+    let manifest2 = releq::runtime::Manifest::load(&releq::artifacts_dir()).unwrap();
+    let engine2 = Arc::new(releq::runtime::Engine::new(releq::artifacts_dir()).unwrap());
+    let server2 = Server::bind(durable_cfg(), manifest2, engine2.clone()).unwrap();
+    let (addr2, handle2) = spawn(server2);
+
+    let done = wait_terminal(&addr2, id, Duration::from_secs(600));
+    assert_eq!(done.s("status"), "done", "{}", done.dump());
+
+    let (_, stats) = request(&addr2, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(stats.req("scheduler").req("wal").u("recovered"), 1);
+    assert_eq!(stats.req("runner").u("resumes"), 1, "{}", stats.dump());
+    assert_eq!(
+        engine2.exe("lenet_init").unwrap().exec_count(),
+        1,
+        "the restarted daemon pretrains once, not once per recovery attempt"
+    );
+
+    let (s, result) = request(&addr2, "GET", &format!("/v1/jobs/{id}/result"), None).unwrap();
+    assert_eq!(s, 200, "{}", result.dump());
+    assert_eq!(result.s("source"), "search");
+
+    shutdown(&addr2, handle2);
+    // everything terminal: a third open recovers nothing
+    let (_, recovery) = Wal::open(&wal_path).unwrap();
+    assert!(recovery.jobs.is_empty());
+}
